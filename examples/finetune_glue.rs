@@ -1,0 +1,22 @@
+//! GLUE/MNLI-shaped fine-tuning comparison (Table 1 scenario).
+//!
+//! Fine-tunes the transformer classifier artifact on the synthetic NLI task
+//! with all five Table-1 optimizers and prints the paper-style rows
+//! (train loss / accuracy / optimizer-state memory).
+//!
+//! Run: `make artifacts && cargo run --release --example finetune_glue
+//!       [-- --steps 150 --model cls_tiny]`
+
+fn arg(name: &str, default: &str) -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = arg("--model", "cls_tiny");
+    let steps: u64 = arg("--steps", "150").parse()?;
+    microadam::bench::run_table1(&arg("--artifacts", "artifacts"), "runs", &model, steps)
+}

@@ -1,0 +1,12 @@
+//! Figure 1 + Figure 9 driver: optimization trajectories on the paper's 2-D
+//! test functions.
+//!
+//! Writes CSV trajectories under `runs/` (plot with any tool) and prints the
+//! endpoint summaries. Run:
+//! `cargo run --release --example rosenbrock`
+
+fn main() -> anyhow::Result<()> {
+    microadam::bench::run_fig1("runs", 1500)?;
+    microadam::bench::run_fig9("runs", 1500)?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! ImageNet-shaped CNN pre-training comparison (Table 4 scenario).
+//!
+//! Pre-trains the CNN artifact from scratch on the synthetic image set with
+//! SGD / AdamW / AdamW-8bit / MicroAdam and prints the paper-style rows,
+//! including the exact paper-scale ResNet state sizes.
+//!
+//! Run: `make artifacts && cargo run --release --example vision_pretrain
+//!       [-- --steps 150 --model cnn_tiny]`
+
+fn arg(name: &str, default: &str) -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = arg("--model", "cnn_tiny");
+    let steps: u64 = arg("--steps", "150").parse()?;
+    microadam::bench::run_table4(&arg("--artifacts", "artifacts"), "runs", &model, steps)
+}

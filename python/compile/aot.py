@@ -1,0 +1,271 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + manifest.json.
+
+Run once via `make artifacts`; the rust runtime then loads
+`artifacts/*.hlo.txt` through `HloModuleProto::from_text_file` and never
+touches python again.
+
+HLO text (NOT `lowered.compile().serialize()` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+The manifest records, for every artifact, the exact input/output signature
+plus the static metadata the rust coordinator needs to drive it: model
+parameter layout (name/shape/offset/init) and optimizer hyper-parameters
+(m, B_d, k_b, B_q, tile). Rust validates its literals against this at load
+time, so a stale artifact directory fails fast instead of mis-executing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return _sanitize_hlo(comp.as_hlo_text())
+
+
+def _sanitize_hlo(text: str) -> str:
+    """Strip HLO-text attributes newer than xla_extension 0.5.1's parser.
+
+    jax >= 0.8 prints `topk(..., k=N, largest=true)`; 0.5.1 only accepts the
+    `k` attribute (largest selection is its only mode, so dropping the
+    attribute is semantics-preserving). Anything else the old parser trips
+    on gets added here with the same justification.
+    """
+    return text.replace(", largest=true", "")
+
+
+def _sig(args) -> list[dict]:
+    out = []
+    for name, a in args:
+        out.append({"name": name, "dtype": str(a.dtype), "shape": list(a.shape)})
+    return out
+
+
+def _param_meta(spec, d_pad: int) -> dict:
+    params, off = [], 0
+    for e in spec:
+        params.append({
+            "name": e.name, "shape": list(e.shape), "offset": off,
+            "init": e.init, "init_std": e.init_std,
+        })
+        off += e.size
+    return {"d_model_params": off, "d_padded": d_pad, "params": params}
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest: dict = {"artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, inputs: list[tuple], outputs: list[str], meta: dict):
+        """Lower fn at the given input signature and write <name>.hlo.txt."""
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _sig(inputs),
+            "outputs": outputs,
+            **meta,
+        }
+        self.manifest["artifacts"][name] = entry
+        if os.path.exists(path) and not self.force:
+            print(f"[aot] {name}: exists, skipping lower")
+            return
+        t0 = time.time()
+        shapes = [a for _, a in inputs]
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text)/1e6:.2f} MB HLO text in {time.time()-t0:.1f}s")
+
+    def finish(self):
+        man = os.path.join(self.out_dir, "manifest.json")
+        with open(man, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"[aot] wrote {man} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+F32, I32, U8 = jnp.float32, jnp.int32, jnp.uint8
+
+
+def S(shape, dt=F32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def emit_lm(em: Emitter, preset: str, opt: M.OptConfig):
+    cfg = M.TRANSFORMER_PRESETS[preset]
+    spec = M.transformer_param_spec(cfg, "lm")
+    d = M.pad_to_tile(M.spec_size(spec), opt)
+    fn = M.build_fwdbwd(lambda flat, tok, tgt: M.lm_loss(cfg, spec, flat, tok, tgt))
+    em.emit(
+        f"lm_{preset}", fn,
+        inputs=[("flat_params", S((d,))),
+                ("tokens", S((cfg.batch, cfg.seq), I32)),
+                ("targets", S((cfg.batch, cfg.seq), I32))],
+        outputs=["loss", "flat_grads"],
+        meta={"kind": "fwdbwd", "model": "transformer_lm",
+              "config": dataclasses.asdict(cfg), **{"layout": _param_meta(spec, d)}},
+    )
+    return d
+
+
+def emit_cls(em: Emitter, preset: str, opt: M.OptConfig):
+    cfg = M.TRANSFORMER_PRESETS[preset]
+    spec = M.transformer_param_spec(cfg, "cls")
+    d = M.pad_to_tile(M.spec_size(spec), opt)
+    fn = M.build_fwdbwd(lambda flat, tok, lab: M.cls_loss(cfg, spec, flat, tok, lab))
+    em.emit(
+        f"cls_{preset}", fn,
+        inputs=[("flat_params", S((d,))),
+                ("tokens", S((cfg.batch, cfg.seq), I32)),
+                ("labels", S((cfg.batch,), I32))],
+        outputs=["loss", "flat_grads"],
+        meta={"kind": "fwdbwd", "model": "transformer_cls",
+              "config": dataclasses.asdict(cfg), **{"layout": _param_meta(spec, d)}},
+    )
+    # Inference graph for eval accuracy.
+    em.emit(
+        f"cls_{preset}_logits",
+        lambda flat, tok: (M.cls_logits(cfg, spec, flat, tok),),
+        inputs=[("flat_params", S((d,))), ("tokens", S((cfg.batch, cfg.seq), I32))],
+        outputs=["logits"],
+        meta={"kind": "infer", "model": "transformer_cls",
+              "config": dataclasses.asdict(cfg), **{"layout": _param_meta(spec, d)}},
+    )
+    return d
+
+
+def emit_cnn(em: Emitter, preset: str, opt: M.OptConfig):
+    cfg = M.CNN_PRESETS[preset]
+    spec = M.cnn_param_spec(cfg)
+    d = M.pad_to_tile(M.spec_size(spec), opt)
+    fn = M.build_fwdbwd(lambda flat, img, lab: M.cnn_loss(cfg, spec, flat, img, lab))
+    em.emit(
+        f"{preset}", fn,
+        inputs=[("flat_params", S((d,))),
+                ("images", S((cfg.batch, cfg.image, cfg.image, cfg.in_channels))),
+                ("labels", S((cfg.batch,), I32))],
+        outputs=["loss", "flat_grads"],
+        meta={"kind": "fwdbwd", "model": "cnn",
+              "config": dataclasses.asdict(cfg), **{"layout": _param_meta(spec, d)}},
+    )
+    em.emit(
+        f"{preset}_logits",
+        lambda flat, img: (M.cnn_logits(cfg, spec, flat, img),),
+        inputs=[("flat_params", S((d,))),
+                ("images", S((cfg.batch, cfg.image, cfg.image, cfg.in_channels)))],
+        outputs=["logits"],
+        meta={"kind": "infer", "model": "cnn",
+              "config": dataclasses.asdict(cfg), **{"layout": _param_meta(spec, d)}},
+    )
+    return d
+
+
+def _pick_tile_blocks(nb: int, cap: int = 256) -> int:
+    """Largest divisor of nb at most `cap`.
+
+    Perf (EXPERIMENTS.md §Perf): interpret-mode pallas lowers the grid to a
+    sequential scan, so fewer/larger tiles amortize the per-step overhead —
+    d=6.9M went 3.01s -> 2.27s/step moving 16 -> 240 blocks per tile. On a
+    real TPU the cap would instead come from VMEM (tile bytes ~ cap*B_d*12).
+    """
+    return max(t for t in range(1, min(nb, cap) + 1) if nb % t == 0)
+
+
+def emit_opt_steps(em: Emitter, d: int, opt: M.OptConfig, which=("microadam", "adamw", "adamw8bit")):
+    nb = d // opt.block
+    opt = dataclasses.replace(opt, tile_blocks=_pick_tile_blocks(nb))
+    nq = d // opt.qbucket
+    nq8 = d // M.QBUCKET8
+    hyper = {
+        "m": opt.m, "block": opt.block, "kb": opt.kb, "qbucket": opt.qbucket,
+        "density": opt.density, "beta1": opt.beta1, "beta2": opt.beta2,
+        "eps": opt.eps, "tile_blocks": opt.tile_blocks, "d": d, "nb": nb,
+    }
+    if "microadam" in which:
+        fn = M.build_microadam_step(d, opt)
+        em.emit(
+            f"microadam_step_d{d}", fn,
+            inputs=[("params", S((d,))), ("grads", S((d,))),
+                    ("ef", S((d // 2,), U8)),
+                    ("qlo", S((nq,))), ("qhi", S((nq,))),
+                    ("w_idx", S((opt.m, nb, opt.kb), I32)),
+                    ("w_val", S((opt.m, nb, opt.kb))),
+                    ("t", S((), I32)), ("lr", S(())), ("wd", S(()))],
+            outputs=["params", "ef", "qlo", "qhi", "w_idx", "w_val"],
+            meta={"kind": "opt_step", "opt": "microadam", "hyper": hyper},
+        )
+    if "adamw" in which:
+        fn = M.build_adamw_step(opt.beta1, opt.beta2, opt.eps)
+        em.emit(
+            f"adamw_step_d{d}", fn,
+            inputs=[("params", S((d,))), ("grads", S((d,))),
+                    ("m", S((d,))), ("v", S((d,))),
+                    ("t", S((), I32)), ("lr", S(())), ("wd", S(()))],
+            outputs=["params", "m", "v"],
+            meta={"kind": "opt_step", "opt": "adamw", "hyper": hyper},
+        )
+    if "adamw8bit" in which:
+        fn = M.build_adamw8bit_step(opt.beta1, opt.beta2, opt.eps)
+        em.emit(
+            f"adamw8bit_step_d{d}", fn,
+            inputs=[("params", S((d,))), ("grads", S((d,))),
+                    ("m8", S((d,), U8)), ("mscale", S((nq8,))),
+                    ("v8", S((d,), U8)), ("vscale", S((nq8,))),
+                    ("t", S((), I32)), ("lr", S(())), ("wd", S(()))],
+            outputs=["params", "m8", "mscale", "v8", "vscale"],
+            meta={"kind": "opt_step", "opt": "adamw8bit", "hyper": hyper},
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", nargs="*", default=["tiny", "small"],
+                    help="transformer presets to emit (tiny/small/base)")
+    ap.add_argument("--cnn-presets", nargs="*", default=["cnn_tiny", "cnn_small"])
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+
+    opt = M.OptConfig()
+    em = Emitter(args.out_dir, args.force)
+
+    opt_dims = set()
+    for preset in args.presets:
+        d = emit_lm(em, preset, opt)
+        opt_dims.add(d)
+        # Classifier graphs only for the smaller presets (table-1 stand-in).
+        if preset in ("tiny", "small"):
+            emit_cls(em, preset, opt)
+    for preset in args.cnn_presets:
+        emit_cnn(em, preset, opt)
+    # Optimizer step artifacts for every LM dimensionality (the e2e driver
+    # runs MicroAdam/AdamW/AdamW-8bit fully AOT; other experiments use the
+    # native rust optimizers on artifact gradients).
+    for d in sorted(opt_dims):
+        emit_opt_steps(em, d, opt)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Pallas kernel for the MicroAdam block update (Algorithm 1 lines 11-13).
+
+This is the paper's compute hot-spot: re-deriving the Adam statistics
+m_hat / v_hat from the sliding window G = (I, V) of block-wise sparse
+gradients and applying the parameter update, all without ever materializing
+dense optimizer state in HBM.
+
+Hardware adaptation (paper §3.1, CUDA -> TPU):
+
+  * CUDA launches one thread block per parameter block of size B_d < 2^15 and
+    builds m_hat (first half) / v_hat (second half) in *shared memory*,
+    indexing it directly with the block-relative int16 Top-K indices.
+  * Here the Pallas grid runs over parameter blocks; BlockSpec slices the
+    flat parameter vector into (B_d,) VMEM tiles and the window tensors into
+    (m, 1, k_b) tiles. The dense z1/z2 scratch lives in VMEM (registers /
+    vector memory under interpret=True), built by m successive scatter-adds
+    with the block-relative indices — the exact analogue of the shared-memory
+    accumulation. Indices within one window row are distinct (Top-K output),
+    so each scatter-add is collision-free; rows accumulate sequentially.
+  * Per-row decay weights beta^age, validity masking and bias correction are
+    *folded into the (m,) weight vectors* w1/w2 at L2 (see
+    model.window_weights), keeping the kernel a pure VMEM-local stencil with
+    no transcendental ops.
+
+VMEM budget per tile at defaults (B_d=4096, m=10, k_b=41):
+  params 16 KiB + window (I+V) 2*10*41*4 B ~ 3.3 KiB + z1/z2 32 KiB
+  ~ 52 KiB  << 16 MiB VMEM, so real-TPU occupancy is bounded by grid
+  parallelism, not memory (see DESIGN.md §7 / EXPERIMENTS.md §Perf).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness on CPU is the contract, TPU numbers are estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_tile_kernel(m: int, block: int, w1_ref, w2_ref, scal_ref, p_ref, i_ref, v_ref, out_ref):
+    """One tile of TC parameter blocks: scatter-accumulate z1/z2 + update.
+
+    w1_ref/w2_ref: (m,) folded weights (decay * validity * (1-beta) / bias).
+    scal_ref: (2,) = [lr, eps].
+    p_ref: (TC*B_d,) params tile; i_ref/v_ref: (m, TC, k_b) window tiles with
+    block-relative indices — the kernel adds per-block offsets so the dense
+    scratch covers the whole tile. Within one window row all indices are
+    distinct (Top-K output + disjoint block offsets), so each scatter-add is
+    collision-free; rows accumulate sequentially, mirroring the paper's
+    shared-memory loop.
+    """
+    dim = p_ref.shape[0]
+    tc = dim // block
+    offs = (jnp.arange(tc, dtype=jnp.int32) * block)[:, None]  # (TC, 1)
+    z1 = jnp.zeros((dim,), jnp.float32)
+    z2 = jnp.zeros((dim,), jnp.float32)
+    # Static unroll over the window (m is small, 10-20 per the paper).
+    for i in range(m):
+        idx = (i_ref[i, :, :] + offs).reshape(-1)
+        val = v_ref[i, :, :].reshape(-1)
+        z1 = z1.at[idx].add(w1_ref[i] * val)
+        z2 = z2.at[idx].add(w2_ref[i] * val * val)
+    lr = scal_ref[0]
+    eps = scal_ref[1]
+    # Algorithm 1 line 13: theta <- theta - lr * m_hat / (eps + sqrt(v_hat)).
+    out_ref[...] = p_ref[...] - lr * z1 / (eps + jnp.sqrt(z2))
+
+
+def microadam_update(params: jnp.ndarray, w_idx: jnp.ndarray, w_val: jnp.ndarray,
+                     w1: jnp.ndarray, w2: jnp.ndarray, lr, eps, block: int,
+                     tile_blocks: int | None = None) -> jnp.ndarray:
+    """Apply the MicroAdam update to the full flat parameter vector.
+
+    params: (D,) f32, D % (tile_blocks*block) == 0.
+    w_idx: (m, NB, k_b) int32 block-relative Top-K indices.
+    w_val: (m, NB, k_b) f32 Top-K values (signed).
+    w1/w2: (m,) folded per-row weights; lr/eps: scalars.
+    tile_blocks: parameter blocks per grid step (interpret-mode scan
+    amortization / TPU VMEM tile size — the L1 perf knob).
+    """
+    d = params.shape[0]
+    assert d % block == 0, (d, block)
+    nb = d // block
+    m, nb2, kb = w_idx.shape
+    assert nb2 == nb, (nb2, nb)
+    tc = tile_blocks or min(nb, 16)
+    assert nb % tc == 0, (nb, tc)
+    grid = nb // tc
+    tile = tc * block
+    scal = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(eps, jnp.float32)])
+    kernel = functools.partial(_update_tile_kernel, m, block)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda b: (0,)),        # w1 (broadcast)
+            pl.BlockSpec((m,), lambda b: (0,)),        # w2 (broadcast)
+            pl.BlockSpec((2,), lambda b: (0,)),        # [lr, eps]
+            pl.BlockSpec((tile,), lambda b: (b,)),     # params tile
+            pl.BlockSpec((m, tc, kb), lambda b: (0, b, 0)),  # window indices
+            pl.BlockSpec((m, tc, kb), lambda b: (0, b, 0)),  # window values
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(w1, w2, scal, params, w_idx, w_val)

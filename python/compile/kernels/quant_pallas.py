@@ -1,0 +1,108 @@
+"""Pallas kernels for 4-bit block-wise EF quantization (Algorithm 2, Q/Q^-1).
+
+Hardware adaptation (paper §3.1 -> TPU): the CUDA implementation stores the
+error feedback as packed 4-bit nibbles in a d/2-byte uint8 HBM array, with
+per-bucket (delta, Delta) metadata; each thread block quantizes one bucket.
+Here the Pallas grid iterates over *tiles* of many buckets: BlockSpec slices
+the flat vector into (TILE,)-shaped VMEM windows and the kernel reduces each
+(TILE/BUCKET, BUCKET) view row-wise. Pack/unpack is pure vector shift/mask
+work (VPU, no MXU involvement).
+
+Why tiles instead of one-grid-step-per-bucket: interpret-mode pallas (the
+only mode the CPU PJRT plugin can execute — Mosaic custom-calls don't run on
+CPU) lowers the grid to a sequential scan, so grid length is pure overhead
+at runtime. A tile of T buckets keeps the bucket-64 quantization semantics
+of the paper (§B) while amortizing the scan; on a real TPU the tile maps to
+one VMEM-resident block per core. TILE is the L1 performance knob swept in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LEVELS4 = 15  # 2^4 - 1 quantization steps
+
+
+def _quant4_kernel(bucket: int, x_ref, packed_ref, lo_ref, hi_ref):
+    """Quantize one tile: per-bucket (delta, Delta), 4-bit codes, packed nibbles."""
+    x = x_ref[...].reshape(-1, bucket)  # (nb, bucket)
+    lo = jnp.min(x, axis=1)
+    hi = jnp.max(x, axis=1)
+    u = (hi - lo) / LEVELS4
+    safe_u = jnp.where(u > 0, u, 1.0)
+    q = jnp.floor((x - lo[:, None]) / safe_u[:, None] + 0.5)
+    q = jnp.clip(q, 0, LEVELS4).astype(jnp.uint8)
+    q = jnp.where((u > 0)[:, None], q, jnp.zeros_like(q))
+    qf = q.reshape(-1)
+    # Even elements -> low nibble, odd -> high nibble (paper layout).
+    packed_ref[...] = (qf[0::2] | (qf[1::2] << 4)).astype(jnp.uint8)
+    lo_ref[...] = lo
+    hi_ref[...] = hi
+
+
+def _dequant4_kernel(bucket: int, packed_ref, lo_ref, hi_ref, x_ref):
+    """Unpack one tile's nibbles and map codes back to values."""
+    p = packed_ref[...]
+    low = (p & 0xF).astype(jnp.float32)
+    high = (p >> 4).astype(jnp.float32)
+    q = jnp.stack([low, high], axis=1).reshape(-1, bucket)  # (nb, bucket)
+    u = (hi_ref[...] - lo_ref[...]) / LEVELS4
+    x_ref[...] = (q * u[:, None] + lo_ref[...][:, None]).reshape(-1)
+
+
+def quant4(x: jnp.ndarray, bucket: int, tile: int | None = None):
+    """Bucketed 4-bit quantize of a flat (D,) f32 vector via a Pallas kernel.
+
+    Returns (packed u8 (D//2,), delta f32 (D//bucket,), Delta f32 (D//bucket,)).
+    Requires D % tile == 0, tile % bucket == 0, bucket even.
+    """
+    d = x.shape[0]
+    tile = tile or min(d, 65536)
+    assert d % tile == 0 and tile % bucket == 0 and bucket % 2 == 0, (d, tile, bucket)
+    grid = d // tile
+    bpt = tile // bucket  # buckets per tile
+    kernel = functools.partial(_quant4_kernel, bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile,), lambda b: (b,))],
+        out_specs=[
+            pl.BlockSpec((tile // 2,), lambda b: (b,)),
+            pl.BlockSpec((bpt,), lambda b: (b,)),
+            pl.BlockSpec((bpt,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d // 2,), jnp.uint8),
+            jax.ShapeDtypeStruct((d // bucket,), jnp.float32),
+            jax.ShapeDtypeStruct((d // bucket,), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def dequant4(packed: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+             bucket: int, tile: int | None = None) -> jnp.ndarray:
+    """Inverse of `quant4`: (D//2,) u8 + per-bucket stats -> (D,) f32."""
+    d = lo.shape[0] * bucket
+    tile = tile or min(d, 65536)
+    assert packed.shape[0] == d // 2 and d % tile == 0 and tile % bucket == 0
+    grid = d // tile
+    bpt = tile // bucket
+    kernel = functools.partial(_dequant4_kernel, bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile // 2,), lambda b: (b,)),
+            pl.BlockSpec((bpt,), lambda b: (b,)),
+            pl.BlockSpec((bpt,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(packed, lo, hi)

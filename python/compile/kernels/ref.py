@@ -1,0 +1,162 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything in this file is the *correctness ground truth*: slow, dense,
+obviously-right implementations of
+
+  * block-wise 4-bit quantization of the error-feedback (EF) accumulator
+    (Algorithm 2, procedures Q / Q^-1), deterministic nearest rounding as in
+    the practical algorithm plus the randomized-rounding variant analysed in
+    Lemma 1;
+  * the MicroAdam dynamic statistics + parameter update (Algorithm 2,
+    ADAMSTATS, applied per block as in Algorithm 1 lines 11-13);
+  * a dense AdamW step (baseline oracle used to sanity-check the adamw_step
+    artifact graph).
+
+The Pallas kernels in `quant_pallas.py` / `microadam_pallas.py` are tested
+against these oracles by `python/tests/`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _levels(bits: int) -> int:
+    """Number of quantization steps for b bits (2^b - 1)."""
+    return (1 << bits) - 1
+
+
+# ---------------------------------------------------------------------------
+# Quantization (Algorithm 2: Q / Q^-1), bucket-wise.
+# ---------------------------------------------------------------------------
+
+def quant_bucket_ref(x: jnp.ndarray, bits: int = 4):
+    """Quantize one bucket deterministically (round-to-nearest).
+
+    Returns (codes uint8 in [0, 2^bits-1], delta, Delta). A constant bucket
+    (Delta == delta) maps to all-zero codes.
+    """
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    u = (hi - lo) / _levels(bits)
+    safe_u = jnp.where(u > 0, u, 1.0)
+    q = jnp.floor((x - lo) / safe_u + 0.5)
+    q = jnp.clip(q, 0, _levels(bits)).astype(jnp.uint8)
+    q = jnp.where(u > 0, q, jnp.zeros_like(q))
+    return q, lo, hi
+
+
+def quant_bucket_stochastic_ref(x: jnp.ndarray, key: jax.Array, bits: int = 4):
+    """Lemma-1 randomized rounding: floor((x - delta)/u + xi), xi ~ U[0,1].
+
+    Unbiased: E[Q^-1(Q(x))] = x. Used by the property tests, not by the
+    deterministic artifact path.
+    """
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    u = (hi - lo) / _levels(bits)
+    safe_u = jnp.where(u > 0, u, 1.0)
+    xi = jax.random.uniform(key, x.shape)
+    q = jnp.floor((x - lo) / safe_u + xi)
+    q = jnp.clip(q, 0, _levels(bits)).astype(jnp.uint8)
+    q = jnp.where(u > 0, q, jnp.zeros_like(q))
+    return q, lo, hi
+
+
+def dequant_bucket_ref(q: jnp.ndarray, lo, hi, bits: int = 4) -> jnp.ndarray:
+    u = (hi - lo) / _levels(bits)
+    return q.astype(jnp.float32) * u + lo
+
+
+def quant4_ref(x: jnp.ndarray, bucket: int):
+    """Full-vector bucketed 4-bit quantization with nibble packing.
+
+    x: (D,) with D % bucket == 0 and bucket even.
+    Returns (packed uint8 (D//2,), delta (D//bucket,), Delta (D//bucket,)).
+    Even elements occupy the low nibble, odd the high nibble — the layout the
+    paper's CUDA kernel uses for its d/2-byte uint8 EF array.
+    """
+    nq = x.shape[0] // bucket
+    xb = x.reshape(nq, bucket)
+    q, lo, hi = jax.vmap(lambda row: quant_bucket_ref(row, 4))(xb)
+    qf = q.reshape(-1)
+    packed = (qf[0::2] | (qf[1::2] << 4)).astype(jnp.uint8)
+    return packed, lo, hi
+
+
+def dequant4_ref(packed: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bucket: int) -> jnp.ndarray:
+    """Inverse of `quant4_ref`: (D//2,) u8 + per-bucket stats -> (D,) f32."""
+    low = (packed & 0xF).astype(jnp.uint8)
+    high = (packed >> 4).astype(jnp.uint8)
+    q = jnp.stack([low, high], axis=1).reshape(-1)  # interleave back
+    nq = lo.shape[0]
+    qb = q.reshape(nq, bucket)
+    x = jax.vmap(lambda row, l, h: dequant_bucket_ref(row, l, h, 4))(qb, lo, hi)
+    return x.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# MicroAdam dynamic statistics (ADAMSTATS) + update, dense reference.
+# ---------------------------------------------------------------------------
+
+def window_weights_ref(t, m: int, beta1: float, beta2: float):
+    """Per-row scalar weights for the sliding window at (1-based) step t.
+
+    Row i (0-based) of the ring buffer was last written at step
+    w_i = largest s <= t with (s-1) % m == i; its decay exponent ("age") is
+    (w - i) mod m where w = (t-1) % m. Rows never written yet (i >= t while
+    t <= m) get weight zero. The returned weights fold in the (1-beta)
+    factor and the bias correction 1 - beta^min(t, m), so
+        m_hat = sum_i w1[i] * scatter(V_i)        (same shape for v_hat).
+    """
+    t = jnp.asarray(t, jnp.int32)
+    w = jnp.mod(t - 1, m)
+    rows = jnp.arange(m)
+    age = jnp.mod(w - rows, m).astype(jnp.float32)
+    valid = (rows < t).astype(jnp.float32)
+    eff = jnp.minimum(t, m).astype(jnp.float32)
+
+    def weights(beta):
+        bc = 1.0 - beta**eff
+        return valid * (1.0 - beta) * beta**age / bc
+
+    return weights(beta1), weights(beta2)
+
+
+def adamstats_ref(idx, vals, weights, dim: int, square: bool) -> jnp.ndarray:
+    """ADAMSTATS for one block: z[I_i] += w_i * V_i (or V_i^2).
+
+    idx, vals: (m, k) block-relative window rows; weights: (m,).
+    Returns a dense (dim,) statistic; bias correction is already folded into
+    `weights` (see window_weights_ref).
+    """
+    z = jnp.zeros((dim,), jnp.float32)
+    m = idx.shape[0]
+    for i in range(m):
+        v = vals[i] * vals[i] if square else vals[i]
+        z = z.at[idx[i]].add(weights[i] * v)
+    return z
+
+
+def microadam_update_block_ref(params, idx, vals, w1, w2, lr, eps):
+    """Algorithm 1 lines 11-13 for one block of the flat parameter vector."""
+    dim = params.shape[0]
+    m_hat = adamstats_ref(idx, vals, w1, dim, square=False)
+    v_hat = adamstats_ref(idx, vals, w2, dim, square=True)
+    return params - lr * m_hat / (eps + jnp.sqrt(v_hat))
+
+
+# ---------------------------------------------------------------------------
+# Dense AdamW oracle (baseline graph check).
+# ---------------------------------------------------------------------------
+
+def adamw_step_ref(params, grads, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0):
+    """One decoupled-weight-decay Adam step on flat f32 vectors (oracle)."""
+    m = beta1 * m + (1.0 - beta1) * grads
+    v = beta2 * v + (1.0 - beta2) * grads * grads
+    tf = jnp.asarray(t, jnp.float32)
+    m_hat = m / (1.0 - beta1**tf)
+    v_hat = v / (1.0 - beta2**tf)
+    params = (1.0 - lr * weight_decay) * params - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return params, m, v

@@ -1,0 +1,59 @@
+"""AOT emitter: HLO text well-formedness + manifest integrity."""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    em = aot.Emitter(out, force=True)
+    d = aot.emit_lm(em, "tiny", M.OptConfig())
+    aot.emit_opt_steps(em, d, M.OptConfig(), which=("microadam", "adamw"))
+    em.finish()
+    return out, d
+
+
+def test_hlo_text_parses_as_module(emitted):
+    out, d = emitted
+    for name in os.listdir(out):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(out, name)).read()
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_signature_consistency(emitted):
+    out, d = emitted
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    lm = man["artifacts"]["lm_tiny"]
+    assert lm["kind"] == "fwdbwd"
+    assert lm["inputs"][0]["shape"] == [d]
+    layout = lm["layout"]
+    # offsets are contiguous and cover d_model_params
+    off = 0
+    for p in layout["params"]:
+        assert p["offset"] == off
+        off += math.prod(p["shape"])
+    assert off == layout["d_model_params"] <= layout["d_padded"] == d
+
+    ma = man["artifacts"][f"microadam_step_d{d}"]
+    h = ma["hyper"]
+    assert h["d"] == d and h["d"] % h["block"] == 0
+    assert h["kb"] == math.ceil(h["block"] * h["density"])
+    # EF is half a byte per parameter: u8[d/2]
+    ef = [i for i in ma["inputs"] if i["name"] == "ef"][0]
+    assert ef["shape"] == [d // 2] and ef["dtype"] == "uint8"
+
+
+def test_emitter_skips_existing_without_force(emitted, capsys):
+    out, d = emitted
+    em = aot.Emitter(out, force=False)
+    aot.emit_lm(em, "tiny", M.OptConfig())
+    assert "skipping" in capsys.readouterr().out

@@ -1,0 +1,113 @@
+"""MicroAdam Pallas block-update kernel vs the pure-jnp oracle.
+
+hypothesis sweeps window size m, block count/size, k_b, tile factor and the
+step counter (covering the warm-up t <= m regime and the steady state).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import microadam_pallas as mp
+from compile.kernels import ref
+
+
+def _case(seed, m, nb, bd, kb):
+    kp, ki, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = jax.random.normal(kp, (nb * bd,), jnp.float32)
+    # Top-K indices are distinct within a row per block; emulate via choice.
+    idx = jnp.stack([
+        jnp.stack([
+            jax.random.choice(jax.random.fold_in(ki, i * nb + b), bd, (kb,), replace=False)
+            for b in range(nb)
+        ]) for i in range(m)
+    ]).astype(jnp.int32)
+    vals = jax.random.normal(kv, (m, nb, kb), jnp.float32)
+    return params, idx, vals
+
+
+def _ref_update(params, idx, vals, w1, w2, lr, eps, bd):
+    nb = params.shape[0] // bd
+    outs = []
+    for b in range(nb):
+        outs.append(ref.microadam_update_block_ref(
+            params[b * bd:(b + 1) * bd], idx[:, b, :], vals[:, b, :], w1, w2, lr, eps))
+    return jnp.concatenate(outs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(1, 12),
+    nb=st.sampled_from([1, 2, 4]),
+    bd=st.sampled_from([32, 128]),
+    t=st.integers(1, 30),
+)
+def test_update_kernel_matches_ref(seed, m, nb, bd, t):
+    kb = max(1, bd // 20)
+    params, idx, vals = _case(seed, m, nb, bd, kb)
+    w1, w2 = ref.window_weights_ref(t, m, 0.9, 0.999)
+    out = mp.microadam_update(params, idx, vals, w1, w2, 0.01, 1e-8, bd, tile_blocks=1)
+    expect = _ref_update(params, idx, vals, w1, w2, 0.01, 1e-8, bd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), tc=st.sampled_from([1, 2, 4]))
+def test_update_kernel_tile_invariance(seed, tc):
+    """Tile factor (the perf knob) must not change the numerics."""
+    m, nb, bd = 5, 4, 64
+    kb = 4
+    params, idx, vals = _case(seed, m, nb, bd, kb)
+    w1, w2 = ref.window_weights_ref(7, m, 0.9, 0.999)
+    base = mp.microadam_update(params, idx, vals, w1, w2, 0.01, 1e-8, bd, tile_blocks=1)
+    tiled = mp.microadam_update(params, idx, vals, w1, w2, 0.01, 1e-8, bd, tile_blocks=tc)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), atol=1e-6)
+
+
+def test_window_weights_warmup_and_steady():
+    """Validity masking at t <= m and ring ages in steady state."""
+    m = 4
+    # t=1: only row 0 valid, age 0, weight folds to exactly 1 after bias corr.
+    w1, _ = M.window_weights(1, m, 0.9, 0.999)
+    np.testing.assert_allclose(np.asarray(w1), [1.0, 0, 0, 0], atol=1e-6)
+    # t=2: rows 0,1 valid; row written last (w = 1) has age 0.
+    w1, _ = M.window_weights(2, m, 0.9, 0.999)
+    a = np.asarray(w1)
+    assert a[2] == 0 and a[3] == 0
+    assert a[1] > a[0] > 0  # newest row outweighs older
+    # steady state t=9 (w = 0): ages [0,3,2,1]
+    w1, _ = M.window_weights(9, m, 0.9, 0.999)
+    a = np.asarray(w1)
+    order = np.argsort(-a)
+    np.testing.assert_array_equal(order, [0, 3, 2, 1])
+    # weights sum: sum_i (1-b) b^age / (1-b^m) == 1
+    assert np.isclose(a.sum(), 1.0, atol=1e-6)
+
+
+def test_window_weights_match_ref():
+    for t in [1, 2, 5, 10, 11, 23]:
+        for m in [1, 3, 10]:
+            w1a, w2a = M.window_weights(t, m, 0.9, 0.999)
+            w1b, w2b = ref.window_weights_ref(t, m, 0.9, 0.999)
+            np.testing.assert_allclose(np.asarray(w1a), np.asarray(w1b), atol=1e-7)
+            np.testing.assert_allclose(np.asarray(w2a), np.asarray(w2b), atol=1e-7)
+
+
+def test_update_is_sparse_where_window_empty():
+    """Parameters in coordinates never touched by the window must not move:
+    the paper's sparse-update property (§3, Properties and Limitations)."""
+    m, nb, bd, kb = 3, 1, 64, 2
+    params = jnp.ones((bd,), jnp.float32)
+    idx = jnp.array([[[0, 1]], [[2, 3]], [[0, 2]]], jnp.int32)
+    vals = jnp.ones((m, 1, kb), jnp.float32)
+    w1, w2 = ref.window_weights_ref(5, m, 0.9, 0.999)
+    out = np.asarray(mp.microadam_update(params, idx, vals, w1, w2, 0.1, 1e-8, bd))
+    touched = {0, 1, 2, 3}
+    for j in range(bd):
+        if j in touched:
+            assert out[j] != 1.0
+        else:
+            assert out[j] == 1.0

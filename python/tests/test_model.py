@@ -1,0 +1,134 @@
+"""L2 model graphs: layout integrity, shapes, loss/grad sanity."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return M.TRANSFORMER_PRESETS["tiny"]
+
+
+def _init_flat(spec, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    flat = np.zeros((d,), np.float32)
+    off = 0
+    for e in spec:
+        key, sub = jax.random.split(key)
+        if e.init == "normal":
+            flat[off:off + e.size] = np.asarray(
+                jax.random.normal(sub, (e.size,)) * e.init_std)
+        elif e.init == "ones":
+            flat[off:off + e.size] = 1.0
+        off += e.size
+    return jnp.asarray(flat)
+
+
+def test_param_spec_offsets_contiguous(tiny):
+    spec = M.transformer_param_spec(tiny, "lm")
+    off = 0
+    for e in spec:
+        assert e.size == math.prod(e.shape)
+        off += e.size
+    assert off == M.spec_size(spec)
+    # names unique
+    names = [e.name for e in spec]
+    assert len(set(names)) == len(names)
+
+
+def test_unflatten_roundtrip(tiny):
+    spec = M.transformer_param_spec(tiny, "lm")
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = jnp.arange(d, dtype=jnp.float32)
+    params = M.unflatten(flat, spec)
+    off = 0
+    for e in spec:
+        np.testing.assert_array_equal(
+            np.asarray(params[e.name]).reshape(-1),
+            np.arange(off, off + e.size, dtype=np.float32))
+        off += e.size
+
+
+def test_lm_loss_and_grads(tiny):
+    spec = M.transformer_param_spec(tiny, "lm")
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = _init_flat(spec, d)
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (tiny.batch, tiny.seq), 0, tiny.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    fn = M.build_fwdbwd(lambda f, tok, tgt: M.lm_loss(tiny, spec, f, tok, tgt))
+    loss, grads = jax.jit(fn)(flat, tokens, targets)
+    assert np.isfinite(float(loss))
+    # random init => loss near ln(vocab)
+    assert abs(float(loss) - math.log(tiny.vocab)) < 1.0
+    g = np.asarray(grads)
+    assert g.shape == (d,)
+    assert np.isfinite(g).all()
+    assert np.abs(g[:M.spec_size(spec)]).max() > 0
+    # padding lanes receive exactly zero gradient
+    assert np.abs(g[M.spec_size(spec):]).max() == 0
+
+
+def test_cls_loss_and_grads(tiny):
+    spec = M.transformer_param_spec(tiny, "cls")
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = _init_flat(spec, d)
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (tiny.batch, tiny.seq), 0, tiny.vocab)
+    labels = jax.random.randint(key, (tiny.batch,), 0, tiny.n_classes)
+    loss, grads = jax.jit(M.build_fwdbwd(
+        lambda f, tok, lab: M.cls_loss(tiny, spec, f, tok, lab)))(flat, tokens, labels)
+    assert np.isfinite(float(loss))
+    assert abs(float(loss) - math.log(tiny.n_classes)) < 0.5
+    assert np.isfinite(np.asarray(grads)).all()
+
+
+def test_cls_logits_shape(tiny):
+    spec = M.transformer_param_spec(tiny, "cls")
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = _init_flat(spec, d)
+    tokens = jnp.zeros((tiny.batch, tiny.seq), jnp.int32)
+    logits = jax.jit(lambda f, t: M.cls_logits(tiny, spec, f, t))(flat, tokens)
+    assert logits.shape == (tiny.batch, tiny.n_classes)
+
+
+def test_cnn_loss_and_grads():
+    cfg = M.CNN_PRESETS["cnn_tiny"]
+    spec = M.cnn_param_spec(cfg)
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = _init_flat(spec, d)
+    key = jax.random.PRNGKey(3)
+    images = jax.random.normal(key, (cfg.batch, cfg.image, cfg.image, cfg.in_channels))
+    labels = jax.random.randint(key, (cfg.batch,), 0, cfg.n_classes)
+    loss, grads = jax.jit(M.build_fwdbwd(
+        lambda f, img, lab: M.cnn_loss(cfg, spec, f, img, lab)))(flat, images, labels)
+    assert np.isfinite(float(loss))
+    # random init: loss within a few nats of uniform prediction
+    assert math.log(cfg.n_classes) * 0.5 < float(loss) < math.log(cfg.n_classes) + 4.0
+    assert np.isfinite(np.asarray(grads)).all()
+
+
+def test_lm_training_reduces_loss(tiny):
+    """A few full-batch Adam steps on one fixed batch must overfit it."""
+    spec = M.transformer_param_spec(tiny, "lm")
+    d = M.pad_to_tile(M.spec_size(spec))
+    flat = _init_flat(spec, d)
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (tiny.batch, tiny.seq), 0, tiny.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    fwdbwd = jax.jit(M.build_fwdbwd(lambda f, tok, tgt: M.lm_loss(tiny, spec, f, tok, tgt)))
+    adam = jax.jit(M.build_adamw_step())
+    m = jnp.zeros((d,))
+    v = jnp.zeros((d,))
+    losses = []
+    for t in range(1, 21):
+        loss, g = fwdbwd(flat, tokens, targets)
+        losses.append(float(loss))
+        flat, m, v = adam(flat, g, m, v, jnp.int32(t), jnp.float32(1e-2), jnp.float32(0.0))
+    assert losses[-1] < losses[0] * 0.7, losses

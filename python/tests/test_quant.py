@@ -1,0 +1,121 @@
+"""Pallas 4-bit quantization kernels vs the pure-jnp oracle (+ Lemma 1).
+
+hypothesis sweeps the kernel's shapes and value distributions; every case
+asserts bit-exact code agreement with ref.py and the analytic error bounds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import quant_pallas as qp
+
+
+def _rand(seed, n, scale=1.0, offset=0.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale + offset
+    return x.astype(jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    buckets=st.integers(1, 16),
+    bucket=st.sampled_from([4, 64, 128]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_quant4_matches_ref(seed, buckets, bucket, scale):
+    n = buckets * bucket
+    x = _rand(seed, n, scale)
+    p, lo, hi = qp.quant4(x, bucket, tile=n)
+    pr, lor, hir = ref.quant4_ref(x, bucket)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(lor), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(hi), np.asarray(hir), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), buckets=st.integers(1, 8), bucket=st.sampled_from([8, 64]))
+def test_dequant4_roundtrip_error_bound(seed, buckets, bucket):
+    """Nearest rounding: |deq(q(x)) - x| <= u/2 element-wise per bucket."""
+    n = buckets * bucket
+    x = _rand(seed, n)
+    p, lo, hi = qp.quant4(x, bucket, tile=n)
+    xd = qp.dequant4(p, lo, hi, bucket, tile=n)
+    u = (np.asarray(hi) - np.asarray(lo)) / 15.0
+    err = np.abs(np.asarray(xd) - np.asarray(x)).reshape(buckets, bucket)
+    assert (err <= u[:, None] / 2 + 1e-6).all()
+
+
+def test_quant4_multi_tile_grid():
+    """Grid > 1: tiling must not change results vs a single-tile call."""
+    n, bucket = 1024, 64
+    x = _rand(7, n)
+    p1, lo1, hi1 = qp.quant4(x, bucket, tile=n)
+    p2, lo2, hi2 = qp.quant4(x, bucket, tile=n // 4)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(lo1), np.asarray(lo2))
+    xd1 = qp.dequant4(p1, lo1, hi1, bucket, tile=n)
+    xd2 = qp.dequant4(p1, lo1, hi1, bucket, tile=n // 4)
+    np.testing.assert_allclose(np.asarray(xd1), np.asarray(xd2))
+
+
+def test_quant4_constant_bucket_is_exact():
+    """Delta == delta buckets must decode to the constant exactly."""
+    bucket = 64
+    x = jnp.full((bucket,), 3.25, jnp.float32)
+    p, lo, hi = qp.quant4(x, bucket, tile=bucket)
+    xd = qp.dequant4(p, lo, hi, bucket, tile=bucket)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(x))
+
+
+def test_quant4_preserves_min_max():
+    """Bucket extremes quantize exactly (codes 0 and 15)."""
+    bucket = 64
+    x = _rand(11, bucket)
+    p, lo, hi = qp.quant4(x, bucket, tile=bucket)
+    xd = np.asarray(qp.dequant4(p, lo, hi, bucket, tile=bucket))
+    i_lo = int(np.argmin(np.asarray(x)))
+    i_hi = int(np.argmax(np.asarray(x)))
+    assert xd[i_lo] == pytest.approx(float(np.min(np.asarray(x))), rel=1e-6)
+    assert xd[i_hi] == pytest.approx(float(np.max(np.asarray(x))), rel=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_lemma1_stochastic_unbiased(seed):
+    """Lemma 1: randomized rounding is unbiased — E[deq(q(x))] == x.
+
+    Monte-Carlo over rounding keys; tolerance scales with u/sqrt(R).
+    """
+    bucket = 32
+    x = _rand(seed, bucket)
+    reps = 512
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), reps)
+
+    def one(key):
+        q, lo, hi = ref.quant_bucket_stochastic_ref(x, key, 4)
+        return ref.dequant_bucket_ref(q, lo, hi, 4)
+
+    mean = jnp.mean(jax.vmap(one)(keys), axis=0)
+    u = float((jnp.max(x) - jnp.min(x)) / 15.0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=4 * u / np.sqrt(reps))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(3, 64))
+def test_lemma1_norm_bound(seed, n):
+    """Lemma 1 bound: ||q(x)-x|| <= sqrt(d-2)/(2^b-1) * (D-d)/sqrt(D^2+d^2) ||x||."""
+    x = _rand(seed, n, scale=2.0)
+    key = jax.random.PRNGKey(seed + 99)
+    q, lo, hi = ref.quant_bucket_stochastic_ref(x, key, 4)
+    xd = ref.dequant_bucket_ref(q, lo, hi, 4)
+    err = float(jnp.linalg.norm(xd - x))
+    lo_f, hi_f = float(lo), float(hi)
+    denom = np.sqrt(hi_f**2 + lo_f**2)
+    if denom == 0:
+        return
+    bound = np.sqrt(max(n - 2, 0)) / 15.0 * (hi_f - lo_f) / denom * float(jnp.linalg.norm(x))
+    assert err <= bound + 1e-5

@@ -1,0 +1,96 @@
+//! Substrate kernels micro-benchmark: block Top-K, 4-bit quantize /
+//! dequantize, dynamic-8bit, AdamStats window accumulation — the pieces of
+//! the paper's CUDA §3.1 implementation, timed on this CPU.
+//!
+//! Run: `cargo bench --bench bench_kernels`
+
+use microadam::bench::time_it;
+use microadam::quant::{BucketStats, Dynamic8, Quant4};
+use microadam::topk::{topk_abs_block, SlidingWindow};
+use microadam::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_f32() - 0.5).collect()
+}
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    let d: usize = 1 << 22; // 4M params
+    let block = microadam::BLOCK;
+    let kb = microadam::kb_for_block(block, microadam::DENSITY);
+    let x = randvec(&mut rng, d);
+
+    println!("== substrate kernels, d = {d} (block {block}, k_b {kb}) ==");
+
+    // block top-k over the whole vector
+    let mut idx = vec![0u16; kb];
+    let mut vals = vec![0f32; kb];
+    let mut scratch = Vec::new();
+    time_it("topk_abs_block x all blocks", 1, 9, || {
+        for b in 0..d / block {
+            topk_abs_block(&x[b * block..(b + 1) * block], kb, &mut idx, &mut vals, &mut scratch);
+        }
+    });
+
+    // 4-bit EF quantization
+    let q = Quant4::new(microadam::QBUCKET);
+    let mut packed = vec![0u8; d / 2];
+    let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; d / microadam::QBUCKET];
+    time_it("quant4 quantize (full EF)", 1, 9, || {
+        q.quantize(&x, &mut packed, &mut stats);
+    });
+    let mut out = vec![0f32; d];
+    time_it("quant4 dequantize_add (full EF)", 1, 9, || {
+        q.dequantize_add(&packed, &stats, &mut out);
+    });
+
+    // dynamic 8-bit (AdamW-8bit state path)
+    let d8 = Dynamic8::unsigned();
+    let mut codes = vec![0u8; d];
+    let mut scales = vec![0f32; d / 256];
+    time_it("dynamic8 quantize", 1, 5, || {
+        d8.quantize(&x, 256, &mut codes, &mut scales);
+    });
+    time_it("dynamic8 dequantize", 1, 5, || {
+        d8.dequantize(&codes, 256, &scales, &mut out);
+    });
+
+    // AdamStats: dense z1/z2 accumulation from a full window
+    let m = microadam::WINDOW;
+    let nb = d / block;
+    let mut win = SlidingWindow::new(m, nb, kb);
+    for row in 0..m {
+        for b in 0..nb {
+            let (wi, wv) = win.entry_mut(row, b);
+            for (j, (i, v)) in wi.iter_mut().zip(wv.iter_mut()).enumerate() {
+                *i = ((j * 97) % block) as u16;
+                *v = (j as f32 * 0.37).sin();
+            }
+        }
+        win.commit_row();
+    }
+    let w1 = win.folded_weights(m as u64, 0.9);
+    let w2 = win.folded_weights(m as u64, 0.999);
+    let mut z1 = vec![0f32; block];
+    let mut z2 = vec![0f32; block];
+    let mut params = randvec(&mut rng, d);
+    time_it("adamstats + update (full window, all blocks)", 1, 9, || {
+        for b in 0..nb {
+            z1.fill(0.0);
+            z2.fill(0.0);
+            for i in 0..m {
+                let (wi, wv) = win.entry(i, b);
+                for (&j, &v) in wi.iter().zip(wv) {
+                    z1[j as usize] += w1[i] * v;
+                    z2[j as usize] += w2[i] * v * v;
+                }
+            }
+            let base = b * block;
+            for j in 0..block {
+                params[base + j] -= 1e-3 * z1[j] / (1e-8 + z2[j].sqrt());
+            }
+        }
+    });
+    std::hint::black_box(&params);
+    std::hint::black_box(&out);
+}

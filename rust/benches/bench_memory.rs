@@ -1,0 +1,45 @@
+//! Memory-model bench: regenerates the §3.2 / Appendix-D table (exact
+//! numbers) and measures *actual allocated* optimizer state for each native
+//! optimizer at a 4M-param model, printing theory vs measured.
+//!
+//! Run: `cargo bench --bench bench_memory`
+
+use microadam::coordinator::layout::TensorSpec;
+use microadam::memory;
+use microadam::optim::{self, OptimizerKind};
+
+fn main() {
+    microadam::bench::run_memory().unwrap();
+
+    let d = 1 << 22;
+    let side = 1 << 11;
+    let specs = vec![TensorSpec::new("w", &[side, side], 0)];
+    println!("\n== measured native state vs paper formula, d = {d} ==");
+    println!("{:<14} {:>14} {:>14} {:>8}", "optimizer", "measured B", "paper B", "ratio");
+    for kind in [
+        OptimizerKind::AdamW,
+        OptimizerKind::AdamW8bit,
+        OptimizerKind::Sgd,
+        OptimizerKind::MicroAdam,
+        OptimizerKind::AdaFactor,
+        OptimizerKind::Came,
+        OptimizerKind::GaLore,
+    ] {
+        let opt = optim::build(kind, d, &specs, 0.0);
+        let paper = match kind {
+            OptimizerKind::AdamW => memory::adamw_fp32(d as u64) as usize,
+            OptimizerKind::AdamW8bit => memory::adamw_8bit(d as u64) as usize,
+            OptimizerKind::Sgd => memory::sgd_momentum_fp32(d as u64) as usize,
+            OptimizerKind::MicroAdam => memory::microadam_default(d as u64) as usize,
+            _ => opt.paper_state_bytes(),
+        };
+        println!(
+            "{:<14} {:>14} {:>14} {:>8.3}",
+            format!("{kind:?}"),
+            opt.paper_state_bytes(),
+            paper,
+            opt.paper_state_bytes() as f64 / paper as f64
+        );
+    }
+    println!("\n(MicroAdam ratio < 1 is padding granularity; formula assumes exact d/100)");
+}

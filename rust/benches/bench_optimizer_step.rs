@@ -1,0 +1,16 @@
+//! Per-optimizer step-time benchmark (paper Tables 1/2 runtime column
+//! analogue at the micro level): every native optimizer at two problem
+//! sizes. criterion is not in the offline crate set; uses the in-repo
+//! median-of-runs harness.
+//!
+//! Run: `cargo bench --bench bench_optimizer_step`
+
+use microadam::bench;
+
+fn main() {
+    println!("== optimizer step micro-benchmark (native backends) ==");
+    bench::bench_optimizer_steps(4096, 21);
+    bench::bench_optimizer_steps(262144, 11);
+    println!("\nexpectation (paper §3.1): MicroAdam's step stays within a small factor of");
+    println!("dense AdamW despite recomputing statistics from the window (Table 2 runtime).");
+}

@@ -1,0 +1,572 @@
+//! Table/figure harnesses: one entry point per experiment in DESIGN.md §4.
+//!
+//! Each `run_*` regenerates the corresponding paper artifact on the
+//! synthetic substrate (substitutions documented in DESIGN.md), prints the
+//! paper-style rows to stdout, and (where useful) writes CSV/JSONL under
+//! `out_dir` for curve plotting. EXPERIMENTS.md records paper-vs-measured.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::config::{optimizer_name, OptBackend, TrainConfig};
+use crate::coordinator::metrics::MetricsLogger;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::Trainer;
+use crate::memory;
+use crate::models::mlp::Mlp;
+use crate::models::testfns::{self, IllConditioned, Rosenbrock, TestFn};
+use crate::optim::microadam::{EfMode, MicroAdam, MicroAdamConfig};
+use crate::optim::microadam_analytical::{AnalyticalConfig, MicroAdamAnalytical};
+use crate::optim::{self, adamw, galore, Optimizer, OptimizerKind};
+
+fn write_csv(out_dir: &str, name: &str, header: &str, rows: &[String]) -> Result<String> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = format!("{out_dir}/{name}");
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// Appendix D / §3.2: theoretical memory table
+// ---------------------------------------------------------------------------
+
+/// `repro memory`: optimizer-state footprints for Llama-2 7B (Appendix D).
+pub fn run_memory() -> Result<()> {
+    println!("Optimizer-state memory, Llama-2 7B (d = {}):", memory::LLAMA2_7B_PARAMS);
+    println!("{:<16} {:>14} {:>9}", "state", "bytes", "GB");
+    for row in memory::appendix_d_table() {
+        println!("{:<16} {:>14} {:>9.2}", row.name, row.bytes, row.gib);
+    }
+    let d = memory::LLAMA2_7B_PARAMS;
+    println!(
+        "\nm_max vs AdamW-8bit at k=d/100 (§3.2 Discussion): {:.1}",
+        memory::max_window_vs_adamw8bit(d, d.div_ceil(100))
+    );
+    println!("\nResNet state sizes (Table 4 column):");
+    for (name, dm) in [("ResNet-18", memory::RESNET18_PARAMS), ("ResNet-50", memory::RESNET50_PARAMS)] {
+        println!(
+            "{name}: SGD {:.2} MB | AdamW {:.2} MB | AdamW-8bit {:.2} MB | MicroAdam {:.2} MB",
+            memory::mib(memory::sgd_momentum_fp32(dm)),
+            memory::mib(memory::adamw_fp32(dm)),
+            memory::mib(memory::adamw_8bit(dm)),
+            memory::mib(memory::microadam_default(dm)),
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1: Adam vs TopK-Adam vs TopK-Adam+EF on Rosenbrock
+// ---------------------------------------------------------------------------
+
+/// `repro fig1`: EF rescues TopK-Adam on the Rosenbrock function.
+///
+/// The paper's figure compresses to the single largest coordinate (50%
+/// sparsity in 2-D) and compares plain Adam, TopK-Adam and TopK-Adam+EF.
+/// The TopK variants here are Algorithm 3 with `C = Top-1`, dense error
+/// (omega = 0), no AMSGrad/bias-correction asymmetries between them; the
+/// practical 4-bit MicroAdam is added as a fourth line.
+pub fn run_fig1(out_dir: &str, steps: usize) -> Result<()> {
+    let lr = 0.01; // small constant lr as in the paper's illustration
+    let f = Rosenbrock;
+    let mk_topk = |error_feedback| -> Box<dyn Optimizer> {
+        Box::new(MicroAdamAnalytical::new(2, AnalyticalConfig {
+            k: 1,
+            qbucket: None,
+            amsgrad: false,
+            error_feedback,
+            ..Default::default()
+        }))
+    };
+    let variants: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        (
+            "adam",
+            Box::new(adamw::AdamW::new(2, adamw::AdamWConfig {
+                bias_correction: false, // match Algorithm 3's normalization
+                ..Default::default()
+            })),
+        ),
+        ("topk-adam", mk_topk(false)),
+        ("topk-adam-ef", mk_topk(true)),
+        (
+            "microadam-q4",
+            Box::new(MicroAdam::new(2, MicroAdamConfig { ef: EfMode::Quant4, ..Default::default() })),
+        ),
+    ];
+    println!("Figure 1 — Rosenbrock from (-0.5, 1.0), lr={lr}, {steps} steps");
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>10} {:>12}",
+        "optimizer", "x", "y", "f(x,y)", "path-len", "dist-to-adam"
+    );
+    let mut trajs: Vec<(&str, Vec<Vec<f32>>)> = Vec::new();
+    for (name, mut opt) in variants {
+        let traj = testfns::run_trajectory(&f, opt.as_mut(), lr, steps);
+        trajs.push((name, traj));
+    }
+    let adam_traj = trajs[0].1.clone();
+    let mut dists = Vec::new();
+    for (name, traj) in &trajs {
+        let end = traj.last().unwrap();
+        let path_len: f32 = traj
+            .windows(2)
+            .map(|w| ((w[1][0] - w[0][0]).powi(2) + (w[1][1] - w[0][1]).powi(2)).sqrt())
+            .sum();
+        // mean pointwise distance to the Adam trajectory (the figure's
+        // visual claim, quantified)
+        let dist: f32 = traj
+            .iter()
+            .zip(&adam_traj)
+            .map(|(a, b)| ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt())
+            .sum::<f32>()
+            / traj.len() as f32;
+        println!(
+            "{:<14} {:>10.4} {:>10.4} {:>12.6} {:>10.3} {:>12.4}",
+            name,
+            end[0],
+            end[1],
+            f.eval(end),
+            path_len,
+            dist
+        );
+        dists.push((*name, dist));
+        let rows: Vec<String> = traj.iter().map(|p| format!("{},{}", p[0], p[1])).collect();
+        write_csv(out_dir, &format!("fig1_{name}.csv"), "x,y", &rows)?;
+    }
+    let d_noef = dists.iter().find(|(n, _)| *n == "topk-adam").unwrap().1;
+    let d_ef = dists.iter().find(|(n, _)| *n == "topk-adam-ef").unwrap().1;
+    println!(
+        "\nEF recovers Adam's trajectory: mean deviation {:.4} with EF vs {:.4} without ({}x)",
+        d_ef,
+        d_noef,
+        d_noef / d_ef.max(1e-9)
+    );
+    println!("trajectories written to {out_dir}/fig1_*.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 9: GaLore / GaLore-EF trajectories
+// ---------------------------------------------------------------------------
+
+/// `repro fig9`: Adam vs GaLore-Adam vs GaLore-Adam-EF on the
+/// ill-conditioned trig function and on Rosenbrock.
+pub fn run_fig9(out_dir: &str, steps: usize) -> Result<()> {
+    // 2-D problems as 2x1 weight "matrices" with rank-1 projection: the
+    // projection discards one direction per refresh interval, exactly the
+    // regime Appendix F analyses.
+    use crate::coordinator::layout::TensorSpec;
+    let spec = vec![TensorSpec::new("w", &[2, 1], 0)];
+    for (fname, f, lr) in [
+        ("illcond", &IllConditioned as &dyn TestFn, 0.01),
+        ("rosenbrock", &Rosenbrock as &dyn TestFn, 0.01),
+    ] {
+        println!("\nFigure 9 — {fname}, lr={lr}, {steps} steps");
+        println!("{:<16} {:>10} {:>10} {:>12}", "optimizer", "x", "y", "f(x,y)");
+        let variants: Vec<(&str, Box<dyn Optimizer>)> = vec![
+            ("adam", Box::new(adamw::AdamW::new(2, adamw::AdamWConfig::default()))),
+            (
+                "galore-adam",
+                Box::new(galore::GaLore::new(2, spec.clone(), galore::GaLoreConfig {
+                    rank: 1,
+                    update_every: 20,
+                    error_feedback: false,
+                    ..Default::default()
+                })),
+            ),
+            (
+                "galore-adam-ef",
+                Box::new(galore::GaLore::new(2, spec.clone(), galore::GaLoreConfig {
+                    rank: 1,
+                    update_every: 20,
+                    error_feedback: true,
+                    ..Default::default()
+                })),
+            ),
+        ];
+        for (name, mut opt) in variants {
+            let mut x = f.start();
+            let mut g = vec![0.0; 2];
+            let mut rows = Vec::with_capacity(steps + 1);
+            rows.push(format!("{},{}", x[0], x[1]));
+            for _ in 0..steps {
+                f.grad(&x, &mut g);
+                opt.step(&mut x, &g, lr);
+                rows.push(format!("{},{}", x[0], x[1]));
+            }
+            println!("{:<16} {:>10.4} {:>10.4} {:>12.6}", name, x[0], x[1], f.eval(&x));
+            write_csv(out_dir, &format!("fig9_{fname}_{name}.csv"), "x,y", &rows)?;
+        }
+    }
+    println!("\ntrajectories written to {out_dir}/fig9_*.csv");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 8: GaLore-EF error-norm growth
+// ---------------------------------------------------------------------------
+
+/// `repro fig8`: error-norm vs gradient-norm dynamics of GaLore+EF during
+/// MLP fine-tuning (Appendix F: linear growth between subspace refreshes).
+pub fn run_fig8(out_dir: &str, steps: usize) -> Result<()> {
+    let vocab = 128;
+    let mlp = Mlp::new(vec![vocab, 64, 32, 3]);
+    let update_every = 50u64;
+    let mut opt = galore::GaLore::new(mlp.dim(), mlp.specs().to_vec(), galore::GaLoreConfig {
+        rank: 4,
+        update_every,
+        error_feedback: true,
+        ..Default::default()
+    });
+    let mut flat = mlp.init(0);
+    let mut ds = crate::data::NliDataset::new(vocab, 3, 1);
+    let (mut toks, mut labs, mut feats) = (vec![], vec![], vec![]);
+    let mut grads = vec![0f32; mlp.dim()];
+    let mut rows = Vec::new();
+    let mut max_ratio = 0f32;
+    for step in 1..=steps {
+        ds.next_batch(16, 24, &mut toks, &mut labs);
+        Mlp::featurize_tokens(vocab, &toks, 24, &mut feats);
+        let loss = mlp.loss_grad(&flat, &feats, &labs, &mut grads);
+        opt.step(&mut flat, &grads, 1e-3);
+        let norms = opt.layer_norms();
+        let l0 = &norms[0];
+        max_ratio = max_ratio.max(l0.error_norm / l0.grad_norm.max(1e-9));
+        rows.push(format!("{step},{loss},{},{}", l0.grad_norm, l0.error_norm));
+    }
+    let path = write_csv(out_dir, "fig8_norms.csv", "step,loss,grad_norm,error_norm", &rows)?;
+    println!("Figure 8 — GaLore-EF error/grad norms on MLP fine-tune ({steps} steps)");
+    println!("subspace refresh interval T = {update_every}");
+    println!("max ||e||/||g|| observed: {max_ratio:.1} (paper: error dominates gradient)");
+    // growth-within-window summary: mean error norm right before refresh vs
+    // right after
+    let err_at = |s: usize| -> f32 {
+        rows.get(s - 1)
+            .and_then(|r| r.split(',').nth(3))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0)
+    };
+    if steps as u64 > 2 * update_every {
+        let before = err_at(2 * update_every as usize - 1);
+        let after = err_at(update_every as usize + 5);
+        println!(
+            "error norm grows within a window: {:.3} (early) -> {:.3} (pre-refresh)",
+            after, before
+        );
+    }
+    println!("curve written to {path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Theory (Theorems 1-2): empirical rate study
+// ---------------------------------------------------------------------------
+
+/// `repro theory`: MicroAdam (analytical view) on a PL quadratic, sweeping
+/// compression; checks the `(1+omega) q < 1` condition against observed
+/// convergence and the O(1/sqrt(T)) gradient-norm decay.
+pub fn run_theory(out_dir: &str) -> Result<()> {
+    let d = 128;
+    println!("Theory study — PL quadratic (d={d}, kappa=50), 4-bit stochastic EF");
+    println!(
+        "{:<22} {:>7} {:>9} {:>9} {:>12} {:>12} {:>9}",
+        "config", "q", "omega", "(1+w)q", "E|g|^2@T/4", "E|g|^2@T", "converged"
+    );
+    let q = crate::models::testfns::QuadraticPL::new(d, 50.0);
+    let mut rows = Vec::new();
+    for (label, k, qbucket) in [
+        ("dense-EF k=64", 64usize, None),
+        ("dense-EF k=16", 16, None),
+        ("Q4-EF k=64 Bq=16", 64, Some(16usize)),
+        ("Q4-EF k=16 Bq=16", 16, Some(16)),
+        ("Q4-EF k=4 Bq=128", 4, Some(128)), // violates (1+w)q < 1
+    ] {
+        let mut opt = MicroAdamAnalytical::new(d, AnalyticalConfig {
+            k,
+            qbucket,
+            seed: 3,
+            ..Default::default()
+        });
+        let qc = opt.q();
+        let om = opt.omega_bound();
+        let cond = opt.condition_holds();
+        let total = 4000usize;
+        let mut x = q.start();
+        let mut g = vec![0f32; d];
+        let mut sum_early = 0f64;
+        let mut sum_late = 0f64;
+        for t in 1..=total {
+            q.grad(&x, &mut g);
+            let gn: f64 = g.iter().map(|v| (v * v) as f64).sum();
+            if t <= total / 4 {
+                sum_early += gn;
+            }
+            sum_late += gn;
+            opt.step(&mut x, &g, 0.01);
+        }
+        let early = sum_early / (total / 4) as f64;
+        let late = sum_late / total as f64;
+        let converged = q.eval(&x) < 0.05 * q.eval(&q.start());
+        println!(
+            "{:<22} {:>7.3} {:>9.3} {:>9.3} {:>12.4e} {:>12.4e} {:>9}",
+            label,
+            qc,
+            om,
+            (1.0 + om) * qc,
+            early,
+            late,
+            converged
+        );
+        rows.push(format!("{label},{qc},{om},{cond},{early},{late},{converged}"));
+    }
+    let path = write_csv(
+        out_dir,
+        "theory_rates.csv",
+        "config,q,omega,condition,grad2_early,grad2_late,converged",
+        &rows,
+    )?;
+    println!("\n(avg grad^2 shrinking with horizon ~ the O(1/sqrt(T)) Theorem-1 rate; the");
+    println!(" violated-condition row illustrates why (1+omega)q < 1 is needed)");
+    println!("written {path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1-4
+// ---------------------------------------------------------------------------
+
+struct TableRow {
+    name: String,
+    train_loss: f32,
+    accuracy: Option<f32>,
+    state_bytes: usize,
+    runtime_s: f64,
+}
+
+fn table_print(title: &str, rows: &[TableRow]) {
+    println!("\n{title}");
+    println!(
+        "{:<22} {:>11} {:>9} {:>14} {:>9}",
+        "optimizer", "train loss", "acc", "state bytes", "time (s)"
+    );
+    for r in rows {
+        let acc = r.accuracy.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<22} {:>11.4} {:>9} {:>14} {:>9.1}",
+            r.name, r.train_loss, acc, r.state_bytes, r.runtime_s
+        );
+    }
+}
+
+fn run_one(
+    model: &str,
+    kind: OptimizerKind,
+    backend: OptBackend,
+    steps: u64,
+    lr: f32,
+    seed: u64,
+    artifacts_dir: &str,
+    out_dir: &str,
+    tag: &str,
+) -> Result<(TableRow, Trainer)> {
+    let cfg = TrainConfig {
+        model: model.into(),
+        optimizer: kind,
+        backend,
+        schedule: LrSchedule::Const { lr },
+        steps,
+        seed,
+        out: format!("{out_dir}/{tag}_{}_{}.jsonl", model, optimizer_name(kind)),
+        log_every: (steps / 4).max(1),
+        artifacts_dir: artifacts_dir.into(),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut trainer = Trainer::new(cfg)?;
+    let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
+    trainer.train(&mut logger)?;
+    let row = TableRow {
+        name: format!("{} [{}]", optimizer_name(kind), match backend {
+            OptBackend::Aot => "aot",
+            OptBackend::Native => "native",
+        }),
+        train_loss: logger.tail_loss(10),
+        accuracy: None,
+        state_bytes: trainer.opt_state_bytes(),
+        runtime_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok((row, trainer))
+}
+
+/// `repro table1`: GLUE/MNLI stand-in — transformer classifier fine-tune
+/// with the paper's five optimizers (MicroAdam, Adam, Adam-8bit, CAME,
+/// GaLore).
+pub fn run_table1(artifacts_dir: &str, out_dir: &str, model: &str, steps: u64) -> Result<()> {
+    let mut rows = Vec::new();
+    for (kind, backend, lr) in [
+        (OptimizerKind::MicroAdam, OptBackend::Native, 3e-3),
+        (OptimizerKind::Adam, OptBackend::Native, 1e-3),
+        (OptimizerKind::AdamW8bit, OptBackend::Native, 1e-3),
+        (OptimizerKind::Came, OptBackend::Native, 3e-4),
+        (OptimizerKind::GaLore, OptBackend::Native, 3e-3),
+    ] {
+        let (mut row, mut trainer) =
+            run_one(model, kind, backend, steps, lr, 7, artifacts_dir, out_dir, "table1")?;
+        row.accuracy = Some(trainer.eval_accuracy(8)?);
+        rows.push(row);
+    }
+    table_print(
+        &format!("Table 1 (stand-in): {model} fine-tune on synthetic MNLI, {steps} steps"),
+        &rows,
+    );
+    println!("\npaper shape to check: MicroAdam acc >= Adam-8bit ~ Adam > GaLore > CAME,");
+    println!("with MicroAdam state well below Adam and ~half of Adam-8bit.");
+    Ok(())
+}
+
+/// `repro table2`: GSM8k stand-in — LM fine-tune via AOT artifacts; the
+/// paper-scale (7B/13B) state memory comes from the exact §3.2 model.
+pub fn run_table2(artifacts_dir: &str, out_dir: &str, model: &str, steps: u64) -> Result<()> {
+    let mut rows = Vec::new();
+    for (kind, lr) in [
+        (OptimizerKind::Adam, 1e-3),
+        (OptimizerKind::AdamW8bit, 1e-3),
+        (OptimizerKind::MicroAdam, 3e-3),
+    ] {
+        let (row, _) =
+            run_one(model, kind, OptBackend::Aot, steps, lr, 7, artifacts_dir, out_dir, "table2")?;
+        rows.push(row);
+    }
+    table_print(
+        &format!("Table 2 (stand-in): {model} LM fine-tune (AOT path), {steps} steps"),
+        &rows,
+    );
+    let d7 = memory::LLAMA2_7B_PARAMS;
+    println!("\npaper-scale optimizer state (exact §3.2 accounting, Llama-2 7B):");
+    println!("  Adam     {:>7.2} GB   (paper: 25.1 GB bf16)", memory::gib(memory::adamw_bf16(d7)));
+    println!("  Adam-8b  {:>7.2} GB   (paper: 12.55 GB)", memory::gib(memory::adamw_8bit(d7)));
+    println!("  MicroAdam{:>7.2} GB   (paper: 5.65 GB, m=10)", memory::gib(memory::microadam_default(d7)));
+    println!(
+        "  MicroAdam m=20 {:>7.2} GB (paper: 8.25 GB)",
+        memory::gib(memory::microadam(d7, 20, d7.div_ceil(100)))
+    );
+    Ok(())
+}
+
+/// `repro table3`: Open-Platypus stand-in — instruction-tuning-shaped
+/// classifier run evaluated on 4 synthetic "tasks" (fresh eval streams).
+pub fn run_table3(artifacts_dir: &str, out_dir: &str, model: &str, steps: u64) -> Result<()> {
+    println!("\nTable 3 (stand-in): {model}, 4-task synthetic eval suite, {steps} steps");
+    println!(
+        "{:<22} {:>14} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "optimizer", "state bytes", "avg", "task1", "task2", "task3", "task4"
+    );
+    for (kind, lr) in [
+        (OptimizerKind::AdamW, 1e-3),
+        (OptimizerKind::AdamW8bit, 1e-3),
+        (OptimizerKind::MicroAdam, 3e-3),
+    ] {
+        let (row, mut trainer) =
+            run_one(model, kind, OptBackend::Native, steps, lr, 11, artifacts_dir, out_dir, "table3")?;
+        // four "tasks": independent eval batches
+        let mut accs = Vec::new();
+        for _ in 0..4 {
+            accs.push(trainer.eval_accuracy(4)?);
+        }
+        let avg = accs.iter().sum::<f32>() / 4.0;
+        println!(
+            "{:<22} {:>14} {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}%",
+            row.name,
+            row.state_bytes,
+            avg * 100.0,
+            accs[0] * 100.0,
+            accs[1] * 100.0,
+            accs[2] * 100.0,
+            accs[3] * 100.0
+        );
+    }
+    println!("\npaper shape: MicroAdam >= AdamW > Adam-8b on average, with the lowest memory.");
+    Ok(())
+}
+
+/// `repro table4`: ImageNet stand-in — CNN pre-train from scratch with
+/// SGD / AdamW / AdamW-8bit / MicroAdam.
+pub fn run_table4(artifacts_dir: &str, out_dir: &str, model: &str, steps: u64) -> Result<()> {
+    let mut rows = Vec::new();
+    for (kind, lr) in [
+        (OptimizerKind::Sgd, 0.05),
+        (OptimizerKind::AdamW, 1e-3),
+        (OptimizerKind::AdamW8bit, 1e-3),
+        (OptimizerKind::MicroAdam, 3e-3),
+    ] {
+        let (mut row, mut trainer) =
+            run_one(model, kind, OptBackend::Native, steps, lr, 13, artifacts_dir, out_dir, "table4")?;
+        row.accuracy = Some(trainer.eval_accuracy(8)?);
+        rows.push(row);
+    }
+    table_print(
+        &format!("Table 4 (stand-in): {model} pre-training on synthetic images, {steps} steps"),
+        &rows,
+    );
+    println!("\npaper-scale state sizes (exact, Table 4 'State Size' column):");
+    for (name, dm) in [("ResNet-18", memory::RESNET18_PARAMS), ("ResNet-50", memory::RESNET50_PARAMS)] {
+        println!(
+            "  {name}: SGD {:.2} / AdamW {:.2} / AdamW-8bit {:.2} / MicroAdam {:.2} MB",
+            memory::mib(memory::sgd_momentum_fp32(dm)),
+            memory::mib(memory::adamw_fp32(dm)),
+            memory::mib(memory::adamw_8bit(dm)),
+            memory::mib(memory::microadam_default(dm)),
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Micro-benchmarks (shared by the `benches/` targets)
+// ---------------------------------------------------------------------------
+
+/// Lightweight criterion substitute: median-of-runs wall time.
+pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let mut line = String::new();
+    let _ = write!(line, "{name:<46} median {:>10.3} ms", med * 1e3);
+    let _ = write!(line, "  (min {:.3} ms, n={iters})", samples[0] * 1e3);
+    println!("{line}");
+    med
+}
+
+/// Native optimizer step micro-benchmark (one row per optimizer at dim `d`).
+pub fn bench_optimizer_steps(d: usize, iters: usize) {
+    use crate::coordinator::layout::TensorSpec;
+    let side = (d as f64).sqrt() as usize;
+    let specs = vec![TensorSpec::new("w", &[side, side], 0)];
+    println!("\nnative optimizer step, d = {d}:");
+    for &kind in OptimizerKind::all() {
+        let mut opt = optim::build(kind, d, &specs, 0.0);
+        let mut params = vec![0.1f32; d];
+        let grads: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+        time_it(
+            &format!("{:?}/d{}", kind, d),
+            2,
+            iters,
+            || opt.step(&mut params, &grads, 1e-3),
+        );
+    }
+}

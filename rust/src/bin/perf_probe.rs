@@ -1,0 +1,59 @@
+//! perf_probe — time one artifact in isolation (the §Perf workhorse).
+//!
+//! Usage: perf_probe <manifest-dir> <artifact-name> [iters]
+//!
+//! Builds zero-filled inputs of the manifest shapes, compiles the artifact,
+//! and reports median wall time per execute. Used to attribute e2e step
+//! time to fwd/bwd vs optimizer kernels and to sweep the L1 tile size.
+
+use anyhow::{bail, Result};
+use microadam::runtime::{lit_f32, lit_i32, lit_u8, Runtime};
+use microadam::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        bail!("usage: perf_probe <manifest-dir> <artifact> [iters]");
+    }
+    let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let mut rt = Runtime::load(&args[0])?;
+    let meta = rt.meta(&args[1])?.clone();
+    let mut rng = Rng::seed_from_u64(0);
+    let mut inputs = Vec::new();
+    for (name, dtype, shape) in &meta.inputs {
+        let n: usize = shape.iter().product();
+        let lit = match dtype.as_str() {
+            "float32" => {
+                let v: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+                lit_f32(&v, shape)?
+            }
+            "int32" => {
+                // step counter t=1; token-ish inputs stay small
+                let v: Vec<i32> = (0..n).map(|_| (rng.gen_range(16)) as i32 + 1).collect();
+                lit_i32(&v, shape)?
+            }
+            "uint8" => lit_u8(&vec![0u8; n], shape)?,
+            other => bail!("{name}: dtype {other}"),
+        };
+        inputs.push(lit);
+    }
+    let t0 = std::time::Instant::now();
+    rt.compile(&meta.name)?;
+    eprintln!("compile: {:.2}s", t0.elapsed().as_secs_f32());
+    // warmup
+    rt.execute_named(&meta.name, &inputs)?;
+    let mut samples = Vec::new();
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        rt.execute_named(&meta.name, &inputs)?;
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "{}: median {:.3}s min {:.3}s over {iters} iters",
+        meta.name,
+        samples[samples.len() / 2],
+        samples[0]
+    );
+    Ok(())
+}

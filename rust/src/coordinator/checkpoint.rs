@@ -1,0 +1,171 @@
+//! Binary checkpoints: parameters + step counter + (for MicroAdam) the
+//! quantized EF / window state, so a resumed run continues bit-exactly.
+//!
+//! Format (little-endian):
+//! ```text
+//!   magic "MADM" | version u32 | step u64 | d u64 | params f32[d]
+//!   | has_opt u8 | [MicroAdam state: ef len u64, ef bytes, qlo/qhi f32,
+//!                   w_idx i32, w_val f32 lens + payloads, t u64]
+//! ```
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::state::MicroAdamSnapshot;
+
+const MAGIC: &[u8; 4] = b"MADM";
+const VERSION: u32 = 1;
+
+/// A checkpoint payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub opt: Option<MicroAdamSnapshot>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        write_f32s(&mut f, &self.params)?;
+        match &self.opt {
+            None => f.write_all(&[0u8])?,
+            Some(s) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(s.ef.len() as u64).to_le_bytes())?;
+                f.write_all(&s.ef)?;
+                f.write_all(&(s.qlo.len() as u64).to_le_bytes())?;
+                write_f32s(&mut f, &s.qlo)?;
+                write_f32s(&mut f, &s.qhi)?;
+                f.write_all(&(s.w_idx.len() as u64).to_le_bytes())?;
+                write_i32s(&mut f, &s.w_idx)?;
+                write_f32s(&mut f, &s.w_val)?;
+                f.write_all(&s.t.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path}: not a microadam checkpoint");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("{path}: checkpoint version {version}, expected {VERSION}");
+        }
+        let step = read_u64(&mut f)?;
+        let d = read_u64(&mut f)? as usize;
+        let params = read_f32s(&mut f, d)?;
+        let mut has_opt = [0u8];
+        f.read_exact(&mut has_opt)?;
+        let opt = if has_opt[0] == 1 {
+            let ef_len = read_u64(&mut f)? as usize;
+            let mut ef = vec![0u8; ef_len];
+            f.read_exact(&mut ef)?;
+            let nq = read_u64(&mut f)? as usize;
+            let qlo = read_f32s(&mut f, nq)?;
+            let qhi = read_f32s(&mut f, nq)?;
+            let wlen = read_u64(&mut f)? as usize;
+            let w_idx = read_i32s(&mut f, wlen)?;
+            let w_val = read_f32s(&mut f, wlen)?;
+            let t = read_u64(&mut f)?;
+            Some(MicroAdamSnapshot { ef, qlo, qhi, w_idx, w_val, t })
+        } else {
+            None
+        };
+        Ok(Checkpoint { step, params, opt })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn write_i32s<W: Write>(w: &mut W, xs: &[i32]) -> Result<()> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn read_i32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<i32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_without_opt_state() {
+        let ck = Checkpoint { step: 42, params: vec![1.0, -2.5, 3.25], opt: None };
+        let path = "/tmp/microadam_ck_test1.bin";
+        ck.save(path).unwrap();
+        let back = Checkpoint::load(path).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn roundtrip_with_microadam_state() {
+        let ck = Checkpoint {
+            step: 7,
+            params: vec![0.5; 16],
+            opt: Some(MicroAdamSnapshot {
+                ef: vec![1, 2, 3, 255, 0, 7, 8, 9],
+                qlo: vec![-1.0],
+                qhi: vec![1.0],
+                w_idx: vec![0, 3, 1, 2],
+                w_val: vec![0.1, -0.2, 0.3, -0.4],
+                t: 7,
+            }),
+        };
+        let path = "/tmp/microadam_ck_test2.bin";
+        ck.save(path).unwrap();
+        assert_eq!(Checkpoint::load(path).unwrap(), ck);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = "/tmp/microadam_ck_test3.bin";
+        std::fs::write(path, b"NOPE....").unwrap();
+        assert!(Checkpoint::load(path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

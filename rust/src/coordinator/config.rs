@@ -1,0 +1,235 @@
+//! Training configuration: JSON files + named presets.
+//!
+//! The config system is the launcher's contract: everything a run needs is
+//! one JSON object (model artifact, optimizer, schedule, steps, seed, output
+//! dir), so experiments are reproducible from the file alone.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::schedule::LrSchedule;
+use crate::optim::OptimizerKind;
+use crate::util::json::{self, Json};
+
+/// Which implementation performs the optimizer update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptBackend {
+    /// AOT artifact (`microadam_step_d*` etc.) executed via PJRT.
+    Aot,
+    /// Native rust implementation from [`crate::optim`].
+    Native,
+}
+
+/// Full training run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model artifact name, e.g. "lm_small" or "cls_tiny".
+    pub model: String,
+    pub optimizer: OptimizerKind,
+    pub backend: OptBackend,
+    pub schedule: LrSchedule,
+    pub steps: u64,
+    pub seed: u64,
+    pub weight_decay: f32,
+    /// Gradient accumulation (micro-steps per optimizer step).
+    pub grad_accum: usize,
+    /// Metrics JSONL path (empty = no file logging).
+    pub out: String,
+    /// Log every n steps.
+    pub log_every: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "lm_tiny".into(),
+            optimizer: OptimizerKind::MicroAdam,
+            backend: OptBackend::Aot,
+            schedule: LrSchedule::Const { lr: 1e-3 },
+            steps: 100,
+            seed: 7,
+            weight_decay: 0.0,
+            grad_accum: 1,
+            out: String::new(),
+            log_every: 10,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let mut cfg = TrainConfig::default();
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = j.get("optimizer").and_then(Json::as_str) {
+            cfg.optimizer = parse_optimizer(v)?;
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            cfg.backend = match v {
+                "aot" => OptBackend::Aot,
+                "native" => OptBackend::Native,
+                other => bail!("unknown backend {other}"),
+            };
+        }
+        if let Some(v) = j.get("steps").and_then(Json::as_f64) {
+            cfg.steps = v as u64;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("weight_decay").and_then(Json::as_f64) {
+            cfg.weight_decay = v as f32;
+        }
+        if let Some(v) = j.get("grad_accum").and_then(Json::as_f64) {
+            cfg.grad_accum = (v as usize).max(1);
+        }
+        if let Some(v) = j.get("out").and_then(Json::as_str) {
+            cfg.out = v.to_string();
+        }
+        if let Some(v) = j.get("log_every").and_then(Json::as_f64) {
+            cfg.log_every = (v as u64).max(1);
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        let lr = j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3) as f32;
+        cfg.schedule = match j.get("schedule").and_then(Json::as_str).unwrap_or("const") {
+            "const" => LrSchedule::Const { lr },
+            "warmup-cosine" => LrSchedule::WarmupCosine {
+                lr,
+                warmup: j.get("warmup").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                total: j.get("total").and_then(Json::as_f64).unwrap_or(cfg.steps as f64) as u64,
+                floor_frac: j.get("floor_frac").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            },
+            "linear-decay" => LrSchedule::LinearDecay {
+                lr,
+                total: j.get("total").and_then(Json::as_f64).unwrap_or(cfg.steps as f64) as u64,
+            },
+            other => bail!("unknown schedule {other}"),
+        };
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize back to JSON (for run provenance logging).
+    pub fn to_json(&self) -> Json {
+        let (sched, lr, warmup, total, floor) = match self.schedule {
+            LrSchedule::Const { lr } => ("const", lr, 0, 0, 0.0),
+            LrSchedule::WarmupCosine { lr, warmup, total, floor_frac } => {
+                ("warmup-cosine", lr, warmup, total, floor_frac)
+            }
+            LrSchedule::LinearDecay { lr, total } => ("linear-decay", lr, 0, total, 0.0),
+        };
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("optimizer", json::s(optimizer_name(self.optimizer))),
+            ("backend", json::s(match self.backend {
+                OptBackend::Aot => "aot",
+                OptBackend::Native => "native",
+            })),
+            ("schedule", json::s(sched)),
+            ("lr", json::num(lr as f64)),
+            ("warmup", json::num(warmup as f64)),
+            ("total", json::num(total as f64)),
+            ("floor_frac", json::num(floor as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("weight_decay", json::num(self.weight_decay as f64)),
+            ("grad_accum", json::num(self.grad_accum as f64)),
+            ("out", json::s(&self.out)),
+            ("log_every", json::num(self.log_every as f64)),
+            ("artifacts_dir", json::s(&self.artifacts_dir)),
+        ])
+    }
+}
+
+/// Parse an optimizer name (kebab-case, as in the CLI and config files).
+pub fn parse_optimizer(s: &str) -> Result<OptimizerKind> {
+    Ok(match s {
+        "micro-adam" | "microadam" => OptimizerKind::MicroAdam,
+        "adam" => OptimizerKind::Adam,
+        "adamw" => OptimizerKind::AdamW,
+        "adamw-8bit" | "adam-8bit" | "adamw8bit" => OptimizerKind::AdamW8bit,
+        "sgd" => OptimizerKind::Sgd,
+        "adafactor" => OptimizerKind::AdaFactor,
+        "came" => OptimizerKind::Came,
+        "galore" => OptimizerKind::GaLore,
+        "galore-ef" => OptimizerKind::GaLoreEf,
+        other => bail!("unknown optimizer {other}"),
+    })
+}
+
+/// Canonical kebab-case name of an optimizer kind.
+pub fn optimizer_name(k: OptimizerKind) -> &'static str {
+    match k {
+        OptimizerKind::MicroAdam => "micro-adam",
+        OptimizerKind::Adam => "adam",
+        OptimizerKind::AdamW => "adamw",
+        OptimizerKind::AdamW8bit => "adamw-8bit",
+        OptimizerKind::Sgd => "sgd",
+        OptimizerKind::AdaFactor => "adafactor",
+        OptimizerKind::Came => "came",
+        OptimizerKind::GaLore => "galore",
+        OptimizerKind::GaLoreEf => "galore-ef",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_json() {
+        let cfg = TrainConfig {
+            model: "lm_small".into(),
+            optimizer: OptimizerKind::AdamW8bit,
+            backend: OptBackend::Native,
+            schedule: LrSchedule::WarmupCosine { lr: 3e-4, warmup: 10, total: 200, floor_frac: 0.1 },
+            steps: 200,
+            seed: 42,
+            weight_decay: 0.1,
+            grad_accum: 4,
+            out: "runs/x.jsonl".into(),
+            log_every: 5,
+            artifacts_dir: "artifacts".into(),
+        };
+        let j = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.optimizer, cfg.optimizer);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.schedule, cfg.schedule);
+        assert_eq!(back.steps, cfg.steps);
+        assert_eq!(back.grad_accum, 4);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = TrainConfig::from_json(r#"{"model": "cls_tiny"}"#).unwrap();
+        assert_eq!(cfg.model, "cls_tiny");
+        assert_eq!(cfg.optimizer, OptimizerKind::MicroAdam);
+        assert_eq!(cfg.steps, 100);
+    }
+
+    #[test]
+    fn all_optimizer_names_parse_back() {
+        for &k in OptimizerKind::all() {
+            assert_eq!(parse_optimizer(optimizer_name(k)).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn bad_values_are_rejected() {
+        assert!(TrainConfig::from_json(r#"{"optimizer": "frobnicator"}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"schedule": "spiral"}"#).is_err());
+        assert!(TrainConfig::from_json("{nope").is_err());
+    }
+}

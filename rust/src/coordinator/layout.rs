@@ -1,0 +1,169 @@
+//! Parameter layout manager: the flat-vector view of a model.
+//!
+//! The L2 graphs operate on one flat, block-padded f32 vector; the manifest
+//! records every tensor's name/shape/offset/init so the rust side can
+//! initialize, inspect and (for shaped optimizers like GaLore/AdaFactor)
+//! re-slice parameters without python.
+
+use crate::util::rng::Rng;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl TensorSpec {
+    pub fn new(name: &str, shape: &[usize], offset: usize) -> Self {
+        Self { name: name.to_string(), shape: shape.to_vec(), offset }
+    }
+
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// (rows, cols) view for 2-D tensors, None otherwise.
+    pub fn as_matrix(&self) -> Option<(usize, usize)> {
+        if self.shape.len() == 2 {
+            Some((self.shape[0], self.shape[1]))
+        } else {
+            None
+        }
+    }
+}
+
+/// Init scheme for one tensor (mirrors the manifest's `init` field).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// Full parameter layout: specs plus init metadata and padding.
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub tensors: Vec<TensorSpec>,
+    pub inits: Vec<(Init, f32)>,
+    /// Total model parameters (sum of tensor sizes).
+    pub d_model: usize,
+    /// Padded flat-vector length (multiple of the optimizer tile).
+    pub d_padded: usize,
+}
+
+impl ParamLayout {
+    pub fn new(tensors: Vec<TensorSpec>, inits: Vec<(Init, f32)>, d_padded: usize) -> Self {
+        let d_model = tensors.iter().map(|t| t.size()).sum();
+        assert!(d_padded >= d_model, "padding smaller than model");
+        assert_eq!(tensors.len(), inits.len());
+        Self { tensors, inits, d_model, d_padded }
+    }
+
+    /// Initialize a fresh padded flat parameter vector (seeded, reproducible).
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let mut flat = vec![0f32; self.d_padded];
+        let mut rng = Rng::seed_from_u64(seed);
+        for (spec, &(init, std)) in self.tensors.iter().zip(&self.inits) {
+            let s = &mut flat[spec.offset..spec.offset + spec.size()];
+            match init {
+                Init::Zeros => s.fill(0.0),
+                Init::Ones => s.fill(1.0),
+                Init::Normal => {
+                    for v in s.iter_mut() {
+                        *v = gauss(&mut rng) * std;
+                    }
+                }
+            }
+        }
+        flat
+    }
+
+    /// View one tensor inside a flat vector.
+    pub fn tensor<'a>(&self, flat: &'a [f32], name: &str) -> Option<&'a [f32]> {
+        let spec = self.tensors.iter().find(|t| t.name == name)?;
+        Some(&flat[spec.offset..spec.offset + spec.size()])
+    }
+
+    /// Validate internal consistency: contiguous offsets, unique names.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut off = 0;
+        let mut names = std::collections::HashSet::new();
+        for t in &self.tensors {
+            if t.offset != off {
+                return Err(format!("tensor {} offset {} != expected {off}", t.name, t.offset));
+            }
+            if !names.insert(&t.name) {
+                return Err(format!("duplicate tensor name {}", t.name));
+            }
+            off += t.size();
+        }
+        if off != self.d_model {
+            return Err(format!("sizes sum {off} != d_model {}", self.d_model));
+        }
+        Ok(())
+    }
+}
+
+fn gauss(rng: &mut Rng) -> f32 {
+    rng.gauss()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::new(
+            vec![
+                TensorSpec::new("w1", &[4, 8], 0),
+                TensorSpec::new("b1", &[8], 32),
+                TensorSpec::new("w2", &[8, 2], 40),
+            ],
+            vec![(Init::Normal, 0.02), (Init::Zeros, 0.0), (Init::Normal, 0.1)],
+            64,
+        )
+    }
+
+    #[test]
+    fn layout_accounting() {
+        let l = layout();
+        assert_eq!(l.d_model, 56);
+        assert_eq!(l.d_padded, 64);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn init_respects_schemes_and_padding() {
+        let l = layout();
+        let flat = l.init_flat(0);
+        assert_eq!(flat.len(), 64);
+        // b1 zeros
+        assert!(flat[32..40].iter().all(|&v| v == 0.0));
+        // w1 nonzero with ~0.02 scale
+        let w1 = l.tensor(&flat, "w1").unwrap();
+        assert!(w1.iter().any(|&v| v != 0.0));
+        assert!(w1.iter().all(|&v| v.abs() < 0.2));
+        // padding zeros
+        assert!(flat[56..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let l = layout();
+        assert_eq!(l.init_flat(7), l.init_flat(7));
+        assert_ne!(l.init_flat(7), l.init_flat(8));
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let l = ParamLayout {
+            tensors: vec![TensorSpec::new("a", &[4], 0), TensorSpec::new("b", &[4], 8)],
+            inits: vec![(Init::Zeros, 0.0), (Init::Zeros, 0.0)],
+            d_model: 8,
+            d_padded: 16,
+        };
+        assert!(l.validate().is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Run metrics: JSONL step logs + summaries (the training-curve figures are
+//! regenerated from these files).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{self, Json};
+
+/// One training-step record.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    pub elapsed_s: f64,
+}
+
+/// JSONL writer (one object per line), plus an in-memory history for
+/// summaries and tests.
+pub struct MetricsLogger {
+    file: Option<BufWriter<File>>,
+    start: Instant,
+    pub history: Vec<StepMetrics>,
+}
+
+impl MetricsLogger {
+    /// `path` empty -> memory-only logging.
+    pub fn new(path: &str) -> Result<Self> {
+        let file = if path.is_empty() {
+            None
+        } else {
+            if let Some(dir) = Path::new(path).parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            Some(BufWriter::new(File::create(path)?))
+        };
+        Ok(Self { file, start: Instant::now(), history: Vec::new() })
+    }
+
+    /// Write a free-form header record (run provenance: config, etc.).
+    pub fn log_header(&mut self, meta: Json) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", meta.to_string())?;
+        }
+        Ok(())
+    }
+
+    pub fn log_step(&mut self, step: u64, loss: f32, lr: f32) -> Result<()> {
+        let m = StepMetrics { step, loss, lr, elapsed_s: self.start.elapsed().as_secs_f64() };
+        if let Some(f) = &mut self.file {
+            let j = json::obj(vec![
+                ("step", json::num(step as f64)),
+                ("loss", json::num(loss as f64)),
+                ("lr", json::num(lr as f64)),
+                ("elapsed_s", json::num(m.elapsed_s)),
+            ]);
+            writeln!(f, "{}", j.to_string())?;
+        }
+        self.history.push(m);
+        Ok(())
+    }
+
+    /// Write an arbitrary record (eval accuracy, memory snapshots, ...).
+    pub fn log_record(&mut self, j: Json) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", j.to_string())?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the last `n` steps (curve-tail summary).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let h = &self.history;
+        if h.is_empty() {
+            return f32::NAN;
+        }
+        let k = n.min(h.len());
+        h[h.len() - k..].iter().map(|m| m.loss).sum::<f32>() / k as f32
+    }
+
+    /// First-step loss (for improvement assertions).
+    pub fn first_loss(&self) -> f32 {
+        self.history.first().map(|m| m.loss).unwrap_or(f32::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_only_logger_accumulates() {
+        let mut l = MetricsLogger::new("").unwrap();
+        for t in 1..=10 {
+            l.log_step(t, 1.0 / t as f32, 0.1).unwrap();
+        }
+        assert_eq!(l.history.len(), 10);
+        assert!(l.tail_loss(3) < l.first_loss());
+    }
+
+    #[test]
+    fn jsonl_file_has_one_object_per_line() {
+        let path = "/tmp/microadam_test_metrics.jsonl";
+        let _ = std::fs::remove_file(path);
+        let mut l = MetricsLogger::new(path).unwrap();
+        l.log_header(json::obj(vec![("run", json::s("test"))])).unwrap();
+        l.log_step(1, 2.5, 0.1).unwrap();
+        l.log_step(2, 2.0, 0.1).unwrap();
+        l.flush().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        let rec = Json::parse(lines[2]).unwrap();
+        assert_eq!(rec.get("step").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(path);
+    }
+}

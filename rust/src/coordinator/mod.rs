@@ -1,0 +1,14 @@
+//! Training coordinator (L3).
+//!
+//! Owns everything around the compiled compute: configuration, parameter
+//! layout, optimizer state (native or AOT-artifact-backed), LR schedules,
+//! the train loop itself, checkpoints and metrics. This is the component a
+//! downstream user drives via the `microadam` CLI or the library API.
+
+pub mod checkpoint;
+pub mod config;
+pub mod layout;
+pub mod metrics;
+pub mod schedule;
+pub mod state;
+pub mod trainer;

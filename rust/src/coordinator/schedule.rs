@@ -1,0 +1,84 @@
+//! Learning-rate schedules (constant, linear warmup + cosine decay — the
+//! recipe the paper uses for the ImageNet runs, §B.3).
+
+/// LR schedule over 1-based steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant `lr`.
+    Const { lr: f32 },
+    /// Linear warmup for `warmup` steps to `lr`, then cosine decay to
+    /// `lr * floor_frac` at `total`.
+    WarmupCosine { lr: f32, warmup: u64, total: u64, floor_frac: f32 },
+    /// Linear decay from `lr` to zero over `total`.
+    LinearDecay { lr: f32, total: u64 },
+}
+
+impl LrSchedule {
+    pub fn lr(&self, t: u64) -> f32 {
+        match *self {
+            LrSchedule::Const { lr } => lr,
+            LrSchedule::WarmupCosine { lr, warmup, total, floor_frac } => {
+                if warmup > 0 && t <= warmup {
+                    return lr * t as f32 / warmup as f32;
+                }
+                let total = total.max(warmup + 1);
+                let p = ((t - warmup) as f32 / (total - warmup) as f32).clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * p).cos());
+                lr * (floor_frac + (1.0 - floor_frac) * cos)
+            }
+            LrSchedule::LinearDecay { lr, total } => {
+                lr * (1.0 - (t.min(total) - 1) as f32 / total as f32)
+            }
+        }
+    }
+
+    /// Peak learning rate.
+    pub fn peak(&self) -> f32 {
+        match *self {
+            LrSchedule::Const { lr }
+            | LrSchedule::WarmupCosine { lr, .. }
+            | LrSchedule::LinearDecay { lr, .. } => lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Const { lr: 0.1 };
+        assert_eq!(s.lr(1), 0.1);
+        assert_eq!(s.lr(1000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::WarmupCosine { lr: 1.0, warmup: 10, total: 110, floor_frac: 0.0 };
+        assert!((s.lr(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        assert!(s.lr(60) < 1.0);
+        assert!(s.lr(110) < 0.01);
+        // monotone decay after warmup
+        let mut prev = s.lr(10);
+        for t in 11..=110 {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-6);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn cosine_floor_is_respected() {
+        let s = LrSchedule::WarmupCosine { lr: 1.0, warmup: 0, total: 100, floor_frac: 0.1 };
+        assert!(s.lr(100) >= 0.1 - 1e-6);
+    }
+
+    #[test]
+    fn linear_decay_hits_near_zero() {
+        let s = LrSchedule::LinearDecay { lr: 1.0, total: 100 };
+        assert!((s.lr(1) - 1.0).abs() < 1e-6);
+        assert!(s.lr(100) < 0.02);
+    }
+}

@@ -1,0 +1,246 @@
+//! AOT optimizer-state managers: the rust-owned buffers behind the
+//! `*_step_d*` artifacts.
+//!
+//! State lives in PJRT [`xla::Literal`]s between steps (no per-step host
+//! round-trips); the coordinator swaps in the step artifact's outputs and
+//! only reads buffers back for checkpoints or inspection. Shapes come from
+//! the manifest's `hyper` block and are validated by the runtime on every
+//! execute.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{
+    self, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, lit_u8, ArtifactMeta, Runtime,
+};
+
+/// MicroAdam artifact state: 4-bit EF + quant stats + sliding window.
+pub struct AotMicroAdamState {
+    pub d: usize,
+    pub m: usize,
+    pub nb: usize,
+    pub kb: usize,
+    pub nq: usize,
+    artifact: String,
+    ef: xla::Literal,
+    qlo: xla::Literal,
+    qhi: xla::Literal,
+    w_idx: xla::Literal,
+    w_val: xla::Literal,
+    pub t: u64,
+}
+
+impl AotMicroAdamState {
+    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
+        let get = |k: &str| {
+            meta.hyper(k)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("{}: missing hyper.{k}", meta.name))
+        };
+        let d = get("d")?;
+        let m = get("m")?;
+        let nb = get("nb")?;
+        let kb = get("kb")?;
+        let qbucket = get("qbucket")?;
+        let nq = d / qbucket;
+        Ok(Self {
+            d,
+            m,
+            nb,
+            kb,
+            nq,
+            artifact: meta.name.clone(),
+            ef: lit_u8(&vec![0u8; d / 2], &[d / 2])?,
+            qlo: lit_f32(&vec![0f32; nq], &[nq])?,
+            qhi: lit_f32(&vec![0f32; nq], &[nq])?,
+            w_idx: lit_i32(&vec![0i32; m * nb * kb], &[m, nb, kb])?,
+            w_val: lit_f32(&vec![0f32; m * nb * kb], &[m, nb, kb])?,
+            t: 0,
+        })
+    }
+
+    /// One optimizer step: consumes the params and grads literals (grads
+    /// straight from the fwd/bwd artifact — no host round-trip) and returns
+    /// the updated params literal. Internal state literals are replaced.
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        params: xla::Literal,
+        grads: xla::Literal,
+        lr: f32,
+        wd: f32,
+    ) -> Result<xla::Literal> {
+        self.t += 1;
+        let inputs = [
+            params,
+            grads,
+            std::mem::replace(&mut self.ef, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
+            std::mem::replace(&mut self.qlo, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.qhi, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.w_idx, xla::Literal::create_from_shape(xla::PrimitiveType::S32, &[0])),
+            std::mem::replace(&mut self.w_val, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            lit_scalar_i32(self.t as i32)?,
+            lit_scalar_f32(lr)?,
+            lit_scalar_f32(wd)?,
+        ];
+        let mut outs = rt.execute_named(&self.artifact, &inputs)?;
+        // outputs: params, ef, qlo, qhi, w_idx, w_val
+        self.w_val = outs.pop().unwrap();
+        self.w_idx = outs.pop().unwrap();
+        self.qhi = outs.pop().unwrap();
+        self.qlo = outs.pop().unwrap();
+        self.ef = outs.pop().unwrap();
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Persistent state bytes with the paper's storage dtypes
+    /// (`0.5 d + 4 m k`, §3.2).
+    pub fn paper_state_bytes(&self) -> usize {
+        self.d / 2 + 4 * self.m * self.nb * self.kb
+    }
+
+    /// Read the EF + window buffers back to host (for checkpoints/tests).
+    pub fn snapshot(&self) -> Result<MicroAdamSnapshot> {
+        Ok(MicroAdamSnapshot {
+            ef: runtime::to_u8(&self.ef)?,
+            qlo: runtime::to_f32(&self.qlo)?,
+            qhi: runtime::to_f32(&self.qhi)?,
+            w_idx: runtime::to_i32(&self.w_idx)?,
+            w_val: runtime::to_f32(&self.w_val)?,
+            t: self.t,
+        })
+    }
+
+    /// Restore a snapshot (checkpoint resume).
+    pub fn restore(&mut self, s: &MicroAdamSnapshot) -> Result<()> {
+        self.ef = lit_u8(&s.ef, &[self.d / 2])?;
+        self.qlo = lit_f32(&s.qlo, &[self.nq])?;
+        self.qhi = lit_f32(&s.qhi, &[self.nq])?;
+        self.w_idx = lit_i32(&s.w_idx, &[self.m, self.nb, self.kb])?;
+        self.w_val = lit_f32(&s.w_val, &[self.m, self.nb, self.kb])?;
+        self.t = s.t;
+        Ok(())
+    }
+}
+
+/// Host-side copy of the MicroAdam state (checkpoint payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MicroAdamSnapshot {
+    pub ef: Vec<u8>,
+    pub qlo: Vec<f32>,
+    pub qhi: Vec<f32>,
+    pub w_idx: Vec<i32>,
+    pub w_val: Vec<f32>,
+    pub t: u64,
+}
+
+/// AdamW artifact state: dense fp32 m/v literals.
+pub struct AotAdamWState {
+    pub d: usize,
+    artifact: String,
+    m: xla::Literal,
+    v: xla::Literal,
+    pub t: u64,
+}
+
+impl AotAdamWState {
+    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
+        let d = meta.hyper("d").map(|v| v as usize).ok_or_else(|| anyhow!("missing hyper.d"))?;
+        Ok(Self {
+            d,
+            artifact: meta.name.clone(),
+            m: lit_f32(&vec![0f32; d], &[d])?,
+            v: lit_f32(&vec![0f32; d], &[d])?,
+            t: 0,
+        })
+    }
+
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        params: xla::Literal,
+        grads: xla::Literal,
+        lr: f32,
+        wd: f32,
+    ) -> Result<xla::Literal> {
+        self.t += 1;
+        let inputs = [
+            params,
+            grads,
+            std::mem::replace(&mut self.m, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.v, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            lit_scalar_i32(self.t as i32)?,
+            lit_scalar_f32(lr)?,
+            lit_scalar_f32(wd)?,
+        ];
+        let mut outs = rt.execute_named(&self.artifact, &inputs)?;
+        self.v = outs.pop().unwrap();
+        self.m = outs.pop().unwrap();
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn paper_state_bytes(&self) -> usize {
+        8 * self.d
+    }
+}
+
+/// AdamW-8bit artifact state: u8 m/v codes + per-bucket scales.
+pub struct AotAdamW8bitState {
+    pub d: usize,
+    nq8: usize,
+    artifact: String,
+    m8: xla::Literal,
+    mscale: xla::Literal,
+    v8: xla::Literal,
+    vscale: xla::Literal,
+    pub t: u64,
+}
+
+impl AotAdamW8bitState {
+    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
+        let d = meta.hyper("d").map(|v| v as usize).ok_or_else(|| anyhow!("missing hyper.d"))?;
+        let nq8 = d / 256;
+        Ok(Self {
+            d,
+            nq8,
+            artifact: meta.name.clone(),
+            // code 128 == 0.0 in the signed dynamic table
+            m8: lit_u8(&vec![128u8; d], &[d])?,
+            mscale: lit_f32(&vec![0f32; nq8], &[nq8])?,
+            v8: lit_u8(&vec![0u8; d], &[d])?,
+            vscale: lit_f32(&vec![0f32; nq8], &[nq8])?,
+            t: 0,
+        })
+    }
+
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        params: xla::Literal,
+        grads: xla::Literal,
+        lr: f32,
+        wd: f32,
+    ) -> Result<xla::Literal> {
+        self.t += 1;
+        let inputs = [
+            params,
+            grads,
+            std::mem::replace(&mut self.m8, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
+            std::mem::replace(&mut self.mscale, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.v8, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
+            std::mem::replace(&mut self.vscale, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            lit_scalar_i32(self.t as i32)?,
+            lit_scalar_f32(lr)?,
+            lit_scalar_f32(wd)?,
+        ];
+        let mut outs = rt.execute_named(&self.artifact, &inputs)?;
+        self.vscale = outs.pop().unwrap();
+        self.v8 = outs.pop().unwrap();
+        self.mscale = outs.pop().unwrap();
+        self.m8 = outs.pop().unwrap();
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn paper_state_bytes(&self) -> usize {
+        2 * self.d + 8 * self.nq8
+    }
+}

@@ -1,0 +1,311 @@
+//! The train loop: fwd/bwd artifact -> optimizer (AOT artifact or native) —
+//! the end-to-end driver behind `microadam train` and the table harnesses.
+//!
+//! Data flow per step (AOT backend):
+//! ```text
+//!   MarkovCorpus/NliDataset/ImageDataset  -> token/image literals
+//!   lm_*/cls_*/cnn_* artifact             -> (loss, grads) literals
+//!   *_step_d* artifact                    -> new params literal (+ state)
+//! ```
+//! Parameters stay in a PJRT literal between steps; only the scalar loss is
+//! read back on the hot path. With the native backend, gradients round-trip
+//! to host Vec<f32>s and any [`crate::optim`] optimizer applies the update.
+
+use anyhow::{bail, Result};
+
+use super::config::{OptBackend, TrainConfig};
+use super::layout::ParamLayout;
+use super::metrics::MetricsLogger;
+use super::state::{AotAdamW8bitState, AotAdamWState, AotMicroAdamState};
+use crate::data::{ImageDataset, MarkovCorpus, NliDataset};
+use crate::optim::{self, Optimizer, OptimizerKind};
+use crate::runtime::{self, lit_f32, lit_i32, Runtime};
+use crate::util::json;
+
+/// Data source driving the model artifact's batch inputs.
+enum Data {
+    Lm { corpus: MarkovCorpus, batch: usize, seq: usize },
+    Cls { ds: NliDataset, batch: usize, seq: usize },
+    Cnn { ds: ImageDataset, batch: usize, image: usize, channels: usize },
+}
+
+enum Opt {
+    AotMicroAdam(AotMicroAdamState),
+    AotAdamW(AotAdamWState),
+    AotAdamW8bit(AotAdamW8bitState),
+    Native(Box<dyn Optimizer>),
+}
+
+impl Opt {
+    fn paper_state_bytes(&self) -> usize {
+        match self {
+            Opt::AotMicroAdam(s) => s.paper_state_bytes(),
+            Opt::AotAdamW(s) => s.paper_state_bytes(),
+            Opt::AotAdamW8bit(s) => s.paper_state_bytes(),
+            Opt::Native(o) => o.paper_state_bytes(),
+        }
+    }
+}
+
+/// End-to-end trainer over one model artifact.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    rt: Runtime,
+    pub layout: ParamLayout,
+    /// Canonical parameters: a PJRT literal between steps.
+    params: xla::Literal,
+    opt: Opt,
+    data: Data,
+    pub t: u64,
+    grads_scratch: Vec<f32>,
+    accum_scratch: Vec<f32>,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let meta = rt.meta(&cfg.model)?.clone();
+        let layout = meta.layout()?;
+        let d = layout.d_padded;
+
+        // Data source shaped from the artifact's input signature.
+        let data = match meta.raw.get("model").and_then(crate::util::json::Json::as_str) {
+            Some("transformer_lm") => {
+                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
+                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
+                Data::Lm { corpus: MarkovCorpus::new(vocab, cfg.seed ^ 0xda7a), batch: b, seq: s }
+            }
+            Some("transformer_cls") => {
+                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
+                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
+                let classes = meta.config("n_classes").unwrap_or(3.0) as usize;
+                Data::Cls { ds: NliDataset::new(vocab, classes, cfg.seed ^ 0xda7a), batch: b, seq: s }
+            }
+            Some("cnn") => {
+                let shape = &meta.inputs[1].2;
+                let classes = meta.config("n_classes").unwrap_or(10.0) as usize;
+                Data::Cnn {
+                    ds: ImageDataset::new(shape[1], shape[3], classes, cfg.seed ^ 0xda7a),
+                    batch: shape[0],
+                    image: shape[1],
+                    channels: shape[3],
+                }
+            }
+            other => bail!("{}: unsupported model kind {other:?}", cfg.model),
+        };
+
+        // Optimizer backend.
+        let opt = match cfg.backend {
+            OptBackend::Aot => {
+                let art = match cfg.optimizer {
+                    OptimizerKind::MicroAdam => format!("microadam_step_d{d}"),
+                    OptimizerKind::Adam | OptimizerKind::AdamW => format!("adamw_step_d{d}"),
+                    OptimizerKind::AdamW8bit => format!("adamw8bit_step_d{d}"),
+                    other => bail!("optimizer {other:?} has no AOT artifact; use backend=native"),
+                };
+                if !rt.has(&art) {
+                    bail!("artifact {art} not found — re-run `make artifacts`");
+                }
+                let ometa = rt.meta(&art)?.clone();
+                match cfg.optimizer {
+                    OptimizerKind::MicroAdam => Opt::AotMicroAdam(AotMicroAdamState::new(&ometa)?),
+                    OptimizerKind::Adam | OptimizerKind::AdamW => {
+                        Opt::AotAdamW(AotAdamWState::new(&ometa)?)
+                    }
+                    _ => Opt::AotAdamW8bit(AotAdamW8bitState::new(&ometa)?),
+                }
+            }
+            OptBackend::Native => Opt::Native(optim::build(
+                cfg.optimizer,
+                d,
+                &layout.tensors,
+                cfg.weight_decay,
+            )),
+        };
+
+        let flat = layout.init_flat(cfg.seed);
+        let params = lit_f32(&flat, &[d])?;
+        Ok(Self {
+            cfg,
+            rt,
+            layout,
+            params,
+            opt,
+            data,
+            t: 0,
+            grads_scratch: vec![0.0; d],
+            accum_scratch: vec![0.0; d],
+        })
+    }
+
+    /// Current parameters read back to host.
+    pub fn params_vec(&self) -> Result<Vec<f32>> {
+        runtime::to_f32(&self.params)
+    }
+
+    /// Replace parameters (checkpoint resume).
+    pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        self.params = lit_f32(flat, &[self.layout.d_padded])?;
+        Ok(())
+    }
+
+    /// Paper-dtype optimizer state footprint in bytes.
+    pub fn opt_state_bytes(&self) -> usize {
+        self.opt.paper_state_bytes()
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    pub fn microadam_state(&self) -> Option<&AotMicroAdamState> {
+        match &self.opt {
+            Opt::AotMicroAdam(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn microadam_state_mut(&mut self) -> Option<&mut AotMicroAdamState> {
+        match &mut self.opt {
+            Opt::AotMicroAdam(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn next_batch_literals(&mut self) -> Result<Vec<xla::Literal>> {
+        match &mut self.data {
+            Data::Lm { corpus, batch, seq } => {
+                let (mut toks, mut tgts) = (Vec::new(), Vec::new());
+                corpus.next_batch(*batch, *seq, &mut toks, &mut tgts);
+                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&tgts, &[*batch, *seq])?])
+            }
+            Data::Cls { ds, batch, seq } => {
+                let (mut toks, mut labs) = (Vec::new(), Vec::new());
+                ds.next_batch(*batch, *seq, &mut toks, &mut labs);
+                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&labs, &[*batch])?])
+            }
+            Data::Cnn { ds, batch, image, channels } => {
+                let (mut imgs, mut labs) = (Vec::new(), Vec::new());
+                ds.next_batch(*batch, &mut imgs, &mut labs);
+                Ok(vec![
+                    lit_f32(&imgs, &[*batch, *image, *image, *channels])?,
+                    lit_i32(&labs, &[*batch])?,
+                ])
+            }
+        }
+    }
+
+    /// One optimizer step (with `grad_accum` fwd/bwd micro-steps): returns
+    /// the mean micro-loss.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        self.t += 1;
+        let accum = self.cfg.grad_accum.max(1);
+        let mut loss_sum = 0f32;
+        let mut grads_lit: Option<xla::Literal> = None;
+        if accum > 1 {
+            self.accum_scratch.fill(0.0);
+        }
+        for _ in 0..accum {
+            let mut inputs = vec![self.params.clone()];
+            inputs.extend(self.next_batch_literals()?);
+            let mut outs = self.rt.execute_named(&self.cfg.model, &inputs)?;
+            let g = outs.pop().unwrap();
+            let loss = outs.pop().unwrap();
+            loss_sum += runtime::scalar_f32(&loss)?;
+            if accum == 1 {
+                grads_lit = Some(g);
+            } else {
+                // host-side accumulation (the grad-accum path trades one
+                // readback per micro-step for a batch-size-free artifact)
+                let gv = runtime::to_f32(&g)?;
+                for (a, b) in self.accum_scratch.iter_mut().zip(&gv) {
+                    *a += *b / accum as f32;
+                }
+            }
+        }
+        let grads = match grads_lit {
+            Some(g) => g,
+            None => lit_f32(&self.accum_scratch, &[self.layout.d_padded])?,
+        };
+
+        let params = std::mem::replace(
+            &mut self.params,
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0]),
+        );
+        let wd = self.cfg.weight_decay;
+        self.params = match &mut self.opt {
+            Opt::AotMicroAdam(s) => s.step(&mut self.rt, params, grads, lr, wd)?,
+            Opt::AotAdamW(s) => s.step(&mut self.rt, params, grads, lr, wd)?,
+            Opt::AotAdamW8bit(s) => s.step(&mut self.rt, params, grads, lr, wd)?,
+            Opt::Native(o) => {
+                let mut pv = runtime::to_f32(&params)?;
+                let gv = runtime::to_f32(&grads)?;
+                self.grads_scratch.copy_from_slice(&gv);
+                o.step(&mut pv, &self.grads_scratch, lr);
+                lit_f32(&pv, &[self.layout.d_padded])?
+            }
+        };
+        Ok(loss_sum / accum as f32)
+    }
+
+    /// Run the configured number of steps, logging to `logger`.
+    pub fn train(&mut self, logger: &mut MetricsLogger) -> Result<()> {
+        logger.log_header(self.cfg.to_json())?;
+        let steps = self.cfg.steps;
+        for step in 1..=steps {
+            let lr = self.cfg.schedule.lr(step);
+            let loss = self.step(lr)?;
+            if !loss.is_finite() {
+                bail!("non-finite loss at step {step}");
+            }
+            logger.log_step(step, loss, lr)?;
+            if step % self.cfg.log_every == 0 || step == steps {
+                eprintln!(
+                    "[train {} {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e}",
+                    self.cfg.model,
+                    super::config::optimizer_name(self.cfg.optimizer),
+                );
+            }
+        }
+        logger.log_record(json::obj(vec![
+            ("final_loss", json::num(logger.tail_loss(10) as f64)),
+            ("opt_state_bytes", json::num(self.opt_state_bytes() as f64)),
+        ]))?;
+        logger.flush()?;
+        Ok(())
+    }
+
+    /// Classifier eval accuracy using the `<model>_logits` artifact over
+    /// `batches` fresh batches.
+    pub fn eval_accuracy(&mut self, batches: usize) -> Result<f32> {
+        let logits_name = format!("{}_logits", self.cfg.model);
+        if !self.rt.has(&logits_name) {
+            bail!("{logits_name} artifact not available");
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..batches {
+            let batch_lits = self.next_batch_literals()?;
+            let labels: Vec<i32> = match &self.data {
+                Data::Lm { .. } => bail!("eval_accuracy is for classifier models"),
+                _ => runtime::to_i32(batch_lits.last().unwrap())?,
+            };
+            let inputs = vec![self.params.clone(), batch_lits[0].clone()];
+            let outs = self.rt.execute_named(&logits_name, &inputs)?;
+            let logits = runtime::to_f32(&outs[0])?;
+            let classes = logits.len() / labels.len();
+            for (n, &lab) in labels.iter().enumerate() {
+                let row = &logits[n * classes..(n + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += (pred == lab as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+}

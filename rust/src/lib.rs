@@ -1,0 +1,78 @@
+//! # MicroAdam — memory-efficient adaptive optimization (NeurIPS 2024 reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"MicroAdam: Accurate
+//! Adaptive Optimization with Low Space Overhead and Provable Convergence"*
+//! (Modoranu et al., NeurIPS 2024).
+//!
+//! Layer map:
+//! * **L3 (this crate)** — training coordinator: config system, parameter
+//!   layout manager, optimizer state ownership (quantized error feedback +
+//!   sliding gradient window), data pipeline, LR schedules, checkpoints,
+//!   metrics, and the full set of *native* optimizers used as baselines
+//!   (AdamW, AdamW-8bit, SGD, AdaFactor, CAME, GaLore, GaLore+EF) plus a
+//!   native MicroAdam cross-validated against the AOT artifact.
+//! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
+//!   kernels, AOT-lowered to HLO text; loaded and executed from
+//!   [`runtime`] via the PJRT CPU client. Python never runs at train time.
+//!
+//! Quickstart (`no_run`: doctest binaries don't inherit the rpath to the
+//! image's libstdc++; `cargo run --example quickstart` exercises this path):
+//! ```no_run
+//! use microadam::optim::{microadam::MicroAdam, Optimizer};
+//! let mut opt = MicroAdam::new(4096, Default::default());
+//! let mut params = vec![0.1f32; 4096];
+//! let grads = vec![0.01f32; 4096];
+//! opt.step(&mut params, &grads, 1e-3);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod memory;
+pub mod models;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod topk;
+pub mod util;
+
+/// Paper-default Top-K block size `B_d` (must stay below 2^15 so
+/// block-relative indices fit `i16`/`u16`, §3.1).
+pub const BLOCK: usize = 4096;
+/// Paper-default EF quantization bucket `B_q` (§B: bucket size 64).
+pub const QBUCKET: usize = 64;
+/// Paper-default sliding window length `m`.
+pub const WINDOW: usize = 10;
+/// Paper-default gradient density `k/d` (1% == 99% sparsity).
+pub const DENSITY: f64 = 0.01;
+
+/// `k_b`: Top-K entries kept per block at the given density.
+pub fn kb_for_block(block: usize, density: f64) -> usize {
+    ((block as f64 * density).ceil() as usize).max(1)
+}
+
+/// Round `n` up to a multiple of `to`.
+pub fn pad_up(n: usize, to: usize) -> usize {
+    n.div_ceil(to) * to
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kb_matches_paper_regime() {
+        // 1% of 4096 -> 41 entries per block.
+        assert_eq!(kb_for_block(4096, 0.01), 41);
+        assert_eq!(kb_for_block(64, 0.05), 4);
+        assert_eq!(kb_for_block(8, 1e-9), 1); // never zero
+    }
+
+    #[test]
+    fn pad_up_is_idempotent_on_multiples() {
+        assert_eq!(pad_up(4096, 4096), 4096);
+        assert_eq!(pad_up(4097, 4096), 8192);
+        assert_eq!(pad_up(0, 4096), 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal dense linear algebra for the GaLore baseline.
+//!
+//! GaLore needs the top-`r` column space of each layer's gradient matrix.
+//! The original uses full SVD; on this substrate we implement a randomized
+//! range finder (Halko-Martinsson-Tropp): `P = orth(G (G^T G)^p Omega)` via
+//! Gaussian sketching + optional power iterations + modified Gram-Schmidt
+//! QR. For the rank-r projection task this matches SVD's subspace up to the
+//! spectral-gap terms — the property GaLore actually relies on.
+
+use crate::util::rng::Rng;
+
+/// C = A (a_rows x a_cols) * B (a_cols x b_cols), row-major.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], a_rows: usize, a_cols: usize, b_cols: usize) {
+    assert_eq!(a.len(), a_rows * a_cols);
+    assert_eq!(b.len(), a_cols * b_cols);
+    assert_eq!(c.len(), a_rows * b_cols);
+    c.fill(0.0);
+    for i in 0..a_rows {
+        for k in 0..a_cols {
+            let aik = a[i * a_cols + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * b_cols..(k + 1) * b_cols];
+            let crow = &mut c[i * b_cols..(i + 1) * b_cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// C = A^T (a_cols x a_rows) * B (a_rows x b_cols): A stored (a_rows x a_cols).
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], a_rows: usize, a_cols: usize, b_cols: usize) {
+    assert_eq!(c.len(), a_cols * b_cols);
+    c.fill(0.0);
+    for k in 0..a_rows {
+        let arow = &a[k * a_cols..(k + 1) * a_cols];
+        let brow = &b[k * b_cols..(k + 1) * b_cols];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * b_cols..(i + 1) * b_cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// In-place modified Gram-Schmidt orthonormalization of the `cols` columns
+/// of `a` (rows x cols, row-major). Degenerate columns are zeroed.
+pub fn orthonormalize_columns(a: &mut [f32], rows: usize, cols: usize) {
+    for j in 0..cols {
+        let mut orig = 0f32;
+        for i in 0..rows {
+            orig += a[i * cols + j] * a[i * cols + j];
+        }
+        let orig = orig.sqrt();
+        // "Twice is enough" (Kahan): re-orthogonalize so nearly-dependent
+        // columns don't leave normalized fp-cancellation noise that is still
+        // strongly correlated with the previous columns.
+        for _ in 0..2 {
+            for p in 0..j {
+                let mut dot = 0f32;
+                for i in 0..rows {
+                    dot += a[i * cols + j] * a[i * cols + p];
+                }
+                for i in 0..rows {
+                    a[i * cols + j] -= dot * a[i * cols + p];
+                }
+            }
+        }
+        let mut norm = 0f32;
+        for i in 0..rows {
+            norm += a[i * cols + j] * a[i * cols + j];
+        }
+        let norm = norm.sqrt();
+        // Rank-deficiency guard: a residual far below the column's original
+        // scale is pure cancellation noise, not a new direction.
+        if norm > 1e-5 * orig.max(1e-30) && norm > 1e-12 {
+            for i in 0..rows {
+                a[i * cols + j] /= norm;
+            }
+        } else {
+            for i in 0..rows {
+                a[i * cols + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Randomized rank-`r` range finder for `g` (rows x cols): returns a
+/// row-major (rows x r) matrix with orthonormal columns approximating the
+/// top-r left singular subspace of `g`.
+pub fn randomized_range_finder(
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    r: usize,
+    power_iters: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let r = r.min(rows).min(cols);
+    // Gaussian sketch Omega (cols x r)
+    let omega: Vec<f32> = (0..cols * r).map(|_| sample_gauss(rng)).collect();
+    let mut y = vec![0f32; rows * r];
+    matmul(g, &omega, &mut y, rows, cols, r);
+    orthonormalize_columns(&mut y, rows, r);
+    let mut z = vec![0f32; cols * r];
+    for _ in 0..power_iters {
+        // z = G^T y ; y = G z (power iteration sharpens the subspace)
+        matmul_tn(g, &y, &mut z, rows, cols, r);
+        matmul(g, &z, &mut y, rows, cols, r);
+        orthonormalize_columns(&mut y, rows, r);
+    }
+    y
+}
+
+fn sample_gauss(rng: &mut Rng) -> f32 {
+    rng.gauss()
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &[f32]) -> f32 {
+    a.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] * [[1,0],[0,1]] = same
+        let a = vec![1., 2., 3., 4.];
+        let b = vec![1., 0., 0., 1.];
+        let mut c = vec![0.; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_tn_is_transpose_times() {
+        // A = [[1,2],[3,4]] (2x2); A^T B with B = I -> A^T
+        let a = vec![1., 2., 3., 4.];
+        let b = vec![1., 0., 0., 1.];
+        let mut c = vec![0.; 4];
+        matmul_tn(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![1., 3., 2., 4.]);
+    }
+
+    #[test]
+    fn gram_schmidt_gives_orthonormal_columns() {
+        let mut rng = Rng::seed_from_u64(0);
+        let rows = 12;
+        let cols = 4;
+        let mut a: Vec<f32> = (0..rows * cols).map(|_| rng.gen_f32() - 0.5).collect();
+        orthonormalize_columns(&mut a, rows, cols);
+        for j in 0..cols {
+            for p in 0..=j {
+                let mut dot = 0f32;
+                for i in 0..rows {
+                    dot += a[i * cols + j] * a[i * cols + p];
+                }
+                let expect = if p == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "col {j}x{p}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_finder_recovers_lowrank_subspace() {
+        // G = u v^T (rank 1); the range finder must capture u.
+        let rows = 16;
+        let cols = 10;
+        let mut rng = Rng::seed_from_u64(1);
+        let u: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.37).sin() + 1.0).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.11).cos() + 0.5).collect();
+        let mut g = vec![0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                g[i * cols + j] = u[i] * v[j];
+            }
+        }
+        let p = randomized_range_finder(&g, rows, cols, 2, 1, &mut rng);
+        // projection of G onto span(P) should reproduce G: ||G - P P^T G|| small
+        let mut ptg = vec![0f32; 2 * cols];
+        matmul_tn(&p, &g, &mut ptg, rows, 2, cols);
+        let mut rec = vec![0f32; rows * cols];
+        matmul(&p, &ptg, &mut rec, rows, 2, cols);
+        let mut diff = 0f32;
+        for i in 0..g.len() {
+            diff += (g[i] - rec[i]).powi(2);
+        }
+        assert!(diff.sqrt() / fro_norm(&g) < 1e-2, "{}", diff.sqrt() / fro_norm(&g));
+    }
+}

@@ -1,0 +1,262 @@
+//! `microadam` — launcher CLI for the MicroAdam reproduction.
+//!
+//! Subcommands:
+//!   train   --config cfg.json | --model lm_tiny --optimizer micro-adam ...
+//!   repro   memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|all
+//!   list    (artifacts in the manifest)
+//!   selftest (load + run one artifact end-to-end)
+//!
+//! Offline note: argument parsing is hand-rolled (clap is not in the
+//! vendored crate set); `--flag value` pairs only.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use microadam::bench;
+use microadam::coordinator::config::{parse_optimizer, OptBackend, TrainConfig};
+use microadam::coordinator::metrics::MetricsLogger;
+use microadam::coordinator::schedule::LrSchedule;
+use microadam::coordinator::trainer::Trainer;
+use microadam::runtime::Runtime;
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{name} needs a value"))?
+                    .clone();
+                flags.insert(name.to_string(), val);
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { flags, positional })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v}")),
+        }
+    }
+
+    fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+microadam — MicroAdam (NeurIPS 2024) reproduction launcher
+
+USAGE:
+  microadam train   [--config cfg.json] [--model lm_tiny] [--optimizer micro-adam]
+                    [--backend aot|native] [--steps N] [--lr F] [--schedule const|warmup-cosine]
+                    [--warmup N] [--weight-decay F] [--seed N] [--grad-accum N]
+                    [--out runs/x.jsonl] [--artifacts artifacts] [--checkpoint path.bin]
+  microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|all>
+                    [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
+  microadam list    [--artifacts artifacts]
+  microadam selftest [--artifacts artifacts]
+
+Optimizers: micro-adam adam adamw adamw-8bit sgd adafactor came galore galore-ef
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "list" => cmd_list(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(v) = args.get("model") {
+        cfg.model = v.into();
+    }
+    if let Some(v) = args.get("optimizer") {
+        cfg.optimizer = parse_optimizer(v)?;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = match v {
+            "aot" => OptBackend::Aot,
+            "native" => OptBackend::Native,
+            other => bail!("--backend {other}: expected aot|native"),
+        };
+    }
+    cfg.steps = args.get_u64("steps", cfg.steps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.weight_decay = args.get_f32("weight-decay", cfg.weight_decay)?;
+    cfg.grad_accum = args.get_u64("grad-accum", cfg.grad_accum as u64)? as usize;
+    if let Some(v) = args.get("out") {
+        cfg.out = v.into();
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.into();
+    }
+    let lr = args.get_f32("lr", cfg.schedule.peak())?;
+    cfg.schedule = match args.get("schedule").unwrap_or("const") {
+        "const" => LrSchedule::Const { lr },
+        "warmup-cosine" => LrSchedule::WarmupCosine {
+            lr,
+            warmup: args.get_u64("warmup", cfg.steps / 20)?,
+            total: cfg.steps,
+            floor_frac: 0.05,
+        },
+        other => bail!("--schedule {other}: expected const|warmup-cosine"),
+    };
+
+    let mut trainer = Trainer::new(cfg)?;
+    let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
+    let t0 = std::time::Instant::now();
+    trainer.train(&mut logger)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {} steps in {:.1}s ({:.2} steps/s), loss {:.4} -> {:.4}, opt state {} bytes",
+        trainer.cfg.steps,
+        dt,
+        trainer.cfg.steps as f64 / dt,
+        logger.first_loss(),
+        logger.tail_loss(10),
+        trainer.opt_state_bytes()
+    );
+    if let Some(path) = args.get("checkpoint") {
+        let ck = microadam::coordinator::checkpoint::Checkpoint {
+            step: trainer.t,
+            params: trainer.params_vec()?,
+            opt: trainer.microadam_state().map(|s| s.snapshot()).transpose()?,
+        };
+        ck.save(path)?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("repro needs an experiment id\n{USAGE}"))?;
+    let out_dir = args.get("out-dir").unwrap_or("runs").to_string();
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+    match what.as_str() {
+        "memory" => bench::run_memory()?,
+        "fig1" => bench::run_fig1(&out_dir, args.get_u64("steps", 1500)? as usize)?,
+        "fig8" => bench::run_fig8(&out_dir, args.get_u64("steps", 300)? as usize)?,
+        "fig9" => bench::run_fig9(&out_dir, args.get_u64("steps", 1500)? as usize)?,
+        "theory" => bench::run_theory(&out_dir)?,
+        "table1" => {
+            let model = args.get("model").unwrap_or("cls_tiny");
+            bench::run_table1(&artifacts, &out_dir, model, args.get_u64("steps", 150)?)?
+        }
+        "table2" => {
+            let model = args.get("model").unwrap_or("lm_tiny");
+            bench::run_table2(&artifacts, &out_dir, model, args.get_u64("steps", 150)?)?
+        }
+        "table3" => {
+            let model = args.get("model").unwrap_or("cls_tiny");
+            bench::run_table3(&artifacts, &out_dir, model, args.get_u64("steps", 150)?)?
+        }
+        "table4" => {
+            let model = args.get("model").unwrap_or("cnn_tiny");
+            bench::run_table4(&artifacts, &out_dir, model, args.get_u64("steps", 150)?)?
+        }
+        "all" => {
+            bench::run_memory()?;
+            bench::run_fig1(&out_dir, 1500)?;
+            bench::run_fig9(&out_dir, 1500)?;
+            bench::run_fig8(&out_dir, 300)?;
+            bench::run_theory(&out_dir)?;
+            let steps = args.get_u64("steps", 150)?;
+            bench::run_table1(&artifacts, &out_dir, "cls_tiny", steps)?;
+            bench::run_table2(&artifacts, &out_dir, "lm_tiny", steps)?;
+            bench::run_table3(&artifacts, &out_dir, "cls_tiny", steps)?;
+            bench::run_table4(&artifacts, &out_dir, "cnn_tiny", steps)?;
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.get("artifacts").unwrap_or("artifacts"))?;
+    println!("{:<28} {:<9} inputs -> outputs", "artifact", "kind");
+    for name in rt.names() {
+        let m = rt.meta(name)?;
+        let ins: Vec<String> = m
+            .inputs
+            .iter()
+            .map(|(n, d, s)| format!("{n}:{d}{s:?}"))
+            .collect();
+        println!("{:<28} {:<9} {} -> {:?}", name, m.kind, ins.join(", "), m.outputs);
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    // End-to-end smoke: one train step of each backend on the tiny model.
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    for (backend, name) in [(OptBackend::Aot, "aot"), (OptBackend::Native, "native")] {
+        let cfg = TrainConfig {
+            model: "lm_tiny".into(),
+            backend,
+            steps: 3,
+            artifacts_dir: artifacts.into(),
+            log_every: 1,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let mut logger = MetricsLogger::new("")?;
+        trainer.train(&mut logger)?;
+        println!(
+            "selftest [{name}]: loss {:.4} -> {:.4} OK",
+            logger.first_loss(),
+            logger.tail_loss(1)
+        );
+    }
+    println!("selftest passed");
+    Ok(())
+}

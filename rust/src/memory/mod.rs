@@ -1,0 +1,168 @@
+//! Theoretical optimizer-state memory footprint model (§3.2 + Appendix D).
+//!
+//! Exact reproduction of the paper's accounting: bytes for the optimizer
+//! states only (not weights/activations/gradients), using the same Llama-2
+//! 7B constants as the Appendix-D python script. These formulas also feed
+//! the measured-vs-theoretical columns of the table harnesses.
+
+/// Actual parameter count of Llama-2 7B (Appendix D).
+pub const LLAMA2_7B_PARAMS: u64 = 6_738_415_616;
+/// `sum_i A_i` over Llama-2 7B weight matrices (Appendix D, GaLore).
+pub const LLAMA2_7B_SUM_A: u64 = 1_423_872;
+/// Total size of rank-1 layers kept dense under GaLore (Appendix D).
+pub const LLAMA2_7B_EPS1: u64 = 266_240;
+/// Parameter counts used for the ResNet table (torchvision models).
+pub const RESNET18_PARAMS: u64 = 11_689_512;
+pub const RESNET50_PARAMS: u64 = 25_557_032;
+
+const GIB: f64 = (1u64 << 30) as f64;
+const MIB: f64 = (1u64 << 20) as f64;
+
+/// AdamW with fp32 states: `8d` bytes (§3.2, M_AW32).
+pub fn adamw_fp32(d: u64) -> u64 {
+    8 * d
+}
+
+/// AdamW with bf16 states: `4d` bytes (M_AW16).
+pub fn adamw_bf16(d: u64) -> u64 {
+    4 * d
+}
+
+/// AdamW-8bit: `2d` bytes (M_AW8).
+pub fn adamw_8bit(d: u64) -> u64 {
+    2 * d
+}
+
+/// SGD with fp32 momentum: `4d` bytes (ResNet table baseline).
+pub fn sgd_momentum_fp32(d: u64) -> u64 {
+    4 * d
+}
+
+/// MicroAdam: `0.5 d + 4 m k` bytes (M_muA) — 4-bit EF plus the sliding
+/// window `G` holding `m*k` int16 indices and `m*k` bf16 values.
+pub fn microadam(d: u64, m: u64, k: u64) -> u64 {
+    d / 2 + 4 * m * k
+}
+
+/// MicroAdam at the paper's defaults (m = 10, k = d/100).
+pub fn microadam_default(d: u64) -> u64 {
+    microadam(d, crate::WINDOW as u64, d.div_ceil(100))
+}
+
+/// GaLore + bf16 AdamW states: `6 d_r + 2 eps_1` bytes, with
+/// `d_r = r * sum_i A_i` (M_GLAW16).
+pub fn galore_adamw_bf16(r: u64, sum_a: u64, eps1: u64) -> u64 {
+    6 * r * sum_a + 2 * eps1
+}
+
+/// GaLore + 8-bit AdamW states: `4 d_r + 2 eps_1` bytes (M_GLAW8).
+pub fn galore_adamw_8bit(r: u64, sum_a: u64, eps1: u64) -> u64 {
+    4 * r * sum_a + 2 * eps1
+}
+
+/// Bytes -> GiB (the paper reports GB = GiB).
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / GIB
+}
+
+/// Bytes -> MiB.
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / MIB
+}
+
+/// The window budget from the §3.2 discussion: largest window `m` at which
+/// MicroAdam still beats AdamW-8bit for density `k = d/100`:
+/// solve `0.5 d + 4 m k = 2 d` -> `m_max = 1.5 d / (4k) = 37.5`.
+pub fn max_window_vs_adamw8bit(d: u64, k: u64) -> f64 {
+    (2.0 * d as f64 - 0.5 * d as f64) / (4.0 * k as f64)
+}
+
+/// One row of the Appendix-D table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FootprintRow {
+    pub name: &'static str,
+    pub bytes: u64,
+    pub gib: f64,
+}
+
+/// Regenerate the Appendix-D table for Llama-2 7B.
+pub fn appendix_d_table() -> Vec<FootprintRow> {
+    let d = LLAMA2_7B_PARAMS;
+    let k = d.div_ceil(100);
+    let rows = [
+        ("M_AW32", adamw_fp32(d)),
+        ("M_AW16", adamw_bf16(d)),
+        ("M_AW8", adamw_8bit(d)),
+        ("M_muA(m=10)", microadam(d, 10, k)),
+        ("M_GLAW8_r256", galore_adamw_8bit(256, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)),
+        ("M_GLAW8_r1024", galore_adamw_8bit(1024, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)),
+        ("M_GLAW16_r256", galore_adamw_bf16(256, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)),
+        ("M_GLAW16_r1024", galore_adamw_bf16(1024, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)),
+    ];
+    rows.iter().map(|&(name, bytes)| FootprintRow { name, bytes, gib: gib(bytes) }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn paper_section_3_2_numbers() {
+        let d = LLAMA2_7B_PARAMS;
+        // §3.2: 50.21 / 25.10 / 12.55 / 5.65 GB.
+        assert!(close(gib(adamw_fp32(d)), 50.21, 0.01), "{}", gib(adamw_fp32(d)));
+        assert!(close(gib(adamw_bf16(d)), 25.10, 0.01));
+        assert!(close(gib(adamw_8bit(d)), 12.55, 0.01));
+        assert!(close(gib(microadam_default(d)), 5.65, 0.01), "{}", gib(microadam_default(d)));
+    }
+
+    #[test]
+    fn paper_galore_numbers() {
+        // §3.2: GLAW8(256)=1.36, GLAW8(1024)=5.43, GLAW16(256)=2.04, GLAW16(1024)=8.15.
+        assert!(close(gib(galore_adamw_8bit(256, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)), 1.36, 0.01));
+        assert!(close(gib(galore_adamw_8bit(1024, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)), 5.43, 0.01));
+        assert!(close(gib(galore_adamw_bf16(256, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)), 2.04, 0.01));
+        assert!(close(gib(galore_adamw_bf16(1024, LLAMA2_7B_SUM_A, LLAMA2_7B_EPS1)), 8.15, 0.01));
+    }
+
+    #[test]
+    fn discussion_m_max() {
+        // §3.2 Discussion: m_max = 37.5 at k = d/100.
+        let d = LLAMA2_7B_PARAMS;
+        let m_max = max_window_vs_adamw8bit(d, d.div_ceil(100));
+        assert!(close(m_max, 37.5, 0.01), "{m_max}");
+    }
+
+    #[test]
+    fn microadam_is_half_of_adamw8bit_at_defaults() {
+        let d = LLAMA2_7B_PARAMS;
+        let ratio = microadam_default(d) as f64 / adamw_8bit(d) as f64;
+        // 0.9d vs 2d -> 0.45.
+        assert!(close(ratio, 0.45, 0.01), "{ratio}");
+    }
+
+    #[test]
+    fn resnet_state_sizes_match_table4_shape() {
+        // Table 4 reports SGD 44.59 MB / AdamW 89.18 MB / 8bit 22.30 MB /
+        // MicroAdam 10.03 MB for ResNet-18 (and 2.19x that for ResNet-50).
+        let d18 = RESNET18_PARAMS;
+        assert!(close(mib(sgd_momentum_fp32(d18)), 44.59, 0.05));
+        assert!(close(mib(adamw_fp32(d18)), 89.18, 0.1));
+        assert!(close(mib(adamw_8bit(d18)), 22.30, 0.05));
+        assert!(close(mib(microadam_default(d18)), 10.03, 0.05), "{}", mib(microadam_default(d18)));
+        let d50 = RESNET50_PARAMS;
+        assert!(close(mib(microadam_default(d50)), 21.94, 0.05), "{}", mib(microadam_default(d50)));
+    }
+
+    #[test]
+    fn appendix_d_table_is_complete_and_ordered() {
+        let table = appendix_d_table();
+        assert_eq!(table.len(), 8);
+        assert!(table[0].gib > table[1].gib && table[1].gib > table[2].gib);
+        assert!(table[3].gib < table[2].gib); // MicroAdam under AdamW-8bit
+    }
+}

@@ -1,0 +1,275 @@
+//! Pure-rust MLP classifier with exact backprop — the artifact-free model
+//! substrate for optimizer-comparison experiments (Figure 8, ablations,
+//! proptest-driven training invariants).
+//!
+//! Bag-of-tokens featurization + 2 hidden layers + softmax CE. Small enough
+//! to train in milliseconds, structured enough (real 2-D weight matrices)
+//! that shaped optimizers (GaLore/AdaFactor/CAME) exercise their factorized
+//! paths via the exported [`Mlp::specs`].
+
+use crate::coordinator::layout::TensorSpec;
+
+/// MLP: input -> hidden (tanh) -> hidden (tanh) -> classes (softmax CE).
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+    specs: Vec<TensorSpec>,
+    d: usize,
+}
+
+impl Mlp {
+    /// `sizes = [input, h1, ..., classes]`.
+    pub fn new(sizes: Vec<usize>) -> Self {
+        assert!(sizes.len() >= 2);
+        let mut specs = Vec::new();
+        let mut off = 0;
+        for l in 0..sizes.len() - 1 {
+            let (a, b) = (sizes[l], sizes[l + 1]);
+            specs.push(TensorSpec::new(&format!("w{l}"), &[a, b], off));
+            off += a * b;
+            specs.push(TensorSpec::new(&format!("b{l}"), &[b], off));
+            off += b;
+        }
+        Self { sizes, specs, d: off }
+    }
+
+    /// Flat parameter dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Tensor layout for shaped optimizers.
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    /// He-style init into a fresh flat vector.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let mut flat = vec![0f32; self.d];
+        for l in 0..self.sizes.len() - 1 {
+            let (a, b) = (self.sizes[l], self.sizes[l + 1]);
+            let spec = &self.specs[2 * l];
+            let std = (2.0 / a as f32).sqrt();
+            for v in flat[spec.offset..spec.offset + a * b].iter_mut() {
+                *v = (rng.gen_f32() - 0.5) * 2.0 * std;
+            }
+        }
+        flat
+    }
+
+    fn w<'a>(&self, flat: &'a [f32], l: usize) -> &'a [f32] {
+        let s = &self.specs[2 * l];
+        &flat[s.offset..s.offset + s.size()]
+    }
+
+    fn b<'a>(&self, flat: &'a [f32], l: usize) -> &'a [f32] {
+        let s = &self.specs[2 * l + 1];
+        &flat[s.offset..s.offset + s.size()]
+    }
+
+    /// Forward + backward over one batch; returns mean CE loss and writes
+    /// gradients into `grads` (same flat layout).
+    ///
+    /// `x`: (batch, input) row-major; `labels`: (batch,).
+    pub fn loss_grad(&self, flat: &[f32], x: &[f32], labels: &[i32], grads: &mut [f32]) -> f32 {
+        assert_eq!(flat.len(), self.d);
+        assert_eq!(grads.len(), self.d);
+        let nl = self.sizes.len() - 1;
+        let batch = labels.len();
+        assert_eq!(x.len(), batch * self.sizes[0]);
+        grads.fill(0.0);
+
+        // forward, keeping activations per layer
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        for l in 0..nl {
+            let (a, b) = (self.sizes[l], self.sizes[l + 1]);
+            let w = self.w(flat, l);
+            let bias = self.b(flat, l);
+            let prev = &acts[l];
+            let mut out = vec![0f32; batch * b];
+            for n in 0..batch {
+                for j in 0..b {
+                    let mut acc = bias[j];
+                    for i in 0..a {
+                        acc += prev[n * a + i] * w[i * b + j];
+                    }
+                    out[n * b + j] = if l + 1 < nl { acc.tanh() } else { acc };
+                }
+            }
+            acts.push(out);
+        }
+
+        // softmax CE + output delta
+        let classes = self.sizes[nl];
+        let logits = &acts[nl];
+        let mut delta = vec![0f32; batch * classes];
+        let mut loss = 0f32;
+        for n in 0..batch {
+            let row = &logits[n * classes..(n + 1) * classes];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let label = labels[n] as usize;
+            loss += -(exps[label] / z).ln();
+            for c in 0..classes {
+                let p = exps[c] / z;
+                delta[n * classes + c] = (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+            }
+        }
+        loss /= batch as f32;
+
+        // backward
+        let mut cur_delta = delta;
+        for l in (0..nl).rev() {
+            let (a, b) = (self.sizes[l], self.sizes[l + 1]);
+            let w = self.w(flat, l);
+            let (ws, bs) = (&self.specs[2 * l], &self.specs[2 * l + 1]);
+            let prev = &acts[l];
+            // grads
+            for n in 0..batch {
+                for j in 0..b {
+                    let dj = cur_delta[n * b + j];
+                    if dj == 0.0 {
+                        continue;
+                    }
+                    grads[bs.offset + j] += dj;
+                    for i in 0..a {
+                        grads[ws.offset + i * b + j] += prev[n * a + i] * dj;
+                    }
+                }
+            }
+            if l > 0 {
+                // delta_prev = (delta @ W^T) * tanh'(pre) with tanh' = 1 - act^2
+                let mut next = vec![0f32; batch * a];
+                for n in 0..batch {
+                    for i in 0..a {
+                        let mut acc = 0f32;
+                        for j in 0..b {
+                            acc += cur_delta[n * b + j] * w[i * b + j];
+                        }
+                        let act = prev[n * a + i];
+                        next[n * a + i] = acc * (1.0 - act * act);
+                    }
+                }
+                cur_delta = next;
+            }
+        }
+        loss
+    }
+
+    /// Classification accuracy on one batch.
+    pub fn accuracy(&self, flat: &[f32], x: &[f32], labels: &[i32]) -> f32 {
+        let nl = self.sizes.len() - 1;
+        let batch = labels.len();
+        let mut act = x.to_vec();
+        for l in 0..nl {
+            let (a, b) = (self.sizes[l], self.sizes[l + 1]);
+            let w = self.w(flat, l);
+            let bias = self.b(flat, l);
+            let mut out = vec![0f32; batch * b];
+            for n in 0..batch {
+                for j in 0..b {
+                    let mut acc = bias[j];
+                    for i in 0..a {
+                        acc += act[n * a + i] * w[i * b + j];
+                    }
+                    out[n * b + j] = if l + 1 < nl { acc.tanh() } else { acc };
+                }
+            }
+            act = out;
+        }
+        let classes = self.sizes[nl];
+        let mut correct = 0;
+        for n in 0..batch {
+            let row = &act[n * classes..(n + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == labels[n] as usize {
+                correct += 1;
+            }
+        }
+        correct as f32 / batch as f32
+    }
+
+    /// Bag-of-tokens featurization matching [`crate::data::NliDataset`]
+    /// batches: token histogram normalized by sequence length.
+    pub fn featurize_tokens(vocab: usize, tokens: &[i32], seq: usize, out: &mut Vec<f32>) {
+        out.clear();
+        for row in tokens.chunks(seq) {
+            let mut hist = vec![0f32; vocab];
+            for &t in row {
+                hist[t as usize] += 1.0 / seq as f32;
+            }
+            out.extend_from_slice(&hist);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mlp = Mlp::new(vec![6, 5, 3]);
+        let flat = mlp.init(0);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.31).sin()).collect();
+        let labels = vec![0, 2];
+        let mut grads = vec![0f32; mlp.dim()];
+        let loss = mlp.loss_grad(&flat, &x, &labels, &mut grads);
+        assert!(loss.is_finite());
+        let eps = 1e-3;
+        for &i in &[0usize, 7, 20, mlp.dim() - 1] {
+            let mut fp = flat.clone();
+            fp[i] += eps;
+            let mut fm = flat.clone();
+            fm[i] -= eps;
+            let mut scratch = vec![0f32; mlp.dim()];
+            let lp = mlp.loss_grad(&fp, &x, &labels, &mut scratch);
+            let lm = mlp.loss_grad(&fm, &x, &labels, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "param {i}: fd {fd} vs {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn training_with_adamw_learns_nli_task() {
+        use crate::data::NliDataset;
+        use crate::optim::{adamw::AdamW, adamw::AdamWConfig, Optimizer};
+        let vocab = 64;
+        let mlp = Mlp::new(vec![vocab, 32, 3]);
+        let mut flat = mlp.init(1);
+        let mut opt = AdamW::new(mlp.dim(), AdamWConfig::default());
+        let mut ds = NliDataset::new(vocab, 3, 0);
+        let (mut toks, mut labs, mut feats) = (vec![], vec![], vec![]);
+        let mut grads = vec![0f32; mlp.dim()];
+        let mut last_loss = 0.0;
+        for _ in 0..200 {
+            ds.next_batch(16, 24, &mut toks, &mut labs);
+            Mlp::featurize_tokens(vocab, &toks, 24, &mut feats);
+            last_loss = mlp.loss_grad(&flat, &feats, &labs, &mut grads);
+            opt.step(&mut flat, &grads, 3e-3);
+        }
+        assert!(last_loss < 0.7, "loss did not drop: {last_loss}");
+        ds.next_batch(64, 24, &mut toks, &mut labs);
+        Mlp::featurize_tokens(vocab, &toks, 24, &mut feats);
+        let acc = mlp.accuracy(&flat, &feats, &labs);
+        assert!(acc > 0.6, "accuracy {acc}");
+    }
+
+    #[test]
+    fn specs_cover_dim_exactly() {
+        let mlp = Mlp::new(vec![10, 8, 4]);
+        let total: usize = mlp.specs().iter().map(|s| s.size()).sum();
+        assert_eq!(total, mlp.dim());
+        assert_eq!(mlp.dim(), 10 * 8 + 8 + 8 * 4 + 4);
+    }
+}

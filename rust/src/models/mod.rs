@@ -1,0 +1,6 @@
+//! Native (artifact-free) models: 2-D test functions for the trajectory
+//! figures and a pure-rust MLP classifier used by optimizer-comparison
+//! experiments that don't need the AOT transformer.
+
+pub mod mlp;
+pub mod testfns;

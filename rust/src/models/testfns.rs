@@ -1,0 +1,174 @@
+//! 2-D test functions from the paper's illustrative figures.
+//!
+//! * [`Rosenbrock`] — Figure 1 / Figure 9 second row:
+//!   `f(x,y) = (1-x)^2 + 100 (y - x^2)^2`, start `(-1/2, 1)`.
+//! * [`IllConditioned`] — Figure 9 first row:
+//!   `f(x,y) = cos(5pi/4 x) + sin(7pi/4 y)`, start `(-1/4, 1/4)`.
+//! * [`QuadraticPL`] — a strongly-convex quadratic (hence PL) used by the
+//!   Theorem-2 empirical rate study (`repro theory`).
+
+/// A differentiable scalar objective over R^d.
+pub trait TestFn {
+    fn dim(&self) -> usize;
+    fn eval(&self, x: &[f32]) -> f32;
+    fn grad(&self, x: &[f32], g: &mut [f32]);
+    fn start(&self) -> Vec<f32>;
+    /// Global minimum value (for convergence assertions), if known.
+    fn f_star(&self) -> Option<f32>;
+}
+
+/// Rosenbrock banana function (Figure 1).
+pub struct Rosenbrock;
+
+impl TestFn for Rosenbrock {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, x: &[f32]) -> f32 {
+        (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2)
+    }
+    fn grad(&self, x: &[f32], g: &mut [f32]) {
+        let (a, b) = (x[0], x[1]);
+        g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+        g[1] = 200.0 * (b - a * a);
+    }
+    fn start(&self) -> Vec<f32> {
+        vec![-0.5, 1.0] // paper's (x0, y0)
+    }
+    fn f_star(&self) -> Option<f32> {
+        Some(0.0) // at (1, 1)
+    }
+}
+
+/// Ill-conditioned trigonometric function (Figure 9, first row).
+pub struct IllConditioned;
+
+impl TestFn for IllConditioned {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, x: &[f32]) -> f32 {
+        let c = 5.0 * std::f32::consts::PI / 4.0;
+        let s = 7.0 * std::f32::consts::PI / 4.0;
+        (c * x[0]).cos() + (s * x[1]).sin()
+    }
+    fn grad(&self, x: &[f32], g: &mut [f32]) {
+        let c = 5.0 * std::f32::consts::PI / 4.0;
+        let s = 7.0 * std::f32::consts::PI / 4.0;
+        g[0] = -c * (c * x[0]).sin();
+        g[1] = s * (s * x[1]).cos();
+    }
+    fn start(&self) -> Vec<f32> {
+        vec![-0.25, 0.25] // paper's (x0, y0)
+    }
+    fn f_star(&self) -> Option<f32> {
+        Some(-2.0)
+    }
+}
+
+/// `f(x) = 1/2 x^T diag(h) x`, h_i > 0: mu-PL with mu = min h (Theorem 2 study).
+pub struct QuadraticPL {
+    pub h: Vec<f32>,
+    pub x0: Vec<f32>,
+}
+
+impl QuadraticPL {
+    /// Condition-number-`kappa` quadratic in dimension d.
+    pub fn new(d: usize, kappa: f32) -> Self {
+        let h = (0..d)
+            .map(|i| 1.0 + (kappa - 1.0) * i as f32 / (d.max(2) - 1) as f32)
+            .collect();
+        let x0 = (0..d).map(|i| ((i as f32 * 0.73).sin() + 1.2) / 2.0).collect();
+        Self { h, x0 }
+    }
+}
+
+impl TestFn for QuadraticPL {
+    fn dim(&self) -> usize {
+        self.h.len()
+    }
+    fn eval(&self, x: &[f32]) -> f32 {
+        0.5 * x.iter().zip(&self.h).map(|(&xi, &hi)| hi * xi * xi).sum::<f32>()
+    }
+    fn grad(&self, x: &[f32], g: &mut [f32]) {
+        for ((gi, &xi), &hi) in g.iter_mut().zip(x).zip(&self.h) {
+            *gi = hi * xi;
+        }
+    }
+    fn start(&self) -> Vec<f32> {
+        self.x0.clone()
+    }
+    fn f_star(&self) -> Option<f32> {
+        Some(0.0)
+    }
+}
+
+/// Run `opt` on `f` for `steps` steps; returns the iterate trajectory
+/// (including the start point). Used by the figure harnesses.
+pub fn run_trajectory<F: TestFn>(
+    f: &F,
+    opt: &mut dyn crate::optim::Optimizer,
+    lr: f32,
+    steps: usize,
+) -> Vec<Vec<f32>> {
+    let mut x = f.start();
+    let mut g = vec![0.0; f.dim()];
+    let mut traj = vec![x.clone()];
+    for _ in 0..steps {
+        f.grad(&x, &mut g);
+        opt.step(&mut x, &g, lr);
+        traj.push(x.clone());
+    }
+    traj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_grad<F: TestFn>(f: &F, x: &[f32]) {
+        let mut g = vec![0.0; f.dim()];
+        f.grad(x, &mut g);
+        let eps = 1e-3;
+        for i in 0..f.dim() {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let fd = (f.eval(&xp) - f.eval(&xm)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 2e-2 * (1.0 + fd.abs()), "coord {i}: {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn rosenbrock_gradient_matches_fd() {
+        check_grad(&Rosenbrock, &[-0.5, 1.0]);
+        check_grad(&Rosenbrock, &[0.3, -0.2]);
+    }
+
+    #[test]
+    fn rosenbrock_minimum() {
+        assert_eq!(Rosenbrock.eval(&[1.0, 1.0]), 0.0);
+        let mut g = vec![0.0; 2];
+        Rosenbrock.grad(&[1.0, 1.0], &mut g);
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn illconditioned_gradient_matches_fd() {
+        check_grad(&IllConditioned, &[-0.25, 0.25]);
+        check_grad(&IllConditioned, &[0.6, -0.9]);
+    }
+
+    #[test]
+    fn quadratic_pl_inequality_holds() {
+        // ||grad||^2 >= 2 mu (f - f*) with mu = min h.
+        let q = QuadraticPL::new(8, 50.0);
+        let mu = q.h.iter().cloned().fold(f32::INFINITY, f32::min);
+        let x = q.start();
+        let mut g = vec![0.0; 8];
+        q.grad(&x, &mut g);
+        let gn: f32 = g.iter().map(|v| v * v).sum();
+        assert!(gn >= 2.0 * mu * q.eval(&x) - 1e-5);
+    }
+}

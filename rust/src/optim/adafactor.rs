@@ -1,0 +1,181 @@
+//! AdaFactor baseline (Shazeer & Stern 2018): factorized second moments.
+//!
+//! 2-D tensors keep row/column statistics `R`/`C` instead of a dense `v`
+//! (sublinear state); 1-D tensors fall back to a dense second moment. No
+//! first moment (the memory-saving configuration), RMS update clipping.
+
+use super::Optimizer;
+use crate::coordinator::layout::TensorSpec;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdaFactorConfig {
+    pub beta2: f32,
+    pub eps1: f32,
+    /// RMS clip threshold `d` from the paper.
+    pub clip: f32,
+}
+
+impl Default for AdaFactorConfig {
+    fn default() -> Self {
+        Self { beta2: 0.999, eps1: 1e-30, clip: 1.0 }
+    }
+}
+
+enum State {
+    Factored { rows: usize, cols: usize, offset: usize, r: Vec<f32>, c: Vec<f32> },
+    Dense { offset: usize, len: usize, v: Vec<f32> },
+}
+
+/// AdaFactor over a flat vector with tensor shape metadata.
+pub struct AdaFactor {
+    cfg: AdaFactorConfig,
+    d: usize,
+    states: Vec<State>,
+    t: u64,
+}
+
+impl AdaFactor {
+    pub fn new(d: usize, specs: Vec<TensorSpec>, cfg: AdaFactorConfig) -> Self {
+        let mut states = Vec::new();
+        let mut covered = 0usize;
+        for s in &specs {
+            if let Some((rows, cols)) = s.as_matrix() {
+                states.push(State::Factored {
+                    rows,
+                    cols,
+                    offset: s.offset,
+                    r: vec![0.0; rows],
+                    c: vec![0.0; cols],
+                });
+            } else {
+                states.push(State::Dense { offset: s.offset, len: s.size(), v: vec![0.0; s.size()] });
+            }
+            covered = covered.max(s.offset + s.size());
+        }
+        // Parameters not covered by any spec (e.g. padding) get one dense
+        // tail state so the optimizer is total over the flat vector.
+        if covered < d {
+            states.push(State::Dense { offset: covered, len: d - covered, v: vec![0.0; d - covered] });
+        }
+        Self { cfg, d, states, t: 0 }
+    }
+}
+
+impl Optimizer for AdaFactor {
+    fn name(&self) -> String {
+        "AdaFactor".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.d);
+        self.t += 1;
+        let cfg = self.cfg;
+        for st in &mut self.states {
+            match st {
+                State::Factored { rows, cols, offset, r, c } => {
+                    let (rows, cols, offset) = (*rows, *cols, *offset);
+                    let g = &grads[offset..offset + rows * cols];
+                    // update row/col stats of g^2 + eps1
+                    for i in 0..rows {
+                        let mut acc = 0f32;
+                        for j in 0..cols {
+                            let v = g[i * cols + j];
+                            acc += v * v + cfg.eps1;
+                        }
+                        r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * (acc / cols as f32);
+                    }
+                    for j in 0..cols {
+                        let mut acc = 0f32;
+                        for i in 0..rows {
+                            let v = g[i * cols + j];
+                            acc += v * v + cfg.eps1;
+                        }
+                        c[j] = cfg.beta2 * c[j] + (1.0 - cfg.beta2) * (acc / rows as f32);
+                    }
+                    let r_mean = r.iter().sum::<f32>() / rows as f32;
+                    // u = g / sqrt(R C / mean R); then RMS clip
+                    let mut rms = 0f32;
+                    let mut u = vec![0f32; rows * cols];
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            let v = (r[i] * c[j] / r_mean.max(cfg.eps1)).max(cfg.eps1);
+                            let ui = g[i * cols + j] / v.sqrt();
+                            rms += ui * ui;
+                            u[i * cols + j] = ui;
+                        }
+                    }
+                    let rms = (rms / (rows * cols) as f32).sqrt();
+                    let scale = 1.0 / (rms / cfg.clip).max(1.0);
+                    let p = &mut params[offset..offset + rows * cols];
+                    for (pi, ui) in p.iter_mut().zip(&u) {
+                        *pi -= lr * scale * ui;
+                    }
+                }
+                State::Dense { offset, len, v } => {
+                    let (offset, len) = (*offset, *len);
+                    let g = &grads[offset..offset + len];
+                    let p = &mut params[offset..offset + len];
+                    for i in 0..len {
+                        v[i] = cfg.beta2 * v[i] + (1.0 - cfg.beta2) * (g[i] * g[i] + cfg.eps1);
+                        p[i] -= lr * g[i] / v[i].sqrt().max(cfg.eps1);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .map(|s| match s {
+                State::Factored { r, c, .. } => 4 * (r.len() + c.len()),
+                State::Dense { v, .. } => 4 * v.len(),
+            })
+            .sum()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::randvec;
+
+    #[test]
+    fn factored_state_is_sublinear() {
+        let specs = vec![TensorSpec::new("w", &[64, 64], 0)];
+        let opt = AdaFactor::new(4096, specs, AdaFactorConfig::default());
+        // 64 + 64 floats instead of 4096
+        assert_eq!(opt.state_bytes(), 4 * 128);
+    }
+
+    #[test]
+    fn converges_on_quadratic_matrix() {
+        let specs = vec![TensorSpec::new("w", &[16, 16], 0)];
+        let mut opt = AdaFactor::new(256, specs, AdaFactorConfig::default());
+        let mut x = randvec(0, 256, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..300 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.05);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(n1 < 0.3 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn uncovered_tail_is_still_optimized() {
+        // spec covers only first 64 of 128 params
+        let specs = vec![TensorSpec::new("w", &[8, 8], 0)];
+        let mut opt = AdaFactor::new(128, specs, AdaFactorConfig::default());
+        let mut x = vec![1.0f32; 128];
+        for _ in 0..100 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.05);
+        }
+        assert!(x[100].abs() < 0.9, "tail coord did not move: {}", x[100]);
+    }
+}

@@ -1,0 +1,171 @@
+//! AdamW with 8-bit block-quantized state (Dettmers et al. 2021 baseline).
+//!
+//! Stores `m` (signed) and `v` (unsigned) as u8 codes indexing a log-spaced
+//! "dynamic" table with per-bucket absmax scales: 2 bytes/param + negligible
+//! metadata, the `M_AW8 = 2d` row of §3.2. The log table mirrors the
+//! original's dynamic-tree map (relative precision across ~7 orders of
+//! magnitude); a trust-region clip on the update guards the residual
+//! v-underflow corner (DESIGN.md substitutions).
+
+use super::Optimizer;
+use crate::quant::Dynamic8;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamW8bitConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Quantization bucket for the state blocks.
+    pub bucket: usize,
+}
+
+impl Default for AdamW8bitConfig {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, bucket: 256 }
+    }
+}
+
+/// 8-bit-state AdamW.
+pub struct AdamW8bit {
+    cfg: AdamW8bitConfig,
+    d: usize,
+    d_pad: usize,
+    mq: Dynamic8,
+    vq: Dynamic8,
+    m_codes: Vec<u8>,
+    m_scales: Vec<f32>,
+    v_codes: Vec<u8>,
+    v_scales: Vec<f32>,
+    /// fp32 scratch for the dequantized moments (not persistent state).
+    m_f: Vec<f32>,
+    v_f: Vec<f32>,
+    t: u64,
+}
+
+impl AdamW8bit {
+    pub fn new(d: usize, cfg: AdamW8bitConfig) -> Self {
+        let bucket = cfg.bucket.min(crate::pad_up(d, 2));
+        let cfg = AdamW8bitConfig { bucket, ..cfg };
+        let d_pad = crate::pad_up(d, bucket);
+        let nq = d_pad / bucket;
+        let mq = Dynamic8::signed();
+        let vq = Dynamic8::unsigned();
+        Self {
+            cfg,
+            d,
+            d_pad,
+            mq,
+            vq,
+            m_codes: vec![128; d_pad], // code 128 == 0.0 signed
+            m_scales: vec![0.0; nq],
+            v_codes: vec![0; d_pad],
+            v_scales: vec![0.0; nq],
+            m_f: vec![0.0; d_pad],
+            v_f: vec![0.0; d_pad],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for AdamW8bit {
+    fn name(&self) -> String {
+        "AdamW-8bit".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.d);
+        self.t += 1;
+        let c = self.cfg;
+        self.mq.dequantize(&self.m_codes, c.bucket, &self.m_scales, &mut self.m_f);
+        self.vq.dequantize(&self.v_codes, c.bucket, &self.v_scales, &mut self.v_f);
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let decay = 1.0 - lr * c.weight_decay;
+        for i in 0..self.d {
+            let g = grads[i];
+            self.m_f[i] = c.beta1 * self.m_f[i] + (1.0 - c.beta1) * g;
+            self.v_f[i] = c.beta2 * self.v_f[i] + (1.0 - c.beta2) * g * g;
+            let m_hat = self.m_f[i] / bc1;
+            let v_hat = self.v_f[i] / bc2;
+            // Trust-region clip: a v code that decays to zero while m stays
+            // nonzero would otherwise produce an m/eps-scale explosion.
+            let u = (m_hat / (v_hat.sqrt() + c.eps)).clamp(-10.0, 10.0);
+            params[i] = decay * params[i] - lr * u;
+        }
+        for i in self.d..self.d_pad {
+            self.m_f[i] = 0.0;
+            self.v_f[i] = 0.0;
+        }
+        self.mq.quantize(&self.m_f, c.bucket, &mut self.m_codes, &mut self.m_scales);
+        self.vq.quantize(&self.v_f, c.bucket, &mut self.v_codes, &mut self.v_scales);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m_codes.len() + self.v_codes.len() + 4 * (self.m_scales.len() + self.v_scales.len())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adamw::{AdamW, AdamWConfig};
+    use crate::optim::testutil::randvec;
+
+    #[test]
+    fn tracks_fp32_adamw() {
+        let d = 512;
+        let mut opt8 = AdamW8bit::new(d, AdamW8bitConfig::default());
+        let mut opt32 = AdamW::new(d, AdamWConfig::default());
+        let mut p8 = randvec(0, d, 1.0);
+        let mut p32 = p8.clone();
+        for s in 0..20 {
+            let g = randvec(10 + s, d, 1.0);
+            opt8.step(&mut p8, &g, 1e-3);
+            opt32.step(&mut p32, &g, 1e-3);
+        }
+        let diff: f32 = p8.iter().zip(&p32).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+        let norm: f32 = p32.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(diff / norm < 0.01, "rel {}", diff / norm);
+    }
+
+    #[test]
+    fn state_is_quarter_of_fp32() {
+        let d = 4096;
+        let opt8 = AdamW8bit::new(d, AdamW8bitConfig::default());
+        let opt32 = AdamW::new(d, AdamWConfig::default());
+        let ratio = opt8.state_bytes() as f64 / opt32.state_bytes() as f64;
+        assert!(ratio < 0.27, "{ratio}");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let d = 512;
+        let mut opt = AdamW8bit::new(d, AdamW8bitConfig::default());
+        let mut x = randvec(5, d, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..300 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.02);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        // 8-bit state quantization has a noise floor; 0.25x contraction in
+        // 300 steps is the fp32 trajectory up to that floor.
+        assert!(n1 < 0.25 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn handles_non_bucket_multiple_dimension() {
+        let mut opt = AdamW8bit::new(300, AdamW8bitConfig::default());
+        let mut x = randvec(6, 300, 1.0);
+        for _ in 0..10 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.01);
+        }
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,234 @@
+//! CAME baseline (Luo et al. 2023): confidence-guided, memory-efficient.
+//!
+//! Keeps a full first moment `m` but factorizes both the second moment and
+//! the *instability* statistic `(u - m)^2` into row/column factors. 1-D
+//! tensors fall back to dense Adam-style moments.
+
+use super::Optimizer;
+use crate::coordinator::layout::TensorSpec;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CameConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    /// beta3 for the instability factors (paper default 0.9999).
+    pub beta3: f32,
+    pub eps1: f32,
+    pub eps2: f32,
+    pub clip: f32,
+}
+
+impl Default for CameConfig {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.999, beta3: 0.9999, eps1: 1e-30, eps2: 1e-16, clip: 1.0 }
+    }
+}
+
+enum State {
+    Factored {
+        rows: usize,
+        cols: usize,
+        offset: usize,
+        m: Vec<f32>,
+        vr: Vec<f32>,
+        vc: Vec<f32>,
+        ur: Vec<f32>,
+        uc: Vec<f32>,
+    },
+    Dense { offset: usize, len: usize, m: Vec<f32>, v: Vec<f32> },
+}
+
+/// CAME over a flat vector with tensor shape metadata.
+pub struct Came {
+    cfg: CameConfig,
+    d: usize,
+    states: Vec<State>,
+    t: u64,
+}
+
+impl Came {
+    pub fn new(d: usize, specs: Vec<TensorSpec>, cfg: CameConfig) -> Self {
+        let mut states = Vec::new();
+        let mut covered = 0usize;
+        for s in &specs {
+            if let Some((rows, cols)) = s.as_matrix() {
+                states.push(State::Factored {
+                    rows,
+                    cols,
+                    offset: s.offset,
+                    m: vec![0.0; rows * cols],
+                    vr: vec![0.0; rows],
+                    vc: vec![0.0; cols],
+                    ur: vec![0.0; rows],
+                    uc: vec![0.0; cols],
+                });
+            } else {
+                states.push(State::Dense {
+                    offset: s.offset,
+                    len: s.size(),
+                    m: vec![0.0; s.size()],
+                    v: vec![0.0; s.size()],
+                });
+            }
+            covered = covered.max(s.offset + s.size());
+        }
+        if covered < d {
+            states.push(State::Dense {
+                offset: covered,
+                len: d - covered,
+                m: vec![0.0; d - covered],
+                v: vec![0.0; d - covered],
+            });
+        }
+        Self { cfg, d, states, t: 0 }
+    }
+}
+
+impl Optimizer for Came {
+    fn name(&self) -> String {
+        "CAME".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.d);
+        self.t += 1;
+        let cfg = self.cfg;
+        for st in &mut self.states {
+            match st {
+                State::Factored { rows, cols, offset, m, vr, vc, ur, uc } => {
+                    let (rows, cols, offset) = (*rows, *cols, *offset);
+                    let g = &grads[offset..offset + rows * cols];
+                    // second-moment factors of g^2 + eps1
+                    for i in 0..rows {
+                        let mut acc = 0f32;
+                        for j in 0..cols {
+                            let v = g[i * cols + j];
+                            acc += v * v + cfg.eps1;
+                        }
+                        vr[i] = cfg.beta2 * vr[i] + (1.0 - cfg.beta2) * (acc / cols as f32);
+                    }
+                    for j in 0..cols {
+                        let mut acc = 0f32;
+                        for i in 0..rows {
+                            let v = g[i * cols + j];
+                            acc += v * v + cfg.eps1;
+                        }
+                        vc[j] = cfg.beta2 * vc[j] + (1.0 - cfg.beta2) * (acc / rows as f32);
+                    }
+                    let vr_mean = (vr.iter().sum::<f32>() / rows as f32).max(cfg.eps1);
+                    // u = g / sqrt(V); RMS clip; momentum
+                    let mut u = vec![0f32; rows * cols];
+                    let mut rms = 0f32;
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            let v = (vr[i] * vc[j] / vr_mean).max(cfg.eps1);
+                            let ui = g[i * cols + j] / v.sqrt();
+                            rms += ui * ui;
+                            u[i * cols + j] = ui;
+                        }
+                    }
+                    let rms = (rms / (rows * cols) as f32).sqrt();
+                    let scale = 1.0 / (rms / cfg.clip).max(1.0);
+                    for (mi, &ui) in m.iter_mut().zip(&u) {
+                        *mi = cfg.beta1 * *mi + (1.0 - cfg.beta1) * scale * ui;
+                    }
+                    // instability U = (u_hat - m)^2, factorized with beta3
+                    for i in 0..rows {
+                        let mut acc = 0f32;
+                        for j in 0..cols {
+                            let diff = scale * u[i * cols + j] - m[i * cols + j];
+                            acc += diff * diff + cfg.eps2;
+                        }
+                        ur[i] = cfg.beta3 * ur[i] + (1.0 - cfg.beta3) * (acc / cols as f32);
+                    }
+                    for j in 0..cols {
+                        let mut acc = 0f32;
+                        for i in 0..rows {
+                            let diff = scale * u[i * cols + j] - m[i * cols + j];
+                            acc += diff * diff + cfg.eps2;
+                        }
+                        uc[j] = cfg.beta3 * uc[j] + (1.0 - cfg.beta3) * (acc / rows as f32);
+                    }
+                    let ur_mean = (ur.iter().sum::<f32>() / rows as f32).max(cfg.eps2);
+                    let p = &mut params[offset..offset + rows * cols];
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            let s = (ur[i] * uc[j] / ur_mean).max(cfg.eps2);
+                            p[i * cols + j] -= lr * m[i * cols + j] / s.sqrt().max(cfg.eps2);
+                        }
+                    }
+                }
+                State::Dense { offset, len, m, v } => {
+                    let (offset, len) = (*offset, *len);
+                    let g = &grads[offset..offset + len];
+                    let p = &mut params[offset..offset + len];
+                    for i in 0..len {
+                        m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g[i];
+                        v[i] = cfg.beta2 * v[i] + (1.0 - cfg.beta2) * g[i] * g[i];
+                        p[i] -= lr * m[i] / (v[i].sqrt() + 1e-8);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .map(|s| match s {
+                State::Factored { m, vr, vc, ur, uc, .. } => {
+                    4 * (m.len() + vr.len() + vc.len() + ur.len() + uc.len())
+                }
+                State::Dense { m, v, .. } => 4 * (m.len() + v.len()),
+            })
+            .sum()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::randvec;
+
+    #[test]
+    fn state_between_sgd_and_adam() {
+        // m is full (4 B/param) + small factors: more than SGD momentum,
+        // less than dense Adam's 8 B/param.
+        let specs = vec![TensorSpec::new("w", &[64, 64], 0)];
+        let opt = Came::new(4096, specs, CameConfig::default());
+        let bytes = opt.state_bytes();
+        assert!(bytes > 4 * 4096);
+        assert!(bytes < 8 * 4096);
+    }
+
+    #[test]
+    fn converges_on_quadratic_matrix() {
+        let specs = vec![TensorSpec::new("w", &[16, 16], 0)];
+        let mut opt = Came::new(256, specs, CameConfig::default());
+        let mut x = randvec(0, 256, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..400 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.02);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(n1 < 0.5 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn updates_stay_finite_with_tiny_gradients() {
+        // CAME's known instability regime: near-zero gradients.
+        let specs = vec![TensorSpec::new("w", &[8, 8], 0)];
+        let mut opt = Came::new(64, specs, CameConfig::default());
+        let mut x = randvec(1, 64, 1.0);
+        for _ in 0..50 {
+            let g = vec![1e-20f32; 64];
+            opt.step(&mut x, &g, 0.01);
+            assert!(x.iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! MicroAdam, analytical view (Algorithm 3) — the object of Theorems 1/2.
+//!
+//! Differences from the practical Algorithm 1 implementation:
+//! * `C` is a *global* Top-K contraction (`q = sqrt(1 - k/d)`, Assumption 1);
+//! * `Q` is the unbiased stochastic-rounding quantizer of Lemma 1
+//!   (Assumption 2), applied to the *residual* `g + e - C(g+e)`;
+//! * moments are dense EMAs of the compressed gradients with AMSGrad
+//!   normalization `v_hat = max(v_hat, v)`, no bias correction.
+//!
+//! This variant is used by the `repro theory` harness to study the
+//! convergence rates and the `(1 + omega) q < 1` condition empirically; it
+//! is *not* memory-efficient (dense state) and exists purely as the
+//! theory-facing twin of [`super::microadam::MicroAdam`].
+
+use super::Optimizer;
+use crate::quant::{BucketStats, Quant4};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyticalConfig {
+    /// Global Top-K count `k` (contraction factor `q = sqrt(1 - k/d)`).
+    pub k: usize,
+    /// EF quantization bucket; `None` stores the error uncompressed
+    /// (`omega = 0` — the Comp-AMS special case of the theory).
+    pub qbucket: Option<usize>,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub seed: u64,
+    /// AMSGrad normalization (the analysed variant). Off gives plain Adam
+    /// normalization for ablations.
+    pub amsgrad: bool,
+    /// Disable error feedback entirely ("TopK-Adam", Figure 1 middle).
+    pub error_feedback: bool,
+}
+
+impl Default for AnalyticalConfig {
+    fn default() -> Self {
+        Self {
+            k: 1,
+            qbucket: Some(crate::QBUCKET),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            seed: 0,
+            amsgrad: true,
+            error_feedback: true,
+        }
+    }
+}
+
+/// Algorithm 3 with dense bookkeeping.
+pub struct MicroAdamAnalytical {
+    cfg: AnalyticalConfig,
+    d: usize,
+    e: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    v_hat: Vec<f32>,
+    rng: Rng,
+    quant: Option<Quant4>,
+    t: u64,
+    /// scratch
+    acc: Vec<f32>,
+    order: Vec<u32>,
+}
+
+impl MicroAdamAnalytical {
+    pub fn new(d: usize, cfg: AnalyticalConfig) -> Self {
+        let quant = cfg.qbucket.map(|b| {
+            let mut b = b.min(crate::pad_up(d, 2));
+            while d % b != 0 || b % 2 != 0 {
+                b -= 1;
+                assert!(b >= 2);
+            }
+            Quant4::new(b)
+        });
+        Self {
+            cfg,
+            d,
+            e: vec![0.0; d],
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            v_hat: vec![0.0; d],
+            rng: Rng::seed_from_u64(cfg.seed),
+            quant,
+            t: 0,
+            acc: vec![0.0; d],
+            order: Vec::new(),
+        }
+    }
+
+    /// Contraction factor `q = sqrt(1 - k/d)` of the Top-K compressor.
+    pub fn q(&self) -> f64 {
+        (1.0 - self.cfg.k as f64 / self.d as f64).sqrt()
+    }
+
+    /// Lemma-1 omega bound of the EF quantizer (worst case over inputs):
+    /// `omega <= sqrt(d-2) / (2^b - 1)` since `(Delta-delta)/sqrt(Delta^2+delta^2) <= sqrt(2)`.
+    pub fn omega_bound(&self) -> f64 {
+        match self.quant {
+            None => 0.0,
+            Some(ref q) => {
+                let db = q.bucket as f64;
+                (db - 2.0).max(0.0).sqrt() * std::f64::consts::SQRT_2 / 15.0
+            }
+        }
+    }
+
+    /// The theory's compression condition `(1 + omega) q < 1`.
+    pub fn condition_holds(&self) -> bool {
+        (1.0 + self.omega_bound()) * self.q() < 1.0
+    }
+
+    pub fn error_norm(&self) -> f32 {
+        self.e.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+impl MicroAdamAnalytical {
+    fn finish_update(&mut self, params: &mut [f32], lr: f32) {
+        let c = self.cfg;
+        // AMSGrad normalization + update.
+        for i in 0..self.d {
+            if c.amsgrad {
+                self.v_hat[i] = self.v_hat[i].max(self.v[i]);
+            } else {
+                self.v_hat[i] = self.v[i];
+            }
+            params[i] -= lr * self.m[i] / (self.v_hat[i].sqrt() + c.eps);
+        }
+    }
+}
+
+impl Optimizer for MicroAdamAnalytical {
+    fn name(&self) -> String {
+        format!("MicroAdam-A(k={},{})", self.cfg.k,
+                if self.quant.is_some() { "Q4" } else { "dense" })
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.d);
+        self.t += 1;
+        let c = self.cfg;
+
+        // acc = g + e
+        for i in 0..self.d {
+            self.acc[i] = grads[i] + self.e[i];
+        }
+        // tilde_g = C(acc): global top-k by |.|; residual stays in acc.
+        self.order.clear();
+        self.order.extend(0..self.d as u32);
+        let k = c.k.min(self.d);
+        if k < self.d {
+            let acc = &self.acc;
+            self.order.select_nth_unstable_by(k - 1, |&a, &b| {
+                let fa = acc[a as usize].abs();
+                let fb = acc[b as usize].abs();
+                fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        }
+        // moments updated on the sparse compressed gradient:
+        for i in 0..self.d {
+            self.m[i] *= c.beta1;
+            self.v[i] *= c.beta2;
+        }
+        for &i in &self.order[..k] {
+            let i = i as usize;
+            let g = self.acc[i];
+            self.m[i] += (1.0 - c.beta1) * g;
+            self.v[i] += (1.0 - c.beta2) * g * g;
+            self.acc[i] = 0.0; // residual = acc - C(acc)
+        }
+        // e' = Q(residual)
+        if !self.cfg.error_feedback {
+            // Figure-1 "TopK-Adam": discard the residual entirely.
+            return self.finish_update(params, lr);
+        }
+        match self.quant {
+            None => self.e.copy_from_slice(&self.acc),
+            Some(ref q) => {
+                let nq = self.d / q.bucket;
+                let mut packed = vec![0u8; self.d / 2];
+                let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; nq];
+                q.quantize_stochastic(&self.acc, &mut packed, &mut stats, &mut self.rng);
+                q.dequantize(&packed, &stats, &mut self.e);
+            }
+        }
+        self.finish_update(params, lr);
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * (self.e.len() + self.m.len() + self.v.len() + self.v_hat.len())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::randvec;
+
+    #[test]
+    fn q_matches_assumption1() {
+        let opt = MicroAdamAnalytical::new(100, AnalyticalConfig { k: 1, ..Default::default() });
+        assert!((opt.q() - (0.99f64).sqrt()).abs() < 1e-12);
+        let full = MicroAdamAnalytical::new(100, AnalyticalConfig { k: 100, ..Default::default() });
+        assert_eq!(full.q(), 0.0);
+    }
+
+    #[test]
+    fn condition_detects_excessive_compression() {
+        // Tiny k on a huge d with coarse quantization violates (1+w)q < 1.
+        let bad = MicroAdamAnalytical::new(10_000, AnalyticalConfig {
+            k: 1,
+            qbucket: Some(64),
+            ..Default::default()
+        });
+        assert!(!bad.condition_holds());
+        // Dense error (omega = 0) with large k satisfies it.
+        let good = MicroAdamAnalytical::new(100, AnalyticalConfig {
+            k: 60,
+            qbucket: None,
+            ..Default::default()
+        });
+        assert!(good.condition_holds());
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let d = 64;
+        let mut opt = MicroAdamAnalytical::new(d, AnalyticalConfig {
+            k: 16,
+            qbucket: Some(16),
+            ..Default::default()
+        });
+        let mut x = randvec(0, d, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..500 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.02);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(n1 < 0.2 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn amsgrad_vhat_is_monotone() {
+        let d = 32;
+        let mut opt = MicroAdamAnalytical::new(d, AnalyticalConfig { k: 8, ..Default::default() });
+        let mut x = randvec(1, d, 1.0);
+        let mut prev = vec![0f32; d];
+        for s in 0..20 {
+            let g = randvec(50 + s, d, 1.0);
+            opt.step(&mut x, &g, 0.01);
+            for i in 0..d {
+                assert!(opt.v_hat[i] >= prev[i]);
+            }
+            prev.copy_from_slice(&opt.v_hat);
+        }
+    }
+
+    #[test]
+    fn error_norm_bounded_lemma3() {
+        // With (1+w)q < 1, ||e_t||^2 <= 4 q_w^2 / (1-q_w^2)^2 G^2.
+        let d = 64;
+        let k = 32;
+        let mut opt = MicroAdamAnalytical::new(d, AnalyticalConfig {
+            k,
+            qbucket: None, // omega = 0 so q_w = q, bound is exact
+            ..Default::default()
+        });
+        let q_w = opt.q();
+        assert!(opt.condition_holds());
+        let g_bound = (d as f64).sqrt(); // coords in [-1,1]
+        let bound = 2.0 * q_w / (1.0 - q_w * q_w) * g_bound;
+        let mut x = vec![0.0f32; d];
+        for s in 0..200 {
+            let g = randvec(900 + s, d, 1.0);
+            opt.step(&mut x, &g, 0.001);
+            assert!(
+                (opt.error_norm() as f64) <= bound * 1.01,
+                "step {s}: {} > {bound}",
+                opt.error_norm()
+            );
+        }
+    }
+}

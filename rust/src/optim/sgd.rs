@@ -1,0 +1,87 @@
+//! SGD with momentum (the ResNet/ImageNet table baseline).
+
+use super::Optimizer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub momentum: f32,
+    /// Classic L2 regularization folded into the gradient (FFCV recipe).
+    pub weight_decay: f32,
+    pub nesterov: bool,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        Self { momentum: 0.9, weight_decay: 0.0, nesterov: false }
+    }
+}
+
+/// SGD + momentum with fp32 buffer: 4 bytes/param state.
+pub struct Sgd {
+    cfg: SgdConfig,
+    buf: Vec<f32>,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(d: usize, cfg: SgdConfig) -> Self {
+        Self { cfg, buf: vec![0.0; d], t: 0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "SGD".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.t += 1;
+        let c = &self.cfg;
+        for i in 0..params.len() {
+            let g = grads[i] + c.weight_decay * params[i];
+            self.buf[i] = c.momentum * self.buf[i] + g;
+            let d = if c.nesterov { g + c.momentum * self.buf[i] } else { self.buf[i] };
+            params[i] -= lr * d;
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_matches_formula() {
+        let mut opt = Sgd::new(2, SgdConfig { momentum: 0.0, ..Default::default() });
+        let mut p = vec![1.0f32, 2.0];
+        opt.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(1, SgdConfig { momentum: 0.9, ..Default::default() });
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0.1); // buf=1, p=-0.1
+        opt.step(&mut p, &[1.0], 0.1); // buf=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn l2_weight_decay_pulls_to_zero() {
+        let mut opt = Sgd::new(1, SgdConfig { momentum: 0.0, weight_decay: 1.0, ..Default::default() });
+        let mut p = vec![1.0f32];
+        for _ in 0..100 {
+            opt.step(&mut p, &[0.0], 0.1);
+        }
+        assert!(p[0].abs() < 1e-3);
+    }
+}

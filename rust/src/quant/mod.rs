@@ -1,0 +1,507 @@
+//! Block-wise low-bit quantization substrates.
+//!
+//! * [`Quant4`] — the paper's EF compressor (Algorithm 2, Q / Q^-1): 4-bit
+//!   codes packed two-per-byte with per-bucket `(delta, Delta)` statistics.
+//!   Deterministic nearest rounding matches the practical algorithm; the
+//!   stochastic-rounding variant realizes the unbiased, omega-bounded
+//!   compressor analysed in Lemma 1 (Assumption 2).
+//! * [`quant8_signed`] / [`quant8_unsigned`] — 8-bit block quantizers used
+//!   by the AdamW-8bit baseline state (Dettmers-style storage cost, linear
+//!   scales; see DESIGN.md substitutions).
+
+use crate::util::rng::Rng;
+
+/// Number of representable steps for `bits`-bit codes (`2^b - 1`).
+pub fn levels(bits: u32) -> f32 {
+    ((1u32 << bits) - 1) as f32
+}
+
+/// Per-bucket quantization statistics (Algorithm 1 line 8).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BucketStats {
+    /// `delta` = bucket minimum.
+    pub lo: f32,
+    /// `Delta` = bucket maximum.
+    pub hi: f32,
+}
+
+impl BucketStats {
+    /// Quantization step `u = (Delta - delta) / (2^b - 1)`.
+    pub fn step(&self, bits: u32) -> f32 {
+        (self.hi - self.lo) / levels(bits)
+    }
+}
+
+/// 4-bit nibble-packed bucketed quantizer (the EF compressor `Q`).
+///
+/// Layout matches the paper's CUDA implementation and the Pallas kernel:
+/// element `2i` occupies the low nibble of byte `i`, element `2i+1` the high
+/// nibble, so the full EF costs `d/2` bytes plus `2 * d/B_q` f32 stats.
+#[derive(Debug, Clone)]
+pub struct Quant4 {
+    /// Bucket size `B_q`; must be even.
+    pub bucket: usize,
+}
+
+impl Default for Quant4 {
+    fn default() -> Self {
+        Self { bucket: crate::QBUCKET }
+    }
+}
+
+impl Quant4 {
+    pub fn new(bucket: usize) -> Self {
+        assert!(bucket >= 2 && bucket % 2 == 0, "bucket must be even, got {bucket}");
+        Self { bucket }
+    }
+
+    /// Number of buckets covering a length-`d` vector.
+    pub fn n_buckets(&self, d: usize) -> usize {
+        assert_eq!(d % self.bucket, 0, "d={d} not a multiple of bucket={}", self.bucket);
+        d / self.bucket
+    }
+
+    /// State bytes for a length-`d` vector: packed codes + f32 stats.
+    pub fn state_bytes(&self, d: usize) -> usize {
+        d / 2 + 2 * 4 * self.n_buckets(d)
+    }
+
+    /// Deterministic (round-to-nearest) quantization of `x` into
+    /// pre-allocated `packed` (`d/2` bytes) and `stats` (`d/B_q`).
+    pub fn quantize(&self, x: &[f32], packed: &mut [u8], stats: &mut [BucketStats]) {
+        let nb = self.n_buckets(x.len());
+        assert_eq!(packed.len(), x.len() / 2);
+        assert_eq!(stats.len(), nb);
+        for b in 0..nb {
+            let xs = &x[b * self.bucket..(b + 1) * self.bucket];
+            let (lo, hi) = min_max(xs);
+            stats[b] = BucketStats { lo, hi };
+            let u = (hi - lo) / levels(4);
+            let ps = &mut packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
+            if u <= 0.0 {
+                ps.fill(0);
+                continue;
+            }
+            for (i, p) in ps.iter_mut().enumerate() {
+                let q0 = code4(xs[2 * i], lo, u, 0.5);
+                let q1 = code4(xs[2 * i + 1], lo, u, 0.5);
+                *p = q0 | (q1 << 4);
+            }
+        }
+    }
+
+    /// Stochastic-rounding quantization (Lemma 1): unbiased,
+    /// `E[Q^{-1}(Q(x))] = x`.
+    pub fn quantize_stochastic(
+        &self,
+        x: &[f32],
+        packed: &mut [u8],
+        stats: &mut [BucketStats],
+        rng: &mut Rng,
+    ) {
+        let nb = self.n_buckets(x.len());
+        for b in 0..nb {
+            let xs = &x[b * self.bucket..(b + 1) * self.bucket];
+            let (lo, hi) = min_max(xs);
+            stats[b] = BucketStats { lo, hi };
+            let u = (hi - lo) / levels(4);
+            let ps = &mut packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
+            if u <= 0.0 {
+                ps.fill(0);
+                continue;
+            }
+            for (i, p) in ps.iter_mut().enumerate() {
+                let q0 = code4(xs[2 * i], lo, u, rng.gen_f32());
+                let q1 = code4(xs[2 * i + 1], lo, u, rng.gen_f32());
+                *p = q0 | (q1 << 4);
+            }
+        }
+    }
+
+    /// Dequantize into `out` (`Q^-1`): `x = code * u + delta`.
+    pub fn dequantize(&self, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
+        assert_eq!(out.len(), packed.len() * 2);
+        assert_eq!(stats.len(), self.n_buckets(out.len()));
+        for (b, st) in stats.iter().enumerate() {
+            let u = st.step(4);
+            let ps = &packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
+            let os = &mut out[b * self.bucket..(b + 1) * self.bucket];
+            for (i, &p) in ps.iter().enumerate() {
+                os[2 * i] = (p & 0xF) as f32 * u + st.lo;
+                os[2 * i + 1] = (p >> 4) as f32 * u + st.lo;
+            }
+        }
+    }
+
+    /// Dequantize-and-add: `out[i] += Q^-1(packed)[i]`. This is the
+    /// paper's "accumulate EF straight into the grad buffer" trick (§3.1),
+    /// avoiding a dense scratch vector.
+    pub fn dequantize_add(&self, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
+        assert_eq!(out.len(), packed.len() * 2);
+        for (b, st) in stats.iter().enumerate() {
+            let u = st.step(4);
+            let ps = &packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
+            let os = &mut out[b * self.bucket..(b + 1) * self.bucket];
+            for (i, &p) in ps.iter().enumerate() {
+                os[2 * i] += (p & 0xF) as f32 * u + st.lo;
+                os[2 * i + 1] += (p >> 4) as f32 * u + st.lo;
+            }
+        }
+    }
+}
+
+#[inline]
+fn code4(x: f32, lo: f32, u: f32, xi: f32) -> u8 {
+    let q = ((x - lo) / u + xi).floor();
+    q.clamp(0.0, levels(4)) as u8
+}
+
+#[inline]
+pub(crate) fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xs {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+/// Signed 8-bit block quantization (for Adam first moments): symmetric
+/// absmax scaling, codes biased by 128 into u8.
+pub fn quant8_signed(x: &[f32], bucket: usize, codes: &mut [u8], scales: &mut [f32]) {
+    let nb = x.len() / bucket;
+    for b in 0..nb {
+        let xs = &x[b * bucket..(b + 1) * bucket];
+        let absmax = xs.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let scale = absmax / 127.0;
+        scales[b] = scale;
+        let s = if scale > 0.0 { scale } else { 1.0 };
+        for (i, &v) in xs.iter().enumerate() {
+            let q = (v / s).round().clamp(-127.0, 127.0);
+            codes[b * bucket + i] = (q + 128.0) as u8;
+        }
+    }
+}
+
+/// Inverse of [`quant8_signed`].
+pub fn dequant8_signed(codes: &[u8], bucket: usize, scales: &[f32], out: &mut [f32]) {
+    for (b, &scale) in scales.iter().enumerate() {
+        for i in 0..bucket {
+            out[b * bucket + i] = (codes[b * bucket + i] as f32 - 128.0) * scale;
+        }
+    }
+}
+
+/// Unsigned 8-bit block quantization (for Adam second moments, v >= 0).
+pub fn quant8_unsigned(x: &[f32], bucket: usize, codes: &mut [u8], scales: &mut [f32]) {
+    let nb = x.len() / bucket;
+    for b in 0..nb {
+        let xs = &x[b * bucket..(b + 1) * bucket];
+        let max = xs.iter().fold(0f32, |a, &v| a.max(v));
+        let scale = max / 255.0;
+        scales[b] = scale;
+        let s = if scale > 0.0 { scale } else { 1.0 };
+        for (i, &v) in xs.iter().enumerate() {
+            codes[b * bucket + i] = (v / s).round().clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+/// Inverse of [`quant8_unsigned`].
+pub fn dequant8_unsigned(codes: &[u8], bucket: usize, scales: &[f32], out: &mut [f32]) {
+    for (b, &scale) in scales.iter().enumerate() {
+        for i in 0..bucket {
+            out[b * bucket + i] = codes[b * bucket + i] as f32 * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let q = Quant4::new(64);
+        let x = randvec(0, 256, 3.0);
+        let mut packed = vec![0u8; 128];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 4];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut out = vec![0f32; 256];
+        q.dequantize(&packed, &stats, &mut out);
+        for b in 0..4 {
+            let u = stats[b].step(4);
+            for i in 0..64 {
+                let err = (out[b * 64 + i] - x[b * 64 + i]).abs();
+                assert!(err <= u / 2.0 + 1e-6, "err {err} > u/2 {}", u / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn extremes_are_exact() {
+        let q = Quant4::new(64);
+        let x = randvec(1, 64, 1.0);
+        let mut packed = vec![0u8; 32];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 1];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut out = vec![0f32; 64];
+        q.dequantize(&packed, &stats, &mut out);
+        let (lo, hi) = min_max(&x);
+        let imin = x.iter().position(|&v| v == lo).unwrap();
+        let imax = x.iter().position(|&v| v == hi).unwrap();
+        assert!((out[imin] - lo).abs() < 1e-6);
+        assert!((out[imax] - hi).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_bucket_roundtrips_exactly() {
+        let q = Quant4::new(4);
+        let x = vec![2.5f32; 4];
+        let mut packed = vec![0u8; 2];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 1];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut out = vec![0f32; 4];
+        q.dequantize(&packed, &stats, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let q = Quant4::new(32);
+        let x = randvec(2, 32, 1.0);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(7);
+        let mut mean = vec![0f64; 32];
+        let reps = 2000;
+        let mut packed = vec![0u8; 16];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 1];
+        let mut out = vec![0f32; 32];
+        for _ in 0..reps {
+            q.quantize_stochastic(&x, &mut packed, &mut stats, &mut rng);
+            q.dequantize(&packed, &stats, &mut out);
+            for (m, &o) in mean.iter_mut().zip(&out) {
+                *m += o as f64;
+            }
+        }
+        let u = stats[0].step(4) as f64;
+        for (i, m) in mean.iter().enumerate() {
+            let avg = m / reps as f64;
+            assert!(
+                (avg - x[i] as f64).abs() < 5.0 * u / (reps as f64).sqrt(),
+                "coord {i}: mean {avg} vs {}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dequantize_add_accumulates() {
+        let q = Quant4::new(4);
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut packed = vec![0u8; 2];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 1];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut acc = vec![10f32; 4];
+        q.dequantize_add(&packed, &stats, &mut acc);
+        let mut deq = vec![0f32; 4];
+        q.dequantize(&packed, &stats, &mut deq);
+        for i in 0..4 {
+            assert!((acc[i] - 10.0 - deq[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quant8_signed_roundtrip() {
+        let x = randvec(3, 512, 0.1);
+        let mut codes = vec![0u8; 512];
+        let mut scales = vec![0f32; 2];
+        quant8_signed(&x, 256, &mut codes, &mut scales);
+        let mut out = vec![0f32; 512];
+        dequant8_signed(&codes, 256, &scales, &mut out);
+        for i in 0..512 {
+            assert!((out[i] - x[i]).abs() <= scales[i / 256] / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn quant8_unsigned_roundtrip() {
+        let x: Vec<f32> = randvec(4, 512, 0.1).iter().map(|v| v * v).collect();
+        let mut codes = vec![0u8; 512];
+        let mut scales = vec![0f32; 2];
+        quant8_unsigned(&x, 256, &mut codes, &mut scales);
+        let mut out = vec![0f32; 512];
+        dequant8_unsigned(&codes, 256, &scales, &mut out);
+        for i in 0..512 {
+            assert!((out[i] - x[i]).abs() <= scales[i / 256] / 2.0 + 1e-7);
+            assert!(out[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn state_bytes_match_paper_formula() {
+        // 0.5 bytes/param for codes + negligible stats.
+        let q = Quant4::new(64);
+        let d = 1 << 20;
+        let bytes = q.state_bytes(d);
+        assert_eq!(bytes, d / 2 + 2 * 4 * (d / 64));
+    }
+}
+
+/// Dettmers-style *dynamic* 8-bit quantizer: log-spaced code table covering
+/// ~7 orders of magnitude relative to the per-bucket absmax, so small
+/// entries keep relative precision instead of collapsing to zero (the
+/// failure mode of linear scales that destabilizes quantized Adam states).
+#[derive(Debug, Clone)]
+pub struct Dynamic8 {
+    /// Sorted 256-entry code table over [-1, 1] (signed) or [0, 1] (unsigned).
+    table: Vec<f32>,
+}
+
+impl Dynamic8 {
+    /// Signed table: code 128 = 0, codes above/below are +/- log-spaced.
+    pub fn signed() -> Self {
+        let mut table = vec![0f32; 256];
+        for k in 1..=127usize {
+            let mag = 10f32.powf(-7.0 * (127 - k) as f32 / 126.0);
+            table[128 + k] = mag;
+            table[128 - k] = -mag;
+        }
+        table[0] = -1.0;
+        Self { table }
+    }
+
+    /// Unsigned table: code 0 = 0, codes 1..=255 log-spaced in (1e-7, 1].
+    pub fn unsigned() -> Self {
+        let mut table = vec![0f32; 256];
+        for (c, t) in table.iter_mut().enumerate().skip(1) {
+            *t = 10f32.powf(-7.0 * (255 - c) as f32 / 254.0);
+        }
+        Self { table }
+    }
+
+    fn nearest(&self, x: f32) -> u8 {
+        // binary search on the sorted table, then pick the closer neighbour
+        let mut lo = 0usize;
+        let mut hi = self.table.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.table[mid] < x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            return 0;
+        }
+        if lo >= self.table.len() {
+            return 255;
+        }
+        if (x - self.table[lo - 1]).abs() <= (self.table[lo] - x).abs() {
+            (lo - 1) as u8
+        } else {
+            lo as u8
+        }
+    }
+
+    /// Quantize bucket-wise: codes index the table, scale = bucket absmax.
+    pub fn quantize(&self, x: &[f32], bucket: usize, codes: &mut [u8], scales: &mut [f32]) {
+        let nb = x.len() / bucket;
+        let zero = self.nearest(0.0);
+        for b in 0..nb {
+            let xs = &x[b * bucket..(b + 1) * bucket];
+            let absmax = xs.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            scales[b] = absmax;
+            if absmax == 0.0 {
+                codes[b * bucket..(b + 1) * bucket].fill(zero);
+                continue;
+            }
+            for (i, &v) in xs.iter().enumerate() {
+                codes[b * bucket + i] = self.nearest(v / absmax);
+            }
+        }
+    }
+
+    /// Inverse of [`Dynamic8::quantize`].
+    pub fn dequantize(&self, codes: &[u8], bucket: usize, scales: &[f32], out: &mut [f32]) {
+        for (b, &scale) in scales.iter().enumerate() {
+            for i in 0..bucket {
+                out[b * bucket + i] = self.table[codes[b * bucket + i] as usize] * scale;
+            }
+        }
+    }
+
+    /// Max relative error of the nonzero code range (table spacing bound).
+    pub fn max_relative_error(&self) -> f32 {
+        // adjacent magnitudes differ by factor 10^(7/254) => rel err ~3.2%
+        (10f32.powf(7.0 / 254.0) - 1.0) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod dynamic_tests {
+    use super::*;
+
+    #[test]
+    fn tables_are_sorted_and_bounded() {
+        for t in [Dynamic8::signed(), Dynamic8::unsigned()] {
+            for w in t.table.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            assert!(t.table.iter().all(|v| (-1.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn small_values_keep_relative_precision() {
+        let q = Dynamic8::unsigned();
+        // values across 5 orders of magnitude in one bucket
+        let x: Vec<f32> = (0..8).map(|i| 10f32.powi(-(i as i32))).collect();
+        let mut codes = vec![0u8; 8];
+        let mut scales = vec![0f32; 1];
+        q.quantize(&x, 8, &mut codes, &mut scales);
+        let mut out = vec![0f32; 8];
+        q.dequantize(&codes, 8, &scales, &mut out);
+        for i in 0..6 {
+            let rel = (out[i] - x[i]).abs() / x[i];
+            assert!(rel < 0.05, "coord {i}: {} vs {} (rel {rel})", out[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip_preserves_sign_and_zero() {
+        let q = Dynamic8::signed();
+        let x = vec![0.5f32, -0.5, 0.0, 1e-4, -1e-4, 1.0, -1.0, 0.01];
+        let mut codes = vec![0u8; 8];
+        let mut scales = vec![0f32; 1];
+        q.quantize(&x, 8, &mut codes, &mut scales);
+        let mut out = vec![0f32; 8];
+        q.dequantize(&codes, 8, &scales, &mut out);
+        for i in 0..8 {
+            assert_eq!(out[i] == 0.0, x[i] == 0.0, "{i}");
+            assert!(out[i].signum() * x[i].signum() >= 0.0);
+            if x[i] != 0.0 {
+                // signed table: 127 levels over 7 decades -> ~7% max rel err
+                assert!(((out[i] - x[i]) / x[i]).abs() < 0.08, "{}: {} vs {}", i, out[i], x[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_bucket() {
+        let q = Dynamic8::unsigned();
+        let x = vec![0f32; 16];
+        let mut codes = vec![9u8; 16];
+        let mut scales = vec![9f32; 1];
+        q.quantize(&x, 16, &mut codes, &mut scales);
+        let mut out = vec![9f32; 16];
+        q.dequantize(&codes, 16, &scales, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,300 @@
+//! PJRT runtime: load and execute AOT artifacts from the L3 hot path.
+//!
+//! Wraps the `xla` crate per the /opt/xla-example/load_hlo pattern:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`. Artifacts are compiled lazily and cached;
+//! every `execute_named` call validates literal dtypes/shapes against the
+//! manifest signature so a stale artifact directory fails fast with a
+//! readable error instead of mis-executing.
+//!
+//! Python never runs here: the manifest + HLO text produced once by
+//! `make artifacts` fully describe the compute.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::layout::{Init, ParamLayout, TensorSpec};
+use crate::util::json::Json;
+
+/// One artifact's manifest entry (signature + metadata).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<(String, String, Vec<usize>)>, // (name, dtype, shape)
+    pub outputs: Vec<String>,
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let file = j
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+            .to_string();
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let mut inputs = Vec::new();
+        for inp in j.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+            inputs.push((
+                inp.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+                inp.get("dtype").and_then(Json::as_str).unwrap_or("?").to_string(),
+                inp.get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+            ));
+        }
+        let outputs = j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Ok(Self { name: name.to_string(), file, kind, inputs, outputs, raw: j.clone() })
+    }
+
+    /// Parse the `layout` block into a [`ParamLayout`] (model artifacts).
+    pub fn layout(&self) -> Result<ParamLayout> {
+        let l = self.raw.get("layout").ok_or_else(|| anyhow!("{}: no layout", self.name))?;
+        let d_padded = l.get("d_padded").and_then(Json::as_usize).context("d_padded")?;
+        let mut tensors = Vec::new();
+        let mut inits = Vec::new();
+        for p in l.get("params").and_then(Json::as_arr).context("params")? {
+            let name = p.get("name").and_then(Json::as_str).context("name")?;
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = p.get("offset").and_then(Json::as_usize).context("offset")?;
+            let init = match p.get("init").and_then(Json::as_str) {
+                Some("normal") => Init::Normal,
+                Some("ones") => Init::Ones,
+                _ => Init::Zeros,
+            };
+            let std = p.get("init_std").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+            tensors.push(TensorSpec::new(name, &shape, offset));
+            inits.push((init, std));
+        }
+        Ok(ParamLayout::new(tensors, inits, d_padded))
+    }
+
+    /// Optimizer hyper-parameter block value (opt_step artifacts).
+    pub fn hyper(&self, key: &str) -> Option<f64> {
+        self.raw.get("hyper")?.get(key)?.as_f64()
+    }
+
+    /// Model config block value (fwdbwd/infer artifacts).
+    pub fn config(&self, key: &str) -> Option<f64> {
+        self.raw.get("config")?.get(key)?.as_f64()
+    }
+}
+
+/// Lazily-compiled artifact registry over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for (name, entry) in manifest
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.insert(name.clone(), ArtifactMeta::from_json(name, entry)?);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, dir, artifacts, executables: HashMap::new() })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have: {:?}", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        log_compile(name, t0.elapsed());
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; inputs are validated against the manifest and
+    /// the tuple output is decomposed into one literal per manifest output.
+    pub fn execute_named(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.validate_inputs(name, inputs)?;
+        self.compile(name)?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {name}: {e:?}"))?;
+        let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let meta = self.meta(name)?;
+        if outs.len() != meta.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}", outs.len(), meta.outputs.len());
+        }
+        Ok(outs)
+    }
+
+    fn validate_inputs(&self, name: &str, inputs: &[xla::Literal]) -> Result<()> {
+        let meta = self.meta(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!("{name}: {} inputs, manifest wants {}", inputs.len(), meta.inputs.len());
+        }
+        for (lit, (iname, dtype, shape)) in inputs.iter().zip(&meta.inputs) {
+            let count = lit.element_count();
+            let want: usize = shape.iter().product();
+            if count != want {
+                bail!("{name}.{iname}: literal has {count} elements, manifest wants {want} {shape:?}");
+            }
+            let ty = lit.ty().map_err(|e| anyhow!("{e:?}"))?;
+            let want_ty = match dtype.as_str() {
+                "float32" => xla::ElementType::F32,
+                "int32" => xla::ElementType::S32,
+                "uint8" => xla::ElementType::U8,
+                other => bail!("{name}.{iname}: unsupported manifest dtype {other}"),
+            };
+            if ty != want_ty {
+                bail!("{name}.{iname}: literal type {ty:?}, manifest wants {want_ty:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn log_compile(name: &str, dt: std::time::Duration) {
+    if std::env::var_os("MICROADAM_QUIET").is_none() {
+        eprintln!("[runtime] compiled {name} in {:.2}s", dt.as_secs_f32());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / readback helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes = as_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("lit_f32: {e:?}"))
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes = as_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("lit_i32: {e:?}"))
+}
+
+/// u8 literal of the given shape.
+pub fn lit_u8(data: &[u8], shape: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, shape, data)
+        .map_err(|e| anyhow!("lit_u8: {e:?}"))
+}
+
+/// f32 scalar literal (shape []).
+pub fn lit_scalar_f32(v: f32) -> Result<xla::Literal> {
+    lit_f32(&[v], &[])
+}
+
+/// i32 scalar literal (shape []).
+pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+    lit_i32(&[v], &[])
+}
+
+fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    // Safety: plain-old-data reinterpretation for literal upload only.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Read a literal back as `Vec<f32>`.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_f32: {e:?}"))
+}
+
+/// Read a literal back as `Vec<i32>`.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_i32: {e:?}"))
+}
+
+/// Read a literal back as `Vec<u8>`.
+pub fn to_u8(lit: &xla::Literal) -> Result<Vec<u8>> {
+    lit.to_vec::<u8>().map_err(|e| anyhow!("to_u8: {e:?}"))
+}
+
+/// Read a scalar f32 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(to_f32(lit)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let l = lit_i32(&[5, -6], &[2]).unwrap();
+        assert_eq!(to_i32(&l).unwrap(), vec![5, -6]);
+        let l = lit_u8(&[7, 255], &[2]).unwrap();
+        assert_eq!(to_u8(&l).unwrap(), vec![7, 255]);
+        let l = lit_scalar_f32(2.5).unwrap();
+        assert_eq!(scalar_f32(&l).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_readable_error() {
+        let err = match Runtime::load("/nonexistent-dir") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Block-wise Top-K selection and the sliding gradient window `G = (I, V)`.
+//!
+//! The paper applies Top-K in blocks of `B_d < 2^15` so indices are
+//! block-relative and fit `u16` (§3.1 "Top-K"). [`SlidingWindow`] is the
+//! ring buffer of the last `m` sparse gradients, the only optimizer state
+//! MicroAdam keeps besides the quantized EF: `m * k` `u16` indices plus
+//! `m * k` values.
+
+/// Select the `k` largest-|x| entries of `block` (len <= 2^15).
+///
+/// Writes block-relative indices into `idx` and the *signed* values into
+/// `vals`. Uses an O(n) quickselect partition over a scratch index array,
+/// then sorts the selected prefix by index for reproducible layouts.
+pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32], scratch: &mut Vec<u16>) {
+    let n = block.len();
+    debug_assert!(n <= u16::MAX as usize + 1);
+    let k = k.min(n);
+    scratch.clear();
+    scratch.extend(0..n as u16);
+    if k < n {
+        scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+            let fa = block[a as usize].abs();
+            let fb = block[b as usize].abs();
+            fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+    let sel = &mut scratch[..k];
+    sel.sort_unstable();
+    for (o, &s) in sel.iter().enumerate() {
+        idx[o] = s;
+        vals[o] = block[s as usize];
+    }
+}
+
+/// The sliding window `G = (I, V)` over all `NB` blocks: a ring buffer of
+/// `m` rows, each holding `NB * k_b` (index, value) pairs.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    /// Window length `m`.
+    pub m: usize,
+    /// Number of parameter blocks `NB`.
+    pub nb: usize,
+    /// Entries kept per block `k_b`.
+    pub kb: usize,
+    /// Block-relative indices, `m * nb * kb`, row-major `[row][block][k]`.
+    pub idx: Vec<u16>,
+    /// Top-K values (signed), same layout.
+    pub val: Vec<f32>,
+    /// Number of rows ever written (`min(t, m)` valid rows).
+    pub written: u64,
+}
+
+impl SlidingWindow {
+    pub fn new(m: usize, nb: usize, kb: usize) -> Self {
+        Self { m, nb, kb, idx: vec![0; m * nb * kb], val: vec![0.0; m * nb * kb], written: 0 }
+    }
+
+    /// Row that step `t` (1-based) writes: `(t-1) % m` (Algorithm 1 line 14).
+    pub fn row_for_step(&self, t: u64) -> usize {
+        ((t - 1) % self.m as u64) as usize
+    }
+
+    /// Mutable (idx, val) slices for `block` within `row`.
+    pub fn entry_mut(&mut self, row: usize, block: usize) -> (&mut [u16], &mut [f32]) {
+        let o = (row * self.nb + block) * self.kb;
+        (&mut self.idx[o..o + self.kb], &mut self.val[o..o + self.kb])
+    }
+
+    /// (idx, val) slices for `block` within `row`.
+    pub fn entry(&self, row: usize, block: usize) -> (&[u16], &[f32]) {
+        let o = (row * self.nb + block) * self.kb;
+        (&self.idx[o..o + self.kb], &self.val[o..o + self.kb])
+    }
+
+    /// Record a full step's Top-K results by marking one more row written.
+    pub fn commit_row(&mut self) {
+        self.written += 1;
+    }
+
+    /// Valid row count `min(t, m)`.
+    pub fn valid_rows(&self) -> usize {
+        (self.written as usize).min(self.m)
+    }
+
+    /// Decay exponent ("age") of `row` at step `t`: the newest row has age
+    /// 0, the oldest `m - 1` (ADAMSTATS line 4).
+    pub fn age(&self, row: usize, t: u64) -> usize {
+        let w = self.row_for_step(t);
+        (w + self.m - row) % self.m
+    }
+
+    /// Whether `row` holds data at step `t` (warm-up masking).
+    pub fn is_valid(&self, row: usize, t: u64) -> bool {
+        (row as u64) < t
+    }
+
+    /// State bytes: `m*k` u16 indices + `m*k` f32 values. The paper stores
+    /// V in bf16 (2 B); we keep f32 in RAM but report the paper's 2 B cost
+    /// separately in [`crate::memory`].
+    pub fn state_bytes(&self) -> usize {
+        self.idx.len() * 2 + self.val.len() * 4
+    }
+
+    /// Per-row folded weights for AdamStats: `valid * (1-beta) * beta^age /
+    /// (1 - beta^min(t,m))` — matches `model.window_weights` on the L2 side.
+    pub fn folded_weights(&self, t: u64, beta: f64) -> Vec<f32> {
+        let eff = (t.min(self.m as u64)) as i32;
+        let bc = 1.0 - beta.powi(eff);
+        (0..self.m)
+            .map(|row| {
+                if !self.is_valid(row, t) {
+                    return 0.0;
+                }
+                let age = self.age(row, t) as i32;
+                ((1.0 - beta) * beta.powi(age) / bc) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_selects_largest_abs() {
+        let block = vec![0.1, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let mut idx = vec![0u16; 3];
+        let mut vals = vec![0f32; 3];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, 3, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(idx, vec![1, 3, 5]); // sorted by index
+        assert_eq!(vals, vec![-5.0, 3.0, 4.0]); // signed values
+    }
+
+    #[test]
+    fn topk_k_equals_n() {
+        let block = vec![1.0, -2.0];
+        let mut idx = vec![0u16; 2];
+        let mut vals = vec![0f32; 2];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, 2, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(vals, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn topk_handles_all_zero_block() {
+        let block = vec![0.0; 8];
+        let mut idx = vec![9u16; 2];
+        let mut vals = vec![9f32; 2];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, 2, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(vals, vec![0.0, 0.0]);
+        assert!(idx.iter().all(|&i| (i as usize) < 8));
+    }
+
+    #[test]
+    fn ring_rows_and_ages() {
+        let mut w = SlidingWindow::new(4, 1, 2);
+        assert_eq!(w.row_for_step(1), 0);
+        assert_eq!(w.row_for_step(4), 3);
+        assert_eq!(w.row_for_step(5), 0);
+        for _ in 0..6 {
+            w.commit_row();
+        }
+        let t = 6; // w = row 1
+        assert_eq!(w.age(1, t), 0);
+        assert_eq!(w.age(0, t), 1);
+        assert_eq!(w.age(3, t), 2);
+        assert_eq!(w.age(2, t), 3);
+        assert_eq!(w.valid_rows(), 4);
+    }
+
+    #[test]
+    fn warmup_validity() {
+        let w = SlidingWindow::new(4, 1, 2);
+        assert!(w.is_valid(0, 1));
+        assert!(!w.is_valid(1, 1));
+        assert!(w.is_valid(3, 4));
+        assert!(w.is_valid(3, 100));
+    }
+
+    #[test]
+    fn folded_weights_sum_to_one_after_warmup() {
+        let mut w = SlidingWindow::new(10, 1, 1);
+        for _ in 0..15 {
+            w.commit_row();
+        }
+        let ws = w.folded_weights(15, 0.9);
+        let sum: f32 = ws.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+    }
+
+    #[test]
+    fn folded_weights_first_step_is_delta() {
+        let w = SlidingWindow::new(10, 1, 1);
+        let ws = w.folded_weights(1, 0.9);
+        assert!((ws[0] - 1.0).abs() < 1e-6);
+        assert!(ws[1..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,50 @@
+//! bf16 <-> f32 conversion (paper-dtype storage for checkpoints and the
+//! window value buffer accounting).
+
+/// Round-to-nearest-even f32 -> bf16 bits.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    // round to nearest even on the truncated 16 bits
+    let round_bit = (bits >> 15) & 1;
+    let sticky = bits & 0x7FFF;
+    let mut hi = (bits >> 16) as u16;
+    if round_bit == 1 && (sticky != 0x0000 || (hi & 1) == 1) {
+        // note: sticky includes the round bit position? standard approach:
+        hi = hi.wrapping_add(((bits & 0xFFFF) > 0x8000 || ((bits & 0xFFFF) == 0x8000 && (hi & 1) == 1)) as u16);
+        return hi;
+    }
+    hi
+}
+
+/// bf16 bits -> f32.
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 65280.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_bf16_ulp() {
+        let mut x = 0.917f32;
+        for _ in 0..100 {
+            let r = bf16_to_f32(f32_to_bf16(x));
+            assert!(((r - x) / x).abs() < 1.0 / 128.0, "{x} -> {r}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::INFINITY)).is_infinite());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+}

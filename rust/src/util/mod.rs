@@ -1,0 +1,11 @@
+//! Self-contained utility substrates.
+//!
+//! The build is fully offline (only the `xla` crate closure is vendored in
+//! this image), so the usual ecosystem crates are implemented here from
+//! scratch: a seeded PRNG ([`rng`]), a minimal JSON parser/writer ([`json`])
+//! for the artifact manifest / configs / metrics, and bf16 conversion
+//! helpers ([`bf16`]) for paper-dtype storage.
+
+pub mod bf16;
+pub mod json;
+pub mod rng;

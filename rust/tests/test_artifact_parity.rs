@@ -1,0 +1,157 @@
+//! Cross-validation: AOT optimizer artifacts (L2 graph + L1 Pallas kernels,
+//! executed via PJRT) vs the native rust implementations of the same math.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they are skipped
+//! with a notice when the directory is absent so `cargo test` works on a
+//! fresh checkout.
+
+use microadam::coordinator::state::{AotAdamWState, AotMicroAdamState};
+use microadam::optim::adamw::{AdamW, AdamWConfig};
+use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
+use microadam::optim::Optimizer;
+use microadam::runtime::{self, lit_f32, Runtime};
+use microadam::util::rng::Rng;
+
+const D: usize = 131072; // lm_tiny padded dimension
+
+fn runtime() -> Option<Runtime> {
+    std::env::set_var("MICROADAM_QUIET", "1");
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping artifact parity test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn randvec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * s).collect()
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt();
+    let den: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+    num / den.max(1e-12)
+}
+
+#[test]
+fn adamw_artifact_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let name = format!("adamw_step_d{D}");
+    if !rt.has(&name) {
+        eprintln!("skipping: {name} missing");
+        return;
+    }
+    let meta = rt.meta(&name).unwrap().clone();
+    let mut state = AotAdamWState::new(&meta).unwrap();
+    let mut native = AdamW::new(D, AdamWConfig::default());
+
+    let mut rng = Rng::seed_from_u64(0);
+    let init = randvec(&mut rng, D, 0.5);
+    let mut p_aot = lit_f32(&init, &[D]).unwrap();
+    let mut p_nat = init;
+    for _ in 0..5 {
+        let g = randvec(&mut rng, D, 1.0);
+        let g_lit = lit_f32(&g, &[D]).unwrap();
+        p_aot = state.step(&mut rt, p_aot, g_lit, 1e-3, 0.0).unwrap();
+        native.step(&mut p_nat, &g, 1e-3);
+    }
+    let aot = runtime::to_f32(&p_aot).unwrap();
+    let err = rel_err(&aot, &p_nat);
+    assert!(err < 1e-5, "adamw parity rel err {err}");
+}
+
+#[test]
+fn microadam_artifact_matches_native() {
+    // The native Algorithm-1 implementation and the AOT graph (Pallas
+    // kernels, sort-based Top-K) must produce near-identical trajectories:
+    // same block structure, same 4-bit EF, same window semantics. Small
+    // drift is allowed for Top-K ties and fp ordering.
+    let Some(mut rt) = runtime() else { return };
+    let name = format!("microadam_step_d{D}");
+    if !rt.has(&name) {
+        eprintln!("skipping: {name} missing");
+        return;
+    }
+    let meta = rt.meta(&name).unwrap().clone();
+    let mut state = AotMicroAdamState::new(&meta).unwrap();
+    let mut native = MicroAdam::new(D, MicroAdamConfig::default());
+    assert_eq!(state.kb, native.kb(), "artifact and native k_b must agree");
+
+    let mut rng = Rng::seed_from_u64(1);
+    let init = randvec(&mut rng, D, 0.5);
+    let mut p_aot = lit_f32(&init, &[D]).unwrap();
+    let mut p_nat = init;
+    for step in 0..8 {
+        let g = randvec(&mut rng, D, 1.0);
+        let g_lit = lit_f32(&g, &[D]).unwrap();
+        p_aot = state.step(&mut rt, p_aot, g_lit, 1e-2, 0.0).unwrap();
+        native.step(&mut p_nat, &g, 1e-2);
+        let aot = runtime::to_f32(&p_aot).unwrap();
+        let err = rel_err(&aot, &p_nat);
+        assert!(err < 1e-4, "microadam parity rel err {err} at step {step}");
+    }
+}
+
+#[test]
+fn microadam_artifact_state_snapshot_roundtrip() {
+    let Some(mut rt) = runtime() else { return };
+    let name = format!("microadam_step_d{D}");
+    if !rt.has(&name) {
+        return;
+    }
+    let meta = rt.meta(&name).unwrap().clone();
+    let mut state = AotMicroAdamState::new(&meta).unwrap();
+    let mut rng = Rng::seed_from_u64(2);
+    let mut p = lit_f32(&randvec(&mut rng, D, 0.5), &[D]).unwrap();
+    for _ in 0..3 {
+        let g = lit_f32(&randvec(&mut rng, D, 1.0), &[D]).unwrap();
+        p = state.step(&mut rt, p, g, 1e-2, 0.0).unwrap();
+    }
+    let snap = state.snapshot().unwrap();
+    assert_eq!(snap.t, 3);
+    assert_eq!(snap.ef.len(), D / 2);
+    // EF is non-trivial after steps
+    assert!(snap.ef.iter().any(|&b| b != 0));
+    // restore into a fresh state: next step must match byte-for-byte
+    let mut state2 = AotMicroAdamState::new(&meta).unwrap();
+    state2.restore(&snap).unwrap();
+    let g = randvec(&mut rng, D, 1.0);
+    let p_after_1 = state
+        .step(&mut rt, p.clone(), lit_f32(&g, &[D]).unwrap(), 1e-2, 0.0)
+        .unwrap();
+    let p_after_2 = state2
+        .step(&mut rt, p, lit_f32(&g, &[D]).unwrap(), 1e-2, 0.0)
+        .unwrap();
+    assert_eq!(
+        runtime::to_f32(&p_after_1).unwrap(),
+        runtime::to_f32(&p_after_2).unwrap()
+    );
+}
+
+#[test]
+fn microadam_artifact_update_is_sparse() {
+    // Paper §3 "Properties": coordinates outside the window union must not
+    // move (wd = 0) — verified on the real AOT path.
+    let Some(mut rt) = runtime() else { return };
+    let name = format!("microadam_step_d{D}");
+    if !rt.has(&name) {
+        return;
+    }
+    let meta = rt.meta(&name).unwrap().clone();
+    let mut state = AotMicroAdamState::new(&meta).unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+    let init = randvec(&mut rng, D, 0.5);
+    let g = randvec(&mut rng, D, 1.0);
+    let p1 = state
+        .step(&mut rt, lit_f32(&init, &[D]).unwrap(), lit_f32(&g, &[D]).unwrap(), 1e-2, 0.0)
+        .unwrap();
+    let p1 = runtime::to_f32(&p1).unwrap();
+    let moved = init.iter().zip(&p1).filter(|(a, b)| a != b).count();
+    let max_moved = state.m * state.nb * state.kb; // m rows could overlap
+    assert!(moved <= max_moved, "moved {moved} > m*nb*kb {max_moved}");
+    assert!(moved > 0, "update must move something");
+    // at t=1 only one window row is filled: exactly <= nb*kb coords move
+    assert!(moved <= state.nb * state.kb, "t=1 moved {moved} > nb*kb");
+}

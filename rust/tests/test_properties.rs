@@ -1,0 +1,255 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! proptest is not in the offline vendored crate set, so these are
+//! hand-rolled property sweeps: seeded random case generators + shrink-free
+//! assertion loops (100+ cases per property). Failures print the seed so a
+//! case can be replayed exactly.
+
+use microadam::coordinator::layout::{Init, ParamLayout, TensorSpec};
+use microadam::optim::microadam::{EfMode, MicroAdam, MicroAdamConfig};
+use microadam::optim::Optimizer;
+use microadam::quant::{BucketStats, Dynamic8, Quant4};
+use microadam::topk::{topk_abs_block, SlidingWindow};
+use microadam::util::json::Json;
+use microadam::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * s).collect()
+}
+
+#[test]
+fn prop_topk_matches_full_sort() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = 2 + rng.gen_range(200);
+        let k = 1 + rng.gen_range(n);
+        let block = randvec(&mut rng, n, 10.0);
+        let mut idx = vec![0u16; k];
+        let mut vals = vec![0f32; k];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, k, &mut idx, &mut vals, &mut scratch);
+        // reference: full sort by |.| descending
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| block[b].abs().partial_cmp(&block[a].abs()).unwrap());
+        let min_selected = idx.iter().map(|&i| block[i as usize].abs()).fold(f32::INFINITY, f32::min);
+        let kth = block[order[k - 1]].abs();
+        // the k selected values must all be >= the true k-th largest
+        assert!(min_selected >= kth - 1e-6, "seed {seed}: {min_selected} < {kth}");
+        // indices unique and sorted
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: unsorted/dup indices");
+        }
+        // values are the true block values at those indices
+        for (&i, &v) in idx.iter().zip(&vals) {
+            assert_eq!(v, block[i as usize], "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_quant4_roundtrip_bound_and_determinism() {
+    for seed in 0..120u64 {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let buckets = 1 + rng.gen_range(8);
+        let bucket = [4usize, 8, 16, 64][rng.gen_range(4)];
+        let n = buckets * bucket;
+        let scale = 10f32.powf(rng.gen_f32() * 6.0 - 3.0);
+        let x = randvec(&mut rng, n, scale);
+        let q = Quant4::new(bucket);
+        let mut packed = vec![0u8; n / 2];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; buckets];
+        q.quantize(&x, &mut packed, &mut stats);
+        let packed2 = {
+            let mut p = vec![0u8; n / 2];
+            let mut s = stats.clone();
+            q.quantize(&x, &mut p, &mut s);
+            p
+        };
+        assert_eq!(packed, packed2, "seed {seed}: quantize not deterministic");
+        let mut out = vec![0f32; n];
+        q.dequantize(&packed, &stats, &mut out);
+        for b in 0..buckets {
+            let u = stats[b].step(4);
+            for i in 0..bucket {
+                let err = (out[b * bucket + i] - x[b * bucket + i]).abs();
+                assert!(err <= u / 2.0 + u.abs() * 1e-4 + 1e-7, "seed {seed}: err {err} u {u}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dynamic8_closer_than_codebook_spacing() {
+    let q = Dynamic8::unsigned();
+    for seed in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let n = 32;
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_f32() * rng.gen_f32()).collect();
+        let mut codes = vec![0u8; n];
+        let mut scales = vec![0f32; 1];
+        q.quantize(&x, n, &mut codes, &mut scales);
+        let mut out = vec![0f32; n];
+        q.dequantize(&codes, n, &scales, &mut out);
+        for i in 0..n {
+            if x[i] > scales[0] * 1e-6 {
+                let rel = (out[i] - x[i]).abs() / x[i];
+                assert!(rel < 0.035 + 1e-3, "seed {seed} coord {i}: rel {rel}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_window_weights_sum_to_one_and_order_by_age() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let m = 1 + rng.gen_range(16);
+        let t = 1 + rng.gen_range(60) as u64;
+        let mut w = SlidingWindow::new(m, 1, 1);
+        for _ in 0..t {
+            w.commit_row();
+        }
+        let ws = w.folded_weights(t, 0.9);
+        let sum: f32 = ws.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "seed {seed}: m={m} t={t} sum={sum}");
+        // weights strictly decrease with age among valid rows
+        let mut by_age: Vec<(usize, f32)> = (0..m)
+            .filter(|&r| w.is_valid(r, t))
+            .map(|r| (w.age(r, t), ws[r]))
+            .collect();
+        by_age.sort_by_key(|&(a, _)| a);
+        for pair in by_age.windows(2) {
+            assert!(pair[0].1 > pair[1].1, "seed {seed}: not decaying {by_age:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_microadam_never_touches_more_than_mk_coords() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let d = 64 * (1 + rng.gen_range(4));
+        let m = 1 + rng.gen_range(6);
+        let cfg = MicroAdamConfig {
+            m,
+            block: 64,
+            density: 0.02 + rng.gen_f32() as f64 * 0.1,
+            qbucket: 16,
+            ..Default::default()
+        };
+        let mut opt = MicroAdam::new(d, cfg);
+        let mut x = vec![0f32; d];
+        let mut moved = vec![false; d];
+        // The m*k bound is on the coordinates the *window* can touch; the
+        // union over the first t <= m steps stays within it (after that,
+        // overwritten rows legitimately contribute fresh index sets).
+        for _ in 0..m {
+            let g = randvec(&mut rng, d, 1.0);
+            let before = x.clone();
+            opt.step(&mut x, &g, 0.01);
+            for i in 0..d {
+                moved[i] |= x[i] != before[i];
+            }
+        }
+        let density = moved.iter().filter(|&&b| b).count() as f64 / d as f64;
+        assert!(
+            density <= opt.max_update_density() + 1e-12,
+            "seed {seed}: density {density} > bound {}",
+            opt.max_update_density()
+        );
+    }
+}
+
+#[test]
+fn prop_microadam_ef_modes_converge_on_quadratic() {
+    // Every EF mode must drive a quadratic toward zero; EF modes must not
+    // be wildly worse than dense EF (the paper's compressed-EF claim).
+    for seed in 0..10u64 {
+        let mut finals = Vec::new();
+        for ef in [EfMode::Dense, EfMode::Quant4] {
+            let d = 256;
+            let mut opt = MicroAdam::new(d, MicroAdamConfig {
+                m: 5,
+                block: 64,
+                density: 0.05,
+                qbucket: 16,
+                ef,
+                ..Default::default()
+            });
+            let mut rng = Rng::seed_from_u64(5000 + seed);
+            let mut x = randvec(&mut rng, d, 1.0);
+            for _ in 0..250 {
+                let g = x.clone();
+                opt.step(&mut x, &g, 0.05);
+            }
+            finals.push(x.iter().map(|v| v * v).sum::<f32>().sqrt());
+        }
+        assert!(finals[1] < 4.0 * finals[0] + 0.5, "seed {seed}: q4 {} vs dense {}", finals[1], finals[0]);
+    }
+}
+
+#[test]
+fn prop_layout_init_padding_invariant() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let nt = 1 + rng.gen_range(6);
+        let mut tensors = Vec::new();
+        let mut inits = Vec::new();
+        let mut off = 0;
+        for i in 0..nt {
+            let rows = 1 + rng.gen_range(8);
+            let cols = 1 + rng.gen_range(8);
+            tensors.push(TensorSpec::new(&format!("t{i}"), &[rows, cols], off));
+            off += rows * cols;
+            inits.push((
+                [Init::Normal, Init::Zeros, Init::Ones][rng.gen_range(3)],
+                0.02,
+            ));
+        }
+        let d_pad = off + rng.gen_range(32);
+        let layout = ParamLayout::new(tensors, inits, d_pad);
+        layout.validate().unwrap();
+        let flat = layout.init_flat(seed);
+        assert_eq!(flat.len(), d_pad);
+        assert!(flat[off..].iter().all(|&v| v == 0.0), "seed {seed}: padding not zero");
+        assert!(flat.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    // random JSON trees: parse(to_string(v)) == v
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_f32() < 0.5),
+            2 => Json::Num((rng.gen_f32() * 2000.0 - 1000.0).round() as f64 / 8.0),
+            3 => Json::Str(format!("s{}-\"x\"\n{}", rng.next_u64() % 1000, rng.gen_range(10))),
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..200u64 {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_ring_row_for_step_cycles() {
+    for m in 1..20usize {
+        let w = SlidingWindow::new(m, 1, 1);
+        for t in 1..100u64 {
+            let r = w.row_for_step(t);
+            assert!(r < m);
+            assert_eq!(w.row_for_step(t + m as u64), r, "period m");
+        }
+    }
+}
