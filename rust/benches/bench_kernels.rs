@@ -5,6 +5,9 @@
 //! Run: `cargo bench --bench bench_kernels`
 
 use microadam::bench::time_it;
+use microadam::exec::ExecPool;
+use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
+use microadam::optim::Optimizer;
 use microadam::quant::{BucketStats, Dynamic8, Quant4};
 use microadam::topk::{topk_abs_block, SlidingWindow};
 use microadam::util::rng::Rng;
@@ -93,4 +96,37 @@ fn main() {
     });
     std::hint::black_box(&params);
     std::hint::black_box(&out);
+
+    // the whole step: 4-pass reference sweep vs the fused single pass per
+    // block, sequential and sharded (the sum of the kernel rows above is
+    // roughly what the reference pays; the fused pass overlaps them in
+    // cache)
+    println!("\n== fused step engine vs 4-pass reference, d = {d} ==");
+    let grads = randvec(&mut rng, d);
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut p = randvec(&mut rng, d);
+    let warm = microadam::WINDOW + 1;
+    let t_ref = time_it("microadam step_reference (4 sweeps)", warm, 5, || {
+        opt.step_reference(&mut p, &grads, 1e-3)
+    });
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut p = randvec(&mut rng, d);
+    let t_fused = time_it("microadam fused step (1 worker)", warm, 5, || {
+        opt.step(&mut p, &grads, 1e-3)
+    });
+    let pool = ExecPool::auto();
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut p = randvec(&mut rng, d);
+    let t_par = time_it(
+        &format!("microadam fused step ({} workers)", pool.workers()),
+        warm,
+        5,
+        || opt.step_sharded(&mut p, &grads, 1e-3, &pool),
+    );
+    println!(
+        "fusion gain {:.2}x, parallel gain {:.2}x (total {:.2}x)",
+        t_ref / t_fused,
+        t_fused / t_par,
+        t_ref / t_par
+    );
 }

@@ -1,7 +1,8 @@
 //! Per-optimizer step-time benchmark (paper Tables 1/2 runtime column
 //! analogue at the micro level): every native optimizer at two problem
-//! sizes. criterion is not in the offline crate set; uses the in-repo
-//! median-of-runs harness.
+//! sizes, then the sequential-vs-parallel scaling of the block-sharded
+//! fused step engine at d = 1M. criterion is not in the offline crate set;
+//! uses the in-repo median-of-runs harness.
 //!
 //! Run: `cargo bench --bench bench_optimizer_step`
 
@@ -11,6 +12,11 @@ fn main() {
     println!("== optimizer step micro-benchmark (native backends) ==");
     bench::bench_optimizer_steps(4096, 21);
     bench::bench_optimizer_steps(262144, 11);
-    println!("\nexpectation (paper §3.1): MicroAdam's step stays within a small factor of");
-    println!("dense AdamW despite recomputing statistics from the window (Table 2 runtime).");
+
+    println!("\n== sequential vs parallel (fused block-sharded engine) ==");
+    bench::bench_parallel_scaling(1 << 20, 7);
+
+    println!("\nexpectation (paper §3.1-3.2): MicroAdam's step stays within a small factor of");
+    println!("dense AdamW despite recomputing statistics from the window (Table 2 runtime),");
+    println!("and the fused engine scales near-linearly across blocks until memory-bound.");
 }

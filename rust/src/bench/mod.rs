@@ -552,6 +552,73 @@ pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
     med
 }
 
+/// Sequential-vs-parallel step throughput for the block-sharded fused
+/// engine (MicroAdam + the dense baselines routed through the same pool).
+///
+/// Prints the 4-pass reference, the fused single-pass at 1 worker, and the
+/// fused engine at 2/4/8 workers, with speedups against the sequential
+/// reference. Paper context: §3.2 claims "similar running time to Adam";
+/// the fused+sharded path is what closes that gap on CPU.
+pub fn bench_parallel_scaling(d: usize, iters: usize) {
+    use crate::exec::ExecPool;
+    use crate::optim::adamw::{AdamW, AdamWConfig};
+    use crate::optim::adamw8bit::{AdamW8bit, AdamW8bitConfig};
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let grads: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+    // warm every variant past the m-step window fill so steady-state
+    // AdamStats cost is what gets timed
+    let warmup = crate::WINDOW + 2;
+    println!("\nblock-sharded fused step engine, d = {d} ({cores} cores):");
+
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut params = vec![0.1f32; d];
+    let t_ref = time_it("microadam step_reference (4-pass sweep)", warmup, iters, || {
+        opt.step_reference(&mut params, &grads, 1e-3)
+    });
+    let mut speedup4 = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ExecPool::new(workers);
+        let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+        let mut params = vec![0.1f32; d];
+        let t = time_it(&format!("microadam fused ({workers} workers)"), warmup, iters, || {
+            opt.step_sharded(&mut params, &grads, 1e-3, &pool)
+        });
+        if workers == 4 {
+            speedup4 = t_ref / t;
+        }
+        println!("    -> {:.2}x vs sequential reference", t_ref / t);
+    }
+
+    let mut adamw = AdamW::new(d, AdamWConfig::default());
+    let mut params = vec![0.1f32; d];
+    let t_seq = time_it("adamw sequential", 2, iters, || adamw.step(&mut params, &grads, 1e-3));
+    let pool = ExecPool::auto();
+    let t_par = time_it(
+        &format!("adamw sharded ({} workers)", pool.workers()),
+        2,
+        iters,
+        || adamw.step_sharded(&mut params, &grads, 1e-3, &pool),
+    );
+    println!("    -> {:.2}x", t_seq / t_par);
+
+    let mut adam8 = AdamW8bit::new(d, AdamW8bitConfig::default());
+    let mut params = vec![0.1f32; d];
+    let t_seq = time_it("adamw8bit sequential", 2, iters, || adam8.step(&mut params, &grads, 1e-3));
+    let t_par = time_it(
+        &format!("adamw8bit sharded ({} workers)", pool.workers()),
+        2,
+        iters,
+        || adam8.step_sharded(&mut params, &grads, 1e-3, &pool),
+    );
+    println!("    -> {:.2}x", t_seq / t_par);
+
+    println!(
+        "\nmicroadam fused 4-worker speedup vs sequential reference: {speedup4:.2}x \
+         (acceptance: >= 2x for d >= 1M on >= 4 cores; this machine has {cores})"
+    );
+}
+
 /// Native optimizer step micro-benchmark (one row per optimizer at dim `d`).
 pub fn bench_optimizer_steps(d: usize, iters: usize) {
     use crate::coordinator::layout::TensorSpec;

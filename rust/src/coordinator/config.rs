@@ -37,6 +37,9 @@ pub struct TrainConfig {
     /// Log every n steps.
     pub log_every: u64,
     pub artifacts_dir: String,
+    /// Worker count for the native block-sharded optimizer step
+    /// (0 = auto-detect from the machine / `MICROADAM_WORKERS`).
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -53,6 +56,7 @@ impl Default for TrainConfig {
             out: String::new(),
             log_every: 10,
             artifacts_dir: "artifacts".into(),
+            workers: 0,
         }
     }
 }
@@ -95,6 +99,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("workers").and_then(Json::as_f64) {
+            cfg.workers = v as usize;
         }
         let lr = j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3) as f32;
         cfg.schedule = match j.get("schedule").and_then(Json::as_str).unwrap_or("const") {
@@ -147,6 +154,7 @@ impl TrainConfig {
             ("out", json::s(&self.out)),
             ("log_every", json::num(self.log_every as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("workers", json::num(self.workers as f64)),
         ])
     }
 }
@@ -200,10 +208,12 @@ mod tests {
             out: "runs/x.jsonl".into(),
             log_every: 5,
             artifacts_dir: "artifacts".into(),
+            workers: 3,
         };
         let j = cfg.to_json().to_string();
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.model, cfg.model);
+        assert_eq!(back.workers, 3);
         assert_eq!(back.optimizer, cfg.optimizer);
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.schedule, cfg.schedule);

@@ -1,7 +1,7 @@
 //! AOT optimizer-state managers: the rust-owned buffers behind the
 //! `*_step_d*` artifacts.
 //!
-//! State lives in PJRT [`xla::Literal`]s between steps (no per-step host
+//! State lives in PJRT [`Literal`]s between steps (no per-step host
 //! round-trips); the coordinator swaps in the step artifact's outputs and
 //! only reads buffers back for checkpoints or inspection. Shapes come from
 //! the manifest's `hyper` block and are validated by the runtime on every
@@ -10,7 +10,8 @@
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{
-    self, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, lit_u8, ArtifactMeta, Runtime,
+    self, empty_f32, empty_i32, empty_u8, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
+    lit_u8, ArtifactMeta, Literal, Runtime,
 };
 
 /// MicroAdam artifact state: 4-bit EF + quant stats + sliding window.
@@ -21,11 +22,11 @@ pub struct AotMicroAdamState {
     pub kb: usize,
     pub nq: usize,
     artifact: String,
-    ef: xla::Literal,
-    qlo: xla::Literal,
-    qhi: xla::Literal,
-    w_idx: xla::Literal,
-    w_val: xla::Literal,
+    ef: Literal,
+    qlo: Literal,
+    qhi: Literal,
+    w_idx: Literal,
+    w_val: Literal,
     pub t: u64,
 }
 
@@ -64,20 +65,20 @@ impl AotMicroAdamState {
     pub fn step(
         &mut self,
         rt: &mut Runtime,
-        params: xla::Literal,
-        grads: xla::Literal,
+        params: Literal,
+        grads: Literal,
         lr: f32,
         wd: f32,
-    ) -> Result<xla::Literal> {
+    ) -> Result<Literal> {
         self.t += 1;
         let inputs = [
             params,
             grads,
-            std::mem::replace(&mut self.ef, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
-            std::mem::replace(&mut self.qlo, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
-            std::mem::replace(&mut self.qhi, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
-            std::mem::replace(&mut self.w_idx, xla::Literal::create_from_shape(xla::PrimitiveType::S32, &[0])),
-            std::mem::replace(&mut self.w_val, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.ef, empty_u8()),
+            std::mem::replace(&mut self.qlo, empty_f32()),
+            std::mem::replace(&mut self.qhi, empty_f32()),
+            std::mem::replace(&mut self.w_idx, empty_i32()),
+            std::mem::replace(&mut self.w_val, empty_f32()),
             lit_scalar_i32(self.t as i32)?,
             lit_scalar_f32(lr)?,
             lit_scalar_f32(wd)?,
@@ -137,8 +138,8 @@ pub struct MicroAdamSnapshot {
 pub struct AotAdamWState {
     pub d: usize,
     artifact: String,
-    m: xla::Literal,
-    v: xla::Literal,
+    m: Literal,
+    v: Literal,
     pub t: u64,
 }
 
@@ -157,17 +158,17 @@ impl AotAdamWState {
     pub fn step(
         &mut self,
         rt: &mut Runtime,
-        params: xla::Literal,
-        grads: xla::Literal,
+        params: Literal,
+        grads: Literal,
         lr: f32,
         wd: f32,
-    ) -> Result<xla::Literal> {
+    ) -> Result<Literal> {
         self.t += 1;
         let inputs = [
             params,
             grads,
-            std::mem::replace(&mut self.m, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
-            std::mem::replace(&mut self.v, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.m, empty_f32()),
+            std::mem::replace(&mut self.v, empty_f32()),
             lit_scalar_i32(self.t as i32)?,
             lit_scalar_f32(lr)?,
             lit_scalar_f32(wd)?,
@@ -188,10 +189,10 @@ pub struct AotAdamW8bitState {
     pub d: usize,
     nq8: usize,
     artifact: String,
-    m8: xla::Literal,
-    mscale: xla::Literal,
-    v8: xla::Literal,
-    vscale: xla::Literal,
+    m8: Literal,
+    mscale: Literal,
+    v8: Literal,
+    vscale: Literal,
     pub t: u64,
 }
 
@@ -215,19 +216,19 @@ impl AotAdamW8bitState {
     pub fn step(
         &mut self,
         rt: &mut Runtime,
-        params: xla::Literal,
-        grads: xla::Literal,
+        params: Literal,
+        grads: Literal,
         lr: f32,
         wd: f32,
-    ) -> Result<xla::Literal> {
+    ) -> Result<Literal> {
         self.t += 1;
         let inputs = [
             params,
             grads,
-            std::mem::replace(&mut self.m8, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
-            std::mem::replace(&mut self.mscale, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
-            std::mem::replace(&mut self.v8, xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])),
-            std::mem::replace(&mut self.vscale, xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])),
+            std::mem::replace(&mut self.m8, empty_u8()),
+            std::mem::replace(&mut self.mscale, empty_f32()),
+            std::mem::replace(&mut self.v8, empty_u8()),
+            std::mem::replace(&mut self.vscale, empty_f32()),
             lit_scalar_i32(self.t as i32)?,
             lit_scalar_f32(lr)?,
             lit_scalar_f32(wd)?,

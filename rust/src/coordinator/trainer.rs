@@ -18,8 +18,9 @@ use super::layout::ParamLayout;
 use super::metrics::MetricsLogger;
 use super::state::{AotAdamW8bitState, AotAdamWState, AotMicroAdamState};
 use crate::data::{ImageDataset, MarkovCorpus, NliDataset};
-use crate::optim::{self, Optimizer, OptimizerKind};
-use crate::runtime::{self, lit_f32, lit_i32, Runtime};
+use crate::exec::ExecPool;
+use crate::optim::{self, Optimizer, OptimizerKind, TensorChunk};
+use crate::runtime::{self, lit_f32, lit_i32, Literal, Runtime};
 use crate::util::json;
 
 /// Data source driving the model artifact's batch inputs.
@@ -53,11 +54,12 @@ pub struct Trainer {
     rt: Runtime,
     pub layout: ParamLayout,
     /// Canonical parameters: a PJRT literal between steps.
-    params: xla::Literal,
+    params: Literal,
     opt: Opt,
     data: Data,
+    /// Worker pool for the native block-sharded optimizer hot path.
+    pool: ExecPool,
     pub t: u64,
-    grads_scratch: Vec<f32>,
     accum_scratch: Vec<f32>,
 }
 
@@ -125,6 +127,7 @@ impl Trainer {
 
         let flat = layout.init_flat(cfg.seed);
         let params = lit_f32(&flat, &[d])?;
+        let pool = if cfg.workers == 0 { ExecPool::auto() } else { ExecPool::new(cfg.workers) };
         Ok(Self {
             cfg,
             rt,
@@ -132,8 +135,8 @@ impl Trainer {
             params,
             opt,
             data,
+            pool,
             t: 0,
-            grads_scratch: vec![0.0; d],
             accum_scratch: vec![0.0; d],
         })
     }
@@ -172,7 +175,7 @@ impl Trainer {
         }
     }
 
-    fn next_batch_literals(&mut self) -> Result<Vec<xla::Literal>> {
+    fn next_batch_literals(&mut self) -> Result<Vec<Literal>> {
         match &mut self.data {
             Data::Lm { corpus, batch, seq } => {
                 let (mut toks, mut tgts) = (Vec::new(), Vec::new());
@@ -201,7 +204,7 @@ impl Trainer {
         self.t += 1;
         let accum = self.cfg.grad_accum.max(1);
         let mut loss_sum = 0f32;
-        let mut grads_lit: Option<xla::Literal> = None;
+        let mut grads_lit: Option<Literal> = None;
         if accum > 1 {
             self.accum_scratch.fill(0.0);
         }
@@ -228,10 +231,7 @@ impl Trainer {
             None => lit_f32(&self.accum_scratch, &[self.layout.d_padded])?,
         };
 
-        let params = std::mem::replace(
-            &mut self.params,
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0]),
-        );
+        let params = std::mem::replace(&mut self.params, runtime::empty_f32());
         let wd = self.cfg.weight_decay;
         self.params = match &mut self.opt {
             Opt::AotMicroAdam(s) => s.step(&mut self.rt, params, grads, lr, wd)?,
@@ -240,8 +240,10 @@ impl Trainer {
             Opt::Native(o) => {
                 let mut pv = runtime::to_f32(&params)?;
                 let gv = runtime::to_f32(&grads)?;
-                self.grads_scratch.copy_from_slice(&gv);
-                o.step(&mut pv, &self.grads_scratch, lr);
+                // Single flat chunk through the multi-tensor entry point:
+                // no further copies, and the optimizer fans out over the pool.
+                let mut chunks = [TensorChunk { params: &mut pv, grads: &gv }];
+                o.step_multi(&mut chunks, lr, &self.pool);
                 lit_f32(&pv, &[self.layout.d_padded])?
             }
         };

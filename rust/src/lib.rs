@@ -13,7 +13,12 @@
 //!   native MicroAdam cross-validated against the AOT artifact.
 //! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
 //!   kernels, AOT-lowered to HLO text; loaded and executed from
-//!   [`runtime`] via the PJRT CPU client. Python never runs at train time.
+//!   [`runtime`] via the PJRT CPU client (behind the off-by-default `pjrt`
+//!   cargo feature — without it the runtime is a host-only stub and every
+//!   native path still builds and runs). Python never runs at train time.
+//! * **[`exec`]** — the block-sharded parallel step engine: scoped-thread
+//!   worker pool + per-worker scratch arenas behind the fused
+//!   dequantize/Top-K/re-quantize/AdamStats/update pass.
 //!
 //! Quickstart (`no_run`: doctest binaries don't inherit the rpath to the
 //! image's libstdc++; `cargo run --example quickstart` exercises this path):
@@ -28,6 +33,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod linalg;
 pub mod memory;
 pub mod models;

@@ -73,7 +73,8 @@ USAGE:
   microadam train   [--config cfg.json] [--model lm_tiny] [--optimizer micro-adam]
                     [--backend aot|native] [--steps N] [--lr F] [--schedule const|warmup-cosine]
                     [--warmup N] [--weight-decay F] [--seed N] [--grad-accum N]
-                    [--out runs/x.jsonl] [--artifacts artifacts] [--checkpoint path.bin]
+                    [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
+                    [--checkpoint path.bin]
   microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|all>
                     [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
   microadam list    [--artifacts artifacts]
@@ -131,6 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.weight_decay = args.get_f32("weight-decay", cfg.weight_decay)?;
     cfg.grad_accum = args.get_u64("grad-accum", cfg.grad_accum as u64)? as usize;
+    cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
     if let Some(v) = args.get("out") {
         cfg.out = v.into();
     }

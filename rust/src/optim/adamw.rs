@@ -3,6 +3,7 @@
 //! fp32 `m`/`v` state: 8 bytes per parameter — the `M_AW32` row of §3.2.
 
 use super::Optimizer;
+use crate::exec::{self, ExecPool};
 
 #[derive(Debug, Clone, Copy)]
 pub struct AdamWConfig {
@@ -32,6 +33,40 @@ impl AdamW {
     pub fn new(d: usize, cfg: AdamWConfig) -> Self {
         Self { cfg, m: vec![0.0; d], v: vec![0.0; d], t: 0 }
     }
+
+    /// Per-step scalar factors (bias corrections, decoupled decay).
+    fn factors(&self, lr: f32) -> (f32, f32, f32) {
+        let c = &self.cfg;
+        let (bc1, bc2) = if c.bias_correction {
+            (1.0 - c.beta1.powi(self.t as i32), 1.0 - c.beta2.powi(self.t as i32))
+        } else {
+            (1.0, 1.0)
+        };
+        (bc1, bc2, 1.0 - lr * c.weight_decay)
+    }
+}
+
+/// The element-wise AdamW update over one contiguous chunk. Shared by the
+/// sequential and sharded paths so both produce identical bits.
+fn update_chunk(
+    cfg: &AdamWConfig,
+    bc1: f32,
+    bc2: f32,
+    decay: f32,
+    lr: f32,
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) {
+    for i in 0..params.len() {
+        let g = grads[i];
+        m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
+        v[i] = cfg.beta2 * v[i] + (1.0 - cfg.beta2) * g * g;
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        params[i] = decay * params[i] - lr * m_hat / (v_hat.sqrt() + cfg.eps);
+    }
 }
 
 impl Optimizer for AdamW {
@@ -43,21 +78,39 @@ impl Optimizer for AdamW {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.len(), self.m.len());
         self.t += 1;
-        let c = &self.cfg;
-        let (bc1, bc2) = if c.bias_correction {
-            (1.0 - c.beta1.powi(self.t as i32), 1.0 - c.beta2.powi(self.t as i32))
-        } else {
-            (1.0, 1.0)
-        };
-        let decay = 1.0 - lr * c.weight_decay;
-        for i in 0..params.len() {
-            let g = grads[i];
-            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
-            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
-            let m_hat = self.m[i] / bc1;
-            let v_hat = self.v[i] / bc2;
-            params[i] = decay * params[i] - lr * m_hat / (v_hat.sqrt() + c.eps);
+        let (bc1, bc2, decay) = self.factors(lr);
+        update_chunk(&self.cfg, bc1, bc2, decay, lr, params, grads, &mut self.m, &mut self.v);
+    }
+
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let (bc1, bc2, decay) = self.factors(lr);
+        let ranges = exec::chunk_ranges(params.len(), pool.workers());
+        if ranges.len() <= 1 {
+            update_chunk(&self.cfg, bc1, bc2, decay, lr, params, grads, &mut self.m, &mut self.v);
+            return;
         }
+        // Element-wise update: any contiguous partition yields the same bits.
+        let cfg = &self.cfg;
+        let mut shards = Vec::with_capacity(ranges.len());
+        let (mut p_rest, mut g_rest) = (params, grads);
+        let (mut m_rest, mut v_rest) = (&mut self.m[..], &mut self.v[..]);
+        for r in &ranges {
+            let (p, pr) = p_rest.split_at_mut(r.len());
+            p_rest = pr;
+            let (g, gr) = g_rest.split_at(r.len());
+            g_rest = gr;
+            let (m, mr) = m_rest.split_at_mut(r.len());
+            m_rest = mr;
+            let (v, vr) = v_rest.split_at_mut(r.len());
+            v_rest = vr;
+            shards.push((p, g, m, v));
+        }
+        pool.run_shards(shards, |_, (p, g, m, v)| {
+            update_chunk(cfg, bc1, bc2, decay, lr, p, g, m, v);
+        });
     }
 
     fn state_bytes(&self) -> usize {
@@ -109,6 +162,24 @@ mod tests {
         }
         let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
         assert!(n1 < 0.05 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn sharded_step_matches_sequential_bitwise() {
+        let d = 1003; // non-divisible: uneven chunk sizes
+        for workers in [1usize, 2, 4, 8] {
+            let mut seq = AdamW::new(d, AdamWConfig::default());
+            let mut par = AdamW::new(d, AdamWConfig::default());
+            let pool = ExecPool::new(workers);
+            let mut ps = randvec(20, d, 1.0);
+            let mut pp = ps.clone();
+            for s in 0..5 {
+                let g = randvec(30 + s, d, 1.0);
+                seq.step(&mut ps, &g, 1e-2);
+                par.step_sharded(&mut pp, &g, 1e-2, &pool);
+            }
+            assert_eq!(ps, pp, "workers={workers}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! v-underflow corner (DESIGN.md substitutions).
 
 use super::Optimizer;
+use crate::exec::{self, ExecPool};
 use crate::quant::Dynamic8;
 
 #[derive(Debug, Clone, Copy)]
@@ -68,6 +69,59 @@ impl AdamW8bit {
     }
 }
 
+/// Per-step scalar factors (bias corrections, decoupled decay).
+fn factors(cfg: &AdamW8bitConfig, t: u64, lr: f32) -> (f32, f32, f32) {
+    (
+        1.0 - cfg.beta1.powi(t as i32),
+        1.0 - cfg.beta2.powi(t as i32),
+        1.0 - lr * cfg.weight_decay,
+    )
+}
+
+/// Dequantize -> update -> re-quantize over one bucket-aligned chunk.
+/// `params`/`grads` may be shorter than the state slices (the padded tail);
+/// the surplus state decays to zero exactly as in the sequential path.
+/// Shared by the sequential and sharded steps so both produce identical bits.
+#[allow(clippy::too_many_arguments)]
+fn update_chunk(
+    cfg: &AdamW8bitConfig,
+    mq: &Dynamic8,
+    vq: &Dynamic8,
+    bc1: f32,
+    bc2: f32,
+    decay: f32,
+    lr: f32,
+    params: &mut [f32],
+    grads: &[f32],
+    m_codes: &mut [u8],
+    m_scales: &mut [f32],
+    v_codes: &mut [u8],
+    v_scales: &mut [f32],
+    m_f: &mut [f32],
+    v_f: &mut [f32],
+) {
+    mq.dequantize(m_codes, cfg.bucket, m_scales, m_f);
+    vq.dequantize(v_codes, cfg.bucket, v_scales, v_f);
+    let n = params.len();
+    for i in 0..n {
+        let g = grads[i];
+        m_f[i] = cfg.beta1 * m_f[i] + (1.0 - cfg.beta1) * g;
+        v_f[i] = cfg.beta2 * v_f[i] + (1.0 - cfg.beta2) * g * g;
+        let m_hat = m_f[i] / bc1;
+        let v_hat = v_f[i] / bc2;
+        // Trust-region clip: a v code that decays to zero while m stays
+        // nonzero would otherwise produce an m/eps-scale explosion.
+        let u = (m_hat / (v_hat.sqrt() + cfg.eps)).clamp(-10.0, 10.0);
+        params[i] = decay * params[i] - lr * u;
+    }
+    for i in n..m_f.len() {
+        m_f[i] = 0.0;
+        v_f[i] = 0.0;
+    }
+    mq.quantize(m_f, cfg.bucket, m_codes, m_scales);
+    vq.quantize(v_f, cfg.bucket, v_codes, v_scales);
+}
+
 impl Optimizer for AdamW8bit {
     fn name(&self) -> String {
         "AdamW-8bit".into()
@@ -76,29 +130,68 @@ impl Optimizer for AdamW8bit {
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
         assert_eq!(params.len(), self.d);
         self.t += 1;
-        let c = self.cfg;
-        self.mq.dequantize(&self.m_codes, c.bucket, &self.m_scales, &mut self.m_f);
-        self.vq.dequantize(&self.v_codes, c.bucket, &self.v_scales, &mut self.v_f);
-        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
-        let decay = 1.0 - lr * c.weight_decay;
-        for i in 0..self.d {
-            let g = grads[i];
-            self.m_f[i] = c.beta1 * self.m_f[i] + (1.0 - c.beta1) * g;
-            self.v_f[i] = c.beta2 * self.v_f[i] + (1.0 - c.beta2) * g * g;
-            let m_hat = self.m_f[i] / bc1;
-            let v_hat = self.v_f[i] / bc2;
-            // Trust-region clip: a v code that decays to zero while m stays
-            // nonzero would otherwise produce an m/eps-scale explosion.
-            let u = (m_hat / (v_hat.sqrt() + c.eps)).clamp(-10.0, 10.0);
-            params[i] = decay * params[i] - lr * u;
+        let (bc1, bc2, decay) = factors(&self.cfg, self.t, lr);
+        update_chunk(
+            &self.cfg,
+            &self.mq,
+            &self.vq,
+            bc1,
+            bc2,
+            decay,
+            lr,
+            params,
+            grads,
+            &mut self.m_codes,
+            &mut self.m_scales,
+            &mut self.v_codes,
+            &mut self.v_scales,
+            &mut self.m_f,
+            &mut self.v_f,
+        );
+    }
+
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        assert_eq!(params.len(), self.d);
+        self.t += 1;
+        let (bc1, bc2, decay) = factors(&self.cfg, self.t, lr);
+        // Shard on quantization-bucket boundaries so every worker owns whole
+        // buckets of codes + scales.
+        let nq = self.m_scales.len();
+        let ranges = exec::chunk_ranges(nq, pool.workers());
+        let bucket = self.cfg.bucket;
+        let cfg = &self.cfg;
+        let (mq, vq) = (&self.mq, &self.vq);
+        let mut shards = Vec::with_capacity(ranges.len());
+        let (mut p_rest, mut g_rest) = (params, grads);
+        let (mut mc_rest, mut ms_rest) = (&mut self.m_codes[..], &mut self.m_scales[..]);
+        let (mut vc_rest, mut vs_rest) = (&mut self.v_codes[..], &mut self.v_scales[..]);
+        let (mut mf_rest, mut vf_rest) = (&mut self.m_f[..], &mut self.v_f[..]);
+        let mut pstart = 0usize;
+        for r in &ranges {
+            let elems = r.len() * bucket;
+            let pend = (r.end * bucket).min(self.d);
+            let (p, pr) = p_rest.split_at_mut(pend - pstart);
+            p_rest = pr;
+            let (g, gr) = g_rest.split_at(pend - pstart);
+            g_rest = gr;
+            pstart = pend;
+            let (mc, mcr) = mc_rest.split_at_mut(elems);
+            mc_rest = mcr;
+            let (ms, msr) = ms_rest.split_at_mut(r.len());
+            ms_rest = msr;
+            let (vc, vcr) = vc_rest.split_at_mut(elems);
+            vc_rest = vcr;
+            let (vs, vsr) = vs_rest.split_at_mut(r.len());
+            vs_rest = vsr;
+            let (mf, mfr) = mf_rest.split_at_mut(elems);
+            mf_rest = mfr;
+            let (vf, vfr) = vf_rest.split_at_mut(elems);
+            vf_rest = vfr;
+            shards.push((p, g, mc, ms, vc, vs, mf, vf));
         }
-        for i in self.d..self.d_pad {
-            self.m_f[i] = 0.0;
-            self.v_f[i] = 0.0;
-        }
-        self.mq.quantize(&self.m_f, c.bucket, &mut self.m_codes, &mut self.m_scales);
-        self.vq.quantize(&self.v_f, c.bucket, &mut self.v_codes, &mut self.v_scales);
+        pool.run_shards(shards, |_, (p, g, mc, ms, vc, vs, mf, vf)| {
+            update_chunk(cfg, mq, vq, bc1, bc2, decay, lr, p, g, mc, ms, vc, vs, mf, vf);
+        });
     }
 
     fn state_bytes(&self) -> usize {
@@ -156,6 +249,24 @@ mod tests {
         // 8-bit state quantization has a noise floor; 0.25x contraction in
         // 300 steps is the fp32 trajectory up to that floor.
         assert!(n1 < 0.25 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn sharded_step_matches_sequential_bitwise() {
+        let d = 1000; // padded to 1024: last shard owns the padded tail
+        for workers in [1usize, 2, 3, 4] {
+            let mut seq = AdamW8bit::new(d, AdamW8bitConfig::default());
+            let mut par = AdamW8bit::new(d, AdamW8bitConfig::default());
+            let pool = ExecPool::new(workers);
+            let mut ps = randvec(40, d, 1.0);
+            let mut pp = ps.clone();
+            for s in 0..5 {
+                let g = randvec(50 + s, d, 1.0);
+                seq.step(&mut ps, &g, 1e-2);
+                par.step_sharded(&mut pp, &g, 1e-2, &pool);
+            }
+            assert_eq!(ps, pp, "workers={workers}");
+        }
     }
 
     #[test]

@@ -10,14 +10,27 @@
 //!    (ADAMSTATS) and update `theta <- (1 - lr*wd) theta - lr m_hat /
 //!    (eps + sqrt(v_hat))`.
 //!
+//! Every stage is independent across the `NB` parameter blocks, which the
+//! paper exploits for its GPU-efficient CUDA implementation (§3.2). The
+//! step here is the CPU analogue: a **fused single pass per block** —
+//! stages 1-5 run back-to-back while the block is hot in cache — executed
+//! by the [`crate::exec`] engine either sequentially ([`Optimizer::step`])
+//! or sharded across a worker pool ([`Optimizer::step_sharded`]). Both
+//! paths, at any worker count, are bit-identical: blocks never share
+//! state, so partitioning them cannot reassociate a single float op. The
+//! pre-fusion four-sweep implementation survives as
+//! [`MicroAdam::step_reference`] for cross-checking and benchmarking.
+//!
 //! Persistent state: `d/2` EF bytes + per-bucket stats + the `m x k`
 //! window — the `0.5 d + 4 m k` bytes of §3.2 in paper dtypes.
 //!
 //! This implementation is cross-validated against the AOT-compiled L2 graph
 //! (which routes the same math through the Pallas kernels) in
-//! `rust/tests/test_artifact_parity.rs`.
+//! `rust/tests/test_artifact_parity.rs`, and the fused engine against the
+//! reference sweep in `rust/tests/test_parallel_parity.rs`.
 
 use super::Optimizer;
+use crate::exec::{self, Arena, ExecPool};
 use crate::quant::{BucketStats, Quant4};
 use crate::topk::{topk_abs_block, SlidingWindow};
 
@@ -75,6 +88,8 @@ pub struct MicroAdam {
     block: usize,
     kb: usize,
     nb: usize,
+    /// Quantization buckets per block.
+    bpb: usize,
     window: SlidingWindow,
     quant: Quant4,
     /// Packed 4-bit EF codes (`d_pad / 2` bytes) — Quant4 mode.
@@ -82,11 +97,10 @@ pub struct MicroAdam {
     ef_stats: Vec<BucketStats>,
     /// Dense EF — Dense mode.
     ef_dense: Vec<f32>,
-    /// Scratch: accumulator `a` (padded), per-block z1/z2, top-k select.
+    /// Accumulator `a` (padded); workers own disjoint per-shard sub-slices.
     acc: Vec<f32>,
-    z1: Vec<f32>,
-    z2: Vec<f32>,
-    scratch: Vec<u16>,
+    /// Per-worker scratch arenas (z1/z2 + Top-K select), grown on demand.
+    arenas: Vec<Arena>,
     t: u64,
 }
 
@@ -119,15 +133,14 @@ impl MicroAdam {
             block,
             kb,
             nb,
+            bpb: block / qbucket,
             window: SlidingWindow::new(cfg.m, nb, kb),
             quant,
             ef_packed,
             ef_stats,
             ef_dense,
             acc: vec![0.0; d_pad],
-            z1: vec![0.0; block],
-            z2: vec![0.0; block],
-            scratch: Vec::new(),
+            arenas: Vec::new(),
             t: 0,
         }
     }
@@ -137,16 +150,13 @@ impl MicroAdam {
         self.kb
     }
 
-    /// Norm of the (dequantized) error-feedback accumulator.
+    /// Norm of the (dequantized) error-feedback accumulator. Streams per
+    /// quantization bucket — no `O(d)` allocation per call.
     pub fn error_norm(&self) -> f32 {
         match self.cfg.ef {
             EfMode::Off => 0.0,
             EfMode::Dense => self.ef_dense.iter().map(|v| v * v).sum::<f32>().sqrt(),
-            EfMode::Quant4 => {
-                let mut out = vec![0f32; self.d_pad];
-                self.quant.dequantize(&self.ef_packed, &self.ef_stats, &mut out);
-                out.iter().map(|v| v * v).sum::<f32>().sqrt()
-            }
+            EfMode::Quant4 => self.quant.l2_norm(&self.ef_packed, &self.ef_stats),
         }
     }
 
@@ -155,22 +165,22 @@ impl MicroAdam {
     pub fn max_update_density(&self) -> f64 {
         (self.cfg.m * self.kb * self.nb) as f64 / self.d as f64
     }
-}
 
-impl Optimizer for MicroAdam {
-    fn name(&self) -> String {
-        match self.cfg.ef {
-            EfMode::Off => "TopK-Adam".into(),
-            EfMode::Dense => "TopK-Adam+EF".into(),
-            EfMode::Quant4 => format!("MicroAdam(m={})", self.cfg.m),
-        }
-    }
-
-    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+    /// The pre-fusion reference step: four full-vector sweeps (EF
+    /// decompress, Top-K, re-quantize, AdamStats+update) sharing the dense
+    /// accumulator. Kept verbatim-in-math as the ground truth the fused
+    /// engine is tested against, and as the sequential baseline in
+    /// `bench_optimizer_step`.
+    pub fn step_reference(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
         assert_eq!(params.len(), self.d);
         assert_eq!(grads.len(), self.d);
         self.t += 1;
         let t = self.t;
+        if self.arenas.is_empty() {
+            self.arenas.push(Arena::new(self.block));
+        }
+        let arena = &mut self.arenas[0];
+        arena.ensure(self.block);
 
         // Line 5: a <- g + Q^-1(e).
         self.acc[..self.d].copy_from_slice(grads);
@@ -192,7 +202,7 @@ impl Optimizer for MicroAdam {
         for b in 0..self.nb {
             let blk = b * self.block..(b + 1) * self.block;
             let (idx, vals) = self.window.entry_mut(row, b);
-            topk_abs_block(&self.acc[blk.clone()], self.kb, idx, vals, &mut self.scratch);
+            topk_abs_block(&self.acc[blk.clone()], self.kb, idx, vals, &mut arena.sel);
             let accb = &mut self.acc[blk];
             for &i in idx.iter() {
                 accb[i as usize] = 0.0;
@@ -209,32 +219,260 @@ impl Optimizer for MicroAdam {
             }
         }
 
-        // Lines 11-13: dynamic AdamStats per block + parameter update.
+        // Lines 11-13: dynamic AdamStats per block + parameter update. Only
+        // the `valid_rows()` window rows hold data; rows beyond carry
+        // weight zero anyway.
         let w1 = self.window.folded_weights(t, self.cfg.beta1);
         let w2 = self.window.folded_weights(t, self.cfg.beta2);
         let decay = 1.0 - lr * self.cfg.weight_decay;
         let valid = self.window.valid_rows();
         for b in 0..self.nb {
-            self.z1.fill(0.0);
-            self.z2.fill(0.0);
-            for i in 0..self.cfg.m.min(valid.max(self.cfg.m)) {
-                // weight 0 rows (not yet written) contribute nothing.
-                if w1[i] == 0.0 && w2[i] == 0.0 {
-                    continue;
-                }
+            let z1 = &mut arena.z1[..self.block];
+            let z2 = &mut arena.z2[..self.block];
+            z1.fill(0.0);
+            z2.fill(0.0);
+            for i in 0..valid {
                 let (idx, vals) = self.window.entry(i, b);
                 for (&j, &v) in idx.iter().zip(vals) {
-                    self.z1[j as usize] += w1[i] * v;
-                    self.z2[j as usize] += w2[i] * v * v;
+                    z1[j as usize] += w1[i] * v;
+                    z2[j as usize] += w2[i] * v * v;
                 }
             }
             let base = b * self.block;
             let n = self.block.min(self.d.saturating_sub(base));
             for j in 0..n {
-                let u = lr * self.z1[j] / (self.cfg.eps + self.z2[j].sqrt());
+                let u = lr * z1[j] / (self.cfg.eps + z2[j].sqrt());
                 params[base + j] = decay * params[base + j] - u;
             }
         }
+    }
+
+    /// The fused engine: one pass per block (stage 1-5 back-to-back),
+    /// sharded over `pool`. Bit-identical to [`MicroAdam::step_reference`]
+    /// at every worker count.
+    fn step_fused(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        assert_eq!(params.len(), self.d);
+        assert_eq!(grads.len(), self.d);
+        self.t += 1;
+        let t = self.t;
+        let row = self.window.row_for_step(t);
+        // Commit up front: each worker fills the row for its own blocks
+        // before reading it back in the same fused pass.
+        self.window.commit_row();
+        let valid = self.window.valid_rows();
+        let w1 = self.window.folded_weights(t, self.cfg.beta1);
+        let w2 = self.window.folded_weights(t, self.cfg.beta2);
+
+        let nshards = pool.workers().min(self.nb);
+        while self.arenas.len() < nshards {
+            self.arenas.push(Arena::new(self.block));
+        }
+        for a in &mut self.arenas {
+            a.ensure(self.block);
+        }
+        let ranges = exec::chunk_ranges(self.nb, nshards);
+
+        let ctx = StepCtx {
+            block: self.block,
+            kb: self.kb,
+            m: self.cfg.m,
+            bpb: self.bpb,
+            row,
+            valid,
+            lr,
+            decay: 1.0 - lr * self.cfg.weight_decay,
+            eps: self.cfg.eps,
+            w1: &w1,
+            w2: &w2,
+            quant: &self.quant,
+        };
+
+        // Carve every buffer into disjoint per-shard &mut sub-slices. The
+        // per-shard window spans come from the layout's own offset math so
+        // they can never drift from `SlidingWindow::entry`.
+        let wspans: Vec<usize> =
+            ranges.iter().map(|r| self.window.block_range(r.clone()).len()).collect();
+        let mut p_rest = params;
+        let mut g_rest = grads;
+        let mut acc_rest = &mut self.acc[..];
+        let mut wi_rest = &mut self.window.idx[..];
+        let mut wv_rest = &mut self.window.val[..];
+        let mut efp_rest = &mut self.ef_packed[..];
+        let mut efs_rest = &mut self.ef_stats[..];
+        let mut efd_rest = &mut self.ef_dense[..];
+        let mut arenas = self.arenas[..nshards].iter_mut();
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut pstart = 0usize;
+        for (r, &wspan) in ranges.iter().zip(&wspans) {
+            let nblk = r.len();
+            let pend = (r.end * self.block).min(self.d);
+            let (p, pr) = p_rest.split_at_mut(pend - pstart);
+            p_rest = pr;
+            let (g, gr) = g_rest.split_at(pend - pstart);
+            g_rest = gr;
+            pstart = pend;
+            let (a, ar) = acc_rest.split_at_mut(nblk * self.block);
+            acc_rest = ar;
+            let (wi, wir) = wi_rest.split_at_mut(wspan);
+            wi_rest = wir;
+            let (wv, wvr) = wv_rest.split_at_mut(wspan);
+            wv_rest = wvr;
+            let ef = match self.cfg.ef {
+                EfMode::Off => EfShard::Off,
+                EfMode::Dense => {
+                    let (e, er) = efd_rest.split_at_mut(nblk * self.block);
+                    efd_rest = er;
+                    EfShard::Dense(e)
+                }
+                EfMode::Quant4 => {
+                    let (pk, pkr) = efp_rest.split_at_mut(nblk * self.block / 2);
+                    efp_rest = pkr;
+                    let (st, str_) = efs_rest.split_at_mut(nblk * self.bpb);
+                    efs_rest = str_;
+                    EfShard::Quant4 { packed: pk, stats: st }
+                }
+            };
+            shards.push(Shard {
+                params: p,
+                grads: g,
+                acc: a,
+                win_idx: wi,
+                win_val: wv,
+                ef,
+                arena: arenas.next().expect("one arena per shard"),
+            });
+        }
+        pool.run_shards(shards, |_, sh| run_shard(ctx, sh));
+    }
+}
+
+/// Step-invariant context shared (read-only) by every worker.
+#[derive(Clone, Copy)]
+struct StepCtx<'a> {
+    block: usize,
+    kb: usize,
+    m: usize,
+    bpb: usize,
+    row: usize,
+    valid: usize,
+    lr: f32,
+    decay: f32,
+    eps: f32,
+    w1: &'a [f32],
+    w2: &'a [f32],
+    quant: &'a Quant4,
+}
+
+/// One worker's disjoint view of the optimizer state: a contiguous run of
+/// blocks across every buffer.
+struct Shard<'a> {
+    /// Unpadded parameter slice (the last shard may be shorter than its
+    /// padded block span).
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    /// Padded accumulator slice: `n_blocks * block`.
+    acc: &'a mut [f32],
+    /// Block-major window history for these blocks: `n_blocks * m * kb`.
+    win_idx: &'a mut [u16],
+    win_val: &'a mut [f32],
+    ef: EfShard<'a>,
+    arena: &'a mut Arena,
+}
+
+enum EfShard<'a> {
+    Off,
+    Dense(&'a mut [f32]),
+    Quant4 { packed: &'a mut [u8], stats: &'a mut [BucketStats] },
+}
+
+/// The fused per-block pass: for each block in the shard, run EF
+/// decompress + Top-K + re-quantize + AdamStats + parameter update
+/// back-to-back while the block's working set is cache-resident.
+fn run_shard(ctx: StepCtx, sh: Shard) {
+    let Shard { params, grads, acc, win_idx, win_val, mut ef, arena } = sh;
+    let nb_local = acc.len() / ctx.block;
+    for bl in 0..nb_local {
+        let base = bl * ctx.block;
+        // valid (unpadded) element count of this block
+        let n = ctx.block.min(params.len().saturating_sub(base));
+        let acc_b = &mut acc[base..base + ctx.block];
+
+        // Stage grads; pad tail with zeros (line 5, first half).
+        acc_b[..n].copy_from_slice(&grads[base..base + n]);
+        acc_b[n..].fill(0.0);
+
+        // a += Q^-1(e) (line 5, second half).
+        match &mut ef {
+            EfShard::Off => {}
+            EfShard::Dense(e) => {
+                for (a, ev) in acc_b.iter_mut().zip(&e[base..base + ctx.block]) {
+                    *a += *ev;
+                }
+            }
+            EfShard::Quant4 { packed, stats } => {
+                let pb = &packed[base / 2..(base + ctx.block) / 2];
+                let sb = &stats[bl * ctx.bpb..(bl + 1) * ctx.bpb];
+                ctx.quant.dequantize_add(pb, sb, acc_b);
+            }
+        }
+
+        // Top-K into the window row; zero the selected entries (6-7, 10).
+        let wo = (bl * ctx.m + ctx.row) * ctx.kb;
+        {
+            let (wi, wv) = (&mut win_idx[wo..wo + ctx.kb], &mut win_val[wo..wo + ctx.kb]);
+            topk_abs_block(acc_b, ctx.kb, wi, wv, &mut arena.sel);
+            for &i in wi.iter() {
+                acc_b[i as usize] = 0.0;
+            }
+        }
+
+        // Compress the remainder back into the EF store (8-9).
+        match &mut ef {
+            EfShard::Off => {}
+            EfShard::Dense(e) => e[base..base + ctx.block].copy_from_slice(acc_b),
+            EfShard::Quant4 { packed, stats } => {
+                let pb = &mut packed[base / 2..(base + ctx.block) / 2];
+                let sb = &mut stats[bl * ctx.bpb..(bl + 1) * ctx.bpb];
+                ctx.quant.quantize(acc_b, pb, sb);
+            }
+        }
+
+        // AdamStats over this block's contiguous window history (11-12).
+        let z1 = &mut arena.z1[..ctx.block];
+        let z2 = &mut arena.z2[..ctx.block];
+        z1.fill(0.0);
+        z2.fill(0.0);
+        for i in 0..ctx.valid {
+            let o = (bl * ctx.m + i) * ctx.kb;
+            for (&j, &v) in win_idx[o..o + ctx.kb].iter().zip(&win_val[o..o + ctx.kb]) {
+                z1[j as usize] += ctx.w1[i] * v;
+                z2[j as usize] += ctx.w2[i] * v * v;
+            }
+        }
+
+        // Parameter update (13).
+        for j in 0..n {
+            let u = ctx.lr * z1[j] / (ctx.eps + z2[j].sqrt());
+            params[base + j] = ctx.decay * params[base + j] - u;
+        }
+    }
+}
+
+impl Optimizer for MicroAdam {
+    fn name(&self) -> String {
+        match self.cfg.ef {
+            EfMode::Off => "TopK-Adam".into(),
+            EfMode::Dense => "TopK-Adam+EF".into(),
+            EfMode::Quant4 => format!("MicroAdam(m={})", self.cfg.m),
+        }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.step_fused(params, grads, lr, &ExecPool::serial());
+    }
+
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        self.step_fused(params, grads, lr, pool);
     }
 
     fn state_bytes(&self) -> usize {
@@ -282,6 +520,28 @@ mod tests {
         }
         let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
         assert!(n1 < 0.25 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn fused_step_matches_reference_bitwise() {
+        // The fused single-pass engine and the four-sweep reference must
+        // produce the same bits, step after step (see also
+        // tests/test_parallel_parity.rs for the full EfMode x workers grid).
+        for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+            let d = 300; // non-multiple of block: exercises the padded tail
+            let cfg = MicroAdamConfig { ef, ..small_cfg() };
+            let mut fused = MicroAdam::new(d, cfg);
+            let mut refr = MicroAdam::new(d, cfg);
+            let mut xf = randvec(9, d, 1.0);
+            let mut xr = xf.clone();
+            for s in 0..12 {
+                let g = randvec(500 + s, d, 1.0);
+                fused.step(&mut xf, &g, 0.01);
+                refr.step_reference(&mut xr, &g, 0.01);
+                assert_eq!(xf, xr, "{ef:?} step {s}");
+                assert_eq!(fused.error_norm(), refr.error_norm(), "{ef:?} step {s}");
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,15 @@ pub mod microadam_analytical;
 pub mod sgd;
 
 use crate::coordinator::layout::TensorSpec;
+use crate::exec::ExecPool;
+
+/// One tensor's (parameter, gradient) pair for the multi-tensor step entry
+/// point. Chunks are consecutive segments of the optimizer's flat vector;
+/// their concatenation must have the dimension the optimizer was built with.
+pub struct TensorChunk<'a> {
+    pub params: &'a mut [f32],
+    pub grads: &'a [f32],
+}
 
 /// A stateful first-order optimizer over a flat f32 parameter vector.
 pub trait Optimizer {
@@ -36,6 +45,39 @@ pub trait Optimizer {
     /// Apply one update step. `params` and `grads` have the dimension the
     /// optimizer was constructed with; the internal step counter advances.
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+    /// Block-sharded step: like [`Optimizer::step`] but free to fan the
+    /// update out across `pool`'s workers. Implementations that override
+    /// this MUST produce bit-identical results to `step` for every worker
+    /// count (the update is partitioned, never reassociated). The default
+    /// ignores the pool and runs sequentially.
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        let _ = pool;
+        self.step(params, grads, lr);
+    }
+    /// Multi-tensor step: one update over a list of consecutive flat-vector
+    /// segments (e.g. the per-tensor views of a model's parameter layout).
+    /// The single-chunk case is zero-copy; the general case gathers into a
+    /// flat buffer, steps, and scatters back.
+    fn step_multi(&mut self, chunks: &mut [TensorChunk<'_>], lr: f32, pool: &ExecPool) {
+        if let [c] = chunks {
+            self.step_sharded(c.params, c.grads, lr, pool);
+            return;
+        }
+        let total: usize = chunks.iter().map(|c| c.params.len()).sum();
+        let mut p = Vec::with_capacity(total);
+        let mut g = Vec::with_capacity(total);
+        for c in chunks.iter() {
+            p.extend_from_slice(&c.params[..]);
+            g.extend_from_slice(c.grads);
+        }
+        self.step_sharded(&mut p, &g, lr, pool);
+        let mut o = 0;
+        for c in chunks.iter_mut() {
+            let n = c.params.len();
+            c.params.copy_from_slice(&p[o..o + n]);
+            o += n;
+        }
+    }
     /// Bytes of persistent optimizer state actually allocated (f32 storage).
     fn state_bytes(&self) -> usize;
     /// Bytes the same state occupies with the paper's storage dtypes.
@@ -161,6 +203,52 @@ mod tests {
             let (n0, n1) = testutil::quadratic_descent(opt.as_mut(), 256, lr, 800);
             assert!(n1 < 0.5 * n0, "{k:?}: {n0} -> {n1}");
         }
+    }
+
+    #[test]
+    fn step_multi_matches_flat_step_for_every_kind() {
+        // Chunked (multi-tensor) stepping must reproduce the flat trajectory
+        // exactly, whatever the chunk boundaries.
+        let specs = vec![TensorSpec::new("w", &[16, 16], 0)];
+        let d = 256;
+        let pool = ExecPool::new(3);
+        for &k in OptimizerKind::all() {
+            let mut flat = build(k, d, &specs, 0.0);
+            let mut multi = build(k, d, &specs, 0.0);
+            let mut p_flat = testutil::randvec(50, d, 1.0);
+            let mut p_multi = p_flat.clone();
+            for s in 0..5 {
+                let g = testutil::randvec(60 + s, d, 1.0);
+                flat.step(&mut p_flat, &g, 1e-2);
+                // uneven split: 100 + 56 + 100
+                let (a, rest) = p_multi.split_at_mut(100);
+                let (b, c) = rest.split_at_mut(56);
+                let mut chunks = [
+                    TensorChunk { params: a, grads: &g[..100] },
+                    TensorChunk { params: b, grads: &g[100..156] },
+                    TensorChunk { params: c, grads: &g[156..] },
+                ];
+                multi.step_multi(&mut chunks, 1e-2, &pool);
+            }
+            assert_eq!(p_flat, p_multi, "{k:?}");
+            assert_eq!(flat.t(), multi.t(), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn single_chunk_step_multi_is_step_sharded() {
+        let specs = vec![TensorSpec::new("w", &[16, 16], 0)];
+        let d = 256;
+        let pool = ExecPool::new(4);
+        let mut a = build(OptimizerKind::MicroAdam, d, &specs, 0.0);
+        let mut b = build(OptimizerKind::MicroAdam, d, &specs, 0.0);
+        let mut pa = testutil::randvec(70, d, 1.0);
+        let mut pb = pa.clone();
+        let g = testutil::randvec(71, d, 1.0);
+        a.step(&mut pa, &g, 1e-2);
+        let mut chunks = [TensorChunk { params: &mut pb[..], grads: &g }];
+        b.step_multi(&mut chunks, 1e-2, &pool);
+        assert_eq!(pa, pb);
     }
 
     #[test]

@@ -138,6 +138,9 @@ impl Quant4 {
     /// avoiding a dense scratch vector.
     pub fn dequantize_add(&self, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
         assert_eq!(out.len(), packed.len() * 2);
+        // A short stats slice would silently skip the tail buckets (the
+        // iteration is stats-driven), leaving stale EF unapplied.
+        assert_eq!(stats.len(), self.n_buckets(out.len()));
         for (b, st) in stats.iter().enumerate() {
             let u = st.step(4);
             let ps = &packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
@@ -147,6 +150,25 @@ impl Quant4 {
                 os[2 * i + 1] += (p >> 4) as f32 * u + st.lo;
             }
         }
+    }
+
+    /// L2 norm of the dequantized vector, streamed per bucket — no dense
+    /// `O(d)` scratch. Accumulation order matches dequantize-then-sum
+    /// (bucket-ascending, element-ascending), so the result is bit-identical
+    /// to `||Q^-1(packed)||` computed through a dense buffer.
+    pub fn l2_norm(&self, packed: &[u8], stats: &[BucketStats]) -> f32 {
+        assert_eq!(stats.len(), self.n_buckets(packed.len() * 2));
+        let mut sum = 0f32;
+        for (b, st) in stats.iter().enumerate() {
+            let u = st.step(4);
+            for &p in &packed[b * self.bucket / 2..(b + 1) * self.bucket / 2] {
+                let x0 = (p & 0xF) as f32 * u + st.lo;
+                let x1 = (p >> 4) as f32 * u + st.lo;
+                sum += x0 * x0;
+                sum += x1 * x1;
+            }
+        }
+        sum.sqrt()
     }
 }
 
@@ -314,6 +336,34 @@ mod tests {
         for i in 0..4 {
             assert!((acc[i] - 10.0 - deq[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "assertion")]
+    fn dequantize_add_rejects_short_stats() {
+        // Regression: a stats slice covering only the first bucket used to
+        // silently skip the tail buckets instead of panicking.
+        let q = Quant4::new(4);
+        let x = randvec(7, 16, 1.0);
+        let mut packed = vec![0u8; 8];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 4];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut acc = vec![0f32; 16];
+        q.dequantize_add(&packed, &stats[..1], &mut acc);
+    }
+
+    #[test]
+    fn l2_norm_matches_dense_dequantize() {
+        let q = Quant4::new(32);
+        let x = randvec(8, 256, 2.0);
+        let mut packed = vec![0u8; 128];
+        let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; 8];
+        q.quantize(&x, &mut packed, &mut stats);
+        let mut dense = vec![0f32; 256];
+        q.dequantize(&packed, &stats, &mut dense);
+        let reference = dense.iter().map(|v| v * v).sum::<f32>().sqrt();
+        // bit-identical, not just close: same accumulation order
+        assert_eq!(q.l2_norm(&packed, &stats), reference);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! PJRT-backed execution engine (`--features pjrt`): load and execute AOT
+//! artifacts from the L3 hot path via the vendored `xla` crate.
+//!
+//! Requires the `xla` dependency to be enabled in `rust/Cargo.toml` (see
+//! the note there); without the feature the crate uses [`super::stub`]
+//! instead and none of this file is compiled.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ArtifactMeta;
+
+/// PJRT literal type (device buffer handle + host conversion).
+pub type Literal = xla::Literal;
+
+/// Lazily-compiled artifact registry over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let artifacts = super::load_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, dir, artifacts, executables: HashMap::new() })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have: {:?}", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        log_compile(name, t0.elapsed());
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; inputs are validated against the manifest and
+    /// the tuple output is decomposed into one literal per manifest output.
+    pub fn execute_named(&mut self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.validate_inputs(name, inputs)?;
+        self.compile(name)?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {name}: {e:?}"))?;
+        let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let meta = self.meta(name)?;
+        if outs.len() != meta.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}", outs.len(), meta.outputs.len());
+        }
+        Ok(outs)
+    }
+
+    fn validate_inputs(&self, name: &str, inputs: &[Literal]) -> Result<()> {
+        let meta = self.meta(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!("{name}: {} inputs, manifest wants {}", inputs.len(), meta.inputs.len());
+        }
+        for (lit, (iname, dtype, shape)) in inputs.iter().zip(&meta.inputs) {
+            let count = lit.element_count();
+            let want: usize = shape.iter().product();
+            if count != want {
+                bail!("{name}.{iname}: literal has {count} elements, manifest wants {want} {shape:?}");
+            }
+            let ty = lit.ty().map_err(|e| anyhow!("{e:?}"))?;
+            let want_ty = match dtype.as_str() {
+                "float32" => xla::ElementType::F32,
+                "int32" => xla::ElementType::S32,
+                "uint8" => xla::ElementType::U8,
+                other => bail!("{name}.{iname}: unsupported manifest dtype {other}"),
+            };
+            if ty != want_ty {
+                bail!("{name}.{iname}: literal type {ty:?}, manifest wants {want_ty:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn log_compile(name: &str, dt: std::time::Duration) {
+    if std::env::var_os("MICROADAM_QUIET").is_none() {
+        eprintln!("[runtime] compiled {name} in {:.2}s", dt.as_secs_f32());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / readback helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes = as_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("lit_f32: {e:?}"))
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes = as_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("lit_i32: {e:?}"))
+}
+
+/// u8 literal of the given shape.
+pub fn lit_u8(data: &[u8], shape: &[usize]) -> Result<Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, shape, data)
+        .map_err(|e| anyhow!("lit_u8: {e:?}"))
+}
+
+/// f32 scalar literal (shape []).
+pub fn lit_scalar_f32(v: f32) -> Result<Literal> {
+    lit_f32(&[v], &[])
+}
+
+/// i32 scalar literal (shape []).
+pub fn lit_scalar_i32(v: i32) -> Result<Literal> {
+    lit_i32(&[v], &[])
+}
+
+/// Zero-element f32 literal (state-swap placeholder).
+pub fn empty_f32() -> Literal {
+    xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[0])
+}
+
+/// Zero-element i32 literal (state-swap placeholder).
+pub fn empty_i32() -> Literal {
+    xla::Literal::create_from_shape(xla::PrimitiveType::S32, &[0])
+}
+
+/// Zero-element u8 literal (state-swap placeholder).
+pub fn empty_u8() -> Literal {
+    xla::Literal::create_from_shape(xla::PrimitiveType::U8, &[0])
+}
+
+fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    // Safety: plain-old-data reinterpretation for literal upload only.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Read a literal back as `Vec<f32>`.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_f32: {e:?}"))
+}
+
+/// Read a literal back as `Vec<i32>`.
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_i32: {e:?}"))
+}
+
+/// Read a literal back as `Vec<u8>`.
+pub fn to_u8(lit: &Literal) -> Result<Vec<u8>> {
+    lit.to_vec::<u8>().map_err(|e| anyhow!("to_u8: {e:?}"))
+}
+
+/// Read a scalar f32 literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(to_f32(lit)?[0])
+}

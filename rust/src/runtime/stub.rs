@@ -1,0 +1,216 @@
+//! Host-only runtime stand-in (default build, no `pjrt` feature).
+//!
+//! [`Literal`] here is a plain host buffer with the same construction /
+//! readback API the PJRT backend exposes, so the coordinator, trainer and
+//! AOT state managers compile and run unchanged. The manifest still loads
+//! (`microadam list` works offline); only [`Runtime::compile`] /
+//! [`Runtime::execute_named`] fail, with an error pointing at the `pjrt`
+//! feature. Nothing in the native hot path (optimizers, fused step engine,
+//! repro harnesses on the native backend substrates) ever reaches them.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ArtifactMeta;
+
+/// Element dtype of a host literal (mirrors the manifest dtypes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// A host-memory tensor literal: dtype + shape + native-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// Manifest-backed registry without an execution engine.
+pub struct Runtime {
+    #[allow(dead_code)]
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json`; metadata queries work, execution doesn't.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let artifacts = super::load_manifest(&dir)?;
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have: {:?}", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        Err(no_pjrt(name))
+    }
+
+    pub fn execute_named(&mut self, name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(no_pjrt(name))
+    }
+}
+
+fn no_pjrt(name: &str) -> anyhow::Error {
+    anyhow!(
+        "artifact {name}: executing AOT artifacts needs the PJRT runtime — \
+         rebuild with `--features pjrt` (and the vendored `xla` crate, see \
+         rust/Cargo.toml), or use the native backend (`--backend native`)"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / readback helpers
+// ---------------------------------------------------------------------------
+
+fn make(ty: ElementType, shape: &[usize], bytes: Vec<u8>) -> Result<Literal> {
+    let want: usize = shape.iter().product();
+    if bytes.len() != want * ty.size() {
+        bail!("literal: {} bytes for {want} x {ty:?}", bytes.len());
+    }
+    Ok(Literal { ty, shape: shape.to_vec(), bytes })
+}
+
+/// f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    make(ElementType::F32, shape, data.iter().flat_map(|v| v.to_ne_bytes()).collect())
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    make(ElementType::S32, shape, data.iter().flat_map(|v| v.to_ne_bytes()).collect())
+}
+
+/// u8 literal of the given shape.
+pub fn lit_u8(data: &[u8], shape: &[usize]) -> Result<Literal> {
+    make(ElementType::U8, shape, data.to_vec())
+}
+
+/// f32 scalar literal (shape []).
+pub fn lit_scalar_f32(v: f32) -> Result<Literal> {
+    lit_f32(&[v], &[])
+}
+
+/// i32 scalar literal (shape []).
+pub fn lit_scalar_i32(v: i32) -> Result<Literal> {
+    lit_i32(&[v], &[])
+}
+
+/// Zero-element f32 literal (state-swap placeholder).
+pub fn empty_f32() -> Literal {
+    Literal { ty: ElementType::F32, shape: vec![0], bytes: Vec::new() }
+}
+
+/// Zero-element i32 literal (state-swap placeholder).
+pub fn empty_i32() -> Literal {
+    Literal { ty: ElementType::S32, shape: vec![0], bytes: Vec::new() }
+}
+
+/// Zero-element u8 literal (state-swap placeholder).
+pub fn empty_u8() -> Literal {
+    Literal { ty: ElementType::U8, shape: vec![0], bytes: Vec::new() }
+}
+
+fn expect_ty(lit: &Literal, ty: ElementType, what: &str) -> Result<()> {
+    if lit.ty != ty {
+        bail!("{what}: literal is {:?}, not {ty:?}", lit.ty);
+    }
+    Ok(())
+}
+
+/// Read a literal back as `Vec<f32>`.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    expect_ty(lit, ElementType::F32, "to_f32")?;
+    Ok(lit.bytes.chunks_exact(4).map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Read a literal back as `Vec<i32>`.
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    expect_ty(lit, ElementType::S32, "to_i32")?;
+    Ok(lit.bytes.chunks_exact(4).map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Read a literal back as `Vec<u8>`.
+pub fn to_u8(lit: &Literal) -> Result<Vec<u8>> {
+    expect_ty(lit, ElementType::U8, "to_u8")?;
+    Ok(lit.bytes.clone())
+}
+
+/// Read a scalar f32 literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("scalar_f32: empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_mismatch_is_rejected() {
+        let l = lit_u8(&[1, 2], &[2]).unwrap();
+        assert!(to_f32(&l).is_err());
+        assert!(to_i32(&l).is_err());
+        assert!(to_u8(&l).is_ok());
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_f32(&[1.0, 2.0], &[2, 1]).is_ok());
+    }
+
+    #[test]
+    fn execute_errors_mention_the_pjrt_feature() {
+        // A manifest-less dir errors at load; build a Runtime by hand to
+        // exercise the execute path.
+        let mut rt = Runtime { dir: PathBuf::new(), artifacts: HashMap::new() };
+        let err = rt.compile("whatever").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+        let err = rt.execute_named("whatever", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}

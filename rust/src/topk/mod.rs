@@ -34,6 +34,13 @@ pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32]
 
 /// The sliding window `G = (I, V)` over all `NB` blocks: a ring buffer of
 /// `m` rows, each holding `NB * k_b` (index, value) pairs.
+///
+/// Storage is **block-major** `[block][row][k]`: the whole `m`-row history
+/// of one block is a single contiguous `m * k_b` span. That is what lets
+/// the fused step engine ([`crate::exec`]) hand each worker a disjoint
+/// `&mut` sub-slice per contiguous block range — and it keeps the AdamStats
+/// recomputation streaming through one cache-resident span per block
+/// instead of striding across `NB * k_b`-sized rows.
 #[derive(Debug, Clone)]
 pub struct SlidingWindow {
     /// Window length `m`.
@@ -42,7 +49,7 @@ pub struct SlidingWindow {
     pub nb: usize,
     /// Entries kept per block `k_b`.
     pub kb: usize,
-    /// Block-relative indices, `m * nb * kb`, row-major `[row][block][k]`.
+    /// Block-relative indices, `m * nb * kb`, block-major `[block][row][k]`.
     pub idx: Vec<u16>,
     /// Top-K values (signed), same layout.
     pub val: Vec<f32>,
@@ -60,16 +67,29 @@ impl SlidingWindow {
         ((t - 1) % self.m as u64) as usize
     }
 
+    /// Flat offset of `(row, block)` in the block-major layout.
+    #[inline]
+    fn off(&self, row: usize, block: usize) -> usize {
+        (block * self.m + row) * self.kb
+    }
+
     /// Mutable (idx, val) slices for `block` within `row`.
     pub fn entry_mut(&mut self, row: usize, block: usize) -> (&mut [u16], &mut [f32]) {
-        let o = (row * self.nb + block) * self.kb;
+        let o = self.off(row, block);
         (&mut self.idx[o..o + self.kb], &mut self.val[o..o + self.kb])
     }
 
     /// (idx, val) slices for `block` within `row`.
     pub fn entry(&self, row: usize, block: usize) -> (&[u16], &[f32]) {
-        let o = (row * self.nb + block) * self.kb;
+        let o = self.off(row, block);
         (&self.idx[o..o + self.kb], &self.val[o..o + self.kb])
+    }
+
+    /// Flat element range covering the full history of `blocks` — a single
+    /// contiguous span thanks to the block-major layout. Used by the fused
+    /// engine to carve disjoint per-worker `&mut` window shards.
+    pub fn block_range(&self, blocks: std::ops::Range<usize>) -> std::ops::Range<usize> {
+        blocks.start * self.m * self.kb..blocks.end * self.m * self.kb
     }
 
     /// Record a full step's Top-K results by marking one more row written.
@@ -190,6 +210,36 @@ mod tests {
         let ws = w.folded_weights(15, 0.9);
         let sum: f32 = ws.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+    }
+
+    #[test]
+    fn block_major_history_is_contiguous() {
+        let mut w = SlidingWindow::new(3, 4, 2);
+        // tag every entry with (row, block) so the layout is observable
+        for row in 0..3 {
+            for b in 0..4 {
+                let (idx, vals) = w.entry_mut(row, b);
+                for (k, (i, v)) in idx.iter_mut().zip(vals.iter_mut()).enumerate() {
+                    *i = (100 * b + 10 * row + k) as u16;
+                    *v = (100 * b + 10 * row + k) as f32;
+                }
+            }
+        }
+        // block b's full history occupies w.block_range(b..b+1)
+        for b in 0..4 {
+            let r = w.block_range(b..b + 1);
+            assert_eq!(r.len(), 3 * 2);
+            for (o, &i) in w.idx[r.clone()].iter().enumerate() {
+                let (row, k) = (o / 2, o % 2);
+                assert_eq!(i as usize, 100 * b + 10 * row + k);
+            }
+        }
+        // multi-block spans concatenate
+        assert_eq!(w.block_range(1..3), 6..18);
+        // entry() agrees with the raw span
+        let (idx, vals) = w.entry(2, 3);
+        assert_eq!(idx, &[320, 321]);
+        assert_eq!(vals, &[320.0, 321.0]);
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Bit-for-bit parity: the fused block-parallel step engine vs the
+//! sequential four-sweep reference.
+//!
+//! The engine's contract (see `optim::Optimizer::step_sharded`) is that
+//! sharding the step across any worker count must not change a single bit
+//! of the trajectory: blocks are independent, so partitioning them cannot
+//! reassociate any float op. These tests pin that for every `EfMode` across
+//! 1/2/4/8 workers, through window wrap-around, on dimensions with and
+//! without a padded tail block.
+
+use microadam::exec::ExecPool;
+use microadam::optim::microadam::{EfMode, MicroAdam, MicroAdamConfig};
+use microadam::optim::Optimizer;
+use microadam::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * s).collect()
+}
+
+fn cfg(ef: EfMode) -> MicroAdamConfig {
+    // small blocks -> many blocks -> real sharding even at 8 workers
+    MicroAdamConfig { m: 4, block: 64, density: 0.05, qbucket: 16, ef, ..Default::default() }
+}
+
+/// Run `steps` steps of the reference sweep and of the fused engine at
+/// `workers`, asserting bitwise-identical params and error norm each step.
+fn assert_parity(d: usize, ef: EfMode, workers: usize, steps: usize, seed: u64) {
+    let pool = ExecPool::new(workers);
+    let mut reference = MicroAdam::new(d, cfg(ef));
+    let mut fused = MicroAdam::new(d, cfg(ef));
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x_ref = randvec(&mut rng, d, 1.0);
+    let mut x_fused = x_ref.clone();
+    for s in 0..steps {
+        let g = randvec(&mut rng, d, 1.0);
+        reference.step_reference(&mut x_ref, &g, 3e-3);
+        fused.step_sharded(&mut x_fused, &g, 3e-3, &pool);
+        assert_eq!(
+            x_ref, x_fused,
+            "d={d} {ef:?} workers={workers} diverged at step {s}"
+        );
+        assert_eq!(
+            reference.error_norm(),
+            fused.error_norm(),
+            "d={d} {ef:?} workers={workers} EF diverged at step {s}"
+        );
+    }
+    assert_eq!(reference.t(), fused.t());
+}
+
+#[test]
+fn fused_engine_matches_reference_all_modes_and_workers() {
+    // past 2*m steps so the ring buffer wraps at least twice
+    for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+        for workers in [1usize, 2, 4, 8] {
+            assert_parity(1024, ef, workers, 11, 42);
+        }
+    }
+}
+
+#[test]
+fn fused_engine_matches_reference_with_padded_tail() {
+    // d = 1000 with block 64 pads to 1024: the last shard owns the partial
+    // block, where params/grads are shorter than the padded span.
+    for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+        for workers in [1usize, 2, 4, 8] {
+            assert_parity(1000, ef, workers, 10, 7);
+        }
+    }
+}
+
+#[test]
+fn fused_engine_matches_reference_more_workers_than_blocks() {
+    // 128 / 64 = 2 blocks but 8 workers: the pool must clamp shards to NB.
+    for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+        assert_parity(128, ef, 8, 10, 3);
+    }
+}
+
+#[test]
+fn worker_count_can_change_mid_trajectory() {
+    // Shard layout is per-call state, not optimizer state: switching pools
+    // between steps must leave the trajectory untouched.
+    let d = 512;
+    let mut reference = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut fused = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut rng = Rng::seed_from_u64(11);
+    let mut x_ref = randvec(&mut rng, d, 1.0);
+    let mut x_fused = x_ref.clone();
+    for (s, workers) in [1usize, 4, 2, 8, 3, 1, 8].into_iter().enumerate() {
+        let pool = ExecPool::new(workers);
+        let g = randvec(&mut rng, d, 1.0);
+        reference.step_reference(&mut x_ref, &g, 3e-3);
+        fused.step_sharded(&mut x_fused, &g, 3e-3, &pool);
+        assert_eq!(x_ref, x_fused, "step {s} (workers={workers})");
+    }
+}
+
+#[test]
+fn plain_step_is_the_fused_serial_engine() {
+    // Optimizer::step must equal the sharded path at one worker, i.e. the
+    // public default entry point is the fused engine.
+    let d = 768;
+    let pool = ExecPool::new(1);
+    let mut a = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut b = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut rng = Rng::seed_from_u64(23);
+    let mut xa = randvec(&mut rng, d, 1.0);
+    let mut xb = xa.clone();
+    for _ in 0..9 {
+        let g = randvec(&mut rng, d, 1.0);
+        a.step(&mut xa, &g, 1e-2);
+        b.step_sharded(&mut xb, &g, 1e-2, &pool);
+    }
+    assert_eq!(xa, xb);
+}
