@@ -12,8 +12,16 @@ use microadam::optim::OptimizerKind;
 
 fn main() {
     std::env::set_var("MICROADAM_QUIET", "1");
+
+    // The data-parallel ranks x reducer sweep runs on the native substrate,
+    // so it needs no artifacts: bytes-on-the-wire vs loss per reducer.
+    println!("== data-parallel sweep (native, artifact-free) ==");
+    if let Err(e) = microadam::bench::run_dist_sweep("runs", 60) {
+        println!("bench_e2e: dist sweep failed: {e:#}");
+    }
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("bench_e2e: artifacts/ missing — run `make artifacts` first");
+        println!("\nbench_e2e: artifacts/ missing — run `make artifacts` for the AOT rows");
         return;
     }
     for model in ["lm_tiny", "lm_small"] {

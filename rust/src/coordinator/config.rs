@@ -7,6 +7,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::schedule::LrSchedule;
+use crate::dist::reducer::{parse_reducer, reducer_name, ReducerKind};
 use crate::optim::OptimizerKind;
 use crate::util::json::{self, Json};
 
@@ -40,6 +41,11 @@ pub struct TrainConfig {
     /// Worker count for the native block-sharded optimizer step
     /// (0 = auto-detect from the machine / `MICROADAM_WORKERS`).
     pub workers: usize,
+    /// Data-parallel replica count (1 = single-process training; > 1
+    /// routes through [`crate::dist::DistTrainer`]).
+    pub ranks: usize,
+    /// Gradient exchange for the data-parallel engine.
+    pub reduce: ReducerKind,
 }
 
 impl Default for TrainConfig {
@@ -57,6 +63,8 @@ impl Default for TrainConfig {
             log_every: 10,
             artifacts_dir: "artifacts".into(),
             workers: 0,
+            ranks: 1,
+            reduce: ReducerKind::Dense,
         }
     }
 }
@@ -102,6 +110,12 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("workers").and_then(Json::as_f64) {
             cfg.workers = v as usize;
+        }
+        if let Some(v) = j.get("ranks").and_then(Json::as_f64) {
+            cfg.ranks = (v as usize).max(1);
+        }
+        if let Some(v) = j.get("reduce").and_then(Json::as_str) {
+            cfg.reduce = parse_reducer(v)?;
         }
         let lr = j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3) as f32;
         cfg.schedule = match j.get("schedule").and_then(Json::as_str).unwrap_or("const") {
@@ -155,6 +169,8 @@ impl TrainConfig {
             ("log_every", json::num(self.log_every as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("workers", json::num(self.workers as f64)),
+            ("ranks", json::num(self.ranks as f64)),
+            ("reduce", json::s(reducer_name(self.reduce))),
         ])
     }
 }
@@ -209,6 +225,8 @@ mod tests {
             log_every: 5,
             artifacts_dir: "artifacts".into(),
             workers: 3,
+            ranks: 4,
+            reduce: ReducerKind::EfTopK,
         };
         let j = cfg.to_json().to_string();
         let back = TrainConfig::from_json(&j).unwrap();
@@ -219,6 +237,8 @@ mod tests {
         assert_eq!(back.schedule, cfg.schedule);
         assert_eq!(back.steps, cfg.steps);
         assert_eq!(back.grad_accum, 4);
+        assert_eq!(back.ranks, 4);
+        assert_eq!(back.reduce, ReducerKind::EfTopK);
     }
 
     #[test]
@@ -227,6 +247,19 @@ mod tests {
         assert_eq!(cfg.model, "cls_tiny");
         assert_eq!(cfg.optimizer, OptimizerKind::MicroAdam);
         assert_eq!(cfg.steps, 100);
+        assert_eq!(cfg.ranks, 1);
+        assert_eq!(cfg.reduce, ReducerKind::Dense);
+    }
+
+    #[test]
+    fn ranks_and_reduce_parse_and_clamp() {
+        let cfg = TrainConfig::from_json(r#"{"ranks": 8, "reduce": "eftopk"}"#).unwrap();
+        assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.reduce, ReducerKind::EfTopK);
+        // ranks clamps to >= 1
+        let cfg = TrainConfig::from_json(r#"{"ranks": 0}"#).unwrap();
+        assert_eq!(cfg.ranks, 1);
+        assert!(TrainConfig::from_json(r#"{"reduce": "gossip"}"#).is_err());
     }
 
     #[test]

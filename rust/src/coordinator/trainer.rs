@@ -19,15 +19,72 @@ use super::metrics::MetricsLogger;
 use super::state::{AotAdamW8bitState, AotAdamWState, AotMicroAdamState};
 use crate::data::{ImageDataset, MarkovCorpus, NliDataset};
 use crate::exec::ExecPool;
-use crate::optim::{self, Optimizer, OptimizerKind, TensorChunk};
-use crate::runtime::{self, lit_f32, lit_i32, Literal, Runtime};
+use crate::optim::{self, Optimizer, OptimizerKind};
+use crate::runtime::{self, lit_f32, lit_i32, ArtifactMeta, Literal, Runtime};
 use crate::util::json;
 
-/// Data source driving the model artifact's batch inputs.
-enum Data {
+/// Data source driving the model artifact's batch inputs. Shared with the
+/// data-parallel engine ([`crate::dist`]), where each replica owns one
+/// stream seeded per rank.
+pub(crate) enum Data {
     Lm { corpus: MarkovCorpus, batch: usize, seq: usize },
     Cls { ds: NliDataset, batch: usize, seq: usize },
     Cnn { ds: ImageDataset, batch: usize, image: usize, channels: usize },
+}
+
+impl Data {
+    /// Build the stream shaped by `meta`'s input signature, seeded with the
+    /// already-mixed data seed (see [`Trainer::new`] / `dist::rank_data_seed`).
+    pub(crate) fn from_meta(meta: &ArtifactMeta, data_seed: u64) -> Result<Data> {
+        match meta.raw.get("model").and_then(crate::util::json::Json::as_str) {
+            Some("transformer_lm") => {
+                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
+                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
+                Ok(Data::Lm { corpus: MarkovCorpus::new(vocab, data_seed), batch: b, seq: s })
+            }
+            Some("transformer_cls") => {
+                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
+                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
+                let classes = meta.config("n_classes").unwrap_or(3.0) as usize;
+                Ok(Data::Cls { ds: NliDataset::new(vocab, classes, data_seed), batch: b, seq: s })
+            }
+            Some("cnn") => {
+                let shape = &meta.inputs[1].2;
+                let classes = meta.config("n_classes").unwrap_or(10.0) as usize;
+                Ok(Data::Cnn {
+                    ds: ImageDataset::new(shape[1], shape[3], classes, data_seed),
+                    batch: shape[0],
+                    image: shape[1],
+                    channels: shape[3],
+                })
+            }
+            other => bail!("{}: unsupported model kind {other:?}", meta.name),
+        }
+    }
+
+    /// Draw the next batch as artifact input literals.
+    pub(crate) fn next_batch_literals(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Data::Lm { corpus, batch, seq } => {
+                let (mut toks, mut tgts) = (Vec::new(), Vec::new());
+                corpus.next_batch(*batch, *seq, &mut toks, &mut tgts);
+                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&tgts, &[*batch, *seq])?])
+            }
+            Data::Cls { ds, batch, seq } => {
+                let (mut toks, mut labs) = (Vec::new(), Vec::new());
+                ds.next_batch(*batch, *seq, &mut toks, &mut labs);
+                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&labs, &[*batch])?])
+            }
+            Data::Cnn { ds, batch, image, channels } => {
+                let (mut imgs, mut labs) = (Vec::new(), Vec::new());
+                ds.next_batch(*batch, &mut imgs, &mut labs);
+                Ok(vec![
+                    lit_f32(&imgs, &[*batch, *image, *image, *channels])?,
+                    lit_i32(&labs, &[*batch])?,
+                ])
+            }
+        }
+    }
 }
 
 enum Opt {
@@ -71,30 +128,7 @@ impl Trainer {
         let d = layout.d_padded;
 
         // Data source shaped from the artifact's input signature.
-        let data = match meta.raw.get("model").and_then(crate::util::json::Json::as_str) {
-            Some("transformer_lm") => {
-                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
-                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
-                Data::Lm { corpus: MarkovCorpus::new(vocab, cfg.seed ^ 0xda7a), batch: b, seq: s }
-            }
-            Some("transformer_cls") => {
-                let (b, s) = (meta.inputs[1].2[0], meta.inputs[1].2[1]);
-                let vocab = meta.config("vocab").unwrap_or(256.0) as usize;
-                let classes = meta.config("n_classes").unwrap_or(3.0) as usize;
-                Data::Cls { ds: NliDataset::new(vocab, classes, cfg.seed ^ 0xda7a), batch: b, seq: s }
-            }
-            Some("cnn") => {
-                let shape = &meta.inputs[1].2;
-                let classes = meta.config("n_classes").unwrap_or(10.0) as usize;
-                Data::Cnn {
-                    ds: ImageDataset::new(shape[1], shape[3], classes, cfg.seed ^ 0xda7a),
-                    batch: shape[0],
-                    image: shape[1],
-                    channels: shape[3],
-                }
-            }
-            other => bail!("{}: unsupported model kind {other:?}", cfg.model),
-        };
+        let data = Data::from_meta(&meta, cfg.seed ^ 0xda7a)?;
 
         // Optimizer backend.
         let opt = match cfg.backend {
@@ -146,8 +180,19 @@ impl Trainer {
         runtime::to_f32(&self.params)
     }
 
-    /// Replace parameters (checkpoint resume).
+    /// Replace parameters (checkpoint resume). The length must match the
+    /// layout exactly — a truncated or foreign checkpoint would otherwise
+    /// silently corrupt the run.
     pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.layout.d_padded {
+            bail!(
+                "set_params: {} values, but model {} has d_padded = {} — \
+                 checkpoint does not match this model/layout",
+                flat.len(),
+                self.cfg.model,
+                self.layout.d_padded
+            );
+        }
         self.params = lit_f32(flat, &[self.layout.d_padded])?;
         Ok(())
     }
@@ -176,26 +221,7 @@ impl Trainer {
     }
 
     fn next_batch_literals(&mut self) -> Result<Vec<Literal>> {
-        match &mut self.data {
-            Data::Lm { corpus, batch, seq } => {
-                let (mut toks, mut tgts) = (Vec::new(), Vec::new());
-                corpus.next_batch(*batch, *seq, &mut toks, &mut tgts);
-                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&tgts, &[*batch, *seq])?])
-            }
-            Data::Cls { ds, batch, seq } => {
-                let (mut toks, mut labs) = (Vec::new(), Vec::new());
-                ds.next_batch(*batch, *seq, &mut toks, &mut labs);
-                Ok(vec![lit_i32(&toks, &[*batch, *seq])?, lit_i32(&labs, &[*batch])?])
-            }
-            Data::Cnn { ds, batch, image, channels } => {
-                let (mut imgs, mut labs) = (Vec::new(), Vec::new());
-                ds.next_batch(*batch, &mut imgs, &mut labs);
-                Ok(vec![
-                    lit_f32(&imgs, &[*batch, *image, *image, *channels])?,
-                    lit_i32(&labs, &[*batch])?,
-                ])
-            }
-        }
+        self.data.next_batch_literals()
     }
 
     /// One optimizer step (with `grad_accum` fwd/bwd micro-steps): returns
@@ -240,10 +266,18 @@ impl Trainer {
             Opt::Native(o) => {
                 let mut pv = runtime::to_f32(&params)?;
                 let gv = runtime::to_f32(&grads)?;
-                // Single flat chunk through the multi-tensor entry point:
-                // no further copies, and the optimizer fans out over the pool.
-                let mut chunks = [TensorChunk { params: &mut pv, grads: &gv }];
-                o.step_multi(&mut chunks, lr, &self.pool);
+                // Real per-tensor boundaries from the layout, so
+                // tensor-aware optimizers see the model's structure
+                // (single-tensor layouts keep the zero-copy flat path).
+                optim::step_with_layout(
+                    o.as_mut(),
+                    &self.layout.tensors,
+                    self.layout.d_padded,
+                    &mut pv,
+                    &gv,
+                    lr,
+                    &self.pool,
+                );
                 lit_f32(&pv, &[self.layout.d_padded])?
             }
         };
@@ -278,11 +312,15 @@ impl Trainer {
     }
 
     /// Classifier eval accuracy using the `<model>_logits` artifact over
-    /// `batches` fresh batches.
+    /// `batches` fresh batches. `batches` must be positive; NaN logits
+    /// count as misses instead of panicking.
     pub fn eval_accuracy(&mut self, batches: usize) -> Result<f32> {
         let logits_name = format!("{}_logits", self.cfg.model);
         if !self.rt.has(&logits_name) {
             bail!("{logits_name} artifact not available");
+        }
+        if batches == 0 {
+            bail!("eval_accuracy: empty eval (batches == 0)");
         }
         let mut correct = 0usize;
         let mut total = 0usize;
@@ -298,16 +336,47 @@ impl Trainer {
             let classes = logits.len() / labels.len();
             for (n, &lab) in labels.iter().enumerate() {
                 let row = &logits[n * classes..(n + 1) * classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                let pred = argmax_nan_tolerant(row);
                 correct += (pred == lab as usize) as usize;
                 total += 1;
             }
         }
+        if total == 0 {
+            bail!("eval_accuracy: eval batches held no examples");
+        }
         Ok(correct as f32 / total as f32)
+    }
+}
+
+/// Index of the largest finite entry; NaNs never win the comparison, so a
+/// diverged model no longer panics in `partial_cmp`. An all-NaN row falls
+/// back to class 0 (and so still scores a hit on label-0 examples — the
+/// caller's non-finite-loss bail is the real divergence guard).
+pub(crate) fn argmax_nan_tolerant(row: &[f32]) -> usize {
+    let mut pred = 0usize;
+    let mut best = f32::NEG_INFINITY;
+    for (c, &v) in row.iter().enumerate() {
+        if v > best {
+            best = v;
+            pred = c;
+        }
+    }
+    pred
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax_nan_tolerant;
+
+    #[test]
+    fn argmax_ignores_nans() {
+        assert_eq!(argmax_nan_tolerant(&[0.1, 0.7, 0.3]), 1);
+        assert_eq!(argmax_nan_tolerant(&[f32::NAN, 0.2, 0.1]), 1);
+        assert_eq!(argmax_nan_tolerant(&[0.2, f32::NAN, 0.5]), 2);
+        // all-NaN falls back to class 0 rather than panicking
+        assert_eq!(argmax_nan_tolerant(&[f32::NAN, f32::NAN]), 0);
+        // -inf rows still resolve
+        assert_eq!(argmax_nan_tolerant(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax_nan_tolerant(&[]), 0);
     }
 }

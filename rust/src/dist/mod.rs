@@ -1,0 +1,55 @@
+//! In-process multi-replica data-parallel training engine.
+//!
+//! MicroAdam's core trick — error feedback whose correction buffer is
+//! itself compressed — was lifted from distributed optimization. This
+//! module puts the mechanism back in its native habitat: `N` simulated
+//! replicas each draw their **own** seeded data shard, compute local
+//! gradients against the shared parameters, and exchange them through a
+//! pluggable [`GradReducer`] before one shared optimizer step.
+//!
+//! Layer map:
+//! * [`reducer`] — the exchange: [`DenseAllReduce`] (exact mean baseline),
+//!   [`TopKReduce`] (per-rank block-wise Top-K sparsification), and
+//!   [`EfTopKReduce`] (Top-K + per-rank 4-bit-quantized error-feedback
+//!   residuals, reusing [`crate::quant::Quant4`] and the optimizer's
+//!   [`crate::optim::microadam::EfMode`]). All are deterministic and
+//!   bit-identical at any [`crate::exec::ExecPool`] worker count.
+//! * [`replica`] — per-rank state: rank-seeded `MarkovCorpus` /
+//!   `NliDataset` / `ImageDataset` streams (artifact engine) or a
+//!   pure-rust MLP shard (native engine, runs on the stub runtime), with
+//!   rank 0 reproducing the single-process trainer's stream exactly.
+//! * [`trainer`] — [`DistTrainer`]: the synchronous data-parallel loop,
+//!   wrapping the coordinator's config/metrics/checkpoint stack and
+//!   feeding the aggregated gradient into the ordinary
+//!   [`crate::optim::Optimizer::step_multi`] hot path with real
+//!   per-tensor chunk boundaries.
+//!
+//! Wire/bytes accounting follows the repo's paper-dtype convention: a
+//! sparse entry costs 4 B (u16 index + bf16 value), dense f32 costs
+//! 4 B/param, and the EF residual costs what [`Quant4::state_bytes`]
+//! reports (0.5 B/param + bucket stats) per rank.
+//!
+//! This is a *simulation* of the transport (replicas share one address
+//! space; "bytes on the wire" are accounted, not moved through sockets) —
+//! a real multi-process transport is a ROADMAP follow-up. The compression
+//! math, EF state, and trajectory semantics are the real thing.
+//!
+//! [`DenseAllReduce`]: reducer::DenseAllReduce
+//! [`TopKReduce`]: reducer::TopKReduce
+//! [`EfTopKReduce`]: reducer::EfTopKReduce
+//! [`GradReducer`]: reducer::GradReducer
+//! [`DistTrainer`]: trainer::DistTrainer
+//! [`Quant4::state_bytes`]: crate::quant::Quant4::state_bytes
+
+pub mod reducer;
+pub mod replica;
+pub mod trainer;
+
+pub use reducer::{
+    build_reducer, parse_reducer, reducer_name, DenseAllReduce, EfTopKReduce, GradReducer,
+    ReducerKind, SparseReduceConfig, TopKReduce,
+};
+pub use replica::{
+    is_native_model, native_model_spec, rank_data_seed, NativeModelSpec, NativeReplica,
+};
+pub use trainer::DistTrainer;

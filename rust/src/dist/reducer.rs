@@ -1,0 +1,695 @@
+//! Gradient reducers: how N replicas' local gradients become the one
+//! aggregated gradient the optimizer steps on.
+//!
+//! Three implementations of [`GradReducer`], mirroring the compressed
+//! all-reduce families MicroAdam's error-feedback mechanism comes from:
+//!
+//! * [`DenseAllReduce`] — the exact baseline: coordinate-wise mean of the
+//!   full f32 gradients (4 B/param on the wire per rank).
+//! * [`TopKReduce`] — each rank sparsifies its gradient with the same
+//!   block-wise Top-K as the optimizer ([`crate::topk::topk_abs_block`])
+//!   and only the selected `(index, value)` pairs travel; the coordinator
+//!   densely aggregates the sparse contributions. Biased, no correction —
+//!   the "TopK-SGD without EF" failure mode of Figure 1, at the
+//!   communication layer.
+//! * [`EfTopKReduce`] — Top-K plus a **per-rank error-feedback residual**:
+//!   what the compressor dropped is carried to the next step
+//!   (`a_r = g_r + Q^{-1}(e_r)`), and the residual itself is stored 4-bit
+//!   via [`crate::quant::Quant4`] — the optimizer's own EF compressor
+//!   ([`crate::optim::microadam::EfMode`]), now in its native distributed
+//!   habitat. `EfMode::Dense` keeps the residual in f32 for the
+//!   omega = 0 theory setting.
+//!
+//! All reducers produce the **mean** gradient, are deterministic, and are
+//! bit-identical at every [`ExecPool`] worker count: the per-rank compress
+//! phase shards by rank, the aggregation phase shards by block, and no
+//! float op is ever reassociated across a shard boundary.
+//!
+//! Wire-cost accounting follows the repo convention (values stay f32 in
+//! RAM, costs are reported in paper dtypes): a sparse entry costs 2 B
+//! (u16 block-relative index) + 2 B (bf16 value) = 4 B; dense f32 costs
+//! 4 B/param.
+
+use anyhow::{bail, Result};
+
+use crate::exec::{self, ExecPool};
+use crate::optim::microadam::EfMode;
+use crate::quant::{BucketStats, Quant4};
+use crate::topk::topk_abs_block;
+
+/// Which gradient reducer a config/CLI names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReducerKind {
+    Dense,
+    TopK,
+    EfTopK,
+}
+
+/// Parse a reducer name (kebab-case, as in the CLI and config files).
+pub fn parse_reducer(s: &str) -> Result<ReducerKind> {
+    Ok(match s {
+        "dense" | "allreduce" => ReducerKind::Dense,
+        "topk" => ReducerKind::TopK,
+        "eftopk" | "ef-topk" => ReducerKind::EfTopK,
+        other => bail!("unknown reducer {other} (expected dense|topk|eftopk)"),
+    })
+}
+
+/// Canonical name of a reducer kind.
+pub fn reducer_name(k: ReducerKind) -> &'static str {
+    match k {
+        ReducerKind::Dense => "dense",
+        ReducerKind::TopK => "topk",
+        ReducerKind::EfTopK => "eftopk",
+    }
+}
+
+/// Combine per-rank gradients into the mean aggregated gradient.
+pub trait GradReducer: Send {
+    /// Display name (bench table row label).
+    fn name(&self) -> String;
+    /// Aggregate `grads` (one length-`d` slice per rank, in rank order)
+    /// into `out` (length `d`): the mean of the ranks' — possibly
+    /// compressed — contributions. Deterministic and bit-identical at any
+    /// `pool` worker count.
+    fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool);
+    /// Paper-dtype bytes one rank puts on the wire per step.
+    fn wire_bytes_per_rank(&self) -> usize;
+    /// Persistent compressor/residual state across all ranks, paper dtypes
+    /// (0 for stateless reducers).
+    fn residual_state_bytes(&self) -> usize;
+    /// L2 norm of rank `r`'s dequantized EF residual (0 for stateless).
+    fn residual_norm(&self, rank: usize) -> f32 {
+        let _ = rank;
+        0.0
+    }
+}
+
+/// Shared compression geometry for the sparse reducers (defaults follow the
+/// optimizer's paper constants).
+#[derive(Debug, Clone, Copy)]
+pub struct SparseReduceConfig {
+    /// Top-K block size `B_d` (clamped to the problem dimension).
+    pub block: usize,
+    /// Communicated gradient density `k/d`.
+    pub density: f64,
+    /// EF quantization bucket `B_q` (EfTopK only).
+    pub qbucket: usize,
+    /// Residual storage mode (EfTopK only; `Off` turns EfTopK into TopK).
+    pub ef: EfMode,
+}
+
+impl Default for SparseReduceConfig {
+    fn default() -> Self {
+        Self {
+            block: crate::BLOCK,
+            density: crate::DENSITY,
+            qbucket: crate::QBUCKET,
+            ef: EfMode::Quant4,
+        }
+    }
+}
+
+/// Build a reducer by kind for `ranks` replicas over dimension `d`.
+pub fn build_reducer(
+    kind: ReducerKind,
+    d: usize,
+    ranks: usize,
+    cfg: SparseReduceConfig,
+) -> Box<dyn GradReducer> {
+    match kind {
+        ReducerKind::Dense => Box::new(DenseAllReduce::new(d, ranks)),
+        ReducerKind::TopK => Box::new(TopKReduce::new(d, ranks, cfg)),
+        ReducerKind::EfTopK => Box::new(EfTopKReduce::new(d, ranks, cfg)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DenseAllReduce
+// ---------------------------------------------------------------------------
+
+/// Exact mean of full-precision gradients (the no-compression baseline).
+pub struct DenseAllReduce {
+    d: usize,
+    ranks: usize,
+}
+
+impl DenseAllReduce {
+    pub fn new(d: usize, ranks: usize) -> Self {
+        assert!(d > 0 && ranks > 0);
+        Self { d, ranks }
+    }
+}
+
+impl GradReducer for DenseAllReduce {
+    fn name(&self) -> String {
+        "dense-allreduce".into()
+    }
+
+    fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+        assert_eq!(grads.len(), self.ranks);
+        assert_eq!(out.len(), self.d);
+        if self.ranks == 1 {
+            // single-rank fast path: the mean IS the gradient, bit-for-bit
+            out.copy_from_slice(&grads[0]);
+            return;
+        }
+        let inv = 1.0f32 / self.ranks as f32;
+        let ranges = exec::chunk_ranges(self.d, pool.workers());
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut rest = out;
+        let mut start = 0usize;
+        for r in &ranges {
+            let (chunk, next) = rest.split_at_mut(r.len());
+            rest = next;
+            shards.push((start, chunk));
+            start = r.end;
+        }
+        pool.run_shards(shards, |_, (base, chunk)| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                // fixed rank-ascending summation: the result cannot depend
+                // on how coordinates were sharded
+                let mut s = 0f32;
+                for g in grads {
+                    s += g[base + i];
+                }
+                *o = s * inv;
+            }
+        });
+    }
+
+    fn wire_bytes_per_rank(&self) -> usize {
+        4 * self.d
+    }
+
+    fn residual_state_bytes(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse core shared by TopKReduce / EfTopKReduce
+// ---------------------------------------------------------------------------
+
+/// Per-rank Top-K compression state + the dense aggregation scratch. The
+/// two public sparse reducers are thin wrappers selecting the EF mode.
+struct SparseCore {
+    d: usize,
+    d_pad: usize,
+    block: usize,
+    nb: usize,
+    kb: usize,
+    ranks: usize,
+    ef: EfMode,
+    quant: Quant4,
+    /// Quantization buckets per rank (`d_pad / qbucket`).
+    nq: usize,
+    /// Per-rank padded accumulator `a_r = g_r + Q^{-1}(e_r)`: `ranks * d_pad`.
+    acc: Vec<f32>,
+    /// Selected block-relative indices, rank-major `[rank][block][k]`.
+    idx: Vec<u16>,
+    /// Selected values (signed), same layout.
+    val: Vec<f32>,
+    /// 4-bit packed EF residual per rank (`ranks * d_pad / 2`), Quant4 mode.
+    ef_packed: Vec<u8>,
+    ef_stats: Vec<BucketStats>,
+    /// Dense f32 residual per rank (`ranks * d_pad`), Dense mode.
+    ef_dense: Vec<f32>,
+    /// Per-rank Top-K quickselect scratch.
+    sels: Vec<Vec<u16>>,
+}
+
+impl SparseCore {
+    fn new(d: usize, ranks: usize, cfg: SparseReduceConfig) -> Self {
+        assert!(d > 0 && ranks > 0);
+        // Same geometry derivation as MicroAdam::new: clamp the block to the
+        // (even-rounded) dimension, shrink the bucket until it is even and
+        // divides the block.
+        let block = cfg.block.min(crate::pad_up(d, 2));
+        let d_pad = crate::pad_up(d, block);
+        let nb = d_pad / block;
+        let kb = crate::kb_for_block(block, cfg.density);
+        let mut qbucket = cfg.qbucket.min(block);
+        while block % qbucket != 0 || qbucket % 2 != 0 {
+            qbucket -= 1;
+            assert!(qbucket >= 2, "no valid quantization bucket for block {block}");
+        }
+        let quant = Quant4::new(qbucket);
+        let nq = d_pad / qbucket;
+        let (ef_packed, ef_stats, ef_dense) = match cfg.ef {
+            EfMode::Quant4 => (
+                vec![0u8; ranks * d_pad / 2],
+                vec![BucketStats { lo: 0.0, hi: 0.0 }; ranks * nq],
+                Vec::new(),
+            ),
+            EfMode::Dense => (Vec::new(), Vec::new(), vec![0f32; ranks * d_pad]),
+            EfMode::Off => (Vec::new(), Vec::new(), Vec::new()),
+        };
+        Self {
+            d,
+            d_pad,
+            block,
+            nb,
+            kb,
+            ranks,
+            ef: cfg.ef,
+            quant,
+            nq,
+            acc: vec![0.0; ranks * d_pad],
+            idx: vec![0; ranks * nb * kb],
+            val: vec![0.0; ranks * nb * kb],
+            ef_packed,
+            ef_stats,
+            ef_dense,
+            sels: vec![Vec::new(); ranks],
+        }
+    }
+
+    /// Phase A (sharded by rank): compress every rank's gradient into its
+    /// `(idx, val)` slab, updating the rank's EF residual. Phase B (sharded
+    /// by block range): densely aggregate the sparse contributions into
+    /// `out` as the mean.
+    fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+        assert_eq!(grads.len(), self.ranks);
+        assert_eq!(out.len(), self.d);
+        let (d, d_pad, block, nb, kb) = (self.d, self.d_pad, self.block, self.nb, self.kb);
+        let ef_mode = self.ef;
+        let quant = &self.quant;
+        let nq = self.nq;
+
+        // --- Phase A: per-rank compress (disjoint &mut state per rank) ---
+        {
+            let mut rank_shards = Vec::with_capacity(self.ranks);
+            let mut acc_rest = &mut self.acc[..];
+            let mut idx_rest = &mut self.idx[..];
+            let mut val_rest = &mut self.val[..];
+            let mut efp_rest = &mut self.ef_packed[..];
+            let mut efs_rest = &mut self.ef_stats[..];
+            let mut efd_rest = &mut self.ef_dense[..];
+            let mut sel_iter = self.sels.iter_mut();
+            for &g in grads {
+                let (acc, ar) = acc_rest.split_at_mut(d_pad);
+                acc_rest = ar;
+                let (idx, ir) = idx_rest.split_at_mut(nb * kb);
+                idx_rest = ir;
+                let (val, vr) = val_rest.split_at_mut(nb * kb);
+                val_rest = vr;
+                let ef = match ef_mode {
+                    EfMode::Off => RankEf::Off,
+                    EfMode::Dense => {
+                        let (e, er) = efd_rest.split_at_mut(d_pad);
+                        efd_rest = er;
+                        RankEf::Dense(e)
+                    }
+                    EfMode::Quant4 => {
+                        let (p, pr) = efp_rest.split_at_mut(d_pad / 2);
+                        efp_rest = pr;
+                        let (s, sr) = efs_rest.split_at_mut(nq);
+                        efs_rest = sr;
+                        RankEf::Quant4 { packed: p, stats: s }
+                    }
+                };
+                rank_shards.push(RankShard {
+                    grad: g,
+                    acc,
+                    idx,
+                    val,
+                    ef,
+                    sel: sel_iter.next().expect("one scratch per rank"),
+                });
+            }
+            // Group ranks so at most `workers` threads run (the ExecPool
+            // convention: callers build <= workers shards). Grouping cannot
+            // change results: ranks never share state in this phase.
+            let groups = exec::chunk_ranges(rank_shards.len(), pool.workers());
+            let mut shards: Vec<Vec<RankShard>> = Vec::with_capacity(groups.len());
+            for gr in &groups {
+                shards.push(rank_shards.drain(..gr.len()).collect());
+            }
+            pool.run_shards(shards, |_, group| {
+                for sh in group {
+                    compress_rank(d, block, kb, quant, sh);
+                }
+            });
+        }
+
+        // --- Phase B: dense mean of the sparse contributions ---
+        let inv = 1.0f32 / self.ranks as f32;
+        let ranks = self.ranks;
+        let idx = &self.idx[..];
+        let val = &self.val[..];
+        let ranges = exec::chunk_ranges(nb, pool.workers());
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut rest = out;
+        let mut pstart = 0usize;
+        for r in &ranges {
+            let pend = (r.end * block).min(d);
+            let (chunk, next) = rest.split_at_mut(pend - pstart);
+            rest = next;
+            shards.push((r.clone(), chunk));
+            pstart = pend;
+        }
+        pool.run_shards(shards, |_, (blocks, chunk)| {
+            chunk.fill(0.0);
+            let cbase = blocks.start * block;
+            for b in blocks {
+                let base = b * block - cbase;
+                // rank-ascending accumulation per coordinate: deterministic
+                // whatever the block sharding
+                for r in 0..ranks {
+                    let o = (r * nb + b) * kb;
+                    for (&i, &v) in idx[o..o + kb].iter().zip(&val[o..o + kb]) {
+                        let at = base + i as usize;
+                        // Padded-tail entries land past the chunk; the tail
+                        // is re-zeroed before Top-K (see compress_rank), so
+                        // anything selected there carries value 0 — the
+                        // guard only prevents the out-of-bounds write.
+                        if at < chunk.len() {
+                            chunk[at] += v;
+                        }
+                    }
+                }
+            }
+            for o in chunk.iter_mut() {
+                *o *= inv;
+            }
+        });
+    }
+
+    fn wire_bytes_per_rank(&self) -> usize {
+        // u16 block-relative index + bf16 value per selected entry
+        4 * self.nb * self.kb
+    }
+
+    fn residual_state_bytes(&self) -> usize {
+        match self.ef {
+            EfMode::Off => 0,
+            EfMode::Dense => self.ranks * self.d_pad * 4,
+            EfMode::Quant4 => self.ranks * self.quant.state_bytes(self.d_pad),
+        }
+    }
+
+    fn residual_norm(&self, rank: usize) -> f32 {
+        assert!(rank < self.ranks);
+        match self.ef {
+            EfMode::Off => 0.0,
+            EfMode::Dense => self.ef_dense[rank * self.d_pad..(rank + 1) * self.d_pad]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt(),
+            EfMode::Quant4 => self.quant.l2_norm(
+                &self.ef_packed[rank * self.d_pad / 2..(rank + 1) * self.d_pad / 2],
+                &self.ef_stats[rank * self.nq..(rank + 1) * self.nq],
+            ),
+        }
+    }
+}
+
+/// One rank's disjoint compression state for phase A.
+struct RankShard<'a> {
+    grad: &'a [f32],
+    /// Padded accumulator, length `d_pad`.
+    acc: &'a mut [f32],
+    /// This rank's `nb * kb` selected indices / values.
+    idx: &'a mut [u16],
+    val: &'a mut [f32],
+    ef: RankEf<'a>,
+    sel: &'a mut Vec<u16>,
+}
+
+enum RankEf<'a> {
+    Off,
+    Dense(&'a mut [f32]),
+    Quant4 { packed: &'a mut [u8], stats: &'a mut [BucketStats] },
+}
+
+/// Compress one rank: `a = g + Q^{-1}(e)`, block-wise Top-K into the rank's
+/// `(idx, val)` slab, zero the selected entries, re-quantize the remainder
+/// into the residual.
+fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShard) {
+    let RankShard { grad, acc, idx, val, mut ef, sel } = sh;
+    acc[..d].copy_from_slice(grad);
+    acc[d..].fill(0.0);
+    match &mut ef {
+        RankEf::Off => {}
+        RankEf::Dense(e) => {
+            for (a, ev) in acc.iter_mut().zip(e.iter()) {
+                *a += *ev;
+            }
+        }
+        RankEf::Quant4 { packed, stats } => quant.dequantize_add(packed, stats, acc),
+    }
+    // Re-zero the padded tail: 4-bit dequantization of a mixed real/padding
+    // bucket leaves noise on padding coordinates, and near convergence
+    // Top-K would select that noise — wasting wire slots and dropping real
+    // gradient mass from the EF contract. No real gradient ever lives
+    // beyond `d`, so clearing is exact.
+    acc[d..].fill(0.0);
+    let nb = acc.len() / block;
+    for b in 0..nb {
+        let blk = b * block..(b + 1) * block;
+        let (bi, bv) = (&mut idx[b * kb..(b + 1) * kb], &mut val[b * kb..(b + 1) * kb]);
+        topk_abs_block(&acc[blk.clone()], kb, bi, bv, sel);
+        let accb = &mut acc[blk];
+        for &i in bi.iter() {
+            accb[i as usize] = 0.0;
+        }
+    }
+    match &mut ef {
+        RankEf::Off => {}
+        RankEf::Dense(e) => e.copy_from_slice(acc),
+        RankEf::Quant4 { packed, stats } => quant.quantize(acc, packed, stats),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public sparse reducers
+// ---------------------------------------------------------------------------
+
+/// Per-rank block-wise Top-K sparsification, no error correction.
+pub struct TopKReduce {
+    core: SparseCore,
+}
+
+impl TopKReduce {
+    pub fn new(d: usize, ranks: usize, cfg: SparseReduceConfig) -> Self {
+        Self { core: SparseCore::new(d, ranks, SparseReduceConfig { ef: EfMode::Off, ..cfg }) }
+    }
+
+    /// Effective entries communicated per block.
+    pub fn kb(&self) -> usize {
+        self.core.kb
+    }
+}
+
+impl GradReducer for TopKReduce {
+    fn name(&self) -> String {
+        format!("topk(k/d={:.3})", (self.core.nb * self.core.kb) as f64 / self.core.d as f64)
+    }
+
+    fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+        self.core.reduce(grads, out, pool);
+    }
+
+    fn wire_bytes_per_rank(&self) -> usize {
+        self.core.wire_bytes_per_rank()
+    }
+
+    fn residual_state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Top-K with per-rank (4-bit-quantized) error-feedback residuals — the
+/// distributed setting MicroAdam's EF mechanism is native to.
+pub struct EfTopKReduce {
+    core: SparseCore,
+}
+
+impl EfTopKReduce {
+    /// `cfg.ef` selects the residual storage; `EfMode::Off` degenerates to
+    /// plain Top-K (use [`TopKReduce`] for that directly).
+    pub fn new(d: usize, ranks: usize, cfg: SparseReduceConfig) -> Self {
+        Self { core: SparseCore::new(d, ranks, cfg) }
+    }
+
+    pub fn kb(&self) -> usize {
+        self.core.kb
+    }
+}
+
+impl GradReducer for EfTopKReduce {
+    fn name(&self) -> String {
+        let ef = match self.core.ef {
+            EfMode::Off => "off",
+            EfMode::Dense => "f32",
+            EfMode::Quant4 => "q4",
+        };
+        format!("eftopk(ef={ef})")
+    }
+
+    fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+        self.core.reduce(grads, out, pool);
+    }
+
+    fn wire_bytes_per_rank(&self) -> usize {
+        self.core.wire_bytes_per_rank()
+    }
+
+    fn residual_state_bytes(&self) -> usize {
+        self.core.residual_state_bytes()
+    }
+
+    fn residual_norm(&self, rank: usize) -> f32 {
+        self.core.residual_norm(rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * s).collect()
+    }
+
+    fn rank_grads(seed: u64, ranks: usize, d: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..ranks).map(|_| randvec(&mut rng, d, 1.0)).collect()
+    }
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|g| g.as_slice()).collect()
+    }
+
+    fn small_cfg() -> SparseReduceConfig {
+        SparseReduceConfig { block: 64, density: 0.1, qbucket: 16, ef: EfMode::Quant4 }
+    }
+
+    #[test]
+    fn dense_allreduce_is_the_mean() {
+        let d = 100;
+        let ranks = 4;
+        let grads = rank_grads(0, ranks, d);
+        let mut r = DenseAllReduce::new(d, ranks);
+        let mut out = vec![9f32; d];
+        r.reduce(&refs(&grads), &mut out, &ExecPool::serial());
+        for i in 0..d {
+            let mean: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / ranks as f32;
+            assert!((out[i] - mean).abs() < 1e-6, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn dense_single_rank_is_bitwise_identity() {
+        let d = 257;
+        let grads = rank_grads(1, 1, d);
+        let mut r = DenseAllReduce::new(d, 1);
+        let mut out = vec![0f32; d];
+        r.reduce(&refs(&grads), &mut out, &ExecPool::new(4));
+        assert_eq!(out, grads[0]);
+    }
+
+    #[test]
+    fn reducers_are_worker_count_invariant() {
+        let d = 300; // non-multiple of block: padded tail
+        let ranks = 3;
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut outs = Vec::new();
+            for workers in [1usize, 2, 4, 8] {
+                let pool = ExecPool::new(workers);
+                let mut r = build_reducer(kind, d, ranks, small_cfg());
+                let mut out = vec![0f32; d];
+                // several rounds so EF state evolves
+                for round in 0..5 {
+                    let grads = rank_grads(100 + round, ranks, d);
+                    r.reduce(&refs(&grads), &mut out, &pool);
+                }
+                outs.push(out);
+            }
+            for o in &outs[1..] {
+                assert_eq!(&outs[0], o, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_keeps_only_selected_coordinates() {
+        let d = 128;
+        let cfg = small_cfg();
+        let mut r = TopKReduce::new(d, 1, cfg);
+        let grads = rank_grads(7, 1, d);
+        let mut out = vec![0f32; d];
+        r.reduce(&refs(&grads), &mut out, &ExecPool::serial());
+        let nonzero = out.iter().filter(|v| **v != 0.0).count();
+        // 2 blocks of 64 at density 0.1 -> kb = 7 per block, 14 total
+        assert_eq!(r.kb(), 7);
+        assert!(nonzero <= 14, "{nonzero} nonzero");
+        // selected coordinates carry the exact gradient value (single rank)
+        for (o, g) in out.iter().zip(&grads[0]) {
+            assert!(*o == 0.0 || *o == *g);
+        }
+    }
+
+    #[test]
+    fn eftopk_carries_dropped_mass_forward() {
+        // With a constant gradient, EF must eventually communicate
+        // coordinates plain Top-K starves forever.
+        let d = 64;
+        let cfg = SparseReduceConfig { block: 64, density: 0.05, qbucket: 16, ef: EfMode::Dense };
+        let mut ef = EfTopKReduce::new(d, 1, cfg);
+        let mut topk = TopKReduce::new(d, 1, cfg);
+        let g: Vec<f32> = (0..d).map(|i| 1.0 + (i as f32) / d as f32).collect();
+        let grads = vec![g.clone()];
+        let pool = ExecPool::serial();
+        let mut touched_ef = vec![false; d];
+        let mut touched_topk = vec![false; d];
+        let mut out = vec![0f32; d];
+        for _ in 0..40 {
+            ef.reduce(&refs(&grads), &mut out, &pool);
+            for (t, o) in touched_ef.iter_mut().zip(&out) {
+                *t |= *o != 0.0;
+            }
+            topk.reduce(&refs(&grads), &mut out, &pool);
+            for (t, o) in touched_topk.iter_mut().zip(&out) {
+                *t |= *o != 0.0;
+            }
+        }
+        let n_ef = touched_ef.iter().filter(|t| **t).count();
+        let n_topk = touched_topk.iter().filter(|t| **t).count();
+        // a constant gradient pins plain TopK to the same kb coordinates
+        assert_eq!(n_topk, topk.kb());
+        assert!(n_ef > 2 * n_topk, "EF reached only {n_ef} coords");
+        assert!(ef.residual_norm(0) > 0.0);
+    }
+
+    #[test]
+    fn wire_and_residual_accounting() {
+        let d = 1 << 16;
+        let ranks = 4;
+        let cfg = SparseReduceConfig::default(); // paper geometry
+        let dense = DenseAllReduce::new(d, ranks);
+        let topk = TopKReduce::new(d, ranks, cfg);
+        let ef = EfTopKReduce::new(d, ranks, cfg);
+        assert_eq!(dense.wire_bytes_per_rank(), 4 * d);
+        // 16 blocks of 4096, kb = 41 -> 4 B per entry
+        assert_eq!(topk.wire_bytes_per_rank(), 4 * 16 * 41);
+        assert_eq!(ef.wire_bytes_per_rank(), topk.wire_bytes_per_rank());
+        // paper-dtype residual: 4-bit codes + per-bucket f32 stats, per rank
+        let q = Quant4::new(crate::QBUCKET);
+        assert_eq!(ef.residual_state_bytes(), ranks * q.state_bytes(d));
+        assert_eq!(topk.residual_state_bytes(), 0);
+        assert_eq!(dense.residual_state_bytes(), 0);
+        assert!(ef.wire_bytes_per_rank() < dense.wire_bytes_per_rank() / 20);
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for k in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            assert_eq!(parse_reducer(reducer_name(k)).unwrap(), k);
+        }
+        assert!(parse_reducer("frobnicate").is_err());
+    }
+}

@@ -1,0 +1,381 @@
+//! The data-parallel training driver: N replicas -> gradient exchange ->
+//! one shared optimizer step.
+//!
+//! Per step:
+//! 1. every replica draws a batch from **its own** seeded shard and
+//!    computes a local gradient on the shared parameters (native MLP
+//!    replicas fan out across the [`ExecPool`]; artifact replicas run
+//!    sequentially through the one PJRT client);
+//! 2. the [`GradReducer`] aggregates the per-rank gradients into the mean
+//!    (exactly for [`ReducerKind::Dense`], compressed for
+//!    `TopK`/`EfTopK`), accumulating bytes-on-the-wire accounting;
+//! 3. the aggregated gradient feeds the ordinary
+//!    [`Optimizer::step_multi`] hot path with the layout's real
+//!    per-tensor chunk boundaries — the same code path as the
+//!    single-process [`crate::coordinator::trainer::Trainer`].
+//!
+//! Guarantee (pinned in `rust/tests/test_dist_parity.rs`): `ranks = 1`
+//! with `DenseAllReduce` is **bit-identical** to single-process training
+//! for every optimizer kind — the reducer is an exact identity and the
+//! chunked step is bit-equal to the flat step.
+//!
+//! The trainer wraps the coordinator stack: [`TrainConfig`] (with its
+//! `ranks`/`reduce` fields) configures it, [`MetricsLogger`] records it,
+//! and [`Checkpoint`] persists it.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::layout::TensorSpec;
+use crate::coordinator::metrics::MetricsLogger;
+use crate::exec::ExecPool;
+use crate::models::mlp::Mlp;
+use crate::optim::{self, Optimizer};
+use crate::runtime::{self, lit_f32, Runtime};
+use crate::util::json;
+
+use super::reducer::{build_reducer, reducer_name, GradReducer, SparseReduceConfig};
+use super::replica::{native_model_spec, ArtifactReplica, NativeModelSpec, NativeReplica};
+
+/// Which gradient backend drives the replicas.
+enum Engine {
+    /// Pure-rust MLP: runs everywhere, replicas step in parallel.
+    Native { mlp: Mlp, spec: NativeModelSpec, replicas: Vec<NativeReplica> },
+    /// Shared AOT artifact via the PJRT runtime (sequential across ranks).
+    Artifact { rt: Runtime, model: String, replicas: Vec<ArtifactReplica> },
+}
+
+/// Multi-replica data-parallel trainer.
+pub struct DistTrainer {
+    pub cfg: TrainConfig,
+    pub ranks: usize,
+    engine: Engine,
+    reducer: Box<dyn GradReducer>,
+    opt: Box<dyn Optimizer>,
+    /// Canonical shared parameters (host-resident flat vector).
+    params: Vec<f32>,
+    /// Flat dimension (padded for artifact models, exact for native).
+    d: usize,
+    /// Real per-tensor boundaries for `step_multi`.
+    tensors: Vec<TensorSpec>,
+    /// Aggregated-gradient buffer.
+    agg: Vec<f32>,
+    pool: ExecPool,
+    pub t: u64,
+    /// Total paper-dtype bytes all ranks have put on the wire so far.
+    wire_bytes: u64,
+}
+
+impl DistTrainer {
+    /// Build from a [`TrainConfig`] (`cfg.ranks` / `cfg.reduce` select the
+    /// topology). Artifact models need the PJRT runtime; without it — or
+    /// without `artifacts/` — the trainer falls back to the native MLP
+    /// workload so `microadam train --ranks N` works on the stub runtime.
+    /// The optimizer update always runs natively (`cfg.backend` only
+    /// selects how single-process training applies it).
+    pub fn new(mut cfg: TrainConfig) -> Result<Self> {
+        let ranks = cfg.ranks.max(1);
+        if cfg.grad_accum > 1 {
+            bail!(
+                "dist: grad_accum > 1 is not supported — each rank already \
+                 contributes one shard per step (use more ranks instead)"
+            );
+        }
+
+        let engine = Self::resolve_engine(&cfg, ranks)?;
+        // After an artifact->native fallback the run trains mlp_tiny, not
+        // the requested artifact model; record what actually ran so the
+        // metrics header / provenance JSON can't mislabel the data.
+        if matches!(engine, Engine::Native { .. }) && !cfg.model.starts_with("mlp") {
+            cfg.model = "mlp_tiny".into();
+        }
+        let (d, tensors, params) = match &engine {
+            Engine::Native { mlp, .. } => {
+                (mlp.dim(), mlp.specs().to_vec(), mlp.init(cfg.seed))
+            }
+            Engine::Artifact { rt, model, .. } => {
+                let layout = rt.meta(model)?.layout()?;
+                let flat = layout.init_flat(cfg.seed);
+                (layout.d_padded, layout.tensors, flat)
+            }
+        };
+
+        let opt = optim::build(cfg.optimizer, d, &tensors, cfg.weight_decay);
+        let reducer = build_reducer(cfg.reduce, d, ranks, SparseReduceConfig::default());
+        let pool = if cfg.workers == 0 { ExecPool::auto() } else { ExecPool::new(cfg.workers) };
+        Ok(Self {
+            cfg,
+            ranks,
+            engine,
+            reducer,
+            opt,
+            params,
+            d,
+            tensors,
+            agg: vec![0.0; d],
+            pool,
+            t: 0,
+            wire_bytes: 0,
+        })
+    }
+
+    fn resolve_engine(cfg: &TrainConfig, ranks: usize) -> Result<Engine> {
+        // Explicit native model names skip the artifact runtime entirely —
+        // but a typo'd mlp name must not silently train a different preset.
+        if cfg.model.starts_with("mlp") && !super::replica::is_native_model(&cfg.model) {
+            bail!(
+                "dist: unknown native model {} (available: mlp_tiny, mlp_small)",
+                cfg.model
+            );
+        }
+        if !cfg.model.starts_with("mlp") {
+            match Runtime::load(&cfg.artifacts_dir) {
+                Ok(rt) if runtime::engine_available() && rt.has(&cfg.model) => {
+                    let meta = rt.meta(&cfg.model)?.clone();
+                    let d_padded = meta.layout()?.d_padded;
+                    let replicas = (0..ranks)
+                        .map(|r| ArtifactReplica::new(r, &meta, cfg.seed, d_padded))
+                        .collect::<Result<Vec<_>>>()?;
+                    return Ok(Engine::Artifact { rt, model: cfg.model.clone(), replicas });
+                }
+                Ok(_) if runtime::engine_available() => {
+                    bail!("dist: model artifact {} not found in {}", cfg.model, cfg.artifacts_dir)
+                }
+                _ => {
+                    eprintln!(
+                        "[dist] artifact runtime unavailable for model {} — \
+                         falling back to the native mlp_tiny workload",
+                        cfg.model
+                    );
+                }
+            }
+        }
+        let spec = native_model_spec(&cfg.model);
+        let mlp = Mlp::new(spec.sizes.clone());
+        let d = mlp.dim();
+        let replicas =
+            (0..ranks).map(|r| NativeReplica::new(r, &spec, cfg.seed, d)).collect();
+        Ok(Engine::Native { mlp, spec, replicas })
+    }
+
+    /// Whether the native (artifact-free) engine is driving the replicas.
+    pub fn is_native(&self) -> bool {
+        matches!(self.engine, Engine::Native { .. })
+    }
+
+    /// Flat parameter dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Current parameters (host copy).
+    pub fn params_vec(&self) -> Vec<f32> {
+        self.params.clone()
+    }
+
+    /// Replace parameters (checkpoint resume); the length must match.
+    pub fn set_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.d {
+            bail!(
+                "dist set_params: {} values, but the model has d = {} — \
+                 checkpoint does not match this model",
+                flat.len(),
+                self.d
+            );
+        }
+        self.params.copy_from_slice(flat);
+        Ok(())
+    }
+
+    /// Paper-dtype optimizer state bytes.
+    pub fn opt_state_bytes(&self) -> usize {
+        self.opt.paper_state_bytes()
+    }
+
+    /// Paper-dtype bytes of per-rank reducer residual state (all ranks).
+    pub fn reducer_state_bytes(&self) -> usize {
+        self.reducer.residual_state_bytes()
+    }
+
+    /// Total paper-dtype bytes put on the wire so far (all ranks).
+    pub fn wire_bytes_total(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    /// Reducer display name.
+    pub fn reducer_name(&self) -> String {
+        self.reducer.name()
+    }
+
+    /// One synchronous data-parallel step; returns the mean replica loss.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        self.t += 1;
+
+        // 1. local gradients on every rank
+        let loss = match &mut self.engine {
+            Engine::Native { mlp, spec, replicas } => {
+                let params = &self.params[..];
+                let mlp = &*mlp;
+                let spec = &*spec;
+                // Group replicas so at most `workers` threads run, per the
+                // ExecPool convention (callers build <= workers shards).
+                let per = replicas.len().div_ceil(self.pool.workers().min(replicas.len()));
+                let shards: Vec<&mut [NativeReplica]> = replicas.chunks_mut(per).collect();
+                self.pool.run_shards(shards, |_, group| {
+                    for r in group {
+                        r.local_step(mlp, spec, params);
+                    }
+                });
+                replicas.iter().map(|r| r.last_loss).sum::<f32>() / replicas.len() as f32
+            }
+            Engine::Artifact { rt, model, replicas } => {
+                let plit = lit_f32(&self.params, &[self.d])?;
+                for r in replicas.iter_mut() {
+                    r.local_step(rt, model, &plit)?;
+                }
+                replicas.iter().map(|r| r.last_loss).sum::<f32>() / replicas.len() as f32
+            }
+        };
+
+        // 2. gradient exchange
+        let grads: Vec<&[f32]> = match &self.engine {
+            Engine::Native { replicas, .. } => {
+                replicas.iter().map(|r| r.grads.as_slice()).collect()
+            }
+            Engine::Artifact { replicas, .. } => {
+                replicas.iter().map(|r| r.grads.as_slice()).collect()
+            }
+        };
+        self.reducer.reduce(&grads, &mut self.agg, &self.pool);
+        self.wire_bytes += (self.ranks * self.reducer.wire_bytes_per_rank()) as u64;
+
+        // 3. shared optimizer step over the real tensor boundaries
+        optim::step_with_layout(
+            self.opt.as_mut(),
+            &self.tensors,
+            self.d,
+            &mut self.params,
+            &self.agg,
+            lr,
+            &self.pool,
+        );
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps, logging to `logger`.
+    pub fn train(&mut self, logger: &mut MetricsLogger) -> Result<()> {
+        logger.log_header(self.cfg.to_json())?;
+        let steps = self.cfg.steps;
+        for step in 1..=steps {
+            let lr = self.cfg.schedule.lr(step);
+            let loss = self.step(lr)?;
+            if !loss.is_finite() {
+                bail!("non-finite loss at step {step}");
+            }
+            logger.log_step(step, loss, lr)?;
+            if step % self.cfg.log_every == 0 || step == steps {
+                eprintln!(
+                    "[dist x{} {} {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e} wire {} MB",
+                    self.ranks,
+                    reducer_name(self.cfg.reduce),
+                    crate::coordinator::config::optimizer_name(self.cfg.optimizer),
+                    self.wire_bytes / (1 << 20),
+                );
+            }
+        }
+        logger.log_record(json::obj(vec![
+            ("final_loss", json::num(logger.tail_loss(10) as f64)),
+            ("opt_state_bytes", json::num(self.opt_state_bytes() as f64)),
+            ("ranks", json::num(self.ranks as f64)),
+            ("reducer", json::s(&self.reducer.name())),
+            ("wire_bytes_total", json::num(self.wire_bytes as f64)),
+            ("reducer_state_bytes", json::num(self.reducer_state_bytes() as f64)),
+        ]))?;
+        logger.flush()?;
+        Ok(())
+    }
+
+    /// Persist a params-only checkpoint through the coordinator format.
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        Checkpoint { step: self.t, params: self.params.clone(), opt: None }.save(path)
+    }
+
+    /// Resume parameters + step counter from a checkpoint. Params-only
+    /// initialization: optimizer/reducer state, the LR schedule position,
+    /// and the replicas' data streams are NOT fast-forwarded (the same
+    /// limitation as the single-process resume path) — `t` resumes for
+    /// provenance, while `train()` runs its configured steps from fresh
+    /// streams.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        self.set_params(&ck.params)?;
+        self.t = ck.step;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::TrainConfig;
+    use crate::coordinator::schedule::LrSchedule;
+    use crate::dist::reducer::ReducerKind;
+    use crate::optim::OptimizerKind;
+
+    fn cfg(ranks: usize, reduce: ReducerKind, steps: u64) -> TrainConfig {
+        TrainConfig {
+            model: "mlp_tiny".into(),
+            optimizer: OptimizerKind::MicroAdam,
+            schedule: LrSchedule::Const { lr: 3e-3 },
+            steps,
+            seed: 7,
+            log_every: 10_000,
+            workers: 2,
+            ranks,
+            reduce,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dist_trainer_trains_native_eftopk() {
+        let mut t = DistTrainer::new(cfg(4, ReducerKind::EfTopK, 40)).unwrap();
+        assert!(t.is_native());
+        let mut logger = MetricsLogger::new("").unwrap();
+        t.train(&mut logger).unwrap();
+        assert_eq!(logger.history.len(), 40);
+        assert!(logger.tail_loss(5).is_finite());
+        assert!(t.wire_bytes_total() > 0);
+        assert!(t.reducer_state_bytes() > 0);
+    }
+
+    #[test]
+    fn set_params_rejects_wrong_length() {
+        let mut t = DistTrainer::new(cfg(2, ReducerKind::Dense, 1)).unwrap();
+        let d = t.dim();
+        assert!(t.set_params(&vec![0.0; d + 1]).is_err());
+        assert!(t.set_params(&vec![0.0; d]).is_ok());
+    }
+
+    #[test]
+    fn grad_accum_is_rejected() {
+        let mut c = cfg(2, ReducerKind::Dense, 1);
+        c.grad_accum = 2;
+        assert!(DistTrainer::new(c).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_params() {
+        let path = "/tmp/microadam_dist_ck_test.bin";
+        let mut a = DistTrainer::new(cfg(2, ReducerKind::EfTopK, 5)).unwrap();
+        let mut logger = MetricsLogger::new("").unwrap();
+        a.train(&mut logger).unwrap();
+        a.save_checkpoint(path).unwrap();
+        let mut b = DistTrainer::new(cfg(2, ReducerKind::EfTopK, 5)).unwrap();
+        b.load_checkpoint(path).unwrap();
+        assert_eq!(b.t, 5);
+        assert_eq!(a.params_vec(), b.params_vec());
+        let _ = std::fs::remove_file(path);
+    }
+}

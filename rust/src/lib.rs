@@ -19,6 +19,11 @@
 //! * **[`exec`]** — the block-sharded parallel step engine: scoped-thread
 //!   worker pool + per-worker scratch arenas behind the fused
 //!   dequantize/Top-K/re-quantize/AdamStats/update pass.
+//! * **[`dist`]** — the in-process multi-replica data-parallel engine:
+//!   per-rank data shards, pluggable compressed gradient exchange
+//!   (dense / Top-K / Top-K + quantized error feedback) and the
+//!   [`dist::DistTrainer`] loop behind `microadam train --ranks N
+//!   --reduce eftopk`.
 //!
 //! Quickstart (`no_run`: doctest binaries don't inherit the rpath to the
 //! image's libstdc++; `cargo run --example quickstart` exercises this path):
@@ -33,6 +38,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod exec;
 pub mod linalg;
 pub mod memory;

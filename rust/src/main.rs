@@ -18,6 +18,7 @@ use microadam::coordinator::config::{parse_optimizer, OptBackend, TrainConfig};
 use microadam::coordinator::metrics::MetricsLogger;
 use microadam::coordinator::schedule::LrSchedule;
 use microadam::coordinator::trainer::Trainer;
+use microadam::dist::{parse_reducer, DistTrainer};
 use microadam::runtime::Runtime;
 
 struct Args {
@@ -75,7 +76,11 @@ USAGE:
                     [--warmup N] [--weight-decay F] [--seed N] [--grad-accum N]
                     [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
                     [--checkpoint path.bin]
-  microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|all>
+                    [--ranks N] [--reduce dense|topk|eftopk]
+                      (--ranks > 1, or any --reduce, routes through the
+                       data-parallel engine; artifact-free models use the
+                       native mlp_tiny/mlp_small workloads)
+  microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|dist|all>
                     [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
   microadam list    [--artifacts artifacts]
   microadam selftest [--artifacts artifacts]
@@ -133,6 +138,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.weight_decay = args.get_f32("weight-decay", cfg.weight_decay)?;
     cfg.grad_accum = args.get_u64("grad-accum", cfg.grad_accum as u64)? as usize;
     cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
+    cfg.ranks = (args.get_u64("ranks", cfg.ranks as u64)? as usize).max(1);
+    if let Some(v) = args.get("reduce") {
+        cfg.reduce = parse_reducer(v)?;
+    }
     if let Some(v) = args.get("out") {
         cfg.out = v.into();
     }
@@ -150,6 +159,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         other => bail!("--schedule {other}: expected const|warmup-cosine"),
     };
+
+    // --ranks > 1 (or an explicit --ranks/--reduce flag) routes through the
+    // data-parallel engine; plain single-process training is unchanged.
+    if cfg.ranks > 1 || args.get("ranks").is_some() || args.get("reduce").is_some() {
+        return cmd_train_dist(args, cfg);
+    }
 
     let mut trainer = Trainer::new(cfg)?;
     let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
@@ -173,6 +188,39 @@ fn cmd_train(args: &Args) -> Result<()> {
         };
         ck.save(path)?;
         println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
+    let mut trainer = DistTrainer::new(cfg)?;
+    let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
+    let t0 = std::time::Instant::now();
+    trainer.train(&mut logger)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {} ranks x {} steps ({}) in {:.1}s ({:.2} steps/s), loss {:.4} -> {:.4}",
+        trainer.ranks,
+        trainer.cfg.steps,
+        trainer.reducer_name(),
+        dt,
+        trainer.cfg.steps as f64 / dt,
+        logger.first_loss(),
+        logger.tail_loss(10),
+    );
+    println!(
+        "communicated {:.2} MB total ({} B/rank/step), opt state {} B, reducer residual {} B",
+        trainer.wire_bytes_total() as f64 / (1u64 << 20) as f64,
+        trainer.wire_bytes_total() / (trainer.ranks as u64 * trainer.cfg.steps.max(1)),
+        trainer.opt_state_bytes(),
+        trainer.reducer_state_bytes(),
+    );
+    if let Some(path) = args.get("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        println!(
+            "checkpoint written to {path} (params-only: dist does not snapshot \
+             optimizer/reducer state yet)"
+        );
     }
     Ok(())
 }
@@ -206,6 +254,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
             let model = args.get("model").unwrap_or("cnn_tiny");
             bench::run_table4(&artifacts, &out_dir, model, args.get_u64("steps", 150)?)?
         }
+        "dist" => {
+            bench::run_dist_sweep(&out_dir, args.get_u64("steps", 60)?)?;
+        }
         "all" => {
             bench::run_memory()?;
             bench::run_fig1(&out_dir, 1500)?;
@@ -217,6 +268,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
             bench::run_table2(&artifacts, &out_dir, "lm_tiny", steps)?;
             bench::run_table3(&artifacts, &out_dir, "cls_tiny", steps)?;
             bench::run_table4(&artifacts, &out_dir, "cnn_tiny", steps)?;
+            bench::run_dist_sweep(&out_dir, 60)?;
         }
         other => bail!("unknown experiment {other}"),
     }

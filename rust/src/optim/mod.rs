@@ -88,6 +88,63 @@ pub trait Optimizer {
     fn t(&self) -> u64;
 }
 
+/// Carve a flat (padded) parameter/gradient pair into consecutive
+/// [`TensorChunk`]s at the layout's real tensor boundaries, plus one tail
+/// chunk for the block padding beyond `d_model`. The chunks concatenate
+/// back to exactly `d_padded` elements, as [`Optimizer::step_multi`]
+/// requires. `params`/`grads` must both have length `d_padded`.
+pub fn layout_chunks<'a>(
+    tensors: &[TensorSpec],
+    d_padded: usize,
+    mut params: &'a mut [f32],
+    mut grads: &'a [f32],
+) -> Vec<TensorChunk<'a>> {
+    assert_eq!(params.len(), d_padded);
+    assert_eq!(grads.len(), d_padded);
+    let mut chunks = Vec::with_capacity(tensors.len() + 1);
+    let mut off = 0usize;
+    for t in tensors {
+        // The sequential carve is only correct for contiguous, in-order
+        // layouts; a gap or reorder would silently mislabel every chunk.
+        assert_eq!(t.offset, off, "tensor {} not contiguous at offset {off}", t.name);
+        let n = t.size();
+        let (p, pr) = params.split_at_mut(n);
+        params = pr;
+        let (g, gr) = grads.split_at(n);
+        grads = gr;
+        chunks.push(TensorChunk { params: p, grads: g });
+        off += n;
+    }
+    if off < d_padded {
+        chunks.push(TensorChunk { params, grads });
+    }
+    chunks
+}
+
+/// Step `opt` over a flat padded parameter/gradient pair using the
+/// layout's real tensor boundaries. Single-tensor layouts keep the
+/// zero-copy flat-chunk fast path; multi-tensor layouts route through
+/// [`layout_chunks`]. Shared by the single-process trainer and the
+/// data-parallel [`crate::dist::DistTrainer`], so the routing policy
+/// cannot diverge between them.
+pub fn step_with_layout(
+    opt: &mut dyn Optimizer,
+    tensors: &[TensorSpec],
+    d_padded: usize,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    pool: &ExecPool,
+) {
+    if tensors.len() <= 1 {
+        let mut chunks = [TensorChunk { params, grads }];
+        opt.step_multi(&mut chunks, lr, pool);
+    } else {
+        let mut chunks = layout_chunks(tensors, d_padded, params, grads);
+        opt.step_multi(&mut chunks, lr, pool);
+    }
+}
+
 /// Which optimizers a harness can instantiate by name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimizerKind {
@@ -249,6 +306,37 @@ mod tests {
         let mut chunks = [TensorChunk { params: &mut pb[..], grads: &g }];
         b.step_multi(&mut chunks, 1e-2, &pool);
         assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn layout_chunks_cover_padded_vector_and_match_flat_step() {
+        // Three tensors (56 params) padded to 64: chunks must cover all 64
+        // and stepping through them must equal the flat trajectory.
+        use crate::coordinator::layout::ParamLayout;
+        use crate::coordinator::layout::Init;
+        let layout = ParamLayout::new(
+            vec![
+                TensorSpec::new("w1", &[4, 8], 0),
+                TensorSpec::new("b1", &[8], 32),
+                TensorSpec::new("w2", &[8, 2], 40),
+            ],
+            vec![(Init::Normal, 0.02), (Init::Zeros, 0.0), (Init::Normal, 0.1)],
+            64,
+        );
+        let pool = ExecPool::new(2);
+        let mut flat = build(OptimizerKind::MicroAdam, 64, &layout.tensors, 0.0);
+        let mut multi = build(OptimizerKind::MicroAdam, 64, &layout.tensors, 0.0);
+        let mut p_flat = testutil::randvec(80, 64, 1.0);
+        let mut p_multi = p_flat.clone();
+        for s in 0..6 {
+            let g = testutil::randvec(90 + s, 64, 1.0);
+            flat.step(&mut p_flat, &g, 1e-2);
+            let mut chunks = layout_chunks(&layout.tensors, 64, &mut p_multi, &g);
+            assert_eq!(chunks.len(), 4); // 3 tensors + padding tail
+            assert_eq!(chunks.iter().map(|c| c.params.len()).sum::<usize>(), 64);
+            multi.step_multi(&mut chunks, 1e-2, &pool);
+        }
+        assert_eq!(p_flat, p_multi);
     }
 
     #[test]

@@ -113,6 +113,13 @@ impl Runtime {
     }
 }
 
+/// Whether this build can actually execute artifacts (`true`: real PJRT).
+/// Callers that have a native fallback (e.g. [`crate::dist`]) check this
+/// up front instead of failing at the first `execute_named`.
+pub fn engine_available() -> bool {
+    true
+}
+
 fn log_compile(name: &str, dt: std::time::Duration) {
     if std::env::var_os("MICROADAM_QUIET").is_none() {
         eprintln!("[runtime] compiled {name} in {:.2}s", dt.as_secs_f32());

@@ -94,6 +94,13 @@ impl Runtime {
     }
 }
 
+/// Whether this build can actually execute artifacts (`false`: stub).
+/// Callers that have a native fallback (e.g. [`crate::dist`]) check this
+/// up front instead of failing at the first `execute_named`.
+pub fn engine_available() -> bool {
+    false
+}
+
 fn no_pjrt(name: &str) -> anyhow::Error {
     anyhow!(
         "artifact {name}: executing AOT artifacts needs the PJRT runtime — \

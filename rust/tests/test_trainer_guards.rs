@@ -1,0 +1,122 @@
+//! Trainer input-validation guards (checkpoint-resume corruption, empty
+//! eval, NaN logits). These construct a real `Trainer` over a
+//! manifest-only fixture directory — no compiled artifacts and no PJRT
+//! needed, because none of the guarded paths reach `execute_named`.
+
+use microadam::coordinator::config::{OptBackend, TrainConfig};
+use microadam::coordinator::trainer::Trainer;
+use microadam::optim::OptimizerKind;
+
+/// A minimal manifest: a transformer_cls fwd/bwd entry (layout: one 8x7
+/// tensor padded to 64) + its logits artifact, and an lm entry for the
+/// classifier-only eval guard.
+const MANIFEST: &str = r#"{
+  "artifacts": {
+    "cls_fixture": {
+      "file": "cls_fixture.hlo",
+      "kind": "fwdbwd",
+      "model": "transformer_cls",
+      "inputs": [
+        {"name": "params", "dtype": "float32", "shape": [64]},
+        {"name": "tokens", "dtype": "int32", "shape": [4, 8]},
+        {"name": "labels", "dtype": "int32", "shape": [4]}
+      ],
+      "outputs": ["loss", "grads"],
+      "config": {"vocab": 32, "n_classes": 3},
+      "layout": {
+        "d_padded": 64,
+        "params": [
+          {"name": "w", "shape": [8, 7], "offset": 0, "init": "normal", "init_std": 0.02}
+        ]
+      }
+    },
+    "cls_fixture_logits": {
+      "file": "cls_fixture_logits.hlo",
+      "kind": "infer",
+      "inputs": [
+        {"name": "params", "dtype": "float32", "shape": [64]},
+        {"name": "tokens", "dtype": "int32", "shape": [4, 8]}
+      ],
+      "outputs": ["logits"]
+    },
+    "lm_fixture": {
+      "file": "lm_fixture.hlo",
+      "kind": "fwdbwd",
+      "model": "transformer_lm",
+      "inputs": [
+        {"name": "params", "dtype": "float32", "shape": [64]},
+        {"name": "tokens", "dtype": "int32", "shape": [2, 16]},
+        {"name": "targets", "dtype": "int32", "shape": [2, 16]}
+      ],
+      "outputs": ["loss", "grads"],
+      "config": {"vocab": 32},
+      "layout": {
+        "d_padded": 64,
+        "params": [
+          {"name": "w", "shape": [8, 7], "offset": 0, "init": "normal", "init_std": 0.02}
+        ]
+      }
+    },
+    "lm_fixture_logits": {
+      "file": "lm_fixture_logits.hlo",
+      "kind": "infer",
+      "inputs": [
+        {"name": "params", "dtype": "float32", "shape": [64]},
+        {"name": "tokens", "dtype": "int32", "shape": [2, 16]}
+      ],
+      "outputs": ["logits"]
+    }
+  }
+}"#;
+
+/// Write the fixture manifest into a fresh temp dir and return its path.
+fn fixture_dir(tag: &str) -> String {
+    let dir = format!("/tmp/microadam_guard_fixture_{tag}_{}", std::process::id());
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(format!("{dir}/manifest.json"), MANIFEST).unwrap();
+    dir
+}
+
+fn fixture_trainer(tag: &str, model: &str) -> (Trainer, String) {
+    let dir = fixture_dir(tag);
+    let cfg = TrainConfig {
+        model: model.into(),
+        optimizer: OptimizerKind::MicroAdam,
+        backend: OptBackend::Native,
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    };
+    (Trainer::new(cfg).unwrap(), dir)
+}
+
+#[test]
+fn set_params_rejects_length_mismatch() {
+    let (mut trainer, dir) = fixture_trainer("setparams", "cls_fixture");
+    // too short (truncated checkpoint), too long (foreign model)
+    for n in [0usize, 63, 65, 128] {
+        let err = trainer.set_params(&vec![0.0; n]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("does not match"), "n={n}: {msg}");
+        assert!(msg.contains("64"), "n={n}: {msg}");
+    }
+    // the exact length is accepted
+    trainer.set_params(&vec![0.5; 64]).unwrap();
+    assert_eq!(trainer.params_vec().unwrap(), vec![0.5; 64]);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn eval_accuracy_rejects_empty_eval() {
+    let (mut trainer, dir) = fixture_trainer("emptyeval", "cls_fixture");
+    let err = trainer.eval_accuracy(0).unwrap_err();
+    assert!(format!("{err:#}").contains("empty eval"), "{err:#}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn eval_accuracy_is_classifier_only() {
+    let (mut trainer, dir) = fixture_trainer("lmeval", "lm_fixture");
+    let err = trainer.eval_accuracy(1).unwrap_err();
+    assert!(format!("{err:#}").contains("classifier"), "{err:#}");
+    let _ = std::fs::remove_dir_all(dir);
+}
