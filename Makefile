@@ -1,11 +1,16 @@
 # MicroAdam reproduction — build/test lanes.
 #
-#   make ci        default lane: XLA-free build + tests (runs anywhere)
-#   make ci-pjrt   PJRT-gated lane: `cargo test --features pjrt` where the
-#                  vendored xla crate exists (see rust/Cargo.toml); skips
-#                  with a notice elsewhere, so CI can always invoke it
-#   make artifacts AOT-lower the L2 graphs (needs python/ + JAX; only for
-#                  machines building the artifact set)
+#   make ci          default lane: XLA-free build + tests (runs anywhere)
+#   make ci-pjrt     PJRT-gated lane: `cargo test --features pjrt` where the
+#                    vendored xla crate exists (see rust/Cargo.toml); skips
+#                    with a notice elsewhere, so CI can always invoke it
+#   make bench-smoke few-second perf probe: bench_optimizer_step in smoke
+#                    mode (writes $(BENCH_JSON): steps/s, resident
+#                    bytes/param, wire bytes) + the artifact-free
+#                    perf_probe --native row, so every PR can record the
+#                    perf trajectory
+#   make artifacts   AOT-lower the L2 graphs (needs python/ + JAX; only for
+#                    machines building the artifact set)
 #
 # The pjrt lane is the entry point ROADMAP's "PJRT-gated CI job" item names:
 # it keeps test_artifact_parity exercised on the baked image while the
@@ -13,8 +18,10 @@
 
 # Where the vendored xla crate lives on the baked image.
 XLA_RS ?= /opt/xla-rs
+# Where the smoke lane writes its JSON record.
+BENCH_JSON ?= BENCH_SMOKE.json
 
-.PHONY: ci ci-pjrt artifacts
+.PHONY: ci ci-pjrt bench-smoke artifacts
 
 ci:
 	cargo build --release
@@ -32,6 +39,12 @@ ci-pjrt:
 		exit 1; \
 	fi; \
 	cargo build --release --features pjrt && cargo test -q --features pjrt
+
+bench-smoke:
+	MICROADAM_BENCH_SMOKE=1 MICROADAM_BENCH_JSON=$(BENCH_JSON) \
+		cargo bench --bench bench_optimizer_step
+	cargo run --release --bin perf_probe -- --native 262144 5
+	@echo "bench-smoke: record in $(BENCH_JSON)"
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts

@@ -13,9 +13,15 @@ use microadam::optim::OptimizerKind;
 fn main() {
     std::env::set_var("MICROADAM_QUIET", "1");
 
+    // Measured resident optimizer-state footprints (allocated buffers, not
+    // the paper accounting): microadam's bf16 window vs the adamw/adamw8bit
+    // baselines, at a Table-2-ish dimension. Artifact-free.
+    println!("== resident optimizer-state bytes/param (measured) ==");
+    microadam::bench::resident_state_report(1 << 20);
+
     // The data-parallel ranks x reducer sweep runs on the native substrate,
     // so it needs no artifacts: bytes-on-the-wire vs loss per reducer.
-    println!("== data-parallel sweep (native, artifact-free) ==");
+    println!("\n== data-parallel sweep (native, artifact-free) ==");
     if let Err(e) = microadam::bench::run_dist_sweep("runs", 60) {
         println!("bench_e2e: dist sweep failed: {e:#}");
     }

@@ -9,7 +9,7 @@ use microadam::exec::ExecPool;
 use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
 use microadam::optim::Optimizer;
 use microadam::quant::{BucketStats, Dynamic8, Quant4};
-use microadam::topk::{topk_abs_block, SlidingWindow};
+use microadam::topk::{topk_abs_block, SlidingWindow, WinDtype};
 use microadam::util::rng::Rng;
 
 fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -58,42 +58,41 @@ fn main() {
         d8.dequantize(&codes, 256, &scales, &mut out);
     });
 
-    // AdamStats: dense z1/z2 accumulation from a full window
+    // AdamStats: dense z1/z2 accumulation from a full window, once per
+    // storage dtype — the bf16 window halves the value-stream bytes of the
+    // engine's hottest loop (f32 row kept as the bandwidth baseline)
     let m = microadam::WINDOW;
     let nb = d / block;
-    let mut win = SlidingWindow::new(m, nb, kb);
-    for row in 0..m {
-        for b in 0..nb {
-            let (wi, wv) = win.entry_mut(row, b);
-            for (j, (i, v)) in wi.iter_mut().zip(wv.iter_mut()).enumerate() {
-                *i = ((j * 97) % block) as u16;
-                *v = (j as f32 * 0.37).sin();
-            }
-        }
-        win.commit_row();
-    }
-    let w1 = win.folded_weights(m as u64, 0.9);
-    let w2 = win.folded_weights(m as u64, 0.999);
-    let mut z1 = vec![0f32; block];
-    let mut z2 = vec![0f32; block];
     let mut params = randvec(&mut rng, d);
-    time_it("adamstats + update (full window, all blocks)", 1, 9, || {
-        for b in 0..nb {
-            z1.fill(0.0);
-            z2.fill(0.0);
-            for i in 0..m {
-                let (wi, wv) = win.entry(i, b);
-                for (&j, &v) in wi.iter().zip(wv) {
-                    z1[j as usize] += w1[i] * v;
-                    z2[j as usize] += w2[i] * v * v;
+    for dtype in [WinDtype::F32, WinDtype::Bf16] {
+        let mut win = SlidingWindow::with_dtype(m, nb, kb, dtype);
+        let mut scratch = Vec::with_capacity(block);
+        let blockbuf: Vec<f32> =
+            (0..block).map(|j| (((j * 97) % block) as f32 * 0.37).sin()).collect();
+        for row in 0..m {
+            for b in 0..nb {
+                win.select_into(row, b, &blockbuf, &mut scratch);
+            }
+            win.commit_row();
+        }
+        let w1 = win.folded_weights(m as u64, 0.9);
+        let w2 = win.folded_weights(m as u64, 0.999);
+        let mut z1 = vec![0f32; block];
+        let mut z2 = vec![0f32; block];
+        time_it(&format!("adamstats + update (full window, {dtype:?} vals)"), 1, 9, || {
+            for b in 0..nb {
+                z1.fill(0.0);
+                z2.fill(0.0);
+                for i in 0..m {
+                    win.accumulate_stats(i, b, w1[i], w2[i], &mut z1, &mut z2);
+                }
+                let base = b * block;
+                for j in 0..block {
+                    params[base + j] -= 1e-3 * z1[j] / (1e-8 + z2[j].sqrt());
                 }
             }
-            let base = b * block;
-            for j in 0..block {
-                params[base + j] -= 1e-3 * z1[j] / (1e-8 + z2[j].sqrt());
-            }
-        }
-    });
+        });
+    }
     std::hint::black_box(&params);
     std::hint::black_box(&out);
 

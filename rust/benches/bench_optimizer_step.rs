@@ -1,22 +1,48 @@
 //! Per-optimizer step-time benchmark (paper Tables 1/2 runtime column
 //! analogue at the micro level): every native optimizer at two problem
 //! sizes, then the sequential-vs-parallel scaling of the block-sharded
-//! fused step engine at d = 1M. criterion is not in the offline crate set;
-//! uses the in-repo median-of-runs harness.
+//! fused step engine. criterion is not in the offline crate set; uses the
+//! in-repo median-of-runs harness.
 //!
 //! Run: `cargo bench --bench bench_optimizer_step`
+//!
+//! Smoke lane (`make bench-smoke`): `MICROADAM_BENCH_SMOKE=1` shrinks the
+//! sweep to a few seconds, and `MICROADAM_BENCH_JSON=path` writes a
+//! `BENCH_*.json` record (steps/s per engine configuration, measured
+//! resident state bytes/param, bf16 window bytes/value, per-rank wire
+//! bytes) so the perf trajectory is recorded across PRs.
 
 use microadam::bench;
 
 fn main() {
+    let smoke = std::env::var("MICROADAM_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+
     println!("== optimizer step micro-benchmark (native backends) ==");
-    bench::bench_optimizer_steps(4096, 21);
-    bench::bench_optimizer_steps(262144, 11);
+    if smoke {
+        bench::bench_optimizer_steps(4096, 5);
+    } else {
+        bench::bench_optimizer_steps(4096, 21);
+        bench::bench_optimizer_steps(262144, 11);
+    }
 
     println!("\n== sequential vs parallel (fused block-sharded engine) ==");
-    bench::bench_parallel_scaling(1 << 20, 7);
+    let d_scale = if smoke { 1 << 18 } else { 1 << 20 };
+    let iters = if smoke { 3 } else { 7 };
+    let rows = bench::bench_parallel_scaling(d_scale, iters);
+
+    if let Ok(path) = std::env::var("MICROADAM_BENCH_JSON") {
+        if !path.is_empty() {
+            let record = bench::smoke_json(d_scale, &rows);
+            match std::fs::write(&path, record.to_string()) {
+                Ok(()) => println!("\nbench record written to {path}"),
+                Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+            }
+        }
+    }
 
     println!("\nexpectation (paper §3.1-3.2): MicroAdam's step stays within a small factor of");
     println!("dense AdamW despite recomputing statistics from the window (Table 2 runtime),");
-    println!("and the fused engine scales near-linearly across blocks until memory-bound.");
+    println!("and the fused engine scales near-linearly across blocks until memory-bound —");
+    println!("with the persistent pool, multi-worker wins persist down to small d (no");
+    println!("per-step thread-spawn tax) and the bf16 window halves AdamStats traffic.");
 }

@@ -50,6 +50,14 @@ pub fn run_memory() -> Result<()> {
         "\nm_max vs AdamW-8bit at k=d/100 (§3.2 Discussion): {:.1}",
         memory::max_window_vs_adamw8bit(d, d.div_ceil(100))
     );
+    // Measured (not accounted) resident window storage: the bf16 change
+    // makes the paper's 2 B/value physical.
+    let probe = MicroAdam::new(1 << 15, MicroAdamConfig::default());
+    println!(
+        "measured sliding-window value storage: {} B/value (window resident {} B at d=32768)",
+        probe.window_value_bytes(),
+        probe.window_state_bytes()
+    );
     println!("\nResNet state sizes (Table 4 column):");
     for (name, dm) in [("ResNet-18", memory::RESNET18_PARAMS), ("ResNet-50", memory::RESNET50_PARAMS)] {
         println!(
@@ -618,18 +626,24 @@ pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
     med
 }
 
+/// One measured (label, median seconds) row of the scaling benchmark.
+pub type BenchRow = (String, f64);
+
 /// Sequential-vs-parallel step throughput for the block-sharded fused
 /// engine (MicroAdam + the dense baselines routed through the same pool).
 ///
 /// Prints the 4-pass reference, the fused single-pass at 1 worker, and the
-/// fused engine at 2/4/8 workers, with speedups against the sequential
-/// reference. Paper context: §3.2 claims "similar running time to Adam";
-/// the fused+sharded path is what closes that gap on CPU.
-pub fn bench_parallel_scaling(d: usize, iters: usize) {
+/// fused engine at 2/4/8 workers (persistent zero-spawn pool), with
+/// speedups against the sequential reference; returns the measured rows so
+/// callers can serialize them (`BENCH_*.json`). Paper context: §3.2 claims
+/// "similar running time to Adam"; the fused+sharded path is what closes
+/// that gap on CPU.
+pub fn bench_parallel_scaling(d: usize, iters: usize) -> Vec<BenchRow> {
     use crate::exec::ExecPool;
     use crate::optim::adamw::{AdamW, AdamWConfig};
     use crate::optim::adamw8bit::{AdamW8bit, AdamW8bitConfig};
 
+    let mut rows: Vec<BenchRow> = Vec::new();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let grads: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
     // warm every variant past the m-step window fill so steady-state
@@ -642,6 +656,7 @@ pub fn bench_parallel_scaling(d: usize, iters: usize) {
     let t_ref = time_it("microadam step_reference (4-pass sweep)", warmup, iters, || {
         opt.step_reference(&mut params, &grads, 1e-3)
     });
+    rows.push(("microadam_reference".into(), t_ref));
     let mut speedup4 = 0.0;
     for workers in [1usize, 2, 4, 8] {
         let pool = ExecPool::new(workers);
@@ -653,12 +668,14 @@ pub fn bench_parallel_scaling(d: usize, iters: usize) {
         if workers == 4 {
             speedup4 = t_ref / t;
         }
+        rows.push((format!("microadam_fused_w{workers}"), t));
         println!("    -> {:.2}x vs sequential reference", t_ref / t);
     }
 
     let mut adamw = AdamW::new(d, AdamWConfig::default());
     let mut params = vec![0.1f32; d];
     let t_seq = time_it("adamw sequential", 2, iters, || adamw.step(&mut params, &grads, 1e-3));
+    rows.push(("adamw_seq".into(), t_seq));
     let pool = ExecPool::auto();
     let t_par = time_it(
         &format!("adamw sharded ({} workers)", pool.workers()),
@@ -666,23 +683,103 @@ pub fn bench_parallel_scaling(d: usize, iters: usize) {
         iters,
         || adamw.step_sharded(&mut params, &grads, 1e-3, &pool),
     );
+    rows.push((format!("adamw_sharded_w{}", pool.workers()), t_par));
     println!("    -> {:.2}x", t_seq / t_par);
 
     let mut adam8 = AdamW8bit::new(d, AdamW8bitConfig::default());
     let mut params = vec![0.1f32; d];
     let t_seq = time_it("adamw8bit sequential", 2, iters, || adam8.step(&mut params, &grads, 1e-3));
+    rows.push(("adamw8bit_seq".into(), t_seq));
     let t_par = time_it(
         &format!("adamw8bit sharded ({} workers)", pool.workers()),
         2,
         iters,
         || adam8.step_sharded(&mut params, &grads, 1e-3, &pool),
     );
+    rows.push((format!("adamw8bit_sharded_w{}", pool.workers()), t_par));
     println!("    -> {:.2}x", t_seq / t_par);
 
     println!(
         "\nmicroadam fused 4-worker speedup vs sequential reference: {speedup4:.2}x \
          (acceptance: >= 2x for d >= 1M on >= 4 cores; this machine has {cores})"
     );
+    rows
+}
+
+/// Measured resident optimizer-state bytes/param for the Table-2 trio —
+/// allocated buffers, not the paper accounting. Printed by `bench_e2e` and
+/// folded into the smoke-lane JSON; returns `(name, resident bytes,
+/// paper bytes)` per optimizer.
+pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
+    use crate::coordinator::layout::TensorSpec;
+    let side = (d as f64).sqrt() as usize;
+    let specs = vec![TensorSpec::new("w", &[side, side], 0)];
+    println!("\nresident optimizer-state bytes (measured allocations), d = {d}:");
+    println!("{:<22} {:>14} {:>10} {:>14} {:>10}", "optimizer", "resident B", "B/param", "paper B", "B/param");
+    let mut out = Vec::new();
+    for kind in [OptimizerKind::MicroAdam, OptimizerKind::AdamW, OptimizerKind::AdamW8bit] {
+        let opt = optim::build(kind, d, &specs, 0.0);
+        let resident = opt.state_bytes();
+        let paper = opt.paper_state_bytes();
+        println!(
+            "{:<22} {:>14} {:>10.3} {:>14} {:>10.3}",
+            opt.name(),
+            resident,
+            optim::resident_bytes_per_param(opt.as_ref(), d),
+            paper,
+            paper as f64 / d as f64
+        );
+        out.push((opt.name(), resident, paper));
+    }
+    let probe = MicroAdam::new(d, MicroAdamConfig::default());
+    println!(
+        "microadam window: {} B resident, {} B/value (bf16)",
+        probe.window_state_bytes(),
+        probe.window_value_bytes()
+    );
+    out
+}
+
+/// Assemble the smoke-lane `BENCH_*.json` payload: steps/s from the
+/// scaling rows, measured resident bytes/param, the bf16 window bytes per
+/// value, and the per-rank wire bytes of each reducer at this dimension.
+pub fn smoke_json(d: usize, rows: &[BenchRow]) -> crate::util::json::Json {
+    use crate::dist::{build_reducer, ReducerKind, SparseReduceConfig};
+    use crate::util::json::{self, Json};
+
+    let steps: Vec<(&str, Json)> = rows
+        .iter()
+        .map(|(name, secs)| (name.as_str(), json::num(if *secs > 0.0 { 1.0 / secs } else { 0.0 })))
+        .collect();
+    let state = resident_state_report(d);
+    let state_rows: Vec<Json> = state
+        .iter()
+        .map(|(name, bytes, paper)| {
+            json::obj(vec![
+                ("optimizer", json::s(name)),
+                ("resident_bytes", json::num(*bytes as f64)),
+                ("resident_bytes_per_param", json::num(*bytes as f64 / d as f64)),
+                ("paper_bytes", json::num(*paper as f64)),
+            ])
+        })
+        .collect();
+    let mut wires = Vec::new();
+    for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+        let r = build_reducer(kind, d, 2, SparseReduceConfig::default());
+        wires.push(json::obj(vec![
+            ("reducer", json::s(crate::dist::reducer_name(kind))),
+            ("wire_bytes_per_rank", json::num(r.wire_bytes_per_rank() as f64)),
+        ]));
+    }
+    let probe = MicroAdam::new(d, MicroAdamConfig::default());
+    json::obj(vec![
+        ("bench", json::s("smoke")),
+        ("d", json::num(d as f64)),
+        ("window_value_bytes", json::num(probe.window_value_bytes() as f64)),
+        ("steps_per_s", json::obj(steps)),
+        ("resident_state", Json::Arr(state_rows)),
+        ("wire", Json::Arr(wires)),
+    ])
 }
 
 /// Native optimizer step micro-benchmark (one row per optimizer at dim `d`).

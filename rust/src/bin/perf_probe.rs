@@ -1,19 +1,68 @@
 //! perf_probe — time one artifact in isolation (the §Perf workhorse).
 //!
-//! Usage: perf_probe <manifest-dir> <artifact-name> [iters]
+//! Usage:
+//!   perf_probe <manifest-dir> <artifact-name> [iters]
+//!   perf_probe --native [d] [iters]
 //!
-//! Builds zero-filled inputs of the manifest shapes, compiles the artifact,
-//! and reports median wall time per execute. Used to attribute e2e step
-//! time to fwd/bwd vs optimizer kernels and to sweep the L1 tile size.
+//! Artifact mode builds zero-filled inputs of the manifest shapes, compiles
+//! the artifact, and reports median wall time per execute. Used to
+//! attribute e2e step time to fwd/bwd vs optimizer kernels and to sweep the
+//! L1 tile size.
+//!
+//! `--native` needs no artifacts (it runs on the stub runtime too): it
+//! times the fused MicroAdam step at several worker counts on the
+//! persistent pool — the smoke-lane probe behind `make bench-smoke`.
 
 use anyhow::{bail, Result};
+use microadam::exec::ExecPool;
+use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
+use microadam::optim::Optimizer;
 use microadam::runtime::{lit_f32, lit_i32, lit_u8, Runtime};
 use microadam::util::rng::Rng;
 
+/// Median fused-step wall time at 1/2/4/8 workers plus the 4-pass
+/// reference, on synthetic data. Prints steps/s so the smoke lane records
+/// a throughput trajectory.
+fn native_probe(d: usize, iters: usize) {
+    println!("native fused-step probe, d = {d}, {iters} iters/row");
+    let grads: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+    let warm = microadam::WINDOW + 2;
+
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut params = vec![0.1f32; d];
+    let t_ref = microadam::bench::time_it("step_reference (4-pass)", warm, iters, || {
+        opt.step_reference(&mut params, &grads, 1e-3)
+    });
+    println!("    -> {:.1} steps/s", 1.0 / t_ref);
+
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ExecPool::new(workers);
+        let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+        let mut params = vec![0.1f32; d];
+        let t = microadam::bench::time_it(&format!("fused step ({workers} workers)"), warm, iters, || {
+            opt.step_sharded(&mut params, &grads, 1e-3, &pool)
+        });
+        println!("    -> {:.1} steps/s ({:.2}x vs reference)", 1.0 / t, t_ref / t);
+    }
+    let probe = MicroAdam::new(d, MicroAdamConfig::default());
+    println!(
+        "state: {} B resident ({:.3} B/param), window {} B/value",
+        probe.state_bytes(),
+        probe.state_bytes() as f64 / d as f64,
+        probe.window_value_bytes()
+    );
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(|a| a == "--native").unwrap_or(false) {
+        let d: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(1 << 20);
+        let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
+        native_probe(d, iters);
+        return Ok(());
+    }
     if args.len() < 2 {
-        bail!("usage: perf_probe <manifest-dir> <artifact> [iters]");
+        bail!("usage: perf_probe <manifest-dir> <artifact> [iters] | perf_probe --native [d] [iters]");
     }
     let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
     let mut rt = Runtime::load(&args[0])?;

@@ -5,8 +5,11 @@
 //! ```text
 //!   magic "MADM" | version u32 | step u64 | d u64 | params f32[d]
 //!   | has_opt u8 | [MicroAdam state: ef len u64, ef bytes, qlo/qhi f32,
-//!                   w_idx i32, w_val f32 lens + payloads, t u64]
+//!                   w_idx i32, w_val f32 lens + payloads, w_bf16 u8,
+//!                   t u64]
 //! ```
+//! Version 2 added the `w_bf16` window-dtype marker (native windows store
+//! bf16 by default since PR 3; restore refuses a silent dtype switch).
 
 use std::io::{Read, Write};
 
@@ -15,7 +18,7 @@ use anyhow::{bail, Result};
 use super::state::MicroAdamSnapshot;
 
 const MAGIC: &[u8; 4] = b"MADM";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// A checkpoint payload.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +51,7 @@ impl Checkpoint {
                 f.write_all(&(s.w_idx.len() as u64).to_le_bytes())?;
                 write_i32s(&mut f, &s.w_idx)?;
                 write_f32s(&mut f, &s.w_val)?;
+                f.write_all(&[u8::from(s.w_bf16)])?;
                 f.write_all(&s.t.to_le_bytes())?;
             }
         }
@@ -80,8 +84,10 @@ impl Checkpoint {
             let wlen = read_u64(&mut f)? as usize;
             let w_idx = read_i32s(&mut f, wlen)?;
             let w_val = read_f32s(&mut f, wlen)?;
+            let mut w_bf16 = [0u8];
+            f.read_exact(&mut w_bf16)?;
             let t = read_u64(&mut f)?;
-            Some(MicroAdamSnapshot { ef, qlo, qhi, w_idx, w_val, t })
+            Some(MicroAdamSnapshot { ef, qlo, qhi, w_idx, w_val, w_bf16: w_bf16[0] != 0, t })
         } else {
             None
         };
@@ -152,6 +158,7 @@ mod tests {
                 qhi: vec![1.0],
                 w_idx: vec![0, 3, 1, 2],
                 w_val: vec![0.1, -0.2, 0.3, -0.4],
+                w_bf16: true,
                 t: 7,
             }),
         };

@@ -107,6 +107,8 @@ impl AotMicroAdamState {
             qhi: runtime::to_f32(&self.qhi)?,
             w_idx: runtime::to_i32(&self.w_idx)?,
             w_val: runtime::to_f32(&self.w_val)?,
+            // the L2 graph keeps f32 window values
+            w_bf16: false,
             t: self.t,
         })
     }
@@ -130,7 +132,12 @@ pub struct MicroAdamSnapshot {
     pub qlo: Vec<f32>,
     pub qhi: Vec<f32>,
     pub w_idx: Vec<i32>,
+    /// Window values widened to f32 (exact for bf16-origin windows).
     pub w_val: Vec<f32>,
+    /// Whether the originating window stored bf16 (native default) or f32
+    /// (AOT state, native baseline mode). Restore refuses a dtype switch —
+    /// it would silently break the bit-exact-resume contract.
+    pub w_bf16: bool,
     pub t: u64,
 }
 

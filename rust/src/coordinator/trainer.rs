@@ -103,6 +103,15 @@ impl Opt {
             Opt::Native(o) => o.paper_state_bytes(),
         }
     }
+
+    /// Measured resident state bytes — native backends only (AOT state
+    /// lives in PJRT literals whose footprint the client owns).
+    fn resident_state_bytes(&self) -> Option<usize> {
+        match self {
+            Opt::Native(o) => Some(o.state_bytes()),
+            _ => None,
+        }
+    }
 }
 
 /// End-to-end trainer over one model artifact.
@@ -200,6 +209,12 @@ impl Trainer {
     /// Paper-dtype optimizer state footprint in bytes.
     pub fn opt_state_bytes(&self) -> usize {
         self.opt.paper_state_bytes()
+    }
+
+    /// Measured resident optimizer-state bytes (allocated buffers), when
+    /// the backend is native; `None` for AOT state held in PJRT literals.
+    pub fn opt_resident_bytes(&self) -> Option<usize> {
+        self.opt.resident_state_bytes()
     }
 
     pub fn runtime_mut(&mut self) -> &mut Runtime {

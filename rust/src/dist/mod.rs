@@ -24,10 +24,11 @@
 //!   [`crate::optim::Optimizer::step_multi`] hot path with real
 //!   per-tensor chunk boundaries.
 //!
-//! Wire/bytes accounting follows the repo's paper-dtype convention: a
-//! sparse entry costs 4 B (u16 index + bf16 value), dense f32 costs
-//! 4 B/param, and the EF residual costs what [`Quant4::state_bytes`]
-//! reports (0.5 B/param + bucket stats) per rank.
+//! Wire/bytes accounting is **physical**: the sparse reducers hold real
+//! `(u16 index, bf16 value)` slabs in RAM (4 B per entry, derived from
+//! the resident buffer lengths and asserted against the formula), dense
+//! f32 costs 4 B/param, and the EF residual costs what
+//! [`Quant4::state_bytes`] reports (0.5 B/param + bucket stats) per rank.
 //!
 //! This is a *simulation* of the transport (replicas share one address
 //! space; "bytes on the wire" are accounted, not moved through sockets) —

@@ -25,17 +25,23 @@
 //! phase shards by rank, the aggregation phase shards by block, and no
 //! float op is ever reassociated across a shard boundary.
 //!
-//! Wire-cost accounting follows the repo convention (values stay f32 in
-//! RAM, costs are reported in paper dtypes): a sparse entry costs 2 B
-//! (u16 block-relative index) + 2 B (bf16 value) = 4 B; dense f32 costs
-//! 4 B/param.
+//! The sparse reducers exchange **physical** `(u16 idx, bf16 val)` slabs:
+//! each rank's selected values are rounded to bf16 on write (selection
+//! still ranks on f32 magnitudes) and widened back on aggregation, so a
+//! sparse entry costs 2 B + 2 B = 4 B *in RAM and on the accounted wire
+//! alike* — the accounting is derived from the resident slab lengths and
+//! asserted against the formula, not assumed. Dense f32 costs 4 B/param.
+//! The bf16 rounding residual of a *selected* entry is dropped (mirroring
+//! the optimizer's window semantics); the EF residual carries exactly the
+//! unselected mass.
 
 use anyhow::{bail, Result};
 
 use crate::exec::{self, ExecPool};
 use crate::optim::microadam::EfMode;
 use crate::quant::{BucketStats, Quant4};
-use crate::topk::topk_abs_block;
+use crate::topk::topk_abs_block_bf16;
+use crate::util::bf16::bf16_to_f32;
 
 /// Which gradient reducer a config/CLI names.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -208,8 +214,9 @@ struct SparseCore {
     acc: Vec<f32>,
     /// Selected block-relative indices, rank-major `[rank][block][k]`.
     idx: Vec<u16>,
-    /// Selected values (signed), same layout.
-    val: Vec<f32>,
+    /// Selected values as bf16 bits (signed), same layout — the physical
+    /// wire payload.
+    val: Vec<u16>,
     /// 4-bit packed EF residual per rank (`ranks * d_pad / 2`), Quant4 mode.
     ef_packed: Vec<u8>,
     ef_stats: Vec<BucketStats>,
@@ -257,11 +264,12 @@ impl SparseCore {
             nq,
             acc: vec![0.0; ranks * d_pad],
             idx: vec![0; ranks * nb * kb],
-            val: vec![0.0; ranks * nb * kb],
+            val: vec![0; ranks * nb * kb],
             ef_packed,
             ef_stats,
             ef_dense,
-            sels: vec![Vec::new(); ranks],
+            // quickselect scratch pre-sized from the layout's block length
+            sels: (0..ranks).map(|_| Vec::with_capacity(block)).collect(),
         }
     }
 
@@ -365,7 +373,7 @@ impl SparseCore {
                         // anything selected there carries value 0 — the
                         // guard only prevents the out-of-bounds write.
                         if at < chunk.len() {
-                            chunk[at] += v;
+                            chunk[at] += bf16_to_f32(v);
                         }
                     }
                 }
@@ -376,9 +384,14 @@ impl SparseCore {
         });
     }
 
+    /// Physical bytes of one rank's serialized `(idx, val)` slab, measured
+    /// from the resident buffers (u16 indices + bf16 values).
+    fn slab_bytes_per_rank(&self) -> usize {
+        (std::mem::size_of_val(&self.idx[..]) + std::mem::size_of_val(&self.val[..])) / self.ranks
+    }
+
     fn wire_bytes_per_rank(&self) -> usize {
-        // u16 block-relative index + bf16 value per selected entry
-        4 * self.nb * self.kb
+        self.slab_bytes_per_rank()
     }
 
     fn residual_state_bytes(&self) -> usize {
@@ -411,9 +424,9 @@ struct RankShard<'a> {
     grad: &'a [f32],
     /// Padded accumulator, length `d_pad`.
     acc: &'a mut [f32],
-    /// This rank's `nb * kb` selected indices / values.
+    /// This rank's `nb * kb` selected indices / bf16 values.
     idx: &'a mut [u16],
-    val: &'a mut [f32],
+    val: &'a mut [u16],
     ef: RankEf<'a>,
     sel: &'a mut Vec<u16>,
 }
@@ -425,8 +438,9 @@ enum RankEf<'a> {
 }
 
 /// Compress one rank: `a = g + Q^{-1}(e)`, block-wise Top-K into the rank's
-/// `(idx, val)` slab, zero the selected entries, re-quantize the remainder
-/// into the residual.
+/// `(u16 idx, bf16 val)` slab (selection on f32 magnitudes, bf16 on the
+/// wire), zero the selected entries, re-quantize the remainder into the
+/// residual.
 fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShard) {
     let RankShard { grad, acc, idx, val, mut ef, sel } = sh;
     acc[..d].copy_from_slice(grad);
@@ -450,7 +464,7 @@ fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShar
     for b in 0..nb {
         let blk = b * block..(b + 1) * block;
         let (bi, bv) = (&mut idx[b * kb..(b + 1) * kb], &mut val[b * kb..(b + 1) * kb]);
-        topk_abs_block(&acc[blk.clone()], kb, bi, bv, sel);
+        topk_abs_block_bf16(&acc[blk.clone()], kb, bi, bv, sel);
         let accb = &mut acc[blk];
         for &i in bi.iter() {
             accb[i as usize] = 0.0;
@@ -501,6 +515,13 @@ impl GradReducer for TopKReduce {
     }
 }
 
+impl TopKReduce {
+    /// Accounted wire formula (`4 B * NB * k_b`), for cross-checks.
+    pub fn accounted_wire_bytes_per_rank(&self) -> usize {
+        4 * self.core.nb * self.core.kb
+    }
+}
+
 /// Top-K with per-rank (4-bit-quantized) error-feedback residuals — the
 /// distributed setting MicroAdam's EF mechanism is native to.
 pub struct EfTopKReduce {
@@ -534,7 +555,16 @@ impl GradReducer for EfTopKReduce {
     }
 
     fn wire_bytes_per_rank(&self) -> usize {
-        self.core.wire_bytes_per_rank()
+        // Post-tentpole the accounted formula (2 B u16 idx + 2 B bf16 val
+        // per entry) and the physically resident slab must agree — if they
+        // ever drift the accounting has gone fictional again.
+        let accounted = 4 * self.core.nb * self.core.kb;
+        let physical = self.core.slab_bytes_per_rank();
+        assert_eq!(
+            accounted, physical,
+            "eftopk wire accounting ({accounted} B) drifted from the physical slab ({physical} B)"
+        );
+        physical
     }
 
     fn residual_state_bytes(&self) -> usize {
@@ -627,9 +657,26 @@ mod tests {
         // 2 blocks of 64 at density 0.1 -> kb = 7 per block, 14 total
         assert_eq!(r.kb(), 7);
         assert!(nonzero <= 14, "{nonzero} nonzero");
-        // selected coordinates carry the exact gradient value (single rank)
+        // selected coordinates carry the gradient value rounded through the
+        // bf16 wire (single rank); everything else is exactly zero
         for (o, g) in out.iter().zip(&grads[0]) {
-            assert!(*o == 0.0 || *o == *g);
+            let wire = crate::util::bf16::bf16_to_f32(crate::util::bf16::f32_to_bf16(*g));
+            assert!(*o == 0.0 || *o == wire, "{o} vs wire {wire} (g {g})");
+        }
+    }
+
+    #[test]
+    fn wire_accounting_matches_physical_slab() {
+        // The EfTopK accounting is asserted against the resident slab
+        // inside wire_bytes_per_rank itself; exercise it across geometries,
+        // including a padded tail.
+        for d in [64usize, 300, 1 << 14] {
+            for ranks in [1usize, 3, 8] {
+                let ef = EfTopKReduce::new(d, ranks, small_cfg());
+                let topk = TopKReduce::new(d, ranks, small_cfg());
+                assert_eq!(ef.wire_bytes_per_rank(), topk.wire_bytes_per_rank(), "d={d}");
+                assert_eq!(topk.wire_bytes_per_rank(), topk.accounted_wire_bytes_per_rank());
+            }
         }
     }
 

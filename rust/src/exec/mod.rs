@@ -5,26 +5,49 @@
 //! Top-K, re-quantize, AdamStats and the parameter update for block `b`
 //! touch only block-`b` state. [`ExecPool`] exploits that on CPU: the caller
 //! pre-splits its buffers into disjoint per-worker shards (plain `&mut`
-//! slices — no `unsafe`, no locks) and the pool runs one scoped thread per
-//! shard (`std::thread::scope`, so non-`'static` borrows work and no extra
-//! dependency is pulled in). Thread-spawn cost is ~tens of microseconds,
-//! negligible against a multi-million-parameter fused step.
+//! slices — no locks on the data) and the pool fans them out over
+//! **persistent** worker threads.
+//!
+//! The workers are spawned once at pool construction and then parked on a
+//! condvar between steps; each `run_shards` call is one dispatch + one
+//! join barrier, with shards claimed through an atomic cursor. The old
+//! engine spawned fresh scoped threads per call, which costs tens of
+//! microseconds per optimizer step — invisible at `d = 10M`, dominant for
+//! small-`d` / high-step-rate workloads once the bf16 window halved the
+//! step's memory traffic. Sequential execution is the `workers == 1`
+//! special case (shards run inline on the caller's thread, no threads ever
+//! spawned), which keeps the parallel and sequential code paths
+//! byte-identical.
 //!
 //! [`Arena`] is the per-worker scratch arena: the dense per-block `z1`/`z2`
-//! AdamStats accumulators and the Top-K selection buffer, allocated once and
-//! reused every step so the hot path stays allocation-free.
+//! AdamStats accumulators and the Top-K selection buffer, pre-sized from
+//! the layout's block length and reused every step so the hot path stays
+//! allocation-free. Arenas travel with the *shard*, not the OS thread, so
+//! they stay warm whichever worker picks the shard up.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// A fixed-width worker pool over scoped threads.
+/// A fixed-width pool of persistent, parked worker threads.
 ///
-/// Holds no threads between calls — it is a worker *count* plus the
-/// fork/join logic. Sequential execution is the `workers == 1` special case
-/// (shards run inline on the caller's thread), which keeps the parallel and
-/// sequential code paths byte-identical.
-#[derive(Debug, Clone)]
+/// `workers == 1` (and [`ExecPool::serial`]) holds no threads at all;
+/// `workers == n` holds `n - 1` parked threads plus the calling thread,
+/// which always participates in the dispatch. Clones share the same
+/// threads; the threads exit when the last clone drops.
+#[derive(Clone)]
 pub struct ExecPool {
     workers: usize,
+    handle: Option<Arc<PoolHandle>>,
+}
+
+impl std::fmt::Debug for ExecPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecPool")
+            .field("workers", &self.workers)
+            .field("persistent", &self.handle.is_some())
+            .finish()
+    }
 }
 
 impl Default for ExecPool {
@@ -33,15 +56,128 @@ impl Default for ExecPool {
     }
 }
 
+/// One dispatched job: a type-erased pointer to the caller's stack-held
+/// runner closure. Only valid while the dispatching `run_shards` call is
+/// blocked on its completion barrier — which is exactly how long workers
+/// may hold it.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+}
+// The pointee is Sync and the pointer is only dereferenced between
+// dispatch and barrier, while the caller guarantees it stays alive.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per dispatch; workers run a job exactly once per epoch.
+    epoch: u64,
+    /// Spawned workers still running the current epoch's job.
+    remaining: usize,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Workers park here between dispatches.
+    work_cv: Condvar,
+    /// The dispatching caller blocks here until `remaining == 0`.
+    done_cv: Condvar,
+}
+
+struct PoolHandle {
+    inner: Arc<PoolInner>,
+    /// Serializes dispatches from clones sharing the threads.
+    dispatch: Mutex<()>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("job published with its epoch");
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        // Safe: the dispatcher keeps the pointee alive until every worker
+        // has checked back in below.
+        unsafe { (&*job.task)(id) };
+        let mut st = inner.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+/// Blocks until the spawned workers finish the current epoch — runs even
+/// when the caller's own shard panics, so worker threads can never outlive
+/// the stack frame whose buffers they borrow.
+struct WaitGuard<'a> {
+    inner: &'a PoolInner,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
 impl ExecPool {
     /// Single-worker pool: every shard runs inline, no threads spawned.
     pub fn serial() -> Self {
-        Self { workers: 1 }
+        Self { workers: 1, handle: None }
     }
 
-    /// Pool with exactly `workers` workers (clamped to >= 1).
+    /// Pool with exactly `workers` workers (clamped to >= 1). For
+    /// `workers > 1` this spawns `workers - 1` persistent threads now, so
+    /// the steady-state step pays a wake + barrier instead of a spawn.
     pub fn new(workers: usize) -> Self {
-        Self { workers: workers.max(1) }
+        let workers = workers.max(1);
+        if workers == 1 {
+            return Self::serial();
+        }
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState { epoch: 0, remaining: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let threads = (1..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("microadam-exec-{i}"))
+                    .spawn(move || worker_loop(inner, i))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Self { workers, handle: Some(Arc::new(PoolHandle { inner, dispatch: Mutex::new(()), threads })) }
     }
 
     /// Pool sized to the machine: `MICROADAM_WORKERS` env override, else
@@ -62,35 +198,84 @@ impl ExecPool {
         self.workers
     }
 
-    /// Run one closure invocation per shard, in parallel across the pool.
+    /// Run one closure invocation per shard, fanned out across the pool.
     ///
     /// `shards` are the caller-built disjoint work units (typically structs
-    /// of `&mut` sub-slices). The first shard runs on the calling thread;
-    /// the rest get scoped threads. Returns after every shard completes
-    /// (scope join). On a single-worker pool, or with 0/1 shards, everything
-    /// runs inline and no thread is spawned — shard order is then the vec
-    /// order, which (disjointness aside) keeps serial runs deterministic.
+    /// of `&mut` sub-slices). Shards are claimed through an atomic cursor,
+    /// so any shard count works (more shards than workers queue naturally);
+    /// the calling thread always participates. Returns after every shard
+    /// completes (barrier). On a single-worker pool, or with 0/1 shards,
+    /// everything runs inline in vec order and no other thread is touched —
+    /// which (disjointness aside) keeps serial runs deterministic.
+    ///
+    /// # Panics
+    /// Propagates as a panic on the calling thread if any shard panics
+    /// (after all other shards have been drained or finished).
     pub fn run_shards<W, F>(&self, shards: Vec<W>, f: F)
     where
         W: Send,
         F: Fn(usize, W) + Sync,
     {
-        let mut it = shards.into_iter().enumerate();
-        let Some((i0, first)) = it.next() else { return };
-        if self.workers == 1 || it.len() == 0 {
-            f(i0, first);
-            for (i, w) in it {
-                f(i, w);
-            }
+        let n = shards.len();
+        if n == 0 {
             return;
         }
-        std::thread::scope(|s| {
-            let f = &f;
-            for (i, w) in it {
-                s.spawn(move || f(i, w));
+        let handle = match &self.handle {
+            Some(h) if n > 1 => h,
+            _ => {
+                for (i, w) in shards.into_iter().enumerate() {
+                    f(i, w);
+                }
+                return;
             }
-            f(i0, first);
-        });
+        };
+
+        // Each slot is claimed exactly once via the cursor; the Mutex is
+        // uncontended by construction (one lock per shard lifetime).
+        let slots: Vec<Mutex<Option<W>>> = shards.into_iter().map(|w| Mutex::new(Some(w))).collect();
+        let cursor = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let run = |_worker: usize| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let w = slots[i].lock().unwrap().take().expect("shard claimed once");
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, w))).is_err() {
+                panicked.store(true, Ordering::SeqCst);
+            }
+        };
+
+        let task: &(dyn Fn(usize) + Sync) = &run;
+        // Erase the borrow's lifetime into the raw job pointer. Sound
+        // because the WaitGuard below pins this stack frame until every
+        // worker has finished dereferencing it.
+        let task: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task) };
+        let inner: &PoolInner = &handle.inner;
+        // Poison-tolerant: a previous dispatch that re-panicked below must
+        // not brick the pool for callers that recovered via catch_unwind.
+        let dispatch = handle.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.job = Some(Job { task });
+            st.epoch += 1;
+            st.remaining = handle.threads.len();
+        }
+        inner.work_cv.notify_all();
+        {
+            // Barrier guard outlives the caller's own participation, so a
+            // panicking shard still waits for the workers before unwinding
+            // past the borrowed buffers.
+            let _wait = WaitGuard { inner };
+            run(0);
+        }
+        // Release the dispatch lock before re-raising so the propagated
+        // panic cannot poison it out from under the pool's other users.
+        drop(dispatch);
+        if panicked.load(Ordering::SeqCst) {
+            panic!("ExecPool: a shard panicked");
+        }
     }
 }
 
@@ -117,7 +302,9 @@ pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
 /// Per-worker scratch arena, reused across steps.
 ///
 /// `z1`/`z2` are the dense per-block first/second AdamStats accumulators
-/// (ADAMSTATS lines 5-6); `sel` is the Top-K quickselect index buffer.
+/// (ADAMSTATS lines 5-6); `sel` is the Top-K quickselect index buffer,
+/// pre-sized from the layout's block length so the first step never
+/// reallocates it mid-selection.
 #[derive(Debug, Clone, Default)]
 pub struct Arena {
     pub z1: Vec<f32>,
@@ -128,7 +315,7 @@ pub struct Arena {
 impl Arena {
     /// Arena for Top-K/AdamStats blocks of length `block`.
     pub fn new(block: usize) -> Self {
-        Self { z1: vec![0.0; block], z2: vec![0.0; block], sel: Vec::new() }
+        Self { z1: vec![0.0; block], z2: vec![0.0; block], sel: Vec::with_capacity(block) }
     }
 
     /// Grow (never shrink) to serve blocks of length `block`.
@@ -136,6 +323,9 @@ impl Arena {
         if self.z1.len() < block {
             self.z1.resize(block, 0.0);
             self.z2.resize(block, 0.0);
+        }
+        if self.sel.capacity() < block {
+            self.sel.reserve(block - self.sel.len());
         }
     }
 }
@@ -205,6 +395,84 @@ mod tests {
     }
 
     #[test]
+    fn persistent_pool_survives_many_dispatches() {
+        // The whole point of the rewrite: one pool, thousands of steps, no
+        // spawn per step. Correctness leg: every dispatch sees every shard.
+        let pool = ExecPool::new(4);
+        let mut data = vec![0u64; 64];
+        for round in 0..200u64 {
+            let shards: Vec<&mut [u64]> = data.chunks_mut(16).collect();
+            pool.run_shards(shards, |_, chunk| {
+                for v in chunk {
+                    *v += round + 1;
+                }
+            });
+        }
+        let expect = (1..=200u64).sum::<u64>();
+        assert!(data.iter().all(|&v| v == expect), "{} != {expect}", data[0]);
+    }
+
+    #[test]
+    fn more_shards_than_workers_all_run() {
+        // The atomic cursor queues excess shards instead of oversubscribing.
+        let pool = ExecPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let shards: Vec<usize> = (0..37).collect();
+        pool.run_shards(shards, |i, v| {
+            assert_eq!(i, v);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 37);
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = ExecPool::new(4);
+        let clone = pool.clone();
+        let mut a = vec![0u32; 8];
+        let shards: Vec<&mut u32> = a.iter_mut().collect();
+        clone.run_shards(shards, |i, v| *v = i as u32);
+        assert_eq!(a, (0..8).collect::<Vec<u32>>());
+        drop(clone);
+        // original still dispatches after the clone is gone
+        let mut b = vec![0u32; 4];
+        let shards: Vec<&mut u32> = b.iter_mut().collect();
+        pool.run_shards(shards, |i, v| *v = i as u32 + 1);
+        assert_eq!(b, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "a shard panicked")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = ExecPool::new(4);
+        let shards: Vec<usize> = (0..8).collect();
+        pool.run_shards(shards, |_, v| {
+            if v == 5 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_caught_shard_panic() {
+        // A recovered panic must not poison the dispatch path: the same
+        // pool has to keep serving healthy dispatches afterwards.
+        let pool = ExecPool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_shards((0..8).collect::<Vec<usize>>(), |_, v| {
+                if v == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let mut data = vec![0u32; 8];
+        let shards: Vec<&mut u32> = data.iter_mut().collect();
+        pool.run_shards(shards, |i, v| *v = i as u32 + 1);
+        assert_eq!(data.iter().sum::<u32>(), (1..=8).sum::<u32>());
+    }
+
+    #[test]
     fn arena_ensure_grows_only() {
         let mut a = Arena::new(8);
         a.ensure(4);
@@ -212,5 +480,12 @@ mod tests {
         a.ensure(32);
         assert_eq!(a.z1.len(), 32);
         assert_eq!(a.z2.len(), 32);
+        assert!(a.sel.capacity() >= 32);
+    }
+
+    #[test]
+    fn arena_presizes_selection_scratch() {
+        let a = Arena::new(4096);
+        assert!(a.sel.capacity() >= 4096, "sel scratch must be pre-sized from the layout");
     }
 }

@@ -16,9 +16,10 @@
 //!   [`runtime`] via the PJRT CPU client (behind the off-by-default `pjrt`
 //!   cargo feature — without it the runtime is a host-only stub and every
 //!   native path still builds and runs). Python never runs at train time.
-//! * **[`exec`]** — the block-sharded parallel step engine: scoped-thread
-//!   worker pool + per-worker scratch arenas behind the fused
-//!   dequantize/Top-K/re-quantize/AdamStats/update pass.
+//! * **[`exec`]** — the block-sharded parallel step engine: a persistent
+//!   parked-worker pool (zero thread spawns per step) + per-worker scratch
+//!   arenas behind the fused dequantize/Top-K/re-quantize/AdamStats/update
+//!   pass.
 //! * **[`dist`]** — the in-process multi-replica data-parallel engine:
 //!   per-rank data shards, pluggable compressed gradient exchange
 //!   (dense / Top-K / Top-K + quantized error feedback) and the

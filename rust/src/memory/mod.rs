@@ -39,7 +39,11 @@ pub fn sgd_momentum_fp32(d: u64) -> u64 {
 }
 
 /// MicroAdam: `0.5 d + 4 m k` bytes (M_muA) — 4-bit EF plus the sliding
-/// window `G` holding `m*k` int16 indices and `m*k` bf16 values.
+/// window `G` holding `m*k` int16 indices and `m*k` bf16 values. Since the
+/// bf16-storage change the native engine allocates the window at exactly
+/// this accounting (2 B/value measured, see
+/// `SlidingWindow::value_bytes_per_entry`), so this formula is the
+/// *resident* window cost, not a paper-only fiction.
 pub fn microadam(d: u64, m: u64, k: u64) -> u64 {
     d / 2 + 4 * m * k
 }

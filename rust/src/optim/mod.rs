@@ -78,9 +78,14 @@ pub trait Optimizer {
             o += n;
         }
     }
-    /// Bytes of persistent optimizer state actually allocated (f32 storage).
+    /// Bytes of persistent optimizer state actually allocated — measured
+    /// from the resident buffers, in their physical dtypes (MicroAdam's
+    /// window, for instance, counts 2 B/value now that it stores bf16).
     fn state_bytes(&self) -> usize;
     /// Bytes the same state occupies with the paper's storage dtypes.
+    /// Post bf16-window this agrees with [`Optimizer::state_bytes`] for
+    /// the window term; remaining gaps (e.g. f32 quantization stats) are
+    /// honest implementation overhead.
     fn paper_state_bytes(&self) -> usize {
         self.state_bytes()
     }
@@ -143,6 +148,13 @@ pub fn step_with_layout(
         let mut chunks = layout_chunks(tensors, d_padded, params, grads);
         opt.step_multi(&mut chunks, lr, pool);
     }
+}
+
+/// Measured resident optimizer-state bytes per parameter (allocated
+/// buffers, not the paper accounting) — the honest column of the bench
+/// reports.
+pub fn resident_bytes_per_param(opt: &dyn Optimizer, d: usize) -> f64 {
+    opt.state_bytes() as f64 / d as f64
 }
 
 /// Which optimizers a harness can instantiate by name.

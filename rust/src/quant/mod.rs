@@ -26,6 +26,10 @@ pub struct BucketStats {
 }
 
 impl BucketStats {
+    /// Resident bytes of one stats record (two f32 scales) — the single
+    /// source of truth for every state-accounting site.
+    pub const BYTES: usize = 8;
+
     /// Quantization step `u = (Delta - delta) / (2^b - 1)`.
     pub fn step(&self, bits: u32) -> f32 {
         (self.hi - self.lo) / levels(bits)
@@ -63,7 +67,7 @@ impl Quant4 {
 
     /// State bytes for a length-`d` vector: packed codes + f32 stats.
     pub fn state_bytes(&self, d: usize) -> usize {
-        d / 2 + 2 * 4 * self.n_buckets(d)
+        d / 2 + BucketStats::BYTES * self.n_buckets(d)
     }
 
     /// Deterministic (round-to-nearest) quantization of `x` into

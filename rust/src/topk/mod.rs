@@ -4,18 +4,49 @@
 //! block-relative and fit `u16` (§3.1 "Top-K"). [`SlidingWindow`] is the
 //! ring buffer of the last `m` sparse gradients, the only optimizer state
 //! MicroAdam keeps besides the quantized EF: `m * k` `u16` indices plus
-//! `m * k` values.
+//! `m * k` values, stored **physically in bf16** ([`WinDtype::Bf16`],
+//! the paper's 2 B/value accounting made real). Selection always ranks on
+//! the full-precision f32 magnitudes — only the stored value is rounded —
+//! and every read widens back to f32 before entering AdamStats.
+//!
+//! [`WinDtype::F32`] keeps the old full-precision storage as the baseline
+//! for the tolerance-bounded parity tier (see
+//! `rust/tests/test_parallel_parity.rs`).
+
+use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
 
 /// Select the `k` largest-|x| entries of `block` (len <= 2^15).
 ///
 /// Writes block-relative indices into `idx` and the *signed* values into
 /// `vals`. Uses an O(n) quickselect partition over a scratch index array,
-/// then sorts the selected prefix by index for reproducible layouts.
+/// then sorts the selected prefix by index for reproducible layouts. The
+/// scratch is reused across calls (per-worker arenas pre-size it from the
+/// layout so steady state never reallocates).
 pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32], scratch: &mut Vec<u16>) {
+    topk_select(block, k, idx, scratch);
+    for (o, &s) in idx.iter().enumerate().take(k.min(block.len())) {
+        vals[o] = block[s as usize];
+    }
+}
+
+/// bf16-aware write path of [`topk_abs_block`]: selection still ranks on
+/// the full-precision f32 magnitudes; only the stored value is rounded to
+/// bf16 (round-to-nearest-even).
+pub fn topk_abs_block_bf16(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [u16], scratch: &mut Vec<u16>) {
+    topk_select(block, k, idx, scratch);
+    for (o, &s) in idx.iter().enumerate().take(k.min(block.len())) {
+        vals[o] = f32_to_bf16(block[s as usize]);
+    }
+}
+
+/// Shared selection core: leaves the chosen block-relative indices
+/// (sorted ascending) in `idx`.
+fn topk_select(block: &[f32], k: usize, idx: &mut [u16], scratch: &mut Vec<u16>) {
     let n = block.len();
     debug_assert!(n <= u16::MAX as usize + 1);
     let k = k.min(n);
     scratch.clear();
+    scratch.reserve(n);
     scratch.extend(0..n as u16);
     if k < n {
         scratch.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -26,10 +57,42 @@ pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32]
     }
     let sel = &mut scratch[..k];
     sel.sort_unstable();
-    for (o, &s) in sel.iter().enumerate() {
-        idx[o] = s;
-        vals[o] = block[s as usize];
+    idx[..k].copy_from_slice(sel);
+}
+
+/// AdamStats accumulation over one `(row, block)` entry with bf16-stored
+/// values: `z1[j] += w1 * v`, `z2[j] += w2 * v^2`, `v` widened to f32.
+///
+/// Free function shared verbatim by the fused engine (over carved window
+/// shards) and [`SlidingWindow::accumulate_stats`] (the reference sweep),
+/// so the two paths cannot diverge by a single float op.
+#[inline]
+pub fn stats_accum_bf16(idx: &[u16], val: &[u16], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    for (&j, &v) in idx.iter().zip(val) {
+        let v = bf16_to_f32(v);
+        z1[j as usize] += w1 * v;
+        z2[j as usize] += w2 * v * v;
     }
+}
+
+/// f32-storage twin of [`stats_accum_bf16`].
+#[inline]
+pub fn stats_accum_f32(idx: &[u16], val: &[f32], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    for (&j, &v) in idx.iter().zip(val) {
+        z1[j as usize] += w1 * v;
+        z2[j as usize] += w2 * v * v;
+    }
+}
+
+/// Physical storage dtype of the window values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WinDtype {
+    /// bf16 bit patterns in `SlidingWindow::val` — the paper dtype and the
+    /// default: 2 B/value resident, widen-on-read / round-on-write.
+    Bf16,
+    /// f32 in `SlidingWindow::val_f32` — the full-precision baseline kept
+    /// for the tolerance-bounded parity tier.
+    F32,
 }
 
 /// The sliding window `G = (I, V)` over all `NB` blocks: a ring buffer of
@@ -49,17 +112,36 @@ pub struct SlidingWindow {
     pub nb: usize,
     /// Entries kept per block `k_b`.
     pub kb: usize,
+    /// Physical value dtype.
+    pub dtype: WinDtype,
     /// Block-relative indices, `m * nb * kb`, block-major `[block][row][k]`.
     pub idx: Vec<u16>,
-    /// Top-K values (signed), same layout.
-    pub val: Vec<f32>,
+    /// Top-K values as bf16 bits, same layout (empty in [`WinDtype::F32`]).
+    pub val: Vec<u16>,
+    /// Top-K values as f32, same layout (empty in [`WinDtype::Bf16`]).
+    pub val_f32: Vec<f32>,
     /// Number of rows ever written (`min(t, m)` valid rows).
     pub written: u64,
 }
 
 impl SlidingWindow {
+    /// Paper-dtype window: bf16 value storage.
     pub fn new(m: usize, nb: usize, kb: usize) -> Self {
-        Self { m, nb, kb, idx: vec![0; m * nb * kb], val: vec![0.0; m * nb * kb], written: 0 }
+        Self::with_dtype(m, nb, kb, WinDtype::Bf16)
+    }
+
+    pub fn with_dtype(m: usize, nb: usize, kb: usize, dtype: WinDtype) -> Self {
+        let n = m * nb * kb;
+        let (val, val_f32) = match dtype {
+            WinDtype::Bf16 => (vec![0u16; n], Vec::new()),
+            WinDtype::F32 => (Vec::new(), vec![0f32; n]),
+        };
+        Self { m, nb, kb, dtype, idx: vec![0; n], val, val_f32, written: 0 }
+    }
+
+    /// Total `(index, value)` entries across all rows and blocks.
+    pub fn entries(&self) -> usize {
+        self.m * self.nb * self.kb
     }
 
     /// Row that step `t` (1-based) writes: `(t-1) % m` (Algorithm 1 line 14).
@@ -73,16 +155,48 @@ impl SlidingWindow {
         (block * self.m + row) * self.kb
     }
 
-    /// Mutable (idx, val) slices for `block` within `row`.
-    pub fn entry_mut(&mut self, row: usize, block: usize) -> (&mut [u16], &mut [f32]) {
+    /// Block-relative indices stored for `(row, block)`.
+    pub fn idx_at(&self, row: usize, block: usize) -> &[u16] {
         let o = self.off(row, block);
-        (&mut self.idx[o..o + self.kb], &mut self.val[o..o + self.kb])
+        &self.idx[o..o + self.kb]
     }
 
-    /// (idx, val) slices for `block` within `row`.
-    pub fn entry(&self, row: usize, block: usize) -> (&[u16], &[f32]) {
+    /// Values of `(row, block)` widened to f32 into `out[..kb]`.
+    pub fn vals_f32_at(&self, row: usize, block: usize, out: &mut [f32]) {
         let o = self.off(row, block);
-        (&self.idx[o..o + self.kb], &self.val[o..o + self.kb])
+        match self.dtype {
+            WinDtype::Bf16 => {
+                for (d, &v) in out[..self.kb].iter_mut().zip(&self.val[o..o + self.kb]) {
+                    *d = bf16_to_f32(v);
+                }
+            }
+            WinDtype::F32 => out[..self.kb].copy_from_slice(&self.val_f32[o..o + self.kb]),
+        }
+    }
+
+    /// Run block Top-K on `acc` and store the winners into `(row, block)`,
+    /// rounding values to the window dtype (selection ranks on the full
+    /// f32 magnitudes either way). The chosen indices are readable via
+    /// [`SlidingWindow::idx_at`] afterwards.
+    pub fn select_into(&mut self, row: usize, block: usize, acc: &[f32], scratch: &mut Vec<u16>) {
+        let o = self.off(row, block);
+        let kb = self.kb;
+        match self.dtype {
+            WinDtype::Bf16 => topk_abs_block_bf16(acc, kb, &mut self.idx[o..o + kb], &mut self.val[o..o + kb], scratch),
+            WinDtype::F32 => topk_abs_block(acc, kb, &mut self.idx[o..o + kb], &mut self.val_f32[o..o + kb], scratch),
+        }
+    }
+
+    /// AdamStats contribution of `(row, block)`: delegates to the same
+    /// [`stats_accum_bf16`]/[`stats_accum_f32`] kernels the fused engine
+    /// runs over its carved shards — bit-identical by construction.
+    pub fn accumulate_stats(&self, row: usize, block: usize, w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+        let o = self.off(row, block);
+        let idx = &self.idx[o..o + self.kb];
+        match self.dtype {
+            WinDtype::Bf16 => stats_accum_bf16(idx, &self.val[o..o + self.kb], w1, w2, z1, z2),
+            WinDtype::F32 => stats_accum_f32(idx, &self.val_f32[o..o + self.kb], w1, w2, z1, z2),
+        }
     }
 
     /// Flat element range covering the full history of `blocks` — a single
@@ -114,11 +228,41 @@ impl SlidingWindow {
         (row as u64) < t
     }
 
-    /// State bytes: `m*k` u16 indices + `m*k` f32 values. The paper stores
-    /// V in bf16 (2 B); we keep f32 in RAM but report the paper's 2 B cost
-    /// separately in [`crate::memory`].
+    /// Resident state bytes, measured from the actual buffers: `m*k` u16
+    /// indices + `m*k` values at 2 B (bf16) or 4 B (f32). In the default
+    /// bf16 mode this *is* the paper accounting — no separate fiction.
     pub fn state_bytes(&self) -> usize {
-        self.idx.len() * 2 + self.val.len() * 4
+        self.idx.len() * 2 + self.val.len() * 2 + self.val_f32.len() * 4
+    }
+
+    /// Measured bytes per stored value (2 for bf16, 4 for f32), derived
+    /// from the resident buffer rather than a formula.
+    pub fn value_bytes_per_entry(&self) -> usize {
+        (self.val.len() * 2 + self.val_f32.len() * 4) / self.entries().max(1)
+    }
+
+    /// Window values widened to f32 (checkpoint serialization; exact —
+    /// every bf16 value is representable in f32).
+    pub fn values_to_f32(&self) -> Vec<f32> {
+        match self.dtype {
+            WinDtype::Bf16 => self.val.iter().map(|&v| bf16_to_f32(v)).collect(),
+            WinDtype::F32 => self.val_f32.clone(),
+        }
+    }
+
+    /// Restore values from an f32 slab (checkpoint resume). Rounds back to
+    /// the storage dtype; for data produced by [`Self::values_to_f32`] the
+    /// round trip is bit-exact.
+    pub fn set_values_from_f32(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.entries(), "window value count mismatch");
+        match self.dtype {
+            WinDtype::Bf16 => {
+                for (d, &v) in self.val.iter_mut().zip(vals) {
+                    *d = f32_to_bf16(v);
+                }
+            }
+            WinDtype::F32 => self.val_f32.copy_from_slice(vals),
+        }
     }
 
     /// Per-row folded weights for AdamStats: `valid * (1-beta) * beta^age /
@@ -176,6 +320,37 @@ mod tests {
     }
 
     #[test]
+    fn topk_bf16_selects_on_f32_magnitudes() {
+        // Two values that collide after bf16 rounding but differ in f32:
+        // selection must still pick the larger f32 magnitude.
+        let a = 1.0f32 + 1.0 / 512.0; // rounds to 1.0 in bf16
+        let block = vec![0.5f32, a, 1.0, 0.1];
+        let mut idx = vec![0u16; 1];
+        let mut vals = vec![0u16; 1];
+        let mut scratch = Vec::new();
+        topk_abs_block_bf16(&block, 1, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(idx[0], 1, "must rank on full precision");
+        // the stored value is the bf16 rounding of the winner
+        assert_eq!(vals[0], f32_to_bf16(a));
+    }
+
+    #[test]
+    fn topk_bf16_and_f32_select_same_indices() {
+        let block: Vec<f32> = (0..64).map(|i| ((i * 37 % 101) as f32 - 50.0) / 7.0).collect();
+        let mut idx_a = vec![0u16; 8];
+        let mut idx_b = vec![0u16; 8];
+        let mut vals_a = vec![0f32; 8];
+        let mut vals_b = vec![0u16; 8];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, 8, &mut idx_a, &mut vals_a, &mut scratch);
+        topk_abs_block_bf16(&block, 8, &mut idx_b, &mut vals_b, &mut scratch);
+        assert_eq!(idx_a, idx_b);
+        for (o, &v) in vals_a.iter().enumerate() {
+            assert_eq!(vals_b[o], f32_to_bf16(v));
+        }
+    }
+
+    #[test]
     fn ring_rows_and_ages() {
         let mut w = SlidingWindow::new(4, 1, 2);
         assert_eq!(w.row_for_step(1), 0);
@@ -215,13 +390,14 @@ mod tests {
     #[test]
     fn block_major_history_is_contiguous() {
         let mut w = SlidingWindow::new(3, 4, 2);
-        // tag every entry with (row, block) so the layout is observable
+        // tag every entry with (row, block) so the layout is observable;
+        // values are small integers, exact in bf16
         for row in 0..3 {
             for b in 0..4 {
-                let (idx, vals) = w.entry_mut(row, b);
-                for (k, (i, v)) in idx.iter_mut().zip(vals.iter_mut()).enumerate() {
-                    *i = (100 * b + 10 * row + k) as u16;
-                    *v = (100 * b + 10 * row + k) as f32;
+                let o = (b * 3 + row) * 2;
+                for k in 0..2 {
+                    w.idx[o + k] = (100 * b + 10 * row + k) as u16;
+                    w.val[o + k] = f32_to_bf16((100 * b + 10 * row + k) as f32);
                 }
             }
         }
@@ -236,10 +412,61 @@ mod tests {
         }
         // multi-block spans concatenate
         assert_eq!(w.block_range(1..3), 6..18);
-        // entry() agrees with the raw span
-        let (idx, vals) = w.entry(2, 3);
-        assert_eq!(idx, &[320, 321]);
+        // the accessors agree with the raw span
+        assert_eq!(w.idx_at(2, 3), &[320, 321]);
+        let mut vals = vec![0f32; 2];
+        w.vals_f32_at(2, 3, &mut vals);
         assert_eq!(vals, &[320.0, 321.0]);
+    }
+
+    #[test]
+    fn window_resident_value_bytes_is_two_in_bf16() {
+        // The acceptance target of the bf16-storage change: measured
+        // resident bytes per window value is 2, not 4.
+        let w = SlidingWindow::new(10, 8, 41);
+        assert_eq!(w.value_bytes_per_entry(), 2);
+        assert_eq!(w.state_bytes(), w.entries() * 4); // 2 B idx + 2 B val
+        let wf = SlidingWindow::with_dtype(10, 8, 41, WinDtype::F32);
+        assert_eq!(wf.value_bytes_per_entry(), 4);
+    }
+
+    #[test]
+    fn select_into_and_accumulate_match_free_kernels() {
+        let block: Vec<f32> = (0..32).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.3).collect();
+        for dtype in [WinDtype::Bf16, WinDtype::F32] {
+            let mut w = SlidingWindow::with_dtype(2, 1, 4, dtype);
+            let mut scratch = Vec::new();
+            w.select_into(0, 0, &block, &mut scratch);
+            let mut z1 = vec![0f32; 32];
+            let mut z2 = vec![0f32; 32];
+            w.accumulate_stats(0, 0, 0.5, 0.9, &mut z1, &mut z2);
+            // recompute through the free kernels on the raw storage
+            let mut z1b = vec![0f32; 32];
+            let mut z2b = vec![0f32; 32];
+            match dtype {
+                WinDtype::Bf16 => stats_accum_bf16(&w.idx[..4], &w.val[..4], 0.5, 0.9, &mut z1b, &mut z2b),
+                WinDtype::F32 => stats_accum_f32(&w.idx[..4], &w.val_f32[..4], 0.5, 0.9, &mut z1b, &mut z2b),
+            }
+            assert_eq!(z1, z1b);
+            assert_eq!(z2, z2b);
+        }
+    }
+
+    #[test]
+    fn values_f32_roundtrip_is_bit_exact() {
+        let mut w = SlidingWindow::new(3, 2, 4);
+        let mut scratch = Vec::new();
+        let block: Vec<f32> = (0..16).map(|i| (i as f32 * 0.717).sin()).collect();
+        for row in 0..3 {
+            for b in 0..2 {
+                w.select_into(row, b, &block, &mut scratch);
+            }
+        }
+        let vals = w.values_to_f32();
+        let mut w2 = SlidingWindow::new(3, 2, 4);
+        w2.idx.copy_from_slice(&w.idx);
+        w2.set_values_from_f32(&vals);
+        assert_eq!(w.val, w2.val, "bf16 bits must survive the f32 detour");
     }
 
     #[test]

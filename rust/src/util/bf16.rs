@@ -1,24 +1,53 @@
-//! bf16 <-> f32 conversion (paper-dtype storage for checkpoints and the
-//! window value buffer accounting).
+//! bf16 <-> f32 conversion: the physical storage dtype of the sliding
+//! window values and the dist engine's sparse wire slabs (paper §3.2
+//! accounts `V` at 2 B/value).
+//!
+//! bf16 is the top 16 bits of an f32 (1 sign, 8 exponent, 7 mantissa), so
+//! widening is a shift and narrowing is round-to-nearest-even on the
+//! truncated half. Every bf16 bit pattern is exactly representable in f32,
+//! which makes `bf16 -> f32 -> bf16` the identity — the property the
+//! checkpoint round-trip relies on when window values travel through the
+//! f32-typed snapshot format.
 
 /// Round-to-nearest-even f32 -> bf16 bits.
+///
+/// NaNs are quieted explicitly: plain truncation of a NaN whose payload
+/// lives only in the low 16 mantissa bits would otherwise collapse to an
+/// infinity bit pattern.
+#[inline]
 pub fn f32_to_bf16(v: f32) -> u16 {
     let bits = v.to_bits();
-    // round to nearest even on the truncated 16 bits
-    let round_bit = (bits >> 15) & 1;
-    let sticky = bits & 0x7FFF;
-    let mut hi = (bits >> 16) as u16;
-    if round_bit == 1 && (sticky != 0x0000 || (hi & 1) == 1) {
-        // note: sticky includes the round bit position? standard approach:
-        hi = hi.wrapping_add(((bits & 0xFFFF) > 0x8000 || ((bits & 0xFFFF) == 0x8000 && (hi & 1) == 1)) as u16);
-        return hi;
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
     }
-    hi
+    // One-add RNE: 0x7FFF plus the LSB of the kept half carries into the
+    // kept bits exactly when (round bit) && (sticky bits || odd). Values
+    // past the largest finite bf16 midpoint carry into the exponent and
+    // land on the infinity encoding, which is the IEEE behaviour.
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
 }
 
-/// bf16 bits -> f32.
+/// bf16 bits -> f32 (exact).
+#[inline]
 pub fn bf16_to_f32(bits: u16) -> f32 {
     f32::from_bits((bits as u32) << 16)
+}
+
+/// Widen a bf16 slab into an f32 buffer (`dst.len() == src.len()`).
+pub fn widen_into(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(s);
+    }
+}
+
+/// Round an f32 slab into bf16 storage (`dst.len() == src.len()`).
+pub fn round_into(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(s);
+    }
 }
 
 #[cfg(test)]
@@ -46,5 +75,27 @@ mod tests {
     fn specials() {
         assert!(bf16_to_f32(f32_to_bf16(f32::INFINITY)).is_infinite());
         assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // NaN payloads confined to the truncated half must stay NaN, not
+        // collapse to infinity (regression: the pre-bf16-storage converter
+        // truncated them to 0x7F80).
+        let sneaky = f32::from_bits(0x7F80_0001);
+        assert!(sneaky.is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(sneaky)).is_nan());
+    }
+
+    #[test]
+    fn slab_helpers_roundtrip() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.37).collect();
+        let mut bits = vec![0u16; 64];
+        round_into(&xs, &mut bits);
+        let mut back = vec![0f32; 64];
+        widen_into(&bits, &mut back);
+        for (b, x) in back.iter().zip(&xs) {
+            assert!(((b - x) / x.abs().max(1e-9)).abs() < 1.0 / 128.0);
+        }
+        // widening then re-rounding is the identity on the bit pattern
+        let mut bits2 = vec![0u16; 64];
+        round_into(&back, &mut bits2);
+        assert_eq!(bits, bits2);
     }
 }

@@ -76,7 +76,13 @@ fn microadam_artifact_matches_native() {
     }
     let meta = rt.meta(&name).unwrap().clone();
     let mut state = AotMicroAdamState::new(&meta).unwrap();
-    let mut native = MicroAdam::new(D, MicroAdamConfig::default());
+    // The L2 graph stores window values in f32; compare against the native
+    // engine's f32 window mode (the bf16 default is a deliberate storage
+    // divergence, tolerance-bounded in test_parallel_parity.rs instead).
+    let mut native = MicroAdam::new(D, MicroAdamConfig {
+        win_dtype: microadam::topk::WinDtype::F32,
+        ..Default::default()
+    });
     assert_eq!(state.kb, native.kb(), "artifact and native k_b must agree");
 
     let mut rng = Rng::seed_from_u64(1);

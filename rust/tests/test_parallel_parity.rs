@@ -1,33 +1,53 @@
-//! Bit-for-bit parity: the fused block-parallel step engine vs the
-//! sequential four-sweep reference.
+//! The two-tier parity suite for the fused block-parallel step engine.
 //!
-//! The engine's contract (see `optim::Optimizer::step_sharded`) is that
-//! sharding the step across any worker count must not change a single bit
-//! of the trajectory: blocks are independent, so partitioning them cannot
-//! reassociate any float op. These tests pin that for every `EfMode` across
-//! 1/2/4/8 workers, through window wrap-around, on dimensions with and
-//! without a padded tail block.
+//! **Tier 1 — bit-exact** (reference vs fused, *equal* window dtype): the
+//! engine's contract (see `optim::Optimizer::step_sharded`) is that fusing
+//! the four sweeps into one pass and sharding it across any worker count
+//! must not change a single bit of the trajectory: blocks are independent,
+//! so partitioning them cannot reassociate any float op, and the store/
+//! accumulate kernels are shared between the two paths. Pinned for every
+//! `EfMode` x `WinDtype` across 1/2/4/8 workers, through window
+//! wrap-around, on dimensions with and without a padded tail block.
+//!
+//! **Tier 2 — tolerance-bounded** (f32 window vs bf16 window): storing `V`
+//! in bf16 rounds each window value to 8 mantissa bits, so the f32 and
+//! bf16 trajectories legitimately diverge at the rounding level. The ULP
+//! budget: one bf16 round-to-nearest-even carries relative error at most
+//! `2^-9`; `z1` is a convex combination of window values (error <= 2^-9),
+//! `z2` is quadratic (<= 2^-8, halved back through the sqrt), so each
+//! parameter update `u = lr * z1 / (eps + sqrt(z2))` is perturbed by at
+//! most ~`2^-8` of its magnitude plus Top-K/EF re-selection effects that
+//! error feedback keeps bounded. With exogenous (parameter-independent)
+//! gradients the accumulators and Top-K selections coincide exactly —
+//! asserted below — leaving the divergence a pure accumulation of
+//! AdamStats rounding, bounded by `BF16_TRAJ_TOL` of the accumulated
+//! update mass.
 
 use microadam::exec::ExecPool;
 use microadam::optim::microadam::{EfMode, MicroAdam, MicroAdamConfig};
 use microadam::optim::Optimizer;
+use microadam::topk::WinDtype;
 use microadam::util::rng::Rng;
 
 fn randvec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
     (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0 * s).collect()
 }
 
-fn cfg(ef: EfMode) -> MicroAdamConfig {
+fn cfg(ef: EfMode, win: WinDtype) -> MicroAdamConfig {
     // small blocks -> many blocks -> real sharding even at 8 workers
-    MicroAdamConfig { m: 4, block: 64, density: 0.05, qbucket: 16, ef, ..Default::default() }
+    MicroAdamConfig { m: 4, block: 64, density: 0.05, qbucket: 16, ef, win_dtype: win, ..Default::default() }
 }
+
+// ---------------------------------------------------------------------------
+// Tier 1: bit-exact, reference vs fused at equal dtype
+// ---------------------------------------------------------------------------
 
 /// Run `steps` steps of the reference sweep and of the fused engine at
 /// `workers`, asserting bitwise-identical params and error norm each step.
-fn assert_parity(d: usize, ef: EfMode, workers: usize, steps: usize, seed: u64) {
+fn assert_parity(d: usize, ef: EfMode, win: WinDtype, workers: usize, steps: usize, seed: u64) {
     let pool = ExecPool::new(workers);
-    let mut reference = MicroAdam::new(d, cfg(ef));
-    let mut fused = MicroAdam::new(d, cfg(ef));
+    let mut reference = MicroAdam::new(d, cfg(ef, win));
+    let mut fused = MicroAdam::new(d, cfg(ef, win));
     let mut rng = Rng::seed_from_u64(seed);
     let mut x_ref = randvec(&mut rng, d, 1.0);
     let mut x_fused = x_ref.clone();
@@ -37,23 +57,25 @@ fn assert_parity(d: usize, ef: EfMode, workers: usize, steps: usize, seed: u64) 
         fused.step_sharded(&mut x_fused, &g, 3e-3, &pool);
         assert_eq!(
             x_ref, x_fused,
-            "d={d} {ef:?} workers={workers} diverged at step {s}"
+            "d={d} {ef:?} {win:?} workers={workers} diverged at step {s}"
         );
         assert_eq!(
             reference.error_norm(),
             fused.error_norm(),
-            "d={d} {ef:?} workers={workers} EF diverged at step {s}"
+            "d={d} {ef:?} {win:?} workers={workers} EF diverged at step {s}"
         );
     }
     assert_eq!(reference.t(), fused.t());
 }
 
 #[test]
-fn fused_engine_matches_reference_all_modes_and_workers() {
+fn fused_engine_matches_reference_all_modes_workers_and_dtypes() {
     // past 2*m steps so the ring buffer wraps at least twice
-    for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
-        for workers in [1usize, 2, 4, 8] {
-            assert_parity(1024, ef, workers, 11, 42);
+    for win in [WinDtype::Bf16, WinDtype::F32] {
+        for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+            for workers in [1usize, 2, 4, 8] {
+                assert_parity(1024, ef, win, workers, 11, 42);
+            }
         }
     }
 }
@@ -62,9 +84,11 @@ fn fused_engine_matches_reference_all_modes_and_workers() {
 fn fused_engine_matches_reference_with_padded_tail() {
     // d = 1000 with block 64 pads to 1024: the last shard owns the partial
     // block, where params/grads are shorter than the padded span.
-    for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
-        for workers in [1usize, 2, 4, 8] {
-            assert_parity(1000, ef, workers, 10, 7);
+    for win in [WinDtype::Bf16, WinDtype::F32] {
+        for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
+            for workers in [1usize, 2, 4, 8] {
+                assert_parity(1000, ef, win, workers, 10, 7);
+            }
         }
     }
 }
@@ -73,7 +97,7 @@ fn fused_engine_matches_reference_with_padded_tail() {
 fn fused_engine_matches_reference_more_workers_than_blocks() {
     // 128 / 64 = 2 blocks but 8 workers: the pool must clamp shards to NB.
     for ef in [EfMode::Off, EfMode::Dense, EfMode::Quant4] {
-        assert_parity(128, ef, 8, 10, 3);
+        assert_parity(128, ef, WinDtype::Bf16, 8, 10, 3);
     }
 }
 
@@ -82,8 +106,8 @@ fn worker_count_can_change_mid_trajectory() {
     // Shard layout is per-call state, not optimizer state: switching pools
     // between steps must leave the trajectory untouched.
     let d = 512;
-    let mut reference = MicroAdam::new(d, cfg(EfMode::Quant4));
-    let mut fused = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut reference = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
+    let mut fused = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
     let mut rng = Rng::seed_from_u64(11);
     let mut x_ref = randvec(&mut rng, d, 1.0);
     let mut x_fused = x_ref.clone();
@@ -102,8 +126,8 @@ fn plain_step_is_the_fused_serial_engine() {
     // public default entry point is the fused engine.
     let d = 768;
     let pool = ExecPool::new(1);
-    let mut a = MicroAdam::new(d, cfg(EfMode::Quant4));
-    let mut b = MicroAdam::new(d, cfg(EfMode::Quant4));
+    let mut a = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
+    let mut b = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
     let mut rng = Rng::seed_from_u64(23);
     let mut xa = randvec(&mut rng, d, 1.0);
     let mut xb = xa.clone();
@@ -113,4 +137,103 @@ fn plain_step_is_the_fused_serial_engine() {
         b.step_sharded(&mut xb, &g, 1e-2, &pool);
     }
     assert_eq!(xa, xb);
+}
+
+#[test]
+fn one_persistent_pool_serves_a_whole_trajectory() {
+    // The steady-state shape the rewrite targets: one pool, many steps,
+    // workers parked between dispatches — still bit-exact vs reference.
+    let d = 1024;
+    let pool = ExecPool::new(4);
+    let mut reference = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
+    let mut fused = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
+    let mut rng = Rng::seed_from_u64(77);
+    let mut x_ref = randvec(&mut rng, d, 1.0);
+    let mut x_fused = x_ref.clone();
+    for s in 0..50 {
+        let g = randvec(&mut rng, d, 1.0);
+        reference.step_reference(&mut x_ref, &g, 3e-3);
+        fused.step_sharded(&mut x_fused, &g, 3e-3, &pool);
+        assert_eq!(x_ref, x_fused, "step {s}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 2: tolerance-bounded, f32 window vs bf16 window
+// ---------------------------------------------------------------------------
+
+/// Documented trajectory budget for f32-vs-bf16 window divergence under
+/// exogenous gradients: the divergence is an accumulation of per-step
+/// AdamStats rounding at ~2^-8 of each update's magnitude (see the module
+/// doc); 2^-5 of the accumulated update mass leaves an 8x margin for
+/// rounding interactions across steps without ever excusing a real bug.
+const BF16_TRAJ_TOL: f32 = 1.0 / 32.0;
+
+fn l2(a: &[f32]) -> f32 {
+    a.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+fn l2_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+}
+
+#[test]
+fn bf16_window_divergence_bounded_by_update_mass() {
+    let d = 1024;
+    let steps = 16;
+    let lr = 3e-3f32;
+    let mut f32_opt = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::F32));
+    let mut bf16_opt = MicroAdam::new(d, cfg(EfMode::Quant4, WinDtype::Bf16));
+    let mut rng = Rng::seed_from_u64(99);
+    let mut x_f = randvec(&mut rng, d, 1.0);
+    let mut x_b = x_f.clone();
+    let mut update_mass = 0f32;
+    for s in 0..steps {
+        let g = randvec(&mut rng, d, 1.0);
+        let before = x_f.clone();
+        f32_opt.step(&mut x_f, &g, lr);
+        bf16_opt.step(&mut x_b, &g, lr);
+        update_mass += l2_diff(&x_f, &before);
+        // With parameter-independent gradients the accumulator — and hence
+        // the Top-K selection and the EF state — is identical across
+        // dtypes: only the stored window values (and so the AdamStats)
+        // differ. Sharp invariants first:
+        assert_eq!(f32_opt.error_norm(), bf16_opt.error_norm(), "EF must be dtype-independent (step {s})");
+        let div = l2_diff(&x_f, &x_b);
+        assert!(
+            div <= BF16_TRAJ_TOL * update_mass + 1e-6,
+            "step {s}: divergence {div} exceeds budget {} ({} update mass)",
+            BF16_TRAJ_TOL * update_mass,
+            update_mass
+        );
+    }
+    // bf16 must actually round something: a bit-identical run would mean
+    // the window never stored a non-representable value (dead storage path)
+    assert_ne!(x_f, x_b, "bf16 window had no effect after {steps} steps");
+    // and stay a small perturbation relative to the parameter scale
+    assert!(l2_diff(&x_f, &x_b) / l2(&x_f) < 1e-2);
+}
+
+#[test]
+fn bf16_window_tracks_f32_on_a_quadratic() {
+    // Closed loop (grads depend on params): selections may flip near ties,
+    // but EF keeps the trajectories close — the end-to-end guarantee the
+    // optimizer actually needs. Same shape (and a tighter perturbation)
+    // than the pinned quant4-vs-dense-EF tracking bound, so the same 5%
+    // relative tolerance applies with margin.
+    let d = 256;
+    let mk = |win| MicroAdam::new(d, cfg(EfMode::Quant4, win));
+    let mut a = mk(WinDtype::F32);
+    let mut b = mk(WinDtype::Bf16);
+    let mut rng = Rng::seed_from_u64(5);
+    let mut xa = randvec(&mut rng, d, 1.0);
+    let mut xb = xa.clone();
+    for _ in 0..30 {
+        let ga = xa.clone();
+        a.step(&mut xa, &ga, 0.01);
+        let gb = xb.clone();
+        b.step(&mut xb, &gb, 0.01);
+    }
+    let rel = l2_diff(&xa, &xb) / l2(&xa);
+    assert!(rel < 0.05, "rel diff {rel}");
 }
