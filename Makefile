@@ -1,9 +1,14 @@
 # MicroAdam reproduction — build/test lanes.
 #
-#   make ci          default lane: XLA-free build + tests (runs anywhere)
+#   make ci          default lane: XLA-free build + tests + doctests +
+#                    warning-clean rustdoc (runs anywhere)
 #   make ci-pjrt     PJRT-gated lane: `cargo test --features pjrt` where the
 #                    vendored xla crate exists (see rust/Cargo.toml); skips
-#                    with a notice elsewhere, so CI can always invoke it
+#                    with a notice elsewhere, so CI can always invoke it.
+#                    --all-targets deliberately EXCLUDES doctests: doctest
+#                    binaries don't inherit the rpath to the image's
+#                    libstdc++ that the xla-linked targets need, so runnable
+#                    doctests live in the default (XLA-free) ci lane only
 #   make bench-smoke few-second perf probe: bench_optimizer_step in smoke
 #                    mode (writes $(BENCH_JSON): steps/s, resident
 #                    bytes/param, wire bytes) + the artifact-free
@@ -26,6 +31,8 @@ BENCH_JSON ?= BENCH_SMOKE.json
 ci:
 	cargo build --release
 	cargo test -q
+	cargo test --doc -q
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 ci-pjrt:
 	@if [ ! -d "$(XLA_RS)" ]; then \
@@ -38,7 +45,7 @@ ci-pjrt:
 		echo "         (uncomment the 'xla = { path = ... }' line, pointing at $(XLA_RS))"; \
 		exit 1; \
 	fi; \
-	cargo build --release --features pjrt && cargo test -q --features pjrt
+	cargo build --release --features pjrt && cargo test -q --features pjrt --all-targets
 
 bench-smoke:
 	MICROADAM_BENCH_SMOKE=1 MICROADAM_BENCH_JSON=$(BENCH_JSON) \

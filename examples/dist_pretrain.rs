@@ -11,6 +11,14 @@
 //! Compare reducers: `--reduce dense` (exact, 4 B/param on the wire),
 //! `--reduce topk` (sparse, biased), `--reduce eftopk` (sparse + 4-bit
 //! error feedback — tracks dense at a fraction of the bytes).
+//!
+//! This example runs the in-process (loopback) topology; the gradients
+//! still travel through the real wire frames (`dist::wire`), so the
+//! reported MB are measured framed bytes. For true multi-process runs —
+//! one OS process per rank over Unix sockets or shared memory — use the
+//! launcher: `microadam train --ranks 4 --reduce eftopk --transport uds`
+//! (bit-identical to this loopback run with the same seeds; see
+//! rust/src/dist/README.md for the wire-format spec).
 
 use microadam::coordinator::config::TrainConfig;
 use microadam::coordinator::metrics::MetricsLogger;
@@ -53,10 +61,12 @@ fn main() -> anyhow::Result<()> {
     let mut logger = MetricsLogger::new("")?;
     trainer.train(&mut logger)?;
     println!(
-        "loss {:.4} -> {:.4} | {:.3} MB on the wire | reducer residual {} B | opt state {} B",
+        "loss {:.4} -> {:.4} | {:.3} MB framed on the wire ({} B/rank/step) | \
+         reducer residual {} B | opt state {} B",
         logger.first_loss(),
         logger.tail_loss(10),
         trainer.wire_bytes_total() as f64 / (1u64 << 20) as f64,
+        trainer.frame_bytes_per_rank(),
         trainer.reducer_state_bytes(),
         trainer.opt_state_bytes(),
     );

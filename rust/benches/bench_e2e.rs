@@ -20,8 +20,9 @@ fn main() {
     microadam::bench::resident_state_report(1 << 20);
 
     // The data-parallel ranks x reducer sweep runs on the native substrate,
-    // so it needs no artifacts: bytes-on-the-wire vs loss per reducer.
-    println!("\n== data-parallel sweep (native, artifact-free) ==");
+    // so it needs no artifacts: measured framed bytes (payload + wire-frame
+    // overhead, serialized through dist::wire) vs loss per reducer.
+    println!("\n== data-parallel sweep (native, artifact-free, framed bytes) ==");
     if let Err(e) = microadam::bench::run_dist_sweep("runs", 60) {
         println!("bench_e2e: dist sweep failed: {e:#}");
     }

@@ -542,16 +542,20 @@ pub fn run_table4(artifacts_dir: &str, out_dir: &str, model: &str, steps: u64) -
 
 /// `repro dist`: the compressed-all-reduce workload — every reducer at
 /// ranks in {1, 2, 4, 8} on the native MLP substrate (artifact-free, so it
-/// runs on the stub runtime), reporting final loss against the total
-/// paper-dtype bytes each configuration put on the wire.
+/// runs on the stub runtime), reporting final loss against the **measured
+/// framed bytes** each configuration put on the wire. The loopback
+/// transport serializes every frame through `dist::wire`, so "wire MB" is
+/// what the uds/shm sockets would carry (payload + frame overhead), not a
+/// formula — `frame B/r/s` is the per-rank-per-step framed cost.
 pub fn run_dist_sweep(out_dir: &str, steps: u64) -> Result<()> {
     use crate::coordinator::config::TrainConfig;
-    use crate::dist::{DistTrainer, ReducerKind};
+    use crate::dist::{DistTrainer, ReducerKind, FRAME_OVERHEAD};
 
     println!("Data-parallel sweep — native mlp_tiny, micro-adam, {steps} steps/config");
+    println!("(framed bytes = reducer payload + {FRAME_OVERHEAD} B frame overhead)");
     println!(
-        "{:<6} {:<22} {:>12} {:>12} {:>14} {:>9}",
-        "ranks", "reducer", "final loss", "wire MB", "residual B", "time (s)"
+        "{:<6} {:<22} {:>12} {:>12} {:>11} {:>14} {:>9}",
+        "ranks", "reducer", "final loss", "wire MB", "frame B/r/s", "residual B", "time (s)"
     );
     let mut rows = Vec::new();
     for &ranks in &[1usize, 2, 4, 8] {
@@ -575,18 +579,20 @@ pub fn run_dist_sweep(out_dir: &str, steps: u64) -> Result<()> {
             let loss = logger.tail_loss(10);
             let mb = trainer.wire_bytes_total() as f64 / (1u64 << 20) as f64;
             println!(
-                "{:<6} {:<22} {:>12.4} {:>12.3} {:>14} {:>9.1}",
+                "{:<6} {:<22} {:>12.4} {:>12.3} {:>11} {:>14} {:>9.1}",
                 ranks,
                 trainer.reducer_name(),
                 loss,
                 mb,
+                trainer.frame_bytes_per_rank(),
                 trainer.reducer_state_bytes(),
                 dt
             );
             rows.push(format!(
-                "{ranks},{},{loss},{},{},{dt}",
+                "{ranks},{},{loss},{},{},{},{dt}",
                 crate::dist::reducer_name(kind),
                 trainer.wire_bytes_total(),
+                trainer.frame_bytes_per_rank(),
                 trainer.reducer_state_bytes()
             ));
         }
@@ -594,7 +600,7 @@ pub fn run_dist_sweep(out_dir: &str, steps: u64) -> Result<()> {
     let path = write_csv(
         out_dir,
         "dist_sweep.csv",
-        "ranks,reducer,final_loss,wire_bytes,residual_state_bytes,seconds",
+        "ranks,reducer,final_loss,framed_wire_bytes,frame_bytes_per_rank_step,residual_state_bytes,seconds",
         &rows,
     )?;
     println!("\nshape to check: eftopk tracks dense's loss at ~1-2% of its wire bytes,");
@@ -769,6 +775,10 @@ pub fn smoke_json(d: usize, rows: &[BenchRow]) -> crate::util::json::Json {
         wires.push(json::obj(vec![
             ("reducer", json::s(crate::dist::reducer_name(kind))),
             ("wire_bytes_per_rank", json::num(r.wire_bytes_per_rank() as f64)),
+            (
+                "framed_bytes_per_rank",
+                json::num((r.wire_bytes_per_rank() + crate::dist::FRAME_OVERHEAD) as f64),
+            ),
         ]));
     }
     let probe = MicroAdam::new(d, MicroAdamConfig::default());

@@ -8,6 +8,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::schedule::LrSchedule;
 use crate::dist::reducer::{parse_reducer, reducer_name, ReducerKind};
+use crate::dist::transport::{parse_transport, transport_name, TransportKind};
 use crate::optim::OptimizerKind;
 use crate::util::json::{self, Json};
 
@@ -46,6 +47,10 @@ pub struct TrainConfig {
     pub ranks: usize,
     /// Gradient exchange for the data-parallel engine.
     pub reduce: ReducerKind,
+    /// How replicas exchange frames: in-process (`loopback`, default) or
+    /// the multi-process `uds`/`shm` transports, which make
+    /// `microadam train` launch one worker process per extra rank.
+    pub transport: TransportKind,
 }
 
 impl Default for TrainConfig {
@@ -65,6 +70,7 @@ impl Default for TrainConfig {
             workers: 0,
             ranks: 1,
             reduce: ReducerKind::Dense,
+            transport: TransportKind::Loopback,
         }
     }
 }
@@ -116,6 +122,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("reduce").and_then(Json::as_str) {
             cfg.reduce = parse_reducer(v)?;
+        }
+        if let Some(v) = j.get("transport").and_then(Json::as_str) {
+            cfg.transport = parse_transport(v)?;
         }
         let lr = j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3) as f32;
         cfg.schedule = match j.get("schedule").and_then(Json::as_str).unwrap_or("const") {
@@ -171,6 +180,7 @@ impl TrainConfig {
             ("workers", json::num(self.workers as f64)),
             ("ranks", json::num(self.ranks as f64)),
             ("reduce", json::s(reducer_name(self.reduce))),
+            ("transport", json::s(transport_name(self.transport))),
         ])
     }
 }
@@ -227,6 +237,7 @@ mod tests {
             workers: 3,
             ranks: 4,
             reduce: ReducerKind::EfTopK,
+            transport: TransportKind::Uds,
         };
         let j = cfg.to_json().to_string();
         let back = TrainConfig::from_json(&j).unwrap();
@@ -239,6 +250,7 @@ mod tests {
         assert_eq!(back.grad_accum, 4);
         assert_eq!(back.ranks, 4);
         assert_eq!(back.reduce, ReducerKind::EfTopK);
+        assert_eq!(back.transport, TransportKind::Uds);
     }
 
     #[test]
@@ -253,13 +265,18 @@ mod tests {
 
     #[test]
     fn ranks_and_reduce_parse_and_clamp() {
-        let cfg = TrainConfig::from_json(r#"{"ranks": 8, "reduce": "eftopk"}"#).unwrap();
+        let cfg =
+            TrainConfig::from_json(r#"{"ranks": 8, "reduce": "eftopk", "transport": "shm"}"#)
+                .unwrap();
         assert_eq!(cfg.ranks, 8);
         assert_eq!(cfg.reduce, ReducerKind::EfTopK);
-        // ranks clamps to >= 1
+        assert_eq!(cfg.transport, TransportKind::Shm);
+        // ranks clamps to >= 1, transport defaults to loopback
         let cfg = TrainConfig::from_json(r#"{"ranks": 0}"#).unwrap();
         assert_eq!(cfg.ranks, 1);
+        assert_eq!(cfg.transport, TransportKind::Loopback);
         assert!(TrainConfig::from_json(r#"{"reduce": "gossip"}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"transport": "pigeon"}"#).is_err());
     }
 
     #[test]

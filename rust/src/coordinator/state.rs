@@ -6,6 +6,12 @@
 //! only reads buffers back for checkpoints or inspection. Shapes come from
 //! the manifest's `hyper` block and are validated by the runtime on every
 //! execute.
+//!
+//! [`MicroAdamSnapshot`] is the backend-neutral host copy both engines
+//! (AOT and native) serialize through the checkpoint format — the
+//! data-parallel [`crate::dist::DistTrainer`] persists params-only
+//! checkpoints through the same format, so a dist run can seed a
+//! single-process fine-tune and vice versa.
 
 use anyhow::{anyhow, Result};
 

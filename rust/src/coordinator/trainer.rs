@@ -10,6 +10,12 @@
 //! Parameters stay in a PJRT literal between steps; only the scalar loss is
 //! read back on the hot path. With the native backend, gradients round-trip
 //! to host Vec<f32>s and any [`crate::optim`] optimizer applies the update.
+//!
+//! This is the single-process driver; `--ranks N` (and the
+//! `--transport uds|shm` multi-process launcher) route through
+//! [`crate::dist::DistTrainer`] instead, which wraps the same
+//! config/metrics/checkpoint stack around the framed gradient exchange
+//! and is pinned bit-identical to this loop at `ranks = 1` + dense.
 
 use anyhow::{bail, Result};
 

@@ -1,50 +1,71 @@
-//! In-process multi-replica data-parallel training engine.
+//! Multi-replica data-parallel training engine with a real wire layer.
 //!
 //! MicroAdam's core trick — error feedback whose correction buffer is
 //! itself compressed — was lifted from distributed optimization. This
-//! module puts the mechanism back in its native habitat: `N` simulated
-//! replicas each draw their **own** seeded data shard, compute local
-//! gradients against the shared parameters, and exchange them through a
-//! pluggable [`GradReducer`] before one shared optimizer step.
+//! module puts the mechanism back in its native habitat: `N` replicas
+//! each draw their **own** seeded data shard, compute local gradients,
+//! and exchange them through a pluggable [`GradReducer`] before every
+//! process applies the same optimizer step. Replicas can share one
+//! address space (loopback) or live in separate processes connected by
+//! Unix-domain sockets or shared-memory mailboxes — same math, same
+//! bytes, bit-identical trajectories.
 //!
 //! Layer map:
-//! * [`reducer`] — the exchange: [`DenseAllReduce`] (exact mean baseline),
-//!   [`TopKReduce`] (per-rank block-wise Top-K sparsification), and
+//! * [`reducer`] — the exchange math: [`DenseAllReduce`] (exact mean
+//!   baseline), [`TopKReduce`] (per-rank block Top-K sparsification), and
 //!   [`EfTopKReduce`] (Top-K + per-rank 4-bit-quantized error-feedback
 //!   residuals, reusing [`crate::quant::Quant4`] and the optimizer's
-//!   [`crate::optim::microadam::EfMode`]). All are deterministic and
-//!   bit-identical at any [`crate::exec::ExecPool`] worker count.
+//!   [`crate::optim::microadam::EfMode`]). Each reducer exposes both the
+//!   in-core `reduce` and the split compress-payload / aggregate-payloads
+//!   phases the transports run. All are deterministic and bit-identical
+//!   at any [`crate::exec::ExecPool`] worker count.
+//! * [`wire`] — the serialization layer: a versioned, little-endian,
+//!   CRC-32-guarded frame per rank per step, carrying exactly the slab
+//!   the reducer holds resident. The normative byte-level spec lives in
+//!   `rust/src/dist/README.md`; `wire.rs` implements that document.
+//! * [`transport`] — how frames move: [`Loopback`] (in-process, still
+//!   encode/decode round-tripped so framing is always exercised),
+//!   [`UdsTransport`] (Unix-domain sockets with a rank-0 rendezvous), and
+//!   [`ShmTransport`] (file-backed shared-memory mailboxes, page-cache
+//!   only on tmpfs). All implement the same gather-to-all [`Transport`]
+//!   collective.
 //! * [`replica`] — per-rank state: rank-seeded `MarkovCorpus` /
 //!   `NliDataset` / `ImageDataset` streams (artifact engine) or a
 //!   pure-rust MLP shard (native engine, runs on the stub runtime), with
 //!   rank 0 reproducing the single-process trainer's stream exactly.
-//! * [`trainer`] — [`DistTrainer`]: the synchronous data-parallel loop,
-//!   wrapping the coordinator's config/metrics/checkpoint stack and
-//!   feeding the aggregated gradient into the ordinary
-//!   [`crate::optim::Optimizer::step_multi`] hot path with real
-//!   per-tensor chunk boundaries.
+//! * [`trainer`] — [`DistTrainer`]: one process's endpoint of the
+//!   synchronous data-parallel loop, wrapping the coordinator's
+//!   config/metrics/checkpoint stack and feeding the aggregated gradient
+//!   into the ordinary [`crate::optim::Optimizer::step_multi`] hot path.
 //!
 //! Wire/bytes accounting is **physical**: the sparse reducers hold real
-//! `(u16 index, bf16 value)` slabs in RAM (4 B per entry, derived from
-//! the resident buffer lengths and asserted against the formula), dense
-//! f32 costs 4 B/param, and the EF residual costs what
+//! `(u16 index, bf16 value)` slabs in RAM (4 B per entry), a frame is
+//! exactly those payload bytes plus the fixed
+//! [`wire::FRAME_OVERHEAD`] — asserted every step and measured over the
+//! real socket/mailbox in the transport parity tests. Dense f32 costs
+//! 4 B/param; the EF residual costs what
 //! [`Quant4::state_bytes`] reports (0.5 B/param + bucket stats) per rank.
 //!
-//! This is a *simulation* of the transport (replicas share one address
-//! space; "bytes on the wire" are accounted, not moved through sockets) —
-//! a real multi-process transport is a ROADMAP follow-up. The compression
-//! math, EF state, and trajectory semantics are the real thing.
+//! Entry points: `microadam train --ranks N --reduce eftopk` (loopback),
+//! plus `--transport uds|shm` for the multi-process launcher (rank 0
+//! spawns workers, or `--rendezvous PATH` to join by hand).
 //!
 //! [`DenseAllReduce`]: reducer::DenseAllReduce
 //! [`TopKReduce`]: reducer::TopKReduce
 //! [`EfTopKReduce`]: reducer::EfTopKReduce
 //! [`GradReducer`]: reducer::GradReducer
 //! [`DistTrainer`]: trainer::DistTrainer
+//! [`Loopback`]: transport::Loopback
+//! [`UdsTransport`]: transport::UdsTransport
+//! [`ShmTransport`]: transport::ShmTransport
+//! [`Transport`]: transport::Transport
 //! [`Quant4::state_bytes`]: crate::quant::Quant4::state_bytes
 
 pub mod reducer;
 pub mod replica;
 pub mod trainer;
+pub mod transport;
+pub mod wire;
 
 pub use reducer::{
     build_reducer, parse_reducer, reducer_name, DenseAllReduce, EfTopKReduce, GradReducer,
@@ -54,3 +75,8 @@ pub use replica::{
     is_native_model, native_model_spec, rank_data_seed, NativeModelSpec, NativeReplica,
 };
 pub use trainer::DistTrainer;
+pub use transport::{
+    default_rendezvous, parse_transport, transport_name, Loopback, ShmTransport, Transport,
+    TransportKind, UdsPending, UdsTransport,
+};
+pub use wire::{Frame, PayloadTag, WireError, FRAME_OVERHEAD};

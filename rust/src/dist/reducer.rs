@@ -34,9 +34,38 @@
 //! The bf16 rounding residual of a *selected* entry is dropped (mirroring
 //! the optimizer's window semantics); the EF residual carries exactly the
 //! unselected mass.
+//!
+//! Every reducer exposes the exchange in two equivalent shapes:
+//!
+//! * [`GradReducer::reduce`] — the in-core path: compress every rank
+//!   (phase A, sharded by rank) and aggregate the resident slabs
+//!   (phase B, sharded by block range).
+//! * [`GradReducer::compress_payload`] / [`GradReducer::aggregate_payloads`]
+//!   — the split-phase path the [`crate::dist::transport`] layer uses: a
+//!   process compresses only the ranks it hosts into wire payloads
+//!   (serialized exactly as `rust/src/dist/README.md` specifies), and
+//!   aggregation decodes the gathered payloads into the same resident
+//!   slabs before running the identical phase B. Both shapes run the same
+//!   kernels on the same bytes, so loopback and multi-process training
+//!   are bit-identical by construction.
+//!
+//! ```
+//! use microadam::dist::{build_reducer, GradReducer, ReducerKind, SparseReduceConfig};
+//! use microadam::exec::ExecPool;
+//!
+//! // two ranks, 256 params, paper-default compression geometry
+//! let mut r = build_reducer(ReducerKind::EfTopK, 256, 2, SparseReduceConfig::default());
+//! let g0 = vec![0.1f32; 256];
+//! let g1 = vec![0.3f32; 256];
+//! let mut mean = vec![0f32; 256];
+//! r.reduce(&[&g0[..], &g1[..]], &mut mean, &ExecPool::serial());
+//! // far below the dense 4 B/param exchange
+//! assert!(r.wire_bytes_per_rank() < 4 * 256);
+//! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::wire::{self, PayloadTag};
 use crate::exec::{self, ExecPool};
 use crate::optim::microadam::EfMode;
 use crate::quant::{BucketStats, Quant4};
@@ -79,6 +108,26 @@ pub trait GradReducer: Send {
     /// compressed — contributions. Deterministic and bit-identical at any
     /// `pool` worker count.
     fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool);
+    /// Wire tag this reducer's payloads carry (frame type checking).
+    fn payload_tag(&self) -> PayloadTag;
+    /// Phase A for one hosted rank: fold `grad` through the rank's
+    /// compressor state (updating its error-feedback residual, if any) and
+    /// return the serialized wire payload — exactly
+    /// [`GradReducer::wire_bytes_per_rank`] bytes, laid out as the wire
+    /// spec (`rust/src/dist/README.md`) defines for
+    /// [`GradReducer::payload_tag`].
+    fn compress_payload(&mut self, rank: usize, grad: &[f32]) -> Vec<u8>;
+    /// Phase B from gathered payloads (one per rank, rank order): decode
+    /// them into the resident slabs and aggregate the mean into `out`.
+    /// Runs the same aggregation kernel as [`GradReducer::reduce`], so for
+    /// payloads produced by [`GradReducer::compress_payload`] the result
+    /// is bit-identical to the in-core path.
+    fn aggregate_payloads(
+        &mut self,
+        payloads: &[Vec<u8>],
+        out: &mut [f32],
+        pool: &ExecPool,
+    ) -> Result<()>;
     /// Paper-dtype bytes one rank puts on the wire per step.
     fn wire_bytes_per_rank(&self) -> usize;
     /// Persistent compressor/residual state across all ranks, paper dtypes
@@ -138,13 +187,51 @@ pub fn build_reducer(
 pub struct DenseAllReduce {
     d: usize,
     ranks: usize,
+    /// Payload-decode scratch (`ranks * d`, rank-major), allocated on
+    /// first use so the per-step aggregate path stays allocation-free.
+    rx: Vec<f32>,
 }
 
 impl DenseAllReduce {
     pub fn new(d: usize, ranks: usize) -> Self {
         assert!(d > 0 && ranks > 0);
-        Self { d, ranks }
+        Self { d, ranks, rx: Vec::new() }
     }
+}
+
+/// The dense aggregation kernel, shared verbatim by the in-core and
+/// payload-decoded paths so the two cannot diverge by a float op:
+/// coordinate-sharded, rank-ascending summation, one multiply by `1/n`.
+fn dense_mean(d: usize, ranks: usize, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+    assert_eq!(grads.len(), ranks);
+    assert_eq!(out.len(), d);
+    if ranks == 1 {
+        // single-rank fast path: the mean IS the gradient, bit-for-bit
+        out.copy_from_slice(grads[0]);
+        return;
+    }
+    let inv = 1.0f32 / ranks as f32;
+    let ranges = exec::chunk_ranges(d, pool.workers());
+    let mut shards = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    let mut start = 0usize;
+    for r in &ranges {
+        let (chunk, next) = rest.split_at_mut(r.len());
+        rest = next;
+        shards.push((start, chunk));
+        start = r.end;
+    }
+    pool.run_shards(shards, |_, (base, chunk)| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            // fixed rank-ascending summation: the result cannot depend
+            // on how coordinates were sharded
+            let mut s = 0f32;
+            for g in grads {
+                s += g[base + i];
+            }
+            *o = s * inv;
+        }
+    });
 }
 
 impl GradReducer for DenseAllReduce {
@@ -153,35 +240,37 @@ impl GradReducer for DenseAllReduce {
     }
 
     fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
-        assert_eq!(grads.len(), self.ranks);
-        assert_eq!(out.len(), self.d);
-        if self.ranks == 1 {
-            // single-rank fast path: the mean IS the gradient, bit-for-bit
-            out.copy_from_slice(&grads[0]);
-            return;
+        dense_mean(self.d, self.ranks, grads, out, pool);
+    }
+
+    fn payload_tag(&self) -> PayloadTag {
+        PayloadTag::Dense
+    }
+
+    fn compress_payload(&mut self, rank: usize, grad: &[f32]) -> Vec<u8> {
+        assert!(rank < self.ranks);
+        assert_eq!(grad.len(), self.d);
+        wire::dense_payload(grad)
+    }
+
+    fn aggregate_payloads(
+        &mut self,
+        payloads: &[Vec<u8>],
+        out: &mut [f32],
+        pool: &ExecPool,
+    ) -> Result<()> {
+        if payloads.len() != self.ranks {
+            bail!("dense aggregate: {} payloads for {} ranks", payloads.len(), self.ranks);
         }
-        let inv = 1.0f32 / self.ranks as f32;
-        let ranges = exec::chunk_ranges(self.d, pool.workers());
-        let mut shards = Vec::with_capacity(ranges.len());
-        let mut rest = out;
-        let mut start = 0usize;
-        for r in &ranges {
-            let (chunk, next) = rest.split_at_mut(r.len());
-            rest = next;
-            shards.push((start, chunk));
-            start = r.end;
+        // f32 bit patterns round-trip the payload codec exactly, so this
+        // path is bit-identical to `reduce` on the original gradients.
+        self.rx.resize(self.ranks * self.d, 0.0);
+        for (r, (buf, p)) in self.rx.chunks_mut(self.d).zip(payloads).enumerate() {
+            wire::dense_from_payload(p, buf).map_err(|e| anyhow!("rank {r} payload: {e}"))?;
         }
-        pool.run_shards(shards, |_, (base, chunk)| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                // fixed rank-ascending summation: the result cannot depend
-                // on how coordinates were sharded
-                let mut s = 0f32;
-                for g in grads {
-                    s += g[base + i];
-                }
-                *o = s * inv;
-            }
-        });
+        let refs: Vec<&[f32]> = self.rx.chunks(self.d).collect();
+        dense_mean(self.d, self.ranks, &refs, out, pool);
+        Ok(())
     }
 
     fn wire_bytes_per_rank(&self) -> usize {
@@ -199,6 +288,15 @@ impl GradReducer for DenseAllReduce {
 
 /// Per-rank Top-K compression state + the dense aggregation scratch. The
 /// two public sparse reducers are thin wrappers selecting the EF mode.
+///
+/// The core is **world-sized** on every endpoint: the `idx`/`val` slabs
+/// must hold all ranks for phase B, and `residual_state_bytes` reports
+/// the job-wide paper accounting. A multi-process endpoint therefore also
+/// carries (unused) `acc`/EF buffers for remote ranks — per-process
+/// overhead of `(ranks-1) * ~1.5 d_pad` bytes, negligible for the native
+/// MLP workloads the multi-process transports drive today. Lazily
+/// allocating only the hosted rank's compressor state is the obvious
+/// refinement if multi-process ever hosts large-`d` models.
 struct SparseCore {
     d: usize,
     d_pad: usize,
@@ -273,19 +371,20 @@ impl SparseCore {
         }
     }
 
-    /// Phase A (sharded by rank): compress every rank's gradient into its
-    /// `(idx, val)` slab, updating the rank's EF residual. Phase B (sharded
-    /// by block range): densely aggregate the sparse contributions into
-    /// `out` as the mean.
+    /// The in-core exchange: phase A over every rank, then phase B.
     fn reduce(&mut self, grads: &[&[f32]], out: &mut [f32], pool: &ExecPool) {
+        self.compress_all(grads, pool);
+        self.aggregate(out, pool);
+    }
+
+    /// Phase A (sharded by rank): compress every rank's gradient into its
+    /// `(idx, val)` slab, updating the rank's EF residual.
+    fn compress_all(&mut self, grads: &[&[f32]], pool: &ExecPool) {
         assert_eq!(grads.len(), self.ranks);
-        assert_eq!(out.len(), self.d);
         let (d, d_pad, block, nb, kb) = (self.d, self.d_pad, self.block, self.nb, self.kb);
         let ef_mode = self.ef;
         let quant = &self.quant;
         let nq = self.nq;
-
-        // --- Phase A: per-rank compress (disjoint &mut state per rank) ---
         {
             let mut rank_shards = Vec::with_capacity(self.ranks);
             let mut acc_rest = &mut self.acc[..];
@@ -340,8 +439,70 @@ impl SparseCore {
                 }
             });
         }
+    }
 
-        // --- Phase B: dense mean of the sparse contributions ---
+    /// Phase A for a single rank (the split-phase path: a process
+    /// compresses only the ranks it hosts). Exactly the per-rank work of
+    /// [`SparseCore::compress_all`], so the resulting slab and EF state
+    /// are bit-identical whichever entry point ran.
+    fn compress_one(&mut self, rank: usize, grad: &[f32]) {
+        assert!(rank < self.ranks);
+        assert_eq!(grad.len(), self.d);
+        let (d_pad, nbkb, nq) = (self.d_pad, self.nb * self.kb, self.nq);
+        let ef = match self.ef {
+            EfMode::Off => RankEf::Off,
+            EfMode::Dense => {
+                RankEf::Dense(&mut self.ef_dense[rank * d_pad..(rank + 1) * d_pad])
+            }
+            EfMode::Quant4 => RankEf::Quant4 {
+                packed: &mut self.ef_packed[rank * d_pad / 2..(rank + 1) * d_pad / 2],
+                stats: &mut self.ef_stats[rank * nq..(rank + 1) * nq],
+            },
+        };
+        let sh = RankShard {
+            grad,
+            acc: &mut self.acc[rank * d_pad..(rank + 1) * d_pad],
+            idx: &mut self.idx[rank * nbkb..(rank + 1) * nbkb],
+            val: &mut self.val[rank * nbkb..(rank + 1) * nbkb],
+            ef,
+            sel: &mut self.sels[rank],
+        };
+        compress_rank(self.d, self.block, self.kb, &self.quant, sh);
+    }
+
+    /// Serialize `rank`'s resident `(idx, val)` slab as its wire payload.
+    fn rank_payload(&self, rank: usize) -> Vec<u8> {
+        let nbkb = self.nb * self.kb;
+        wire::slab_payload(
+            &self.idx[rank * nbkb..(rank + 1) * nbkb],
+            &self.val[rank * nbkb..(rank + 1) * nbkb],
+        )
+    }
+
+    /// Decode gathered wire payloads (rank order) into the resident slabs.
+    /// For the ranks this process compressed itself, the decode rewrites
+    /// the identical bytes.
+    fn load_payloads(&mut self, payloads: &[Vec<u8>]) -> Result<()> {
+        if payloads.len() != self.ranks {
+            bail!("sparse aggregate: {} payloads for {} ranks", payloads.len(), self.ranks);
+        }
+        let nbkb = self.nb * self.kb;
+        for (r, p) in payloads.iter().enumerate() {
+            wire::slab_from_payload(
+                p,
+                &mut self.idx[r * nbkb..(r + 1) * nbkb],
+                &mut self.val[r * nbkb..(r + 1) * nbkb],
+            )
+            .map_err(|e| anyhow!("rank {r} slab payload: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Phase B (sharded by block range): densely aggregate the resident
+    /// sparse slabs into `out` as the mean.
+    fn aggregate(&self, out: &mut [f32], pool: &ExecPool) {
+        assert_eq!(out.len(), self.d);
+        let (d, block, nb, kb) = (self.d, self.block, self.nb, self.kb);
         let inv = 1.0f32 / self.ranks as f32;
         let ranks = self.ranks;
         let idx = &self.idx[..];
@@ -506,6 +667,26 @@ impl GradReducer for TopKReduce {
         self.core.reduce(grads, out, pool);
     }
 
+    fn payload_tag(&self) -> PayloadTag {
+        PayloadTag::TopK
+    }
+
+    fn compress_payload(&mut self, rank: usize, grad: &[f32]) -> Vec<u8> {
+        self.core.compress_one(rank, grad);
+        self.core.rank_payload(rank)
+    }
+
+    fn aggregate_payloads(
+        &mut self,
+        payloads: &[Vec<u8>],
+        out: &mut [f32],
+        pool: &ExecPool,
+    ) -> Result<()> {
+        self.core.load_payloads(payloads)?;
+        self.core.aggregate(out, pool);
+        Ok(())
+    }
+
     fn wire_bytes_per_rank(&self) -> usize {
         self.core.wire_bytes_per_rank()
     }
@@ -554,8 +735,28 @@ impl GradReducer for EfTopKReduce {
         self.core.reduce(grads, out, pool);
     }
 
+    fn payload_tag(&self) -> PayloadTag {
+        PayloadTag::EfTopK
+    }
+
+    fn compress_payload(&mut self, rank: usize, grad: &[f32]) -> Vec<u8> {
+        self.core.compress_one(rank, grad);
+        self.core.rank_payload(rank)
+    }
+
+    fn aggregate_payloads(
+        &mut self,
+        payloads: &[Vec<u8>],
+        out: &mut [f32],
+        pool: &ExecPool,
+    ) -> Result<()> {
+        self.core.load_payloads(payloads)?;
+        self.core.aggregate(out, pool);
+        Ok(())
+    }
+
     fn wire_bytes_per_rank(&self) -> usize {
-        // Post-tentpole the accounted formula (2 B u16 idx + 2 B bf16 val
+        // The accounted formula (2 B u16 idx + 2 B bf16 val
         // per entry) and the physically resident slab must agree — if they
         // ever drift the accounting has gone fictional again.
         let accounted = 4 * self.core.nb * self.core.kb;
@@ -738,5 +939,52 @@ mod tests {
             assert_eq!(parse_reducer(reducer_name(k)).unwrap(), k);
         }
         assert!(parse_reducer("frobnicate").is_err());
+    }
+
+    #[test]
+    fn split_phase_payload_path_matches_in_core_bitwise() {
+        // The transport path (compress_payload per rank -> serialized slab
+        // -> aggregate_payloads) must reproduce the in-core reduce() to the
+        // bit, EF state evolution included, for every reducer kind.
+        let d = 300; // padded tail
+        let ranks = 3;
+        let pool = ExecPool::new(2);
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut core = build_reducer(kind, d, ranks, small_cfg());
+            let mut split = build_reducer(kind, d, ranks, small_cfg());
+            let mut out_core = vec![0f32; d];
+            let mut out_split = vec![0f32; d];
+            for round in 0..6 {
+                let grads = rank_grads(40 + round, ranks, d);
+                core.reduce(&refs(&grads), &mut out_core, &pool);
+                let payloads: Vec<Vec<u8>> = (0..ranks)
+                    .map(|r| split.compress_payload(r, &grads[r]))
+                    .collect();
+                for p in &payloads {
+                    assert_eq!(p.len(), split.wire_bytes_per_rank(), "{kind:?}");
+                }
+                split.aggregate_payloads(&payloads, &mut out_split, &pool).unwrap();
+                assert_eq!(out_core, out_split, "{kind:?} round {round}");
+                for r in 0..ranks {
+                    assert_eq!(core.residual_norm(r), split.residual_norm(r), "{kind:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_payloads_rejects_malformed_input() {
+        let d = 128;
+        let pool = ExecPool::serial();
+        let mut out = vec![0f32; d];
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut r = build_reducer(kind, d, 2, small_cfg());
+            // wrong payload count
+            let one = vec![r.compress_payload(0, &vec![0.5f32; d])];
+            assert!(r.aggregate_payloads(&one, &mut out, &pool).is_err(), "{kind:?}");
+            // wrong payload size
+            let bad = vec![vec![0u8; 3], vec![0u8; 3]];
+            assert!(r.aggregate_payloads(&bad, &mut out, &pool).is_err(), "{kind:?}");
+        }
     }
 }

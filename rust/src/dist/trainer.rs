@@ -1,27 +1,41 @@
-//! The data-parallel training driver: N replicas -> gradient exchange ->
-//! one shared optimizer step.
+//! The data-parallel training driver: N replicas -> framed gradient
+//! exchange -> one (replicated) optimizer step.
 //!
-//! Per step:
-//! 1. every replica draws a batch from **its own** seeded shard and
-//!    computes a local gradient on the shared parameters (native MLP
-//!    replicas fan out across the [`ExecPool`]; artifact replicas run
-//!    sequentially through the one PJRT client);
-//! 2. the [`GradReducer`] aggregates the per-rank gradients into the mean
-//!    (exactly for [`ReducerKind::Dense`], compressed for
-//!    `TopK`/`EfTopK`), accumulating bytes-on-the-wire accounting;
-//! 3. the aggregated gradient feeds the ordinary
-//!    [`Optimizer::step_multi`] hot path with the layout's real
-//!    per-tensor chunk boundaries — the same code path as the
-//!    single-process [`crate::coordinator::trainer::Trainer`].
+//! One [`DistTrainer`] instance is one *process's* view of the run. In
+//! loopback mode it hosts every rank; under a multi-process transport
+//! (`--transport uds|shm`) each process hosts one rank and the full set
+//! of frames is gathered through rank 0. Per step, every process:
+//!
+//! 1. draws a batch on each hosted replica (its **own** seeded shard) and
+//!    computes local gradients against the process's parameters (native
+//!    MLP replicas fan out across the [`ExecPool`]; artifact replicas run
+//!    sequentially through the one PJRT client, loopback only);
+//! 2. runs the [`GradReducer`]'s per-rank compress phase and wraps each
+//!    hosted rank's payload in a wire frame
+//!    ([`crate::dist::wire::Frame`]);
+//! 3. exchanges frames through the [`Transport`] (gather-to-all via
+//!    rank 0) and aggregates the gathered payloads into the mean
+//!    gradient — the same deterministic kernel on every process;
+//! 4. feeds that gradient into the ordinary [`Optimizer::step_multi`] hot
+//!    path with the layout's real per-tensor chunk boundaries — the same
+//!    code path as the single-process
+//!    [`crate::coordinator::trainer::Trainer`].
+//!
+//! Because step 3 hands every process identical bytes and steps 3-4 are
+//! deterministic, the replicated parameters/optimizer state never drift:
+//! there is **no parameter broadcast**, and a `uds`/`shm` run is
+//! bit-identical to the loopback run with the same seeds (pinned in
+//! `rust/tests/test_transport_parity.rs`).
 //!
 //! Guarantee (pinned in `rust/tests/test_dist_parity.rs`): `ranks = 1`
 //! with `DenseAllReduce` is **bit-identical** to single-process training
-//! for every optimizer kind — the reducer is an exact identity and the
-//! chunked step is bit-equal to the flat step.
+//! for every optimizer kind — the reducer is an exact identity, the f32
+//! payload codec is bit-preserving, and the chunked step is bit-equal to
+//! the flat step.
 //!
 //! The trainer wraps the coordinator stack: [`TrainConfig`] (with its
-//! `ranks`/`reduce` fields) configures it, [`MetricsLogger`] records it,
-//! and [`Checkpoint`] persists it.
+//! `ranks`/`reduce`/`transport` fields) configures it, [`MetricsLogger`]
+//! records it (rank 0 / loopback only), and [`Checkpoint`] persists it.
 
 use anyhow::{bail, Result};
 
@@ -37,23 +51,32 @@ use crate::util::json;
 
 use super::reducer::{build_reducer, reducer_name, GradReducer, SparseReduceConfig};
 use super::replica::{native_model_spec, ArtifactReplica, NativeModelSpec, NativeReplica};
+use super::transport::{transport_name, Loopback, Transport, TransportKind};
+use super::wire::{self, Frame};
 
 /// Which gradient backend drives the replicas.
 enum Engine {
     /// Pure-rust MLP: runs everywhere, replicas step in parallel.
     Native { mlp: Mlp, spec: NativeModelSpec, replicas: Vec<NativeReplica> },
-    /// Shared AOT artifact via the PJRT runtime (sequential across ranks).
+    /// Shared AOT artifact via the PJRT runtime (sequential across ranks;
+    /// loopback topology only — there is one PJRT client per process).
     Artifact { rt: Runtime, model: String, replicas: Vec<ArtifactReplica> },
 }
 
-/// Multi-replica data-parallel trainer.
+/// One process's endpoint of a (possibly multi-process) data-parallel run.
 pub struct DistTrainer {
     pub cfg: TrainConfig,
+    /// World size (total replica count across all processes).
     pub ranks: usize,
     engine: Engine,
+    /// The ranks this process hosts (ascending): all of `0..ranks` in
+    /// loopback, exactly one rank per process otherwise.
+    local_ranks: Vec<usize>,
+    transport: Box<dyn Transport>,
     reducer: Box<dyn GradReducer>,
     opt: Box<dyn Optimizer>,
-    /// Canonical shared parameters (host-resident flat vector).
+    /// This process's parameters (replicated: every process holds the
+    /// same bits, kept in lockstep by the deterministic exchange).
     params: Vec<f32>,
     /// Flat dimension (padded for artifact models, exact for native).
     d: usize,
@@ -63,19 +86,56 @@ pub struct DistTrainer {
     agg: Vec<f32>,
     pool: ExecPool,
     pub t: u64,
-    /// Total paper-dtype bytes all ranks have put on the wire so far.
+    /// Total framed bytes all ranks have put on the wire so far
+    /// (`ranks * (wire_bytes_per_rank + FRAME_OVERHEAD)` per step).
     wire_bytes: u64,
 }
 
 impl DistTrainer {
-    /// Build from a [`TrainConfig`] (`cfg.ranks` / `cfg.reduce` select the
-    /// topology). Artifact models need the PJRT runtime; without it — or
-    /// without `artifacts/` — the trainer falls back to the native MLP
-    /// workload so `microadam train --ranks N` works on the stub runtime.
-    /// The optimizer update always runs natively (`cfg.backend` only
-    /// selects how single-process training applies it).
-    pub fn new(mut cfg: TrainConfig) -> Result<Self> {
+    /// Build the in-process (loopback) trainer from a [`TrainConfig`]
+    /// (`cfg.ranks` / `cfg.reduce` select the topology). Multi-process
+    /// transports go through [`DistTrainer::with_transport`] — the CLI
+    /// launcher (`microadam train --transport uds|shm`) wires that up.
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        if cfg.transport != TransportKind::Loopback {
+            bail!(
+                "DistTrainer::new is the in-process constructor; `--transport {}` runs \
+                 through the multi-process launcher (or DistTrainer::with_transport)",
+                transport_name(cfg.transport)
+            );
+        }
         let ranks = cfg.ranks.max(1);
+        let local: Vec<usize> = (0..ranks).collect();
+        Self::with_transport(cfg, Box::new(Loopback::new(ranks)), local)
+    }
+
+    /// Build one endpoint of the run: `transport` carries the exchange and
+    /// `local_ranks` names the replicas this process hosts (all ranks for
+    /// [`Loopback`], exactly one per worker/coordinator process for the
+    /// socket/shared-memory transports). Artifact models need the PJRT
+    /// runtime *and* the loopback topology; otherwise — or without
+    /// `artifacts/` — the trainer falls back to the native MLP workload so
+    /// `microadam train --ranks N` works on the stub runtime. The
+    /// optimizer update always runs natively (`cfg.backend` only selects
+    /// how single-process training applies it).
+    pub fn with_transport(
+        mut cfg: TrainConfig,
+        transport: Box<dyn Transport>,
+        local_ranks: Vec<usize>,
+    ) -> Result<Self> {
+        let ranks = cfg.ranks.max(1);
+        if transport.ranks() != ranks {
+            bail!(
+                "dist: transport built for {} ranks, config says {ranks}",
+                transport.ranks()
+            );
+        }
+        if local_ranks.is_empty()
+            || local_ranks.windows(2).any(|w| w[0] >= w[1])
+            || *local_ranks.last().expect("non-empty") >= ranks
+        {
+            bail!("dist: local_ranks must be ascending, unique and < {ranks}");
+        }
         if cfg.grad_accum > 1 {
             bail!(
                 "dist: grad_accum > 1 is not supported — each rank already \
@@ -83,7 +143,12 @@ impl DistTrainer {
             );
         }
 
-        let engine = Self::resolve_engine(&cfg, ranks)?;
+        // Multi-process endpoints host a strict subset of the ranks; the
+        // artifact engine is loopback-only (one PJRT client per process,
+        // and every process must resolve the *same* engine for the
+        // replicated step to stay in lockstep).
+        let allow_artifact = local_ranks.len() == ranks;
+        let engine = Self::resolve_engine(&cfg, &local_ranks, allow_artifact)?;
         // After an artifact->native fallback the run trains mlp_tiny, not
         // the requested artifact model; record what actually ran so the
         // metrics header / provenance JSON can't mislabel the data.
@@ -104,10 +169,12 @@ impl DistTrainer {
         let opt = optim::build(cfg.optimizer, d, &tensors, cfg.weight_decay);
         let reducer = build_reducer(cfg.reduce, d, ranks, SparseReduceConfig::default());
         let pool = if cfg.workers == 0 { ExecPool::auto() } else { ExecPool::new(cfg.workers) };
-        Ok(Self {
+        let mut me = Self {
             cfg,
             ranks,
             engine,
+            local_ranks,
+            transport,
             reducer,
             opt,
             params,
@@ -117,10 +184,64 @@ impl DistTrainer {
             pool,
             t: 0,
             wire_bytes: 0,
-        })
+        };
+        me.config_handshake()?;
+        Ok(me)
     }
 
-    fn resolve_engine(cfg: &TrainConfig, ranks: usize) -> Result<Engine> {
+    /// Digest of everything trajectory-relevant in the config. `out` is
+    /// endpoint-local (workers clear it) and deliberately excluded.
+    fn config_digest(cfg: &TrainConfig) -> u64 {
+        let mut c = cfg.clone();
+        c.out = String::new();
+        wire::fnv1a64(c.to_json().to_string().as_bytes())
+    }
+
+    /// Session round 0: every rank exchanges a handshake frame carrying
+    /// the FNV-1a digest of its canonical config. The replicated-state
+    /// guarantee rests on every process stepping identically, so a
+    /// hand-started worker running a different seed/lr/optimizer must
+    /// fail fast here instead of silently diverging for the whole run.
+    fn config_handshake(&mut self) -> Result<()> {
+        let digest = Self::config_digest(&self.cfg).to_le_bytes();
+        let tag = self.reducer.payload_tag();
+        let local: Vec<Frame> = self
+            .local_ranks
+            .iter()
+            .map(|&r| Frame {
+                rank: r as u16,
+                step: 0,
+                tag,
+                flags: wire::FLAG_HELLO,
+                loss: 0.0,
+                payload: digest.to_vec(),
+                stats: Vec::new(),
+            })
+            .collect();
+        let frames = self.transport.exchange(local)?;
+        if frames.len() != self.ranks {
+            bail!("dist: handshake returned {} frames for {} ranks", frames.len(), self.ranks);
+        }
+        for (r, f) in frames.iter().enumerate() {
+            if f.rank as usize != r || f.step != 0 || f.flags & wire::FLAG_HELLO == 0 {
+                bail!("dist: malformed handshake frame in slot {r}");
+            }
+            if f.payload != digest {
+                bail!(
+                    "dist: rank {r} is running a different config (digest mismatch) — \
+                     every endpoint must share the coordinator's provenance config \
+                     (seed, lr schedule, optimizer, reducer, ranks)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn resolve_engine(
+        cfg: &TrainConfig,
+        local_ranks: &[usize],
+        allow_artifact: bool,
+    ) -> Result<Engine> {
         // Explicit native model names skip the artifact runtime entirely —
         // but a typo'd mlp name must not silently train a different preset.
         if cfg.model.starts_with("mlp") && !super::replica::is_native_model(&cfg.model) {
@@ -129,13 +250,14 @@ impl DistTrainer {
                 cfg.model
             );
         }
-        if !cfg.model.starts_with("mlp") {
+        if !cfg.model.starts_with("mlp") && allow_artifact {
             match Runtime::load(&cfg.artifacts_dir) {
                 Ok(rt) if runtime::engine_available() && rt.has(&cfg.model) => {
                     let meta = rt.meta(&cfg.model)?.clone();
                     let d_padded = meta.layout()?.d_padded;
-                    let replicas = (0..ranks)
-                        .map(|r| ArtifactReplica::new(r, &meta, cfg.seed, d_padded))
+                    let replicas = local_ranks
+                        .iter()
+                        .map(|&r| ArtifactReplica::new(r, &meta, cfg.seed, d_padded))
                         .collect::<Result<Vec<_>>>()?;
                     return Ok(Engine::Artifact { rt, model: cfg.model.clone(), replicas });
                 }
@@ -150,18 +272,32 @@ impl DistTrainer {
                     );
                 }
             }
+        } else if !cfg.model.starts_with("mlp") {
+            eprintln!(
+                "[dist] multi-process transports drive the native workloads only — \
+                 falling back from {} to mlp_tiny",
+                cfg.model
+            );
         }
         let spec = native_model_spec(&cfg.model);
         let mlp = Mlp::new(spec.sizes.clone());
         let d = mlp.dim();
-        let replicas =
-            (0..ranks).map(|r| NativeReplica::new(r, &spec, cfg.seed, d)).collect();
+        let replicas = local_ranks
+            .iter()
+            .map(|&r| NativeReplica::new(r, &spec, cfg.seed, d))
+            .collect();
         Ok(Engine::Native { mlp, spec, replicas })
     }
 
     /// Whether the native (artifact-free) engine is driving the replicas.
     pub fn is_native(&self) -> bool {
         matches!(self.engine, Engine::Native { .. })
+    }
+
+    /// Whether this endpoint hosts rank 0 (loopback, or the coordinator
+    /// process) — the endpoint that logs metrics and writes checkpoints.
+    pub fn is_primary(&self) -> bool {
+        self.local_ranks.contains(&0)
     }
 
     /// Flat parameter dimension.
@@ -198,9 +334,27 @@ impl DistTrainer {
         self.reducer.residual_state_bytes()
     }
 
-    /// Total paper-dtype bytes put on the wire so far (all ranks).
+    /// Total framed bytes put on the wire so far (all ranks):
+    /// payloads plus the fixed per-frame overhead.
     pub fn wire_bytes_total(&self) -> u64 {
         self.wire_bytes
+    }
+
+    /// Framed bytes one rank puts on the wire per step: the reducer's
+    /// payload plus [`wire::FRAME_OVERHEAD`].
+    pub fn frame_bytes_per_rank(&self) -> usize {
+        self.reducer.wire_bytes_per_rank() + wire::FRAME_OVERHEAD
+    }
+
+    /// Framed bytes this endpoint's transport has actually serialized and
+    /// sent (loopback: everything it framed).
+    pub fn transport_bytes_sent(&self) -> u64 {
+        self.transport.bytes_sent()
+    }
+
+    /// Framed bytes this endpoint's transport has received from peers.
+    pub fn transport_bytes_received(&self) -> u64 {
+        self.transport.bytes_received()
     }
 
     /// Reducer display name.
@@ -208,12 +362,18 @@ impl DistTrainer {
         self.reducer.name()
     }
 
-    /// One synchronous data-parallel step; returns the mean replica loss.
+    /// Transport display name.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// One synchronous data-parallel step; returns the mean replica loss
+    /// across all ranks (identical on every endpoint).
     pub fn step(&mut self, lr: f32) -> Result<f32> {
         self.t += 1;
 
-        // 1. local gradients on every rank
-        let loss = match &mut self.engine {
+        // 1. local gradients on every hosted rank
+        match &mut self.engine {
             Engine::Native { mlp, spec, replicas } => {
                 let params = &self.params[..];
                 let mlp = &*mlp;
@@ -227,30 +387,78 @@ impl DistTrainer {
                         r.local_step(mlp, spec, params);
                     }
                 });
-                replicas.iter().map(|r| r.last_loss).sum::<f32>() / replicas.len() as f32
             }
             Engine::Artifact { rt, model, replicas } => {
                 let plit = lit_f32(&self.params, &[self.d])?;
                 for r in replicas.iter_mut() {
                     r.local_step(rt, model, &plit)?;
                 }
-                replicas.iter().map(|r| r.last_loss).sum::<f32>() / replicas.len() as f32
             }
-        };
+        }
 
-        // 2. gradient exchange
-        let grads: Vec<&[f32]> = match &self.engine {
-            Engine::Native { replicas, .. } => {
-                replicas.iter().map(|r| r.grads.as_slice()).collect()
+        // 2. compress each hosted rank and frame its payload
+        let tag = self.reducer.payload_tag();
+        let wire_per_rank = self.reducer.wire_bytes_per_rank();
+        let mut local = Vec::with_capacity(self.local_ranks.len());
+        {
+            let reducer = &mut self.reducer;
+            let mut frame_one = |rank: usize, grads: &[f32], loss: f32| {
+                let payload = reducer.compress_payload(rank, grads);
+                // The spec's accounting identity: a frame is exactly the
+                // accounted wire bytes plus the fixed overhead.
+                assert_eq!(
+                    payload.len(),
+                    wire_per_rank,
+                    "rank {rank} payload drifted from wire_bytes_per_rank"
+                );
+                Frame {
+                    rank: rank as u16,
+                    step: self.t,
+                    tag,
+                    flags: 0,
+                    loss,
+                    payload,
+                    stats: Vec::new(),
+                }
+            };
+            match &self.engine {
+                Engine::Native { replicas, .. } => {
+                    for (&r, rep) in self.local_ranks.iter().zip(replicas) {
+                        local.push(frame_one(r, &rep.grads, rep.last_loss));
+                    }
+                }
+                Engine::Artifact { replicas, .. } => {
+                    for (&r, rep) in self.local_ranks.iter().zip(replicas) {
+                        local.push(frame_one(r, &rep.grads, rep.last_loss));
+                    }
+                }
             }
-            Engine::Artifact { replicas, .. } => {
-                replicas.iter().map(|r| r.grads.as_slice()).collect()
-            }
-        };
-        self.reducer.reduce(&grads, &mut self.agg, &self.pool);
-        self.wire_bytes += (self.ranks * self.reducer.wire_bytes_per_rank()) as u64;
+        }
 
-        // 3. shared optimizer step over the real tensor boundaries
+        // 3. gather-to-all and aggregate (identical on every endpoint)
+        let frames = self.transport.exchange(local)?;
+        if frames.len() != self.ranks {
+            bail!("dist: transport returned {} frames for {} ranks", frames.len(), self.ranks);
+        }
+        let mut loss_sum = 0f32;
+        for (r, f) in frames.iter().enumerate() {
+            if f.rank as usize != r || f.step != self.t || f.tag != tag {
+                bail!(
+                    "dist: mismatched frame in slot {r} (rank {} step {} tag {:?}) at step {}",
+                    f.rank,
+                    f.step,
+                    f.tag,
+                    self.t
+                );
+            }
+            loss_sum += f.loss;
+        }
+        let loss = loss_sum / self.ranks as f32;
+        let payloads: Vec<Vec<u8>> = frames.into_iter().map(|f| f.payload).collect();
+        self.reducer.aggregate_payloads(&payloads, &mut self.agg, &self.pool)?;
+        self.wire_bytes += (self.ranks * (wire_per_rank + wire::FRAME_OVERHEAD)) as u64;
+
+        // 4. replicated optimizer step over the real tensor boundaries
         optim::step_with_layout(
             self.opt.as_mut(),
             &self.tensors,
@@ -263,9 +471,14 @@ impl DistTrainer {
         Ok(loss)
     }
 
-    /// Run the configured number of steps, logging to `logger`.
+    /// Run the configured number of steps. Only the primary endpoint
+    /// (loopback / rank 0) logs to `logger` and prints progress; worker
+    /// processes run silently in lockstep.
     pub fn train(&mut self, logger: &mut MetricsLogger) -> Result<()> {
-        logger.log_header(self.cfg.to_json())?;
+        let primary = self.is_primary();
+        if primary {
+            logger.log_header(self.cfg.to_json())?;
+        }
         let steps = self.cfg.steps;
         for step in 1..=steps {
             let lr = self.cfg.schedule.lr(step);
@@ -273,26 +486,33 @@ impl DistTrainer {
             if !loss.is_finite() {
                 bail!("non-finite loss at step {step}");
             }
-            logger.log_step(step, loss, lr)?;
-            if step % self.cfg.log_every == 0 || step == steps {
-                eprintln!(
-                    "[dist x{} {} {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e} wire {} MB",
-                    self.ranks,
-                    reducer_name(self.cfg.reduce),
-                    crate::coordinator::config::optimizer_name(self.cfg.optimizer),
-                    self.wire_bytes / (1 << 20),
-                );
+            if primary {
+                logger.log_step(step, loss, lr)?;
+                if step % self.cfg.log_every == 0 || step == steps {
+                    eprintln!(
+                        "[dist x{} {} {} via {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e} wire {} MB",
+                        self.ranks,
+                        reducer_name(self.cfg.reduce),
+                        crate::coordinator::config::optimizer_name(self.cfg.optimizer),
+                        self.transport.name(),
+                        self.wire_bytes / (1 << 20),
+                    );
+                }
             }
         }
-        logger.log_record(json::obj(vec![
-            ("final_loss", json::num(logger.tail_loss(10) as f64)),
-            ("opt_state_bytes", json::num(self.opt_state_bytes() as f64)),
-            ("ranks", json::num(self.ranks as f64)),
-            ("reducer", json::s(&self.reducer.name())),
-            ("wire_bytes_total", json::num(self.wire_bytes as f64)),
-            ("reducer_state_bytes", json::num(self.reducer_state_bytes() as f64)),
-        ]))?;
-        logger.flush()?;
+        if primary {
+            logger.log_record(json::obj(vec![
+                ("final_loss", json::num(logger.tail_loss(10) as f64)),
+                ("opt_state_bytes", json::num(self.opt_state_bytes() as f64)),
+                ("ranks", json::num(self.ranks as f64)),
+                ("reducer", json::s(&self.reducer.name())),
+                ("transport", json::s(self.transport.name())),
+                ("wire_bytes_total", json::num(self.wire_bytes as f64)),
+                ("frame_bytes_per_rank", json::num(self.frame_bytes_per_rank() as f64)),
+                ("reducer_state_bytes", json::num(self.reducer_state_bytes() as f64)),
+            ]))?;
+            logger.flush()?;
+        }
         Ok(())
     }
 
@@ -342,12 +562,22 @@ mod tests {
     fn dist_trainer_trains_native_eftopk() {
         let mut t = DistTrainer::new(cfg(4, ReducerKind::EfTopK, 40)).unwrap();
         assert!(t.is_native());
+        assert!(t.is_primary());
         let mut logger = MetricsLogger::new("").unwrap();
         t.train(&mut logger).unwrap();
         assert_eq!(logger.history.len(), 40);
         assert!(logger.tail_loss(5).is_finite());
         assert!(t.wire_bytes_total() > 0);
         assert!(t.reducer_state_bytes() > 0);
+        // framed accounting: every rank, every step, payload + overhead
+        assert_eq!(
+            t.wire_bytes_total(),
+            40 * 4 * t.frame_bytes_per_rank() as u64
+        );
+        // loopback physically framed exactly what the accounting claims,
+        // plus the one-time config-digest handshake round
+        let handshake = 4 * (wire::FRAME_OVERHEAD + wire::HELLO_DIGEST_BYTES) as u64;
+        assert_eq!(t.transport_bytes_sent(), t.wire_bytes_total() + handshake);
     }
 
     #[test]
@@ -362,6 +592,13 @@ mod tests {
     fn grad_accum_is_rejected() {
         let mut c = cfg(2, ReducerKind::Dense, 1);
         c.grad_accum = 2;
+        assert!(DistTrainer::new(c).is_err());
+    }
+
+    #[test]
+    fn non_loopback_transport_requires_launcher() {
+        let mut c = cfg(2, ReducerKind::Dense, 1);
+        c.transport = TransportKind::Uds;
         assert!(DistTrainer::new(c).is_err());
     }
 

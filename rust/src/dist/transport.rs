@@ -1,0 +1,844 @@
+//! Inter-process transports for the data-parallel engine: how the
+//! per-rank wire frames of [`crate::dist::wire`] physically move.
+//!
+//! Every transport implements the same collective, a **gather-to-all
+//! through rank 0**: each process submits the frames of the ranks it
+//! hosts, and receives the full rank-ordered set of every rank's frame.
+//! All ranks then aggregate identically (the reducers are deterministic),
+//! so parameters and optimizer state stay in lockstep without any
+//! parameter broadcast — the only per-step traffic is one gradient frame
+//! up per worker and one relay bundle down.
+//!
+//! Three implementations:
+//!
+//! * [`Loopback`] — the single-process path ([`crate::dist::DistTrainer`]
+//!   hosts every rank). Frames still round-trip through
+//!   [`Frame::encode`]/[`Frame::decode`], so the serialization layer is
+//!   exercised — and the framed byte counts measured — even when nothing
+//!   leaves the address space.
+//! * [`UdsTransport`] — Unix-domain stream sockets. Rank 0 binds the
+//!   rendezvous socket ([`UdsPending::bind`]), workers connect and
+//!   identify themselves with a [`FLAG_HELLO`] frame, and
+//!   [`UdsPending::accept`] resolves them into rank-indexed streams.
+//! * [`ShmTransport`] — file-backed shared memory: one single-writer /
+//!   single-reader mailbox file per direction per worker under the
+//!   rendezvous directory (tmpfs paths like `/dev/shm/...` make this a
+//!   page-cache-only exchange). The mailbox protocol is documented in
+//!   `rust/src/dist/README.md` §8.
+//!
+//! A worker's uplink per step is exactly one frame, so its
+//! [`Transport::bytes_sent`] grows by `FRAME_OVERHEAD +
+//! wire_bytes_per_rank()` per step — the equality the transport parity
+//! tests measure over the real socket/mailbox.
+//!
+//! [`FLAG_HELLO`]: crate::dist::wire::FLAG_HELLO
+//! [`FRAME_OVERHEAD`]: crate::dist::wire::FRAME_OVERHEAD
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire::{Frame, WireError, FLAG_HELLO, MAX_SECTION_BYTES};
+
+/// How long a transport waits for a peer mid-run before giving up.
+/// Generous: a step on the native workloads takes milliseconds; a
+/// two-minute silence means a peer died.
+pub const PEER_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a worker retries the rendezvous (rank 0 may still be setting
+/// up, or the operator starts workers by hand before the coordinator).
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Which transport a config/CLI names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process exchange (the default; `ranks` replicas in one address
+    /// space).
+    Loopback,
+    /// Unix-domain stream sockets via a rendezvous socket path.
+    Uds,
+    /// File-backed shared-memory mailboxes under a rendezvous directory.
+    Shm,
+}
+
+/// Parse a transport name (kebab-case, as in the CLI and config files).
+pub fn parse_transport(s: &str) -> Result<TransportKind> {
+    Ok(match s {
+        "loopback" | "local" => TransportKind::Loopback,
+        "uds" | "unix" => TransportKind::Uds,
+        "shm" => TransportKind::Shm,
+        other => bail!("unknown transport {other} (expected loopback|uds|shm)"),
+    })
+}
+
+/// Canonical name of a transport kind.
+pub fn transport_name(k: TransportKind) -> &'static str {
+    match k {
+        TransportKind::Loopback => "loopback",
+        TransportKind::Uds => "uds",
+        TransportKind::Shm => "shm",
+    }
+}
+
+/// Default rendezvous path for a launcher-started run: a socket path
+/// (uds) or directory (shm) under the system temp dir, unique per
+/// process.
+pub fn default_rendezvous(kind: TransportKind) -> PathBuf {
+    let tag = match kind {
+        TransportKind::Loopback => "loop",
+        TransportKind::Uds => "uds",
+        TransportKind::Shm => "shm",
+    };
+    std::env::temp_dir().join(format!("microadam-rdv-{tag}-{}", std::process::id()))
+}
+
+/// The per-step frame collective every rank runs: submit the frames of
+/// the locally-hosted ranks, receive every rank's frame in rank order.
+///
+/// Implementations must be deterministic relays — they move bytes, never
+/// reorder ranks, and never touch payloads (the CRC in every frame pins
+/// that down).
+pub trait Transport: Send {
+    /// Transport display name (`loopback` / `uds` / `shm`).
+    fn name(&self) -> &'static str;
+    /// World size (total rank count across all processes).
+    fn ranks(&self) -> usize;
+    /// Perform one gather-to-all: `local` holds this process's frames
+    /// (one per hosted rank, rank-ascending); the result holds all
+    /// `ranks()` frames, rank-ascending. Blocks until every peer has
+    /// contributed or [`PEER_TIMEOUT`] expires.
+    fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>>;
+    /// Framed bytes this endpoint has serialized and sent so far (for
+    /// [`Loopback`], everything it has framed).
+    fn bytes_sent(&self) -> u64;
+    /// Framed bytes received from peers so far.
+    fn bytes_received(&self) -> u64;
+}
+
+fn wire_err(e: WireError) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+// ---------------------------------------------------------------------------
+// Loopback
+// ---------------------------------------------------------------------------
+
+/// The in-address-space transport: every rank lives in this process, and
+/// `exchange` is an encode/decode round trip per frame.
+///
+/// ```
+/// use microadam::dist::transport::{Loopback, Transport};
+/// use microadam::dist::wire::{Frame, PayloadTag, FRAME_OVERHEAD};
+///
+/// let mut t = Loopback::new(2);
+/// let frames: Vec<Frame> = (0..2u16)
+///     .map(|rank| Frame {
+///         rank,
+///         step: 1,
+///         tag: PayloadTag::Dense,
+///         flags: 0,
+///         loss: 0.5,
+///         payload: vec![1, 2, 3, 4],
+///         stats: vec![],
+///     })
+///     .collect();
+/// let out = t.exchange(frames).unwrap();
+/// assert_eq!(out.len(), 2);
+/// assert_eq!(out[1].payload, vec![1, 2, 3, 4]);
+/// // 4 payload bytes framed: header + payload + crc, per rank
+/// assert_eq!(t.bytes_sent(), 2 * (FRAME_OVERHEAD as u64 + 4));
+/// ```
+pub struct Loopback {
+    ranks: usize,
+    sent: u64,
+    received: u64,
+}
+
+impl Loopback {
+    /// Loopback transport hosting all `ranks` ranks.
+    pub fn new(ranks: usize) -> Self {
+        assert!(ranks > 0);
+        Self { ranks, sent: 0, received: 0 }
+    }
+}
+
+impl Transport for Loopback {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>> {
+        if local.len() != self.ranks {
+            bail!("loopback hosts all {} ranks, got {} frames", self.ranks, local.len());
+        }
+        let mut out = Vec::with_capacity(local.len());
+        for f in &local {
+            // The round trip is the point: loopback runs the same
+            // serialization the socket transports ship, so framed-byte
+            // accounting and codec coverage don't depend on the topology.
+            let bytes = f.encode();
+            self.sent += bytes.len() as u64;
+            let (back, used) = Frame::decode(&bytes).map_err(wire_err)?;
+            debug_assert_eq!(used, bytes.len());
+            self.received += used as u64;
+            out.push(back);
+        }
+        Ok(out)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unix-domain sockets
+// ---------------------------------------------------------------------------
+
+/// A bound-but-not-yet-connected UDS rendezvous: rank 0 binds *before*
+/// spawning workers (no connect race), accepts after.
+pub struct UdsPending {
+    listener: UnixListener,
+    path: PathBuf,
+    ranks: usize,
+}
+
+impl UdsPending {
+    /// Bind the rendezvous socket at `path` for a world of `ranks`.
+    /// A stale socket file from a previous run is removed first.
+    pub fn bind<P: AsRef<Path>>(path: P, ranks: usize) -> Result<UdsPending> {
+        assert!(ranks > 0);
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("uds: bind {}", path.display()))?;
+        Ok(UdsPending { listener, path, ranks })
+    }
+
+    /// Accept the `ranks - 1` workers. Each must introduce itself with a
+    /// [`FLAG_HELLO`] frame carrying its rank; duplicates and
+    /// out-of-range ranks abort the run. Gives up after [`PEER_TIMEOUT`]
+    /// if a worker never shows (e.g. it crashed at startup), so the
+    /// launcher can reap instead of hanging.
+    pub fn accept(self) -> Result<UdsTransport> {
+        // UnixListener has no accept timeout; poll a non-blocking accept
+        // against a deadline instead.
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        let mut slots: Vec<Option<UnixStream>> = (1..self.ranks).map(|_| None).collect();
+        for _ in 1..self.ranks {
+            let (mut stream, _) = loop {
+                match self.listener.accept() {
+                    Ok(conn) => break conn,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() >= deadline {
+                            bail!(
+                                "uds: timed out waiting for workers at {}",
+                                self.path.display()
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("uds: accept"),
+                }
+            };
+            // the accepted stream must block normally (it may inherit the
+            // listener's non-blocking mode on some platforms)
+            stream.set_nonblocking(false)?;
+            stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+            let hello = Frame::read_from(&mut stream).map_err(wire_err)?;
+            if hello.flags & FLAG_HELLO == 0 {
+                bail!("uds: worker spoke before the handshake");
+            }
+            let r = hello.rank as usize;
+            if r == 0 || r >= self.ranks {
+                bail!("uds: hello from rank {r}, world is 0..{}", self.ranks);
+            }
+            if slots[r - 1].replace(stream).is_some() {
+                bail!("uds: two workers claimed rank {r}");
+            }
+        }
+        let workers = slots
+            .into_iter()
+            .map(|s| s.expect("every slot filled by the accept loop"))
+            .collect();
+        Ok(UdsTransport {
+            ranks: self.ranks,
+            role: UdsRole::Coordinator { workers, path: self.path },
+            sent: 0,
+            received: 0,
+        })
+    }
+}
+
+enum UdsRole {
+    /// Rank 0: one stream per worker, index `rank - 1`.
+    Coordinator { workers: Vec<UnixStream>, path: PathBuf },
+    /// A worker rank: the single stream to rank 0.
+    Worker { stream: UnixStream },
+}
+
+/// Unix-domain-socket transport (see [`UdsPending`] for the rank-0 side).
+pub struct UdsTransport {
+    ranks: usize,
+    role: UdsRole,
+    sent: u64,
+    received: u64,
+}
+
+impl UdsTransport {
+    /// Connect worker `rank` to the rendezvous socket, retrying until the
+    /// coordinator has bound it (or [`CONNECT_TIMEOUT`] passes), then send
+    /// the hello frame.
+    pub fn connect<P: AsRef<Path>>(path: P, rank: usize, ranks: usize) -> Result<UdsTransport> {
+        assert!(rank > 0 && rank < ranks, "workers are ranks 1..{ranks}, got {rank}");
+        let path = path.as_ref();
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut stream = loop {
+            match UnixStream::connect(path) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(e))
+                            .with_context(|| format!("uds: connect {}", path.display()));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        let hello = Frame::hello(rank).encode();
+        stream.write_all(&hello).context("uds: send hello")?;
+        Ok(UdsTransport {
+            ranks,
+            role: UdsRole::Worker { stream },
+            sent: hello.len() as u64,
+            received: 0,
+        })
+    }
+}
+
+impl Drop for UdsTransport {
+    fn drop(&mut self) {
+        if let UdsRole::Coordinator { path, .. } = &self.role {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Transport for UdsTransport {
+    fn name(&self) -> &'static str {
+        "uds"
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn exchange(&mut self, mut local: Vec<Frame>) -> Result<Vec<Frame>> {
+        if local.len() != 1 {
+            bail!("uds endpoints host exactly one rank, got {} frames", local.len());
+        }
+        let mine = local.pop().expect("one frame");
+        match &mut self.role {
+            UdsRole::Coordinator { workers, .. } => {
+                if mine.rank != 0 {
+                    bail!("uds coordinator must host rank 0, got {}", mine.rank);
+                }
+                let step = mine.step;
+                let mut frames = Vec::with_capacity(self.ranks);
+                frames.push(mine);
+                // Gather: one frame per worker, read in rank order (the
+                // sockets buffer early senders).
+                for (i, w) in workers.iter_mut().enumerate() {
+                    let f = Frame::read_from(w)
+                        .map_err(wire_err)
+                        .with_context(|| format!("uds: gather from rank {}", i + 1))?;
+                    if f.rank as usize != i + 1 || f.step != step {
+                        bail!(
+                            "uds: expected rank {}/step {step}, got rank {}/step {}",
+                            i + 1,
+                            f.rank,
+                            f.step
+                        );
+                    }
+                    self.received += f.encoded_len() as u64;
+                    frames.push(f);
+                }
+                // Relay the full bundle back to every worker.
+                let mut bundle = Vec::new();
+                for f in &frames {
+                    f.encode_into(&mut bundle);
+                }
+                for w in workers.iter_mut() {
+                    w.write_all(&bundle).context("uds: relay bundle")?;
+                    self.sent += bundle.len() as u64;
+                }
+                Ok(frames)
+            }
+            UdsRole::Worker { stream } => {
+                let step = mine.step;
+                let bytes = mine.encode();
+                stream.write_all(&bytes).context("uds: send frame")?;
+                self.sent += bytes.len() as u64;
+                let mut frames = Vec::with_capacity(self.ranks);
+                for r in 0..self.ranks {
+                    let f = Frame::read_from(stream)
+                        .map_err(wire_err)
+                        .with_context(|| format!("uds: bundle frame {r}"))?;
+                    if f.rank as usize != r || f.step != step {
+                        bail!(
+                            "uds: bundle out of order (expected rank {r}/step {step}, \
+                             got rank {}/step {})",
+                            f.rank,
+                            f.step
+                        );
+                    }
+                    self.received += f.encoded_len() as u64;
+                    frames.push(f);
+                }
+                Ok(frames)
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File-backed shared memory
+// ---------------------------------------------------------------------------
+
+/// A single-writer / single-reader mailbox file:
+///
+/// ```text
+/// off len field
+///   0   1 full flag: 0 = empty (writer may fill), 1 = full (reader may drain)
+///   1   7 reserved (zero)
+///   8   8 message length, u64 LE
+///  16   . message bytes (one encoded frame, or a relay bundle)
+/// ```
+///
+/// The writer stores the message and its length *before* flipping the
+/// flag to 1; the reader drains and flips it back to 0. Each `pwrite`
+/// completes into the (shared) page cache before the next begins, so a
+/// reader that observes the flag set also observes the bytes it guards.
+/// Synchronous training needs only one message in flight per direction,
+/// so a mailbox (rather than a deeper ring) loses no parallelism.
+struct Mailbox {
+    file: File,
+    path: PathBuf,
+    /// Corruption guard for the length field: the largest message this
+    /// direction can legitimately carry (one frame uplink, a full bundle
+    /// downlink), so a garbage length fails before a huge allocation
+    /// without rejecting valid large configurations.
+    max_msg: u64,
+}
+
+/// Upper bound on one encoded frame: payload + stats sections at their
+/// wire-level caps, plus framing.
+fn max_frame_bytes() -> u64 {
+    (2 * MAX_SECTION_BYTES + 4096) as u64
+}
+
+impl Mailbox {
+    /// Create the mailbox at `path` — the coordinator does this for every
+    /// direction before workers start. The 16-byte header is written to a
+    /// temp file and renamed into place, so a concurrently-polling worker
+    /// either sees no file or a fully-initialized one, never a
+    /// half-written header. A stale mailbox from a previous run is
+    /// replaced by the rename.
+    fn create<P: AsRef<Path>>(path: P, max_msg: u64) -> Result<Mailbox> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .with_context(|| format!("shm: create {}", tmp.display()))?;
+            f.write_all(&[0u8; 16])?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("shm: publish {}", path.display()))?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("shm: reopen {}", path.display()))?;
+        Ok(Mailbox { file, path, max_msg })
+    }
+
+    /// Open an existing mailbox, waiting for the coordinator to create it.
+    /// (Reusing a rendezvous directory from a *crashed* run with workers
+    /// started before the coordinator can hand a worker the stale inode —
+    /// use a fresh directory for hand-started shm runs.)
+    fn open_wait<P: AsRef<Path>>(path: P, max_msg: u64) -> Result<Mailbox> {
+        let path = path.as_ref().to_path_buf();
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        loop {
+            match OpenOptions::new().read(true).write(true).open(&path) {
+                // the rename in create() guarantees an existing file is
+                // fully initialized (>= 16 header bytes)
+                Ok(file) => return Ok(Mailbox { file, path, max_msg }),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(e))
+                            .with_context(|| format!("shm: open {}", path.display()));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    fn flag(&self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.file.read_exact_at(&mut b, 0)?;
+        Ok(b[0])
+    }
+
+    /// Busy-wait (with sleeps) until the flag equals `want`.
+    fn wait_flag(&self, want: u8) -> Result<()> {
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        let mut spins = 0u32;
+        while self.flag()? != want {
+            if Instant::now() >= deadline {
+                bail!("shm: peer on {} went silent", self.path.display());
+            }
+            // Short spin first (a step is milliseconds), then back off.
+            spins += 1;
+            if spins > 1000 {
+                std::thread::sleep(Duration::from_millis(1));
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish one message (blocks until the reader drained the previous).
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        self.wait_flag(0)?;
+        let need = 16 + msg.len() as u64;
+        if self.file.metadata()?.len() < need {
+            self.file.set_len(need)?;
+        }
+        self.file.write_all_at(msg, 16)?;
+        self.file.write_all_at(&(msg.len() as u64).to_le_bytes(), 8)?;
+        // The flag flip is last: a reader that sees it also sees the bytes.
+        self.file.write_all_at(&[1u8], 0)?;
+        Ok(())
+    }
+
+    /// Drain one message (blocks until the writer published one).
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.wait_flag(1)?;
+        let mut len8 = [0u8; 8];
+        self.file.read_exact_at(&mut len8, 8)?;
+        let len = u64::from_le_bytes(len8);
+        if len > self.max_msg {
+            bail!(
+                "shm: implausible {len} B message on {} (cap {})",
+                self.path.display(),
+                self.max_msg
+            );
+        }
+        let len = len as usize;
+        let mut msg = vec![0u8; len];
+        self.file.read_exact_at(&mut msg, 16)?;
+        self.file.write_all_at(&[0u8], 0)?;
+        Ok(msg)
+    }
+}
+
+enum ShmRole {
+    /// Rank 0: an (uplink, downlink) mailbox pair per worker, index
+    /// `rank - 1`.
+    Coordinator { pairs: Vec<(Mailbox, Mailbox)>, dir: PathBuf },
+    /// A worker: its own uplink + downlink.
+    Worker { up: Mailbox, down: Mailbox },
+}
+
+/// Shared-memory transport over per-worker mailbox files. Put the
+/// rendezvous directory on tmpfs (e.g. under `/dev/shm`) and the exchange
+/// never leaves the page cache.
+pub struct ShmTransport {
+    ranks: usize,
+    role: ShmRole,
+    sent: u64,
+    received: u64,
+}
+
+fn up_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("up_{rank}.mbox"))
+}
+
+fn down_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("down_{rank}.mbox"))
+}
+
+impl ShmTransport {
+    /// Rank-0 side: create the rendezvous directory and every mailbox
+    /// (call *before* spawning workers so they never see a half-made dir).
+    pub fn coordinator<P: AsRef<Path>>(dir: P, ranks: usize) -> Result<ShmTransport> {
+        assert!(ranks > 0);
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        // uplink carries one frame; downlink carries the full bundle
+        let bundle_cap = max_frame_bytes() * ranks as u64;
+        let pairs = (1..ranks)
+            .map(|r| {
+                Ok((
+                    Mailbox::create(up_path(&dir, r), max_frame_bytes())?,
+                    Mailbox::create(down_path(&dir, r), bundle_cap)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShmTransport { ranks, role: ShmRole::Coordinator { pairs, dir }, sent: 0, received: 0 })
+    }
+
+    /// Worker side: open this rank's mailbox pair (waiting for the
+    /// coordinator to create them).
+    pub fn worker<P: AsRef<Path>>(dir: P, rank: usize, ranks: usize) -> Result<ShmTransport> {
+        assert!(rank > 0 && rank < ranks, "workers are ranks 1..{ranks}, got {rank}");
+        let dir = dir.as_ref();
+        let up = Mailbox::open_wait(up_path(dir, rank), max_frame_bytes())?;
+        let down = Mailbox::open_wait(down_path(dir, rank), max_frame_bytes() * ranks as u64)?;
+        Ok(ShmTransport { ranks, role: ShmRole::Worker { up, down }, sent: 0, received: 0 })
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        // Remove only what this transport created: its mailbox files, and
+        // the directory iff that leaves it empty (non-recursive). The
+        // rendezvous may be a user-supplied directory (/dev/shm itself,
+        // say) — never delete anything we didn't make.
+        if let ShmRole::Coordinator { pairs, dir } = &self.role {
+            for (up, down) in pairs {
+                let _ = std::fs::remove_file(&up.path);
+                let _ = std::fs::remove_file(&down.path);
+            }
+            let _ = std::fs::remove_dir(dir);
+        }
+    }
+}
+
+impl Transport for ShmTransport {
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn exchange(&mut self, mut local: Vec<Frame>) -> Result<Vec<Frame>> {
+        if local.len() != 1 {
+            bail!("shm endpoints host exactly one rank, got {} frames", local.len());
+        }
+        let mine = local.pop().expect("one frame");
+        match &mut self.role {
+            ShmRole::Coordinator { pairs, .. } => {
+                if mine.rank != 0 {
+                    bail!("shm coordinator must host rank 0, got {}", mine.rank);
+                }
+                let step = mine.step;
+                let mut frames = Vec::with_capacity(self.ranks);
+                frames.push(mine);
+                for (i, (up, _)) in pairs.iter_mut().enumerate() {
+                    let msg = up.recv().with_context(|| format!("shm: gather rank {}", i + 1))?;
+                    let (f, used) = Frame::decode(&msg).map_err(wire_err)?;
+                    if used != msg.len() || f.rank as usize != i + 1 || f.step != step {
+                        bail!(
+                            "shm: expected one rank-{}/step-{step} frame, got rank {}/step {}",
+                            i + 1,
+                            f.rank,
+                            f.step
+                        );
+                    }
+                    self.received += used as u64;
+                    frames.push(f);
+                }
+                let mut bundle = Vec::new();
+                for f in &frames {
+                    f.encode_into(&mut bundle);
+                }
+                for (_, down) in pairs.iter_mut() {
+                    down.send(&bundle).context("shm: relay bundle")?;
+                    self.sent += bundle.len() as u64;
+                }
+                Ok(frames)
+            }
+            ShmRole::Worker { up, down } => {
+                let step = mine.step;
+                let bytes = mine.encode();
+                up.send(&bytes).context("shm: send frame")?;
+                self.sent += bytes.len() as u64;
+                let bundle = down.recv().context("shm: receive bundle")?;
+                self.received += bundle.len() as u64;
+                let frames = Frame::decode_bundle(&bundle, self.ranks).map_err(wire_err)?;
+                for (r, f) in frames.iter().enumerate() {
+                    if f.rank as usize != r || f.step != step {
+                        bail!(
+                            "shm: bundle out of order (expected rank {r}/step {step}, \
+                             got rank {}/step {})",
+                            f.rank,
+                            f.step
+                        );
+                    }
+                }
+                Ok(frames)
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::{PayloadTag, FRAME_OVERHEAD};
+
+    fn frame(rank: usize, step: u64, payload: Vec<u8>) -> Frame {
+        Frame {
+            rank: rank as u16,
+            step,
+            tag: PayloadTag::TopK,
+            flags: 0,
+            loss: rank as f32 + step as f32,
+            payload,
+            stats: Vec::new(),
+        }
+    }
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+        std::env::temp_dir().join(format!(
+            "microadam-test-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::SeqCst)
+        ))
+    }
+
+    #[test]
+    fn loopback_roundtrips_and_counts() {
+        let mut t = Loopback::new(3);
+        let frames: Vec<Frame> = (0..3).map(|r| frame(r, 5, vec![r as u8; 8])).collect();
+        let out = t.exchange(frames.clone()).unwrap();
+        assert_eq!(out, frames);
+        assert_eq!(t.bytes_sent(), 3 * (FRAME_OVERHEAD as u64 + 8));
+        assert_eq!(t.bytes_received(), t.bytes_sent());
+        // wrong cardinality is an error, not a hang
+        assert!(t.exchange(vec![frame(0, 6, vec![])]).is_err());
+    }
+
+    #[test]
+    fn uds_gathers_across_threads() {
+        let path = unique_dir("uds").with_extension("sock");
+        let ranks = 3;
+        let pending = UdsPending::bind(&path, ranks).unwrap();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let path = path.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = UdsTransport::connect(&path, r, ranks).unwrap();
+                let mut got = Vec::new();
+                for step in 1..=4u64 {
+                    let out = t.exchange(vec![frame(r, step, vec![r as u8, step as u8])]).unwrap();
+                    got.push(out);
+                }
+                (t.bytes_sent(), got)
+            }));
+        }
+        let mut coord = pending.accept().unwrap();
+        let mut coord_views = Vec::new();
+        for step in 1..=4u64 {
+            coord_views.push(coord.exchange(vec![frame(0, step, vec![0, step as u8])]).unwrap());
+        }
+        for h in handles {
+            let (sent, got) = h.join().unwrap();
+            // hello + 4 gradient frames of 2 payload bytes each
+            assert_eq!(sent, 5 * FRAME_OVERHEAD as u64 + 4 * 2);
+            assert_eq!(got, coord_views, "every rank sees the same bundles");
+        }
+        for (s, view) in coord_views.iter().enumerate() {
+            assert_eq!(view.len(), ranks);
+            for (r, f) in view.iter().enumerate() {
+                assert_eq!(f.rank as usize, r);
+                assert_eq!(f.step, s as u64 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn shm_gathers_across_threads() {
+        let dir = unique_dir("shm");
+        let ranks = 3;
+        let mut coord = ShmTransport::coordinator(&dir, ranks).unwrap();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let dir = dir.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = ShmTransport::worker(&dir, r, ranks).unwrap();
+                let mut got = Vec::new();
+                for step in 1..=4u64 {
+                    let out = t.exchange(vec![frame(r, step, vec![r as u8; 6])]).unwrap();
+                    got.push(out);
+                }
+                (t.bytes_sent(), got)
+            }));
+        }
+        let mut coord_views = Vec::new();
+        for step in 1..=4u64 {
+            coord_views.push(coord.exchange(vec![frame(0, step, vec![0u8; 6])]).unwrap());
+        }
+        for h in handles {
+            let (sent, got) = h.join().unwrap();
+            assert_eq!(sent, 4 * (FRAME_OVERHEAD as u64 + 6));
+            assert_eq!(got, coord_views);
+        }
+    }
+
+    #[test]
+    fn transport_names_parse_back() {
+        for k in [TransportKind::Loopback, TransportKind::Uds, TransportKind::Shm] {
+            assert_eq!(parse_transport(transport_name(k)).unwrap(), k);
+        }
+        assert!(parse_transport("pigeon").is_err());
+    }
+}

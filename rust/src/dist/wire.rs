@@ -1,0 +1,508 @@
+//! The `dist::` wire format: one versioned, CRC-guarded, little-endian
+//! frame per rank per step.
+//!
+//! This module implements the normative spec in `rust/src/dist/README.md`
+//! — the document is the contract, this file is the implementation, and
+//! `rust/tests/test_wire.rs` pins the two together (worked byte counts,
+//! corrupt-frame rejection, encode/decode round trips). Every byte that a
+//! [`crate::dist::transport::Transport`] moves between ranks goes through
+//! [`Frame::encode`] / [`Frame::decode`]; nothing else is ever on the wire.
+//!
+//! Frame layout (all integers little-endian, offsets in bytes):
+//!
+//! ```text
+//! off len field          contents
+//!   0   4 magic          "uADM" (0x75 0x41 0x44 0x4D)
+//!   4   2 version        u16, currently 1; receivers reject any other
+//!   6   2 rank           u16 sender rank
+//!   8   8 step           u64 training step the payload belongs to
+//!  16   1 tag            payload kind: 0 dense / 1 topk / 2 eftopk
+//!  17   1 flags          bit 0 = handshake (empty payload); rest 0
+//!  18   4 loss           f32 bits, sender's local batch loss
+//!  22   4 payload_len    u32 byte length of the payload section
+//!  26   4 stats_count    u32 count of Quant4 bucket-stats records
+//!  30   . payload        reducer payload (see below)
+//!   .   . stats          stats_count x (lo f32, hi f32) = 8 B each
+//!   .   4 crc32          IEEE CRC-32 over every preceding byte
+//! ```
+//!
+//! The payload is exactly the slab the sending reducer holds resident
+//! (see [`crate::dist::reducer`]): a dense frame carries `d` f32 values
+//! (`4 d` bytes); a sparse frame carries `NB * k_b` u16 block-relative
+//! indices followed by `NB * k_b` bf16 value bit patterns (`4 NB k_b`
+//! bytes). `payload_len` therefore always equals the reducer's
+//! `wire_bytes_per_rank()`, and a full frame is that plus the fixed
+//! [`FRAME_OVERHEAD`] — an equality the transports assert every step.
+//!
+//! The stats section carries [`BucketStats`] records for payloads that are
+//! themselves Quant4-compressed. The v1 reducers keep their Quant4 error
+//! residuals rank-local (only the Top-K slab travels), so they emit
+//! `stats_count = 0`; the section is specified, encoded, decoded and
+//! round-trip-tested so a quantized-payload reducer needs no format bump.
+
+use std::fmt;
+use std::io::Read;
+
+use crate::quant::BucketStats;
+
+/// Frame magic: `"uADM"`.
+pub const MAGIC: [u8; 4] = *b"uADM";
+/// Current (and only) wire-format version. Receivers reject frames whose
+/// version field differs — there is no cross-version negotiation in v1.
+pub const VERSION: u16 = 1;
+/// Fixed header bytes before the payload section.
+pub const HEADER_BYTES: usize = 30;
+/// Trailing CRC-32 bytes.
+pub const CRC_BYTES: usize = 4;
+/// Total framing overhead of a stats-free frame: header + CRC. A gradient
+/// frame occupies exactly `FRAME_OVERHEAD + wire_bytes_per_rank()` bytes.
+pub const FRAME_OVERHEAD: usize = HEADER_BYTES + CRC_BYTES;
+/// Hard ceiling on `payload_len` (and on the stats section): a corrupt
+/// length field must not turn into a multi-gigabyte allocation.
+pub const MAX_SECTION_BYTES: usize = 1 << 28;
+
+/// `flags` bit 0: handshake frame (`step = 0`). Two payloads exist: the
+/// transport-level rendezvous hello (empty payload, rank identification)
+/// and the session's config-digest round ([`HELLO_DIGEST_BYTES`] payload,
+/// see `rust/src/dist/README.md` §6).
+pub const FLAG_HELLO: u8 = 1;
+
+/// Payload length of a config-digest handshake frame: one little-endian
+/// [`fnv1a64`] of the canonical run-config JSON.
+pub const HELLO_DIGEST_BYTES: usize = 8;
+
+/// FNV-1a 64-bit hash (offset basis 0xcbf29ce484222325, prime
+/// 0x100000001b3) — the config-digest function of the handshake round.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// What a frame's payload section holds — mirrors
+/// [`crate::dist::reducer::ReducerKind`] so a receiver can type-check the
+/// exchange before touching the payload bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadTag {
+    /// `d` f32 values (the uncompressed gradient).
+    Dense = 0,
+    /// `(u16 idx, bf16 val)` slab, no error feedback at the sender.
+    TopK = 1,
+    /// `(u16 idx, bf16 val)` slab with rank-local Quant4 error feedback.
+    EfTopK = 2,
+}
+
+impl PayloadTag {
+    /// Decode a tag byte.
+    pub fn from_byte(b: u8) -> Result<Self, WireError> {
+        Ok(match b {
+            0 => PayloadTag::Dense,
+            1 => PayloadTag::TopK,
+            2 => PayloadTag::EfTopK,
+            other => return Err(WireError::BadTag(other)),
+        })
+    }
+}
+
+/// One decoded wire frame (see the module docs for the byte layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Sender rank.
+    pub rank: u16,
+    /// Training step the payload belongs to (0 for handshakes).
+    pub step: u64,
+    /// Payload kind.
+    pub tag: PayloadTag,
+    /// Frame flags ([`FLAG_HELLO`]).
+    pub flags: u8,
+    /// Sender's local batch loss for this step.
+    pub loss: f32,
+    /// Reducer payload bytes (exactly `wire_bytes_per_rank()` long for
+    /// gradient frames).
+    pub payload: Vec<u8>,
+    /// Quant4 bucket stats (empty for the v1 reducers).
+    pub stats: Vec<BucketStats>,
+}
+
+/// Typed decode/transport errors — each corrupt-frame class is its own
+/// variant so tests (and operators) can tell *how* a frame was bad.
+#[derive(Debug)]
+pub enum WireError {
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version field differed from [`VERSION`].
+    BadVersion(u16),
+    /// Unknown payload tag byte.
+    BadTag(u8),
+    /// Fewer bytes available than the header (or its length fields) claim.
+    Truncated { need: usize, have: usize },
+    /// A length field exceeded [`MAX_SECTION_BYTES`].
+    TooLarge(usize),
+    /// CRC-32 mismatch: the frame was damaged in flight.
+    BadCrc { expect: u32, got: u32 },
+    /// Underlying I/O failure while reading from a stream.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (want {MAGIC:02x?})"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v} (speak {VERSION})"),
+            WireError::BadTag(t) => write!(f, "unknown payload tag {t}"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::TooLarge(n) => {
+                write!(f, "frame section of {n} bytes exceeds the {MAX_SECTION_BYTES} B cap")
+            }
+            WireError::BadCrc { expect, got } => {
+                write!(f, "crc mismatch: frame says {expect:#010x}, bytes hash to {got:#010x}")
+            }
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// IEEE CRC-32 (reflected, polynomial 0xEDB88320), table built at compile
+// time — no dependency, identical to zlib's crc32.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 of `bytes` (zlib-compatible).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+impl Frame {
+    /// A handshake frame for `rank` (empty payload, step 0).
+    pub fn hello(rank: usize) -> Frame {
+        Frame {
+            rank: rank as u16,
+            step: 0,
+            tag: PayloadTag::Dense,
+            flags: FLAG_HELLO,
+            loss: 0.0,
+            payload: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    /// Encoded byte length of this frame.
+    pub fn encoded_len(&self) -> usize {
+        FRAME_OVERHEAD + self.payload.len() + 8 * self.stats.len()
+    }
+
+    /// Append the encoded frame to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.reserve(self.encoded_len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.rank.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.push(self.tag as u8);
+        out.push(self.flags);
+        out.extend_from_slice(&self.loss.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.stats.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        for s in &self.stats {
+            out.extend_from_slice(&s.lo.to_bits().to_le_bytes());
+            out.extend_from_slice(&s.hi.to_bits().to_le_bytes());
+        }
+        let crc = crc32(&out[start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Encode into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and the
+    /// number of bytes it occupied (so bundles of concatenated frames
+    /// decode by advancing the slice).
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+        if buf.len() < HEADER_BYTES {
+            return Err(WireError::Truncated { need: HEADER_BYTES, have: buf.len() });
+        }
+        if buf[0..4] != MAGIC {
+            return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let rank = u16::from_le_bytes([buf[6], buf[7]]);
+        let step = u64::from_le_bytes(buf[8..16].try_into().expect("8 bytes"));
+        let tag = PayloadTag::from_byte(buf[16])?;
+        let flags = buf[17];
+        let loss = f32::from_bits(u32::from_le_bytes(buf[18..22].try_into().expect("4 bytes")));
+        let payload_len =
+            u32::from_le_bytes(buf[22..26].try_into().expect("4 bytes")) as usize;
+        let stats_count =
+            u32::from_le_bytes(buf[26..30].try_into().expect("4 bytes")) as usize;
+        if payload_len > MAX_SECTION_BYTES {
+            return Err(WireError::TooLarge(payload_len));
+        }
+        if stats_count * 8 > MAX_SECTION_BYTES {
+            return Err(WireError::TooLarge(stats_count * 8));
+        }
+        let total = HEADER_BYTES + payload_len + 8 * stats_count + CRC_BYTES;
+        if buf.len() < total {
+            return Err(WireError::Truncated { need: total, have: buf.len() });
+        }
+        let expect = u32::from_le_bytes(buf[total - 4..total].try_into().expect("4 bytes"));
+        let got = crc32(&buf[..total - 4]);
+        if expect != got {
+            return Err(WireError::BadCrc { expect, got });
+        }
+        let payload = buf[HEADER_BYTES..HEADER_BYTES + payload_len].to_vec();
+        let mut stats = Vec::with_capacity(stats_count);
+        let mut o = HEADER_BYTES + payload_len;
+        for _ in 0..stats_count {
+            let lo = f32::from_bits(u32::from_le_bytes(buf[o..o + 4].try_into().expect("4 bytes")));
+            let hi = f32::from_bits(u32::from_le_bytes(
+                buf[o + 4..o + 8].try_into().expect("4 bytes"),
+            ));
+            stats.push(BucketStats { lo, hi });
+            o += 8;
+        }
+        Ok((Frame { rank, step, tag, flags, loss, payload, stats }, total))
+    }
+
+    /// Decode `n` concatenated frames (a coordinator relay bundle).
+    pub fn decode_bundle(mut buf: &[u8], n: usize) -> Result<Vec<Frame>, WireError> {
+        let mut frames = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (f, used) = Frame::decode(buf)?;
+            buf = &buf[used..];
+            frames.push(f);
+        }
+        if !buf.is_empty() {
+            return Err(WireError::Truncated { need: 0, have: buf.len() });
+        }
+        Ok(frames)
+    }
+
+    /// Read one frame from a byte stream (blocking until it is complete),
+    /// validating magic/version/lengths/CRC exactly like [`Frame::decode`].
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+        let mut buf = vec![0u8; HEADER_BYTES];
+        r.read_exact(&mut buf)?;
+        if buf[0..4] != MAGIC {
+            return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let payload_len =
+            u32::from_le_bytes(buf[22..26].try_into().expect("4 bytes")) as usize;
+        let stats_count =
+            u32::from_le_bytes(buf[26..30].try_into().expect("4 bytes")) as usize;
+        if payload_len > MAX_SECTION_BYTES {
+            return Err(WireError::TooLarge(payload_len));
+        }
+        if stats_count * 8 > MAX_SECTION_BYTES {
+            return Err(WireError::TooLarge(stats_count * 8));
+        }
+        let total = HEADER_BYTES + payload_len + 8 * stats_count + CRC_BYTES;
+        buf.resize(total, 0);
+        r.read_exact(&mut buf[HEADER_BYTES..])?;
+        let (frame, used) = Frame::decode(&buf)?;
+        debug_assert_eq!(used, total);
+        Ok(frame)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs: exactly the resident reducer slabs, little-endian
+// ---------------------------------------------------------------------------
+
+/// Serialize a sparse `(u16 idx, bf16 val)` slab: all indices, then all
+/// value bit patterns, little-endian (`4 B` per entry — the same cost the
+/// slab has resident in RAM).
+pub fn slab_payload(idx: &[u16], val: &[u16]) -> Vec<u8> {
+    assert_eq!(idx.len(), val.len(), "slab idx/val must pair up");
+    let mut out = Vec::with_capacity(4 * idx.len());
+    for &i in idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in val {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a sparse slab payload produced by [`slab_payload`] into `idx`
+/// and `val` (both of the expected entry count).
+pub fn slab_from_payload(
+    payload: &[u8],
+    idx: &mut [u16],
+    val: &mut [u16],
+) -> Result<(), WireError> {
+    assert_eq!(idx.len(), val.len(), "slab idx/val must pair up");
+    let want = 4 * idx.len();
+    if payload.len() != want {
+        return Err(WireError::Truncated { need: want, have: payload.len() });
+    }
+    let half = 2 * idx.len();
+    for (o, d) in idx.iter_mut().enumerate() {
+        *d = u16::from_le_bytes([payload[2 * o], payload[2 * o + 1]]);
+    }
+    for (o, d) in val.iter_mut().enumerate() {
+        *d = u16::from_le_bytes([payload[half + 2 * o], payload[half + 2 * o + 1]]);
+    }
+    Ok(())
+}
+
+/// Serialize a dense f32 gradient (`4 B`/value, bit-preserving).
+pub fn dense_payload(g: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * g.len());
+    for &v in g {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Decode a dense payload into `out` (bit-preserving inverse of
+/// [`dense_payload`]; `out.len()` must match the encoded count).
+pub fn dense_from_payload(payload: &[u8], out: &mut [f32]) -> Result<(), WireError> {
+    let want = 4 * out.len();
+    if payload.len() != want {
+        return Err(WireError::Truncated { need: want, have: payload.len() });
+    }
+    for (o, d) in out.iter_mut().enumerate() {
+        let b = [payload[4 * o], payload[4 * o + 1], payload[4 * o + 2], payload[4 * o + 3]];
+        *d = f32::from_bits(u32::from_le_bytes(b));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            rank: 3,
+            step: 41,
+            tag: PayloadTag::EfTopK,
+            flags: 0,
+            loss: 1.25,
+            payload: vec![7, 8, 9, 10],
+            stats: vec![BucketStats { lo: -0.5, hi: 2.0 }],
+        }
+    }
+
+    #[test]
+    fn overhead_constant_matches_empty_frame() {
+        let f = Frame { payload: Vec::new(), stats: Vec::new(), ..sample() };
+        assert_eq!(f.encode().len(), FRAME_OVERHEAD);
+        assert_eq!(f.encoded_len(), FRAME_OVERHEAD);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let f = sample();
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        let (back, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // zlib's canonical check value: crc32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn read_from_consumes_exactly_one_frame() {
+        let a = sample();
+        let b = Frame { rank: 4, step: 42, ..sample() };
+        let mut bytes = a.encode();
+        bytes.extend_from_slice(&b.encode());
+        let mut cur = std::io::Cursor::new(bytes);
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), a);
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), b);
+    }
+
+    #[test]
+    fn bundle_decodes_in_order() {
+        let frames: Vec<Frame> =
+            (0..4).map(|r| Frame { rank: r, step: 9, ..sample() }).collect();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            f.encode_into(&mut bytes);
+        }
+        let back = Frame::decode_bundle(&bytes, 4).unwrap();
+        assert_eq!(back, frames);
+        // trailing garbage is rejected, not ignored
+        bytes.push(0);
+        assert!(Frame::decode_bundle(&bytes, 4).is_err());
+    }
+
+    #[test]
+    fn slab_and_dense_payloads_roundtrip() {
+        let idx: Vec<u16> = (0..13).map(|i| i * 7).collect();
+        let val: Vec<u16> = (0..13).map(|i| 0x3f80 ^ i).collect();
+        let p = slab_payload(&idx, &val);
+        assert_eq!(p.len(), 4 * 13);
+        let mut i2 = vec![0u16; 13];
+        let mut v2 = vec![0u16; 13];
+        slab_from_payload(&p, &mut i2, &mut v2).unwrap();
+        assert_eq!(i2, idx);
+        assert_eq!(v2, val);
+
+        let g: Vec<f32> = (0..9).map(|i| (i as f32 - 4.0) * 0.37).collect();
+        let p = dense_payload(&g);
+        let mut g2 = vec![0f32; 9];
+        dense_from_payload(&p, &mut g2).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn hello_frames_are_flagged_and_empty() {
+        let h = Frame::hello(5);
+        assert_eq!(h.flags & FLAG_HELLO, FLAG_HELLO);
+        assert_eq!(h.step, 0);
+        assert!(h.payload.is_empty());
+        let (back, _) = Frame::decode(&h.encode()).unwrap();
+        assert_eq!(back, h);
+    }
+}

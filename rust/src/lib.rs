@@ -20,20 +20,25 @@
 //!   parked-worker pool (zero thread spawns per step) + per-worker scratch
 //!   arenas behind the fused dequantize/Top-K/re-quantize/AdamStats/update
 //!   pass.
-//! * **[`dist`]** — the in-process multi-replica data-parallel engine:
-//!   per-rank data shards, pluggable compressed gradient exchange
-//!   (dense / Top-K / Top-K + quantized error feedback) and the
-//!   [`dist::DistTrainer`] loop behind `microadam train --ranks N
-//!   --reduce eftopk`.
+//! * **[`dist`]** — the multi-replica data-parallel engine: per-rank data
+//!   shards, pluggable compressed gradient exchange (dense / Top-K /
+//!   Top-K + quantized error feedback), a versioned CRC-guarded wire
+//!   format ([`dist::wire`], spec in `rust/src/dist/README.md`), and
+//!   three transports behind one trait ([`dist::transport`]): in-process
+//!   loopback, Unix-domain sockets and shared-memory mailboxes. The
+//!   [`dist::DistTrainer`] loop runs behind `microadam train --ranks N
+//!   --reduce eftopk [--transport uds|shm]`; the multi-process runs are
+//!   bit-identical to loopback with the same seeds.
 //!
-//! Quickstart (`no_run`: doctest binaries don't inherit the rpath to the
-//! image's libstdc++; `cargo run --example quickstart` exercises this path):
-//! ```no_run
+//! See the repo-level `README.md` for the CLI quickstart and the
+//! paper→module map. Library quickstart:
+//! ```
 //! use microadam::optim::{microadam::MicroAdam, Optimizer};
 //! let mut opt = MicroAdam::new(4096, Default::default());
 //! let mut params = vec![0.1f32; 4096];
 //! let grads = vec![0.01f32; 4096];
 //! opt.step(&mut params, &grads, 1e-3);
+//! assert_eq!(opt.t(), 1);
 //! ```
 
 pub mod bench;

@@ -18,7 +18,10 @@ use microadam::coordinator::config::{parse_optimizer, OptBackend, TrainConfig};
 use microadam::coordinator::metrics::MetricsLogger;
 use microadam::coordinator::schedule::LrSchedule;
 use microadam::coordinator::trainer::Trainer;
-use microadam::dist::{parse_reducer, DistTrainer};
+use microadam::dist::{
+    default_rendezvous, parse_reducer, parse_transport, transport_name, DistTrainer,
+    ShmTransport, Transport, TransportKind, UdsPending, UdsTransport,
+};
 use microadam::runtime::Runtime;
 
 struct Args {
@@ -77,9 +80,17 @@ USAGE:
                     [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
                     [--checkpoint path.bin]
                     [--ranks N] [--reduce dense|topk|eftopk]
-                      (--ranks > 1, or any --reduce, routes through the
-                       data-parallel engine; artifact-free models use the
-                       native mlp_tiny/mlp_small workloads)
+                    [--transport loopback|uds|shm] [--rendezvous PATH]
+                    [--external yes]
+                      (--ranks > 1, or any --reduce/--transport, routes
+                       through the data-parallel engine; artifact-free
+                       models use the native mlp_tiny/mlp_small workloads.
+                       With --transport uds|shm, rank 0 spawns one worker
+                       process per extra rank; --rendezvous only picks the
+                       socket path / mailbox dir. Pass --external yes to
+                       join workers you started by hand instead — each one
+                       runs `train --dist-rank R --rendezvous PATH` with
+                       the same config.)
   microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|dist|all>
                     [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
   microadam list    [--artifacts artifacts]
@@ -142,27 +153,86 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(v) = args.get("reduce") {
         cfg.reduce = parse_reducer(v)?;
     }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = parse_transport(v)?;
+    }
     if let Some(v) = args.get("out") {
         cfg.out = v.into();
     }
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
     }
-    let lr = args.get_f32("lr", cfg.schedule.peak())?;
-    cfg.schedule = match args.get("schedule").unwrap_or("const") {
-        "const" => LrSchedule::Const { lr },
-        "warmup-cosine" => LrSchedule::WarmupCosine {
-            lr,
-            warmup: args.get_u64("warmup", cfg.steps / 20)?,
-            total: cfg.steps,
-            floor_frac: 0.05,
-        },
-        other => bail!("--schedule {other}: expected const|warmup-cosine"),
-    };
+    // Only rebuild the schedule when a schedule-shaping flag is present,
+    // and then only change what the flags name: `--lr`/`--warmup` keep the
+    // config's schedule *kind* and its other knobs. (Crucial for the
+    // multi-process launcher: workers are driven by the coordinator's
+    // provenance JSON and must reconstruct the identical schedule.)
+    if args.get("lr").is_some() || args.get("schedule").is_some() || args.get("warmup").is_some()
+    {
+        let current_kind = match cfg.schedule {
+            LrSchedule::Const { .. } => "const",
+            LrSchedule::WarmupCosine { .. } => "warmup-cosine",
+            LrSchedule::LinearDecay { .. } => "linear-decay",
+        };
+        let lr = args.get_f32("lr", cfg.schedule.peak())?;
+        cfg.schedule = match args.get("schedule").unwrap_or(current_kind) {
+            "const" => LrSchedule::Const { lr },
+            "warmup-cosine" => {
+                let (dw, dt, df) = match cfg.schedule {
+                    LrSchedule::WarmupCosine { warmup, total, floor_frac, .. } => {
+                        (warmup, total, floor_frac)
+                    }
+                    _ => (cfg.steps / 20, cfg.steps, 0.05),
+                };
+                LrSchedule::WarmupCosine {
+                    lr,
+                    warmup: args.get_u64("warmup", dw)?,
+                    total: dt,
+                    floor_frac: df,
+                }
+            }
+            "linear-decay" => {
+                let total = match cfg.schedule {
+                    LrSchedule::LinearDecay { total, .. } => total,
+                    _ => cfg.steps,
+                };
+                LrSchedule::LinearDecay { lr, total }
+            }
+            other => bail!("--schedule {other}: expected const|warmup-cosine|linear-decay"),
+        };
+    }
+    // `--steps` retargets a horizon-shaped schedule to the new run length:
+    // reusing a 1000-step run's provenance JSON for a 100-step probe must
+    // not leave a cosine (or decay) pinned to the old 1000-step horizon.
+    if args.get("steps").is_some() {
+        cfg.schedule = match cfg.schedule {
+            LrSchedule::WarmupCosine { lr, warmup, floor_frac, .. } => LrSchedule::WarmupCosine {
+                lr,
+                warmup: warmup.min(cfg.steps / 2),
+                total: cfg.steps,
+                floor_frac,
+            },
+            LrSchedule::LinearDecay { lr, .. } => LrSchedule::LinearDecay { lr, total: cfg.steps },
+            s @ LrSchedule::Const { .. } => s,
+        };
+    }
 
-    // --ranks > 1 (or an explicit --ranks/--reduce flag) routes through the
-    // data-parallel engine; plain single-process training is unchanged.
-    if cfg.ranks > 1 || args.get("ranks").is_some() || args.get("reduce").is_some() {
+    // A spawned worker process joins its coordinator's run and exits.
+    if args.get("dist-rank").is_some() {
+        return cmd_train_dist_worker(args, cfg);
+    }
+    // --ranks > 1 (or an explicit --ranks/--reduce/--transport flag) routes
+    // through the data-parallel engine; single-process training is
+    // unchanged. The uds/shm transports go through the launcher.
+    if cfg.ranks > 1
+        || args.get("ranks").is_some()
+        || args.get("reduce").is_some()
+        || args.get("transport").is_some()
+        || cfg.transport != TransportKind::Loopback
+    {
+        if cfg.transport != TransportKind::Loopback {
+            return cmd_train_dist_launch(args, cfg);
+        }
         return cmd_train_dist(args, cfg);
     }
 
@@ -197,21 +267,34 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
     let t0 = std::time::Instant::now();
     trainer.train(&mut logger)?;
-    let dt = t0.elapsed().as_secs_f64();
+    dist_summary(args, &trainer, &logger, t0.elapsed().as_secs_f64())
+}
+
+/// The coordinator-side wrap-up shared by the loopback and multi-process
+/// paths: throughput/loss summary, framed-bytes accounting, checkpoint.
+fn dist_summary(
+    args: &Args,
+    trainer: &DistTrainer,
+    logger: &MetricsLogger,
+    dt: f64,
+) -> Result<()> {
     println!(
-        "done: {} ranks x {} steps ({}) in {:.1}s ({:.2} steps/s), loss {:.4} -> {:.4}",
+        "done: {} ranks x {} steps ({} via {}) in {:.1}s ({:.2} steps/s), loss {:.4} -> {:.4}",
         trainer.ranks,
         trainer.cfg.steps,
         trainer.reducer_name(),
+        trainer.transport_name(),
         dt,
         trainer.cfg.steps as f64 / dt,
         logger.first_loss(),
         logger.tail_loss(10),
     );
     println!(
-        "communicated {:.2} MB total ({} B/rank/step), opt state {} B, reducer residual {} B",
+        "communicated {:.2} MB total ({} framed B/rank/step = payload + {} B frame overhead), \
+         opt state {} B, reducer residual {} B",
         trainer.wire_bytes_total() as f64 / (1u64 << 20) as f64,
-        trainer.wire_bytes_total() / (trainer.ranks as u64 * trainer.cfg.steps.max(1)),
+        trainer.frame_bytes_per_rank(),
+        microadam::dist::FRAME_OVERHEAD,
         trainer.opt_state_bytes(),
         trainer.reducer_state_bytes(),
     );
@@ -223,6 +306,132 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Launch a multi-process run: rank 0 binds the rendezvous, spawns one
+/// worker process per extra rank (unless `--rendezvous` points at workers
+/// started by hand), trains as rank 0, then reaps the workers.
+fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
+    let ranks = cfg.ranks;
+    let kind = cfg.transport;
+    // --rendezvous only picks the path; --external yes switches to
+    // join-by-hand mode (the operator starts the workers themselves with
+    // `train --dist-rank R --rendezvous PATH`).
+    let spawn_workers = !matches!(args.get("external"), Some("yes") | Some("true") | Some("1"));
+    let rdv = match args.get("rendezvous") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_rendezvous(kind),
+    };
+
+    // Bind/create the rendezvous BEFORE spawning so no worker can race it.
+    let pending = match kind {
+        TransportKind::Uds => Some(UdsPending::bind(&rdv, ranks)?),
+        TransportKind::Shm => None,
+        TransportKind::Loopback => unreachable!("loopback has no launcher"),
+    };
+    let shm = match kind {
+        TransportKind::Shm => Some(ShmTransport::coordinator(&rdv, ranks)?),
+        _ => None,
+    };
+
+    // Workers get the full provenance config plus their rank.
+    let cfg_path = std::env::temp_dir()
+        .join(format!("microadam-dist-cfg-{}.json", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_json().to_string())?;
+    let mut children = Vec::new();
+    if spawn_workers {
+        let exe = std::env::current_exe()?;
+        for r in 1..ranks {
+            let spawned = std::process::Command::new(&exe)
+                .arg("train")
+                .arg("--config")
+                .arg(&cfg_path)
+                .arg("--dist-rank")
+                .arg(r.to_string())
+                .arg("--rendezvous")
+                .arg(&rdv)
+                .spawn();
+            match spawned {
+                Ok(child) => children.push(child),
+                Err(e) => {
+                    // don't leak the workers already launched
+                    for mut c in children {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    let _ = std::fs::remove_file(&cfg_path);
+                    bail!("spawn worker rank {r}: {e}");
+                }
+            }
+        }
+        eprintln!(
+            "[dist] launched {} worker process(es) ({} rendezvous {})",
+            ranks - 1,
+            transport_name(kind),
+            rdv.display()
+        );
+    }
+
+    let mut result = (|| -> Result<()> {
+        let transport: Box<dyn Transport> = match kind {
+            TransportKind::Uds => Box::new(pending.expect("bound above").accept()?),
+            TransportKind::Shm => Box::new(shm.expect("created above")),
+            TransportKind::Loopback => unreachable!(),
+        };
+        let mut trainer = DistTrainer::with_transport(cfg, transport, vec![0])?;
+        let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
+        let t0 = std::time::Instant::now();
+        trainer.train(&mut logger)?;
+        dist_summary(args, &trainer, &logger, t0.elapsed().as_secs_f64())
+    })();
+
+    // Reap every worker (kill first if the run already failed — they would
+    // otherwise sit out their transport timeouts); only then report.
+    for c in &mut children {
+        if result.is_err() {
+            let _ = c.kill();
+        }
+        match c.wait() {
+            Ok(status) if result.is_ok() && !status.success() => {
+                result = Err(anyhow!("dist worker exited with {status}"));
+                // failure mode switch: put the remaining workers down too
+            }
+            Ok(_) => {}
+            Err(e) => {
+                if result.is_ok() {
+                    result = Err(anyhow!("reap dist worker: {e}"));
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&cfg_path);
+    result
+}
+
+/// A spawned (or hand-started) worker process: connect to the rendezvous
+/// as `--dist-rank R`, train silently in lockstep, exit.
+fn cmd_train_dist_worker(args: &Args, mut cfg: TrainConfig) -> Result<()> {
+    let rank = args.get_u64("dist-rank", 0)? as usize;
+    let ranks = cfg.ranks;
+    if rank == 0 || rank >= ranks {
+        bail!("--dist-rank {rank}: workers are ranks 1..{ranks}");
+    }
+    let rdv = args
+        .get("rendezvous")
+        .ok_or_else(|| anyhow!("--dist-rank needs --rendezvous"))?
+        .to_string();
+    // Only the coordinator writes metrics/checkpoints.
+    cfg.out = String::new();
+    let transport: Box<dyn Transport> = match cfg.transport {
+        TransportKind::Uds => Box::new(UdsTransport::connect(&rdv, rank, ranks)?),
+        TransportKind::Shm => Box::new(ShmTransport::worker(&rdv, rank, ranks)?),
+        TransportKind::Loopback => {
+            bail!("--dist-rank only applies to the uds/shm transports")
+        }
+    };
+    let mut trainer = DistTrainer::with_transport(cfg, transport, vec![rank])?;
+    let mut logger = MetricsLogger::new("")?;
+    trainer.train(&mut logger)
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

@@ -34,11 +34,27 @@ use crate::exec::ExecPool;
 /// point. Chunks are consecutive segments of the optimizer's flat vector;
 /// their concatenation must have the dimension the optimizer was built with.
 pub struct TensorChunk<'a> {
+    /// This tensor's mutable slice of the flat parameter vector.
     pub params: &'a mut [f32],
+    /// The matching gradient slice (same length as `params`).
     pub grads: &'a [f32],
 }
 
 /// A stateful first-order optimizer over a flat f32 parameter vector.
+///
+/// ```
+/// use microadam::exec::ExecPool;
+/// use microadam::optim::{self, Optimizer, OptimizerKind, TensorChunk};
+///
+/// let mut opt = optim::build(OptimizerKind::MicroAdam, 128, &[], 0.0);
+/// let mut params = vec![0.5f32; 128];
+/// let grads = vec![0.1f32; 128];
+/// // one multi-tensor step over a single flat chunk (the zero-copy path)
+/// let mut chunks = [TensorChunk { params: &mut params[..], grads: &grads }];
+/// opt.step_multi(&mut chunks, 1e-3, &ExecPool::serial());
+/// assert_eq!(opt.t(), 1);
+/// assert!(opt.state_bytes() > 0);
+/// ```
 pub trait Optimizer {
     /// Optimizer display name (table row label).
     fn name(&self) -> String;
@@ -160,18 +176,28 @@ pub fn resident_bytes_per_param(opt: &dyn Optimizer, d: usize) -> f64 {
 /// Which optimizers a harness can instantiate by name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimizerKind {
+    /// The paper's contribution ([`microadam::MicroAdam`]).
     MicroAdam,
+    /// Adam (AdamW with zero decoupled weight decay).
     Adam,
+    /// AdamW baseline ([`adamw::AdamW`]).
     AdamW,
+    /// Dettmers-style 8-bit-state baseline ([`adamw8bit::AdamW8bit`]).
     AdamW8bit,
+    /// SGD + momentum ([`sgd::Sgd`]).
     Sgd,
+    /// Factorized second-moment baseline ([`adafactor::AdaFactor`]).
     AdaFactor,
+    /// Confidence-guided factorized baseline ([`came::Came`]).
     Came,
+    /// Low-rank projection baseline ([`galore::GaLore`]).
     GaLore,
+    /// GaLore with the Appendix-F error-feedback variant.
     GaLoreEf,
 }
 
 impl OptimizerKind {
+    /// Every instantiable kind, in the order the benches sweep them.
     pub fn all() -> &'static [OptimizerKind] {
         use OptimizerKind::*;
         &[MicroAdam, Adam, AdamW, AdamW8bit, Sgd, AdaFactor, Came, GaLore, GaLoreEf]

@@ -4,7 +4,7 @@
 //! backend-independent and always compiled. The actual execution engine is
 //! selected at build time:
 //!
-//! * `--features pjrt` — [`pjrt`]: wraps the vendored `xla` crate per the
+//! * `--features pjrt` — `pjrt`: wraps the vendored `xla` crate per the
 //!   /opt/xla-example/load_hlo pattern (`PjRtClient::cpu()` ->
 //!   `HloModuleProto::from_text_file` -> `compile` -> `execute`). Artifacts
 //!   are compiled lazily and cached; every `execute_named` call validates
@@ -12,7 +12,7 @@
 //!   artifact directory fails fast with a readable error instead of
 //!   mis-executing. Python never runs here: the manifest + HLO text
 //!   produced once by `make artifacts` fully describe the compute.
-//! * default — [`stub`]: a host-only stand-in. Literals are plain host
+//! * default — `stub`: a host-only stand-in. Literals are plain host
 //!   buffers (construction/readback work normally), the manifest still
 //!   loads and lists, and only `compile`/`execute_named` return an error
 //!   directing the user to the `pjrt` feature. Everything native —

@@ -12,9 +12,10 @@
 use microadam::coordinator::config::TrainConfig;
 use microadam::coordinator::metrics::MetricsLogger;
 use microadam::coordinator::schedule::LrSchedule;
+use microadam::dist::wire::HELLO_DIGEST_BYTES;
 use microadam::dist::{
     native_model_spec, rank_data_seed, DistTrainer, EfTopKReduce, GradReducer, ReducerKind,
-    SparseReduceConfig, TopKReduce,
+    SparseReduceConfig, TopKReduce, FRAME_OVERHEAD,
 };
 use microadam::models::mlp::Mlp;
 use microadam::optim::{self, OptimizerKind};
@@ -168,7 +169,21 @@ fn wire_accounting_scales_with_ranks_and_steps() {
                 ranks * 4 * t.dim()
             );
         } else {
-            assert_eq!(per_step as usize, ranks * 4 * t.dim());
+            // framed accounting: payload (4 B/param) + fixed frame overhead
+            assert_eq!(per_step as usize, ranks * (4 * t.dim() + FRAME_OVERHEAD));
         }
+        // the loopback transport physically framed every accounted byte
+        // (plus the one-time config-digest handshake round)
+        let handshake = (ranks * (FRAME_OVERHEAD + HELLO_DIGEST_BYTES)) as u64;
+        assert_eq!(
+            t.transport_bytes_sent(),
+            t.wire_bytes_total() + handshake,
+            "{reduce:?}"
+        );
+        assert_eq!(
+            t.frame_bytes_per_rank() as u64 * ranks as u64 * steps,
+            t.wire_bytes_total(),
+            "{reduce:?}"
+        );
     }
 }

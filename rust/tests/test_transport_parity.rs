@@ -1,0 +1,279 @@
+//! Transport-layer parity: the multi-process exchange must be a
+//! bit-perfect re-plumbing of the loopback engine.
+//!
+//! * `uds` / `shm` runs (one endpoint per thread, real sockets / mailbox
+//!   files) produce the **same loss series and final parameters, to the
+//!   bit**, as the loopback run with the same seeds.
+//! * the framed bytes measured over the real socket equal
+//!   `wire_bytes_per_rank() + FRAME_OVERHEAD` per rank per step — the
+//!   accounting identity the wire spec (`rust/src/dist/README.md`)
+//!   promises.
+//! * the actual `microadam train --transport uds|shm` launcher (separate
+//!   OS processes via fork/exec) reproduces the loopback metrics file.
+
+use std::path::PathBuf;
+
+use microadam::coordinator::config::TrainConfig;
+use microadam::coordinator::metrics::MetricsLogger;
+use microadam::coordinator::schedule::LrSchedule;
+use microadam::dist::wire::HELLO_DIGEST_BYTES;
+use microadam::dist::{
+    DistTrainer, ReducerKind, ShmTransport, Transport, TransportKind, UdsPending, UdsTransport,
+    FRAME_OVERHEAD,
+};
+use microadam::optim::OptimizerKind;
+use microadam::util::json::Json;
+
+const RANKS: usize = 3;
+const STEPS: u64 = 8;
+
+fn cfg(reduce: ReducerKind, transport: TransportKind) -> TrainConfig {
+    TrainConfig {
+        model: "mlp_tiny".into(),
+        optimizer: OptimizerKind::MicroAdam,
+        schedule: LrSchedule::Const { lr: 3e-3 },
+        steps: STEPS,
+        seed: 7,
+        log_every: 10_000,
+        workers: 2,
+        ranks: RANKS,
+        reduce,
+        transport,
+        ..Default::default()
+    }
+}
+
+fn unique_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "microadam-tpar-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::SeqCst)
+    ))
+}
+
+/// Loss series (bit patterns) + final params of a loopback run.
+fn run_loopback(reduce: ReducerKind) -> (Vec<u32>, Vec<f32>) {
+    let mut t = DistTrainer::new(cfg(reduce, TransportKind::Loopback)).unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    (logger.history.iter().map(|m| m.loss.to_bits()).collect(), t.params_vec())
+}
+
+struct EndpointReport {
+    losses: Vec<u32>,
+    params: Vec<f32>,
+    bytes_sent: u64,
+    bytes_received: u64,
+    wire_per_rank: usize,
+}
+
+/// Run one endpoint (coordinator or worker) to completion in the calling
+/// thread. The trainer is built inside so nothing non-Send crosses.
+fn run_endpoint(
+    reduce: ReducerKind,
+    kind: TransportKind,
+    transport: Box<dyn Transport>,
+    rank: usize,
+) -> EndpointReport {
+    let mut t = DistTrainer::with_transport(cfg(reduce, kind), transport, vec![rank]).unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    EndpointReport {
+        losses: logger.history.iter().map(|m| m.loss.to_bits()).collect(),
+        params: t.params_vec(),
+        bytes_sent: t.transport_bytes_sent(),
+        bytes_received: t.transport_bytes_received(),
+        wire_per_rank: t.frame_bytes_per_rank() - FRAME_OVERHEAD,
+    }
+}
+
+fn run_multiproc(reduce: ReducerKind, kind: TransportKind) -> (EndpointReport, Vec<EndpointReport>) {
+    let rdv = unique_path(match kind {
+        TransportKind::Uds => "uds",
+        TransportKind::Shm => "shm",
+        TransportKind::Loopback => unreachable!(),
+    });
+    match kind {
+        TransportKind::Uds => {
+            let pending = UdsPending::bind(&rdv, RANKS).unwrap();
+            let workers: Vec<_> = (1..RANKS)
+                .map(|r| {
+                    let rdv = rdv.clone();
+                    std::thread::spawn(move || {
+                        let t = UdsTransport::connect(&rdv, r, RANKS).unwrap();
+                        run_endpoint(reduce, kind, Box::new(t), r)
+                    })
+                })
+                .collect();
+            let coord = run_endpoint(reduce, kind, Box::new(pending.accept().unwrap()), 0);
+            (coord, workers.into_iter().map(|w| w.join().unwrap()).collect())
+        }
+        TransportKind::Shm => {
+            let coord_t = ShmTransport::coordinator(&rdv, RANKS).unwrap();
+            let workers: Vec<_> = (1..RANKS)
+                .map(|r| {
+                    let rdv = rdv.clone();
+                    std::thread::spawn(move || {
+                        let t = ShmTransport::worker(&rdv, r, RANKS).unwrap();
+                        run_endpoint(reduce, kind, Box::new(t), r)
+                    })
+                })
+                .collect();
+            let coord = run_endpoint(reduce, kind, Box::new(coord_t), 0);
+            (coord, workers.into_iter().map(|w| w.join().unwrap()).collect())
+        }
+        TransportKind::Loopback => unreachable!(),
+    }
+}
+
+#[test]
+fn uds_and_shm_match_loopback_bitwise() {
+    for reduce in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+        let (loop_losses, loop_params) = run_loopback(reduce);
+        assert_eq!(loop_losses.len(), STEPS as usize);
+        for kind in [TransportKind::Uds, TransportKind::Shm] {
+            let (coord, workers) = run_multiproc(reduce, kind);
+            assert_eq!(coord.losses, loop_losses, "{reduce:?} {kind:?} loss series");
+            assert_eq!(coord.params, loop_params, "{reduce:?} {kind:?} final params");
+            // the replicated state never drifted: every worker holds the
+            // coordinator's exact parameters
+            for (i, w) in workers.iter().enumerate() {
+                assert_eq!(w.params, loop_params, "{reduce:?} {kind:?} worker {}", i + 1);
+                // workers run silent: no logged history
+                assert!(w.losses.is_empty());
+            }
+        }
+    }
+}
+
+#[test]
+fn framed_socket_bytes_match_accounting() {
+    // Acceptance criterion: bytes measured over the real socket equal the
+    // reducer's accounted wire bytes plus the documented frame overhead.
+    let digest = (FRAME_OVERHEAD + HELLO_DIGEST_BYTES) as u64;
+    for kind in [TransportKind::Uds, TransportKind::Shm] {
+        let (coord, workers) = run_multiproc(ReducerKind::EfTopK, kind);
+        let framed = (coord.wire_per_rank + FRAME_OVERHEAD) as u64;
+        for w in &workers {
+            // uplink: one config-digest handshake frame, then exactly one
+            // gradient frame per step (uds additionally sends the one-time
+            // empty rendezvous hello)
+            let hello = if kind == TransportKind::Uds { FRAME_OVERHEAD as u64 } else { 0 };
+            assert_eq!(
+                w.bytes_sent,
+                STEPS * framed + digest + hello,
+                "{kind:?} worker uplink"
+            );
+            // downlink: the full bundle (all ranks) for the handshake
+            // round and every step
+            assert_eq!(
+                w.bytes_received,
+                (STEPS * framed + digest) * RANKS as u64,
+                "{kind:?} bundle"
+            );
+        }
+        // the coordinator gathered one frame per worker per round
+        assert_eq!(
+            coord.bytes_received,
+            (STEPS * framed + digest) * (RANKS as u64 - 1),
+            "{kind:?} coordinator gather"
+        );
+    }
+}
+
+#[test]
+fn mismatched_worker_config_is_rejected_at_handshake() {
+    // A hand-started worker with a different seed must fail the round-0
+    // config-digest exchange on BOTH endpoints — never train divergently.
+    let rdv = unique_path("digest");
+    let pending = UdsPending::bind(&rdv, 2).unwrap();
+    let worker = std::thread::spawn(move || {
+        let t = UdsTransport::connect(&rdv, 1, 2).unwrap();
+        let mut bad = cfg(ReducerKind::EfTopK, TransportKind::Uds);
+        bad.ranks = 2;
+        bad.seed = 999; // trajectory-relevant mismatch
+        DistTrainer::with_transport(bad, Box::new(t), vec![1]).err().map(|e| e.to_string())
+    });
+    let mut good = cfg(ReducerKind::EfTopK, TransportKind::Uds);
+    good.ranks = 2;
+    let coord =
+        DistTrainer::with_transport(good, Box::new(pending.accept().unwrap()), vec![0]);
+    let coord_err = coord.err().expect("coordinator must reject the mismatch").to_string();
+    assert!(coord_err.contains("digest"), "{coord_err}");
+    let worker_err = worker.join().unwrap().expect("worker must reject the mismatch");
+    assert!(worker_err.contains("digest"), "{worker_err}");
+}
+
+// ---------------------------------------------------------------------------
+// True multi-process: drive the real `microadam train` launcher
+// ---------------------------------------------------------------------------
+
+/// Extract the (step, loss-as-string) series and the final_loss record
+/// from a metrics JSONL file. Losses compare as their serialized strings:
+/// equal f32 bits serialize identically, so string equality is bit
+/// equality.
+fn metrics_series(path: &std::path::Path) -> (Vec<(u64, String)>, Option<String>) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut series = Vec::new();
+    let mut final_loss = None;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        if let (Some(step), Some(loss)) = (j.get("step"), j.get("loss")) {
+            series.push((step.as_f64().unwrap() as u64, loss.to_string()));
+        }
+        if let Some(fl) = j.get("final_loss") {
+            final_loss = Some(fl.to_string());
+        }
+    }
+    (series, final_loss)
+}
+
+fn launch(transport: &str, out: &std::path::Path) {
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_microadam"))
+        .args([
+            "train",
+            "--model",
+            "mlp_tiny",
+            "--optimizer",
+            "micro-adam",
+            "--ranks",
+            "3",
+            "--reduce",
+            "eftopk",
+            "--transport",
+            transport,
+            "--steps",
+            "8",
+            "--seed",
+            "7",
+            "--workers",
+            "2",
+            "--lr",
+            "3e-3",
+            "--out",
+        ])
+        .arg(out)
+        .status()
+        .expect("spawn microadam train");
+    assert!(status.success(), "microadam train --transport {transport} failed");
+}
+
+#[test]
+fn launcher_processes_match_loopback_metrics() {
+    let dir = unique_path("launch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let loop_out = dir.join("loopback.jsonl");
+    launch("loopback", &loop_out);
+    let (loop_series, loop_final) = metrics_series(&loop_out);
+    assert_eq!(loop_series.len(), 8);
+    for transport in ["uds", "shm"] {
+        let out = dir.join(format!("{transport}.jsonl"));
+        launch(transport, &out);
+        let (series, final_loss) = metrics_series(&out);
+        assert_eq!(series, loop_series, "{transport} per-step losses");
+        assert_eq!(final_loss, loop_final, "{transport} final loss");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

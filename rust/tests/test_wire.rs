@@ -1,0 +1,252 @@
+//! Wire-format conformance: the frames of `rust/src/dist/wire.rs` against
+//! the normative spec in `rust/src/dist/README.md`.
+//!
+//! Three legs:
+//! * worked byte counts — the spec's examples, asserted against real
+//!   reducers' `wire_bytes_per_rank()`;
+//! * corrupt-frame rejection — bad magic, wrong version, unknown tag,
+//!   every possible truncation, CRC damage, lying length fields;
+//! * property round trip — arbitrary slab geometries, payload contents,
+//!   stats blocks and header values encode -> decode bit-exactly.
+
+use microadam::dist::wire::{
+    crc32, dense_from_payload, dense_payload, slab_from_payload, slab_payload, Frame, PayloadTag,
+    WireError, CRC_BYTES, FRAME_OVERHEAD, HEADER_BYTES, MAGIC, VERSION,
+};
+use microadam::dist::{build_reducer, ReducerKind, SparseReduceConfig};
+use microadam::quant::BucketStats;
+use microadam::util::rng::Rng;
+
+fn frame(payload: Vec<u8>, stats: Vec<BucketStats>) -> Frame {
+    Frame { rank: 2, step: 17, tag: PayloadTag::EfTopK, flags: 0, loss: 0.75, payload, stats }
+}
+
+// ---------------------------------------------------------------------------
+// Worked examples from the spec (README §4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spec_worked_examples_match_reducers() {
+    // §4.1: eftopk at d = 65536, paper geometry: 16 blocks of 4096,
+    // k_b = 41 -> payload 4 * 16 * 41 = 2624 B, frame 2624 + 34 = 2658 B.
+    let ef = build_reducer(ReducerKind::EfTopK, 1 << 16, 4, SparseReduceConfig::default());
+    assert_eq!(ef.wire_bytes_per_rank(), 2624);
+    assert_eq!(FRAME_OVERHEAD, 34);
+    let f = frame(vec![0u8; ef.wire_bytes_per_rank()], vec![]);
+    assert_eq!(f.encoded_len(), 2658);
+    assert_eq!(f.encode().len(), 2658);
+
+    // §4.2: dense at d = 2659 (mlp_tiny): payload 4 * 2659 = 10636 B,
+    // frame 10670 B.
+    let dense = build_reducer(ReducerKind::Dense, 2659, 2, SparseReduceConfig::default());
+    assert_eq!(dense.wire_bytes_per_rank(), 10636);
+    let f = frame(vec![0u8; 10636], vec![]);
+    assert_eq!(f.encoded_len(), 10670);
+
+    // header/crc split of the overhead
+    assert_eq!(FRAME_OVERHEAD, HEADER_BYTES + CRC_BYTES);
+    assert_eq!((HEADER_BYTES, CRC_BYTES), (30, 4));
+}
+
+// ---------------------------------------------------------------------------
+// Corrupt-frame rejection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rejects_bad_magic() {
+    let mut bytes = frame(vec![1, 2, 3], vec![]).encode();
+    bytes[0] ^= 0xFF;
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::BadMagic(_))));
+}
+
+#[test]
+fn rejects_wrong_version() {
+    let mut bytes = frame(vec![1, 2, 3], vec![]).encode();
+    // version lives at offset 4..6; bump it and re-seal the CRC so only
+    // the version check can fire
+    bytes[4] = 2;
+    let n = bytes.len();
+    let crc = crc32(&bytes[..n - 4]).to_le_bytes();
+    bytes[n - 4..].copy_from_slice(&crc);
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::BadVersion(2))));
+}
+
+#[test]
+fn rejects_unknown_tag() {
+    let mut bytes = frame(vec![1, 2, 3], vec![]).encode();
+    bytes[16] = 9;
+    let n = bytes.len();
+    let crc = crc32(&bytes[..n - 4]).to_le_bytes();
+    bytes[n - 4..].copy_from_slice(&crc);
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::BadTag(9))));
+}
+
+#[test]
+fn rejects_every_truncation() {
+    // A frame cut anywhere — mid-header, mid-payload, mid-stats, mid-CRC —
+    // must decode to an error, never a panic or a bogus frame.
+    let bytes = frame((0..64).collect(), vec![BucketStats { lo: -1.0, hi: 3.0 }; 5]).encode();
+    for cut in 0..bytes.len() {
+        match Frame::decode(&bytes[..cut]) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("truncation at {cut} gave {other:?}"),
+        }
+    }
+    // the untruncated frame still decodes (the loop above really was the
+    // only thing failing)
+    assert!(Frame::decode(&bytes).is_ok());
+}
+
+#[test]
+fn rejects_crc_damage_anywhere() {
+    let clean = frame((0..32).collect(), vec![BucketStats { lo: 0.0, hi: 1.0 }]).encode();
+    // flip one bit in a spread of positions across payload, stats and the
+    // CRC itself (skipping bytes whose damage a structural check catches
+    // first: magic, version, tag, lengths)
+    for pos in [HEADER_BYTES, HEADER_BYTES + 7, HEADER_BYTES + 33, clean.len() - 1] {
+        let mut bytes = clean.clone();
+        bytes[pos] ^= 0x10;
+        assert!(
+            matches!(Frame::decode(&bytes), Err(WireError::BadCrc { .. })),
+            "flip at {pos}"
+        );
+    }
+}
+
+#[test]
+fn rejects_lying_length_fields() {
+    // payload_len larger than the buffer -> truncated, not a wild read
+    let mut bytes = frame(vec![5; 8], vec![]).encode();
+    bytes[22..26].copy_from_slice(&100u32.to_le_bytes());
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::Truncated { .. })));
+    // absurd payload_len -> capped before any allocation
+    let mut bytes = frame(vec![5; 8], vec![]).encode();
+    bytes[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::TooLarge(_))));
+    // absurd stats_count -> same
+    let mut bytes = frame(vec![5; 8], vec![]).encode();
+    bytes[26..30].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(Frame::decode(&bytes), Err(WireError::TooLarge(_))));
+}
+
+#[test]
+fn rejects_wrong_size_slab_payloads() {
+    let mut idx = vec![0u16; 4];
+    let mut val = vec![0u16; 4];
+    assert!(slab_from_payload(&[0u8; 15], &mut idx, &mut val).is_err());
+    assert!(slab_from_payload(&[0u8; 17], &mut idx, &mut val).is_err());
+    assert!(slab_from_payload(&[0u8; 16], &mut idx, &mut val).is_ok());
+    let mut out = vec![0f32; 4];
+    assert!(dense_from_payload(&[0u8; 15], &mut out).is_err());
+    assert!(dense_from_payload(&[0u8; 16], &mut out).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: arbitrary geometries round-trip bit-exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arbitrary_frames_roundtrip_bit_exactly() {
+    let mut rng = Rng::seed_from_u64(0xF4A3E);
+    for iter in 0..300 {
+        let payload_len = rng.gen_range(2048);
+        let payload: Vec<u8> = (0..payload_len).map(|_| rng.next_u64() as u8).collect();
+        let stats_count = rng.gen_range(40);
+        let stats: Vec<BucketStats> = (0..stats_count)
+            .map(|_| BucketStats {
+                // arbitrary bit patterns, NaNs and infinities included:
+                // the codec moves bits, not numbers
+                lo: f32::from_bits(rng.next_u64() as u32),
+                hi: f32::from_bits(rng.next_u64() as u32),
+            })
+            .collect();
+        let f = Frame {
+            rank: rng.next_u64() as u16,
+            step: rng.next_u64(),
+            tag: match rng.gen_range(3) {
+                0 => PayloadTag::Dense,
+                1 => PayloadTag::TopK,
+                _ => PayloadTag::EfTopK,
+            },
+            flags: (rng.next_u64() & 1) as u8,
+            loss: f32::from_bits(rng.next_u64() as u32),
+            payload,
+            stats,
+        };
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        assert_eq!(bytes[0..4], MAGIC);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), VERSION);
+        let (back, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len(), "iter {iter}");
+        // bit-level equality (PartialEq would reject NaN losses)
+        assert_eq!(back.rank, f.rank);
+        assert_eq!(back.step, f.step);
+        assert_eq!(back.tag, f.tag);
+        assert_eq!(back.flags, f.flags);
+        assert_eq!(back.loss.to_bits(), f.loss.to_bits(), "iter {iter}");
+        assert_eq!(back.payload, f.payload);
+        assert_eq!(back.stats.len(), f.stats.len());
+        for (a, b) in back.stats.iter().zip(&f.stats) {
+            assert_eq!(a.lo.to_bits(), b.lo.to_bits());
+            assert_eq!(a.hi.to_bits(), b.hi.to_bits());
+        }
+    }
+}
+
+#[test]
+fn arbitrary_slab_geometries_roundtrip_bit_exactly() {
+    let mut rng = Rng::seed_from_u64(0x51AB);
+    for _ in 0..200 {
+        let entries = 1 + rng.gen_range(1500);
+        let idx: Vec<u16> = (0..entries).map(|_| rng.next_u64() as u16).collect();
+        let val: Vec<u16> = (0..entries).map(|_| rng.next_u64() as u16).collect();
+        let payload = slab_payload(&idx, &val);
+        assert_eq!(payload.len(), 4 * entries);
+        let mut idx2 = vec![0u16; entries];
+        let mut val2 = vec![0u16; entries];
+        slab_from_payload(&payload, &mut idx2, &mut val2).unwrap();
+        assert_eq!(idx, idx2);
+        assert_eq!(val, val2);
+    }
+    // dense payloads carry raw f32 bit patterns
+    for _ in 0..50 {
+        let n = 1 + rng.gen_range(700);
+        let g: Vec<f32> = (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let payload = dense_payload(&g);
+        let mut g2 = vec![0f32; n];
+        dense_from_payload(&payload, &mut g2).unwrap();
+        for (a, b) in g.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn frames_survive_stream_reassembly() {
+    // A bundle written through an arbitrary-chunk stream (as a socket
+    // would deliver it) re-parses into the same frames.
+    let mut rng = Rng::seed_from_u64(7);
+    let frames: Vec<Frame> = (0..5u16)
+        .map(|r| {
+            let n = rng.gen_range(300);
+            Frame {
+                rank: r,
+                step: 3,
+                tag: PayloadTag::TopK,
+                flags: 0,
+                loss: r as f32,
+                payload: (0..n).map(|_| rng.next_u64() as u8).collect(),
+                stats: vec![],
+            }
+        })
+        .collect();
+    let mut bytes = Vec::new();
+    for f in &frames {
+        f.encode_into(&mut bytes);
+    }
+    let mut cursor = std::io::Cursor::new(bytes);
+    for f in &frames {
+        assert_eq!(&Frame::read_from(&mut cursor).unwrap(), f);
+    }
+}
