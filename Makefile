@@ -11,7 +11,8 @@
 #                    doctests live in the default (XLA-free) ci lane only
 #   make bench-smoke few-second perf probe: bench_optimizer_step in smoke
 #                    mode (writes $(BENCH_JSON): steps/s, resident
-#                    bytes/param, wire bytes) + the artifact-free
+#                    bytes/param, wire bytes, and the real-socket tcp
+#                    gather/compress overlap ms) + the artifact-free
 #                    perf_probe --native row, so every PR can record the
 #                    perf trajectory
 #   make artifacts   AOT-lower the L2 graphs (needs python/ + JAX; only for
@@ -26,13 +27,20 @@ XLA_RS ?= /opt/xla-rs
 # Where the smoke lane writes its JSON record.
 BENCH_JSON ?= BENCH_SMOKE.json
 
-.PHONY: ci ci-pjrt bench-smoke artifacts
+.PHONY: ci ci-pjrt bench-smoke artifacts test-tcp
 
 ci:
 	cargo build --release
+	# `cargo test -q` includes the tcp transport lane (test_tcp_parity:
+	# parity + fault injection, pinned to 127.0.0.1 ephemeral ports — no
+	# external network needed); run it alone via `make test-tcp`
 	cargo test -q
 	cargo test --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# The tcp transport lane by itself (also part of `make ci` via cargo test).
+test-tcp:
+	cargo test -q --test test_tcp_parity
 
 ci-pjrt:
 	@if [ ! -d "$(XLA_RS)" ]; then \

@@ -27,6 +27,14 @@ fn main() {
         println!("bench_e2e: dist sweep failed: {e:#}");
     }
 
+    // Real sockets: framed-byte accounting and the pipelined coordinator's
+    // gather/relay overlap measured over an actual 127.0.0.1 TCP exchange.
+    println!("\n== tcp transport probe (real sockets, 127.0.0.1 ephemeral port) ==");
+    match microadam::bench::run_tcp_probe(60) {
+        Ok(p) => p.print(),
+        Err(e) => println!("bench_e2e: tcp probe failed: {e:#}"),
+    }
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\nbench_e2e: artifacts/ missing — run `make artifacts` for the AOT rows");
         return;

@@ -32,7 +32,20 @@ fn main() {
 
     if let Ok(path) = std::env::var("MICROADAM_BENCH_JSON") {
         if !path.is_empty() {
-            let record = bench::smoke_json(d_scale, &rows);
+            // Real-socket probe for the gather/relay overlap record
+            // (127.0.0.1 ephemeral port; prints its own >= 0 check).
+            println!("\n== tcp gather/relay overlap probe ==");
+            let tcp = match bench::run_tcp_probe(20) {
+                Ok(p) => {
+                    p.print();
+                    Some(p)
+                }
+                Err(e) => {
+                    eprintln!("bench smoke: tcp overlap probe failed: {e:#}");
+                    None
+                }
+            };
+            let record = bench::smoke_json(d_scale, &rows, tcp.as_ref());
             match std::fs::write(&path, record.to_string()) {
                 Ok(()) => println!("\nbench record written to {path}"),
                 Err(e) => eprintln!("\nfailed to write {path}: {e}"),

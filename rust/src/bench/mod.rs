@@ -608,6 +608,124 @@ pub fn run_dist_sweep(out_dir: &str, steps: u64) -> Result<()> {
     Ok(())
 }
 
+/// What [`run_tcp_probe`] measured over the real socket.
+pub struct TcpProbe {
+    pub steps: u64,
+    pub ranks: usize,
+    /// Accounted framed bytes per rank per step (`wire_bytes_per_rank +
+    /// FRAME_OVERHEAD`).
+    pub frame_bytes_per_rank: u64,
+    /// Bytes the worker endpoint physically wrote to its socket.
+    pub worker_uplink_bytes: u64,
+    /// What the accounting says the uplink should be (per-step frames +
+    /// the one-time hello and config-digest handshakes).
+    pub expected_uplink_bytes: u64,
+    /// Bytes the coordinator physically read off its gather sockets.
+    pub coordinator_received_bytes: u64,
+    /// Gather/relay overlap the pipelined coordinator recorded (ms).
+    pub overlap_ms: f64,
+    pub final_loss: f32,
+}
+
+impl TcpProbe {
+    /// Print the probe's rows (the bench_e2e / bench-smoke report).
+    pub fn print(&self) {
+        println!(
+            "tcp probe ({} ranks x {} steps over 127.0.0.1, eftopk): \
+             {} framed B/rank/step",
+            self.ranks, self.steps, self.frame_bytes_per_rank
+        );
+        println!(
+            "  worker uplink measured {} B vs accounted {} B ({})",
+            self.worker_uplink_bytes,
+            self.expected_uplink_bytes,
+            if self.worker_uplink_bytes == self.expected_uplink_bytes { "MATCH" } else { "MISMATCH" }
+        );
+        println!(
+            "  coordinator gathered {} B; gather/relay overlap {:.3} ms (>= 0: {}); \
+             final loss {:.4}",
+            self.coordinator_received_bytes,
+            self.overlap_ms,
+            if self.overlap_ms >= 0.0 { "ok" } else { "VIOLATED" },
+            self.final_loss
+        );
+    }
+}
+
+/// A real-socket TCP probe: a 3-rank eftopk training run over a
+/// `127.0.0.1` ephemeral port (no external network), measuring the framed
+/// socket bytes against the wire spec's accounting and the gather/relay
+/// overlap the pipelined coordinator hides. Three ranks, not two: with a
+/// single worker the ready-gated relay can only start once nothing is
+/// missing, so overlap would be structurally zero; with two workers the
+/// coordinator relays rank 0's frame to the earlier arriver while the
+/// later one is still in flight. Run by `bench_e2e` and folded into the
+/// `make bench-smoke` JSON record.
+pub fn run_tcp_probe(steps: u64) -> Result<TcpProbe> {
+    use crate::dist::wire::HELLO_DIGEST_BYTES;
+    use crate::dist::{
+        DistTrainer, ReducerKind, TcpPending, TcpTransport, TransportKind, FRAME_OVERHEAD,
+    };
+
+    let ranks = 3usize;
+    let cfg = TrainConfig {
+        model: "mlp_tiny".into(),
+        optimizer: OptimizerKind::MicroAdam,
+        schedule: LrSchedule::Const { lr: 3e-3 },
+        steps,
+        seed: 7,
+        log_every: 10_000,
+        workers: 2,
+        ranks,
+        reduce: ReducerKind::EfTopK,
+        transport: TransportKind::Tcp,
+        ..Default::default()
+    };
+    let pending = TcpPending::bind("127.0.0.1:0", ranks)?;
+    let addr = pending.local_addr()?.to_string();
+    let workers: Vec<_> = (1..ranks)
+        .map(|r| {
+            let addr = addr.clone();
+            let wcfg = cfg.clone();
+            std::thread::spawn(move || -> Result<u64> {
+                let t = TcpTransport::connect(&addr, r, ranks)?;
+                let mut tr = DistTrainer::with_transport(wcfg, Box::new(t), vec![r])?;
+                let mut logger = MetricsLogger::new("")?;
+                tr.train(&mut logger)?;
+                Ok(tr.transport_bytes_sent())
+            })
+        })
+        .collect();
+    let coord_t = pending.accept()?;
+    let mut tr = DistTrainer::with_transport(cfg, Box::new(coord_t), vec![0])?;
+    let mut logger = MetricsLogger::new("")?;
+    tr.train(&mut logger)?;
+    let mut worker_sent = 0u64;
+    for w in workers {
+        let sent = w.join().map_err(|_| anyhow::anyhow!("tcp probe worker panicked"))??;
+        if worker_sent == 0 {
+            worker_sent = sent;
+        } else if sent != worker_sent {
+            return Err(anyhow::anyhow!(
+                "tcp probe: workers measured different uplinks ({worker_sent} vs {sent} B)"
+            ));
+        }
+    }
+    let framed = tr.frame_bytes_per_rank() as u64;
+    // per-step frames + the one-time rendezvous hello and config-digest
+    let handshakes = (2 * FRAME_OVERHEAD + HELLO_DIGEST_BYTES) as u64;
+    Ok(TcpProbe {
+        steps,
+        ranks,
+        frame_bytes_per_rank: framed,
+        worker_uplink_bytes: worker_sent,
+        expected_uplink_bytes: steps * framed + handshakes,
+        coordinator_received_bytes: tr.transport_bytes_received(),
+        overlap_ms: tr.gather_overlap_ms(),
+        final_loss: logger.tail_loss(10),
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Micro-benchmarks (shared by the `benches/` targets)
 // ---------------------------------------------------------------------------
@@ -748,8 +866,10 @@ pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
 
 /// Assemble the smoke-lane `BENCH_*.json` payload: steps/s from the
 /// scaling rows, measured resident bytes/param, the bf16 window bytes per
-/// value, and the per-rank wire bytes of each reducer at this dimension.
-pub fn smoke_json(d: usize, rows: &[BenchRow]) -> crate::util::json::Json {
+/// value, the per-rank wire bytes of each reducer at this dimension, and
+/// (when the caller ran one) the real-socket [`TcpProbe`] with its
+/// gather/relay overlap ms. Pure assembly — the caller runs the probe.
+pub fn smoke_json(d: usize, rows: &[BenchRow], tcp: Option<&TcpProbe>) -> crate::util::json::Json {
     use crate::dist::{build_reducer, ReducerKind, SparseReduceConfig};
     use crate::util::json::{self, Json};
 
@@ -781,6 +901,20 @@ pub fn smoke_json(d: usize, rows: &[BenchRow]) -> crate::util::json::Json {
             ),
         ]));
     }
+    // Real-socket gather-overlap record (run by the caller): the smoke
+    // lane's BENCH_*.json tracks the pipelined coordinator — overlap is
+    // *recorded*, a timing measurement, deliberately not a speed claim.
+    let tcp = match tcp {
+        Some(p) => json::obj(vec![
+            ("ranks", json::num(p.ranks as f64)),
+            ("steps", json::num(p.steps as f64)),
+            ("frame_bytes_per_rank", json::num(p.frame_bytes_per_rank as f64)),
+            ("uplink_measured_bytes", json::num(p.worker_uplink_bytes as f64)),
+            ("uplink_accounted_bytes", json::num(p.expected_uplink_bytes as f64)),
+            ("gather_overlap_ms", json::num(p.overlap_ms)),
+        ]),
+        None => json::obj(vec![("error", json::s("tcp probe not run"))]),
+    };
     let probe = MicroAdam::new(d, MicroAdamConfig::default());
     json::obj(vec![
         ("bench", json::s("smoke")),
@@ -789,6 +923,7 @@ pub fn smoke_json(d: usize, rows: &[BenchRow]) -> crate::util::json::Json {
         ("steps_per_s", json::obj(steps)),
         ("resident_state", Json::Arr(state_rows)),
         ("wire", Json::Arr(wires)),
+        ("tcp_probe", tcp),
     ])
 }
 

@@ -48,8 +48,10 @@ pub struct TrainConfig {
     /// Gradient exchange for the data-parallel engine.
     pub reduce: ReducerKind,
     /// How replicas exchange frames: in-process (`loopback`, default) or
-    /// the multi-process `uds`/`shm` transports, which make
-    /// `microadam train` launch one worker process per extra rank.
+    /// the multi-process `uds`/`tcp`/`shm` transports, which make
+    /// `microadam train` launch one worker process per extra rank (`tcp`
+    /// additionally spans real hosts via `--rendezvous host:port` +
+    /// `--external yes`).
     pub transport: TransportKind,
 }
 
@@ -275,6 +277,12 @@ mod tests {
         let cfg = TrainConfig::from_json(r#"{"ranks": 0}"#).unwrap();
         assert_eq!(cfg.ranks, 1);
         assert_eq!(cfg.transport, TransportKind::Loopback);
+        // tcp round-trips like the other transports (the worker spawned by
+        // the launcher reconstructs its transport from this field)
+        let cfg = TrainConfig::from_json(r#"{"transport": "tcp", "ranks": 4}"#).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.transport, TransportKind::Tcp);
         assert!(TrainConfig::from_json(r#"{"reduce": "gossip"}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"transport": "pigeon"}"#).is_err());
     }

@@ -25,10 +25,13 @@
 //!   `rust/src/dist/README.md`; `wire.rs` implements that document.
 //! * [`transport`] — how frames move: [`Loopback`] (in-process, still
 //!   encode/decode round-tripped so framing is always exercised),
-//!   [`UdsTransport`] (Unix-domain sockets with a rank-0 rendezvous), and
-//!   [`ShmTransport`] (file-backed shared-memory mailboxes, page-cache
-//!   only on tmpfs). All implement the same gather-to-all [`Transport`]
-//!   collective.
+//!   [`UdsTransport`] (Unix-domain sockets with a rank-0 rendezvous),
+//!   [`TcpTransport`] (the multi-host twin: the same session over
+//!   `host:port` TCP with `TCP_NODELAY`), and [`ShmTransport`]
+//!   (file-backed shared-memory mailboxes, page-cache only on tmpfs).
+//!   All implement the same gather-to-all [`Transport`] collective,
+//!   split into `post_send`/`collect` phases so the rank-0 coordinator
+//!   pipelines its relay with the still-arriving worker frames.
 //! * [`replica`] — per-rank state: rank-seeded `MarkovCorpus` /
 //!   `NliDataset` / `ImageDataset` streams (artifact engine) or a
 //!   pure-rust MLP shard (native engine, runs on the stub runtime), with
@@ -47,8 +50,9 @@
 //! [`Quant4::state_bytes`] reports (0.5 B/param + bucket stats) per rank.
 //!
 //! Entry points: `microadam train --ranks N --reduce eftopk` (loopback),
-//! plus `--transport uds|shm` for the multi-process launcher (rank 0
-//! spawns workers, or `--rendezvous PATH` to join by hand).
+//! plus `--transport uds|tcp|shm` for the multi-process launcher (rank 0
+//! spawns workers, or `--rendezvous PATH|host:port` to join by hand —
+//! tcp is how a run spans real hosts).
 //!
 //! [`DenseAllReduce`]: reducer::DenseAllReduce
 //! [`TopKReduce`]: reducer::TopKReduce
@@ -57,6 +61,7 @@
 //! [`DistTrainer`]: trainer::DistTrainer
 //! [`Loopback`]: transport::Loopback
 //! [`UdsTransport`]: transport::UdsTransport
+//! [`TcpTransport`]: transport::TcpTransport
 //! [`ShmTransport`]: transport::ShmTransport
 //! [`Transport`]: transport::Transport
 //! [`Quant4::state_bytes`]: crate::quant::Quant4::state_bytes
@@ -76,7 +81,7 @@ pub use replica::{
 };
 pub use trainer::DistTrainer;
 pub use transport::{
-    default_rendezvous, parse_transport, transport_name, Loopback, ShmTransport, Transport,
-    TransportKind, UdsPending, UdsTransport,
+    default_rendezvous, parse_transport, transport_name, Loopback, ShmTransport, TcpPending,
+    TcpTransport, Transport, TransportKind, UdsPending, UdsTransport,
 };
-pub use wire::{Frame, PayloadTag, WireError, FRAME_OVERHEAD};
+pub use wire::{Frame, FrameReader, PayloadTag, WireError, FRAME_OVERHEAD};

@@ -479,21 +479,30 @@ impl SparseCore {
         )
     }
 
+    /// Decode one rank's gathered wire payload into its resident slab
+    /// slot. Per-rank (rather than batch) so the trainer can start
+    /// decoding as soon as a pipelined `collect` hands over a frame — the
+    /// decode of rank `r` touches only rank `r`'s slab, so arrival order
+    /// cannot matter. For the ranks this process compressed itself, the
+    /// decode rewrites the identical bytes.
+    fn load_payload(&mut self, rank: usize, payload: &[u8]) -> Result<()> {
+        assert!(rank < self.ranks);
+        let nbkb = self.nb * self.kb;
+        wire::slab_from_payload(
+            payload,
+            &mut self.idx[rank * nbkb..(rank + 1) * nbkb],
+            &mut self.val[rank * nbkb..(rank + 1) * nbkb],
+        )
+        .map_err(|e| anyhow!("rank {rank} slab payload: {e}"))
+    }
+
     /// Decode gathered wire payloads (rank order) into the resident slabs.
-    /// For the ranks this process compressed itself, the decode rewrites
-    /// the identical bytes.
     fn load_payloads(&mut self, payloads: &[Vec<u8>]) -> Result<()> {
         if payloads.len() != self.ranks {
             bail!("sparse aggregate: {} payloads for {} ranks", payloads.len(), self.ranks);
         }
-        let nbkb = self.nb * self.kb;
         for (r, p) in payloads.iter().enumerate() {
-            wire::slab_from_payload(
-                p,
-                &mut self.idx[r * nbkb..(r + 1) * nbkb],
-                &mut self.val[r * nbkb..(r + 1) * nbkb],
-            )
-            .map_err(|e| anyhow!("rank {r} slab payload: {e}"))?;
+            self.load_payload(r, p)?;
         }
         Ok(())
     }

@@ -13,9 +13,12 @@
 //! 2. runs the [`GradReducer`]'s per-rank compress phase and wraps each
 //!    hosted rank's payload in a wire frame
 //!    ([`crate::dist::wire::Frame`]);
-//! 3. exchanges frames through the [`Transport`] (gather-to-all via
-//!    rank 0) and aggregates the gathered payloads into the mean
-//!    gradient — the same deterministic kernel on every process;
+//! 3. exchanges frames through the [`Transport`]'s split gather phases —
+//!    `post_send` as soon as its own payloads are framed (on rank 0 this
+//!    seeds the relay bundle so the coordinator streams it while worker
+//!    frames are still arriving), then `collect` for the full
+//!    rank-ordered set — and aggregates the gathered payloads into the
+//!    mean gradient, the same deterministic kernel on every process;
 //! 4. feeds that gradient into the ordinary [`Optimizer::step_multi`] hot
 //!    path with the layout's real per-tensor chunk boundaries — the same
 //!    code path as the single-process
@@ -23,9 +26,10 @@
 //!
 //! Because step 3 hands every process identical bytes and steps 3-4 are
 //! deterministic, the replicated parameters/optimizer state never drift:
-//! there is **no parameter broadcast**, and a `uds`/`shm` run is
+//! there is **no parameter broadcast**, and a `uds`/`tcp`/`shm` run is
 //! bit-identical to the loopback run with the same seeds (pinned in
-//! `rust/tests/test_transport_parity.rs`).
+//! `rust/tests/test_transport_parity.rs` and
+//! `rust/tests/test_tcp_parity.rs`).
 //!
 //! Guarantee (pinned in `rust/tests/test_dist_parity.rs`): `ranks = 1`
 //! with `DenseAllReduce` is **bit-identical** to single-process training
@@ -357,6 +361,13 @@ impl DistTrainer {
         self.transport.bytes_received()
     }
 
+    /// Cumulative milliseconds the transport spent relaying bundle bytes
+    /// while gather frames were still arriving — the wire latency the
+    /// pipelined coordinator hides (0 on workers, loopback and shm).
+    pub fn gather_overlap_ms(&self) -> f64 {
+        self.transport.overlap_ms()
+    }
+
     /// Reducer display name.
     pub fn reducer_name(&self) -> String {
         self.reducer.name()
@@ -435,8 +446,13 @@ impl DistTrainer {
             }
         }
 
-        // 3. gather-to-all and aggregate (identical on every endpoint)
-        let frames = self.transport.exchange(local)?;
+        // 3. gather-to-all and aggregate (identical on every endpoint).
+        //    The phases are explicit: post_send fires the moment this
+        //    endpoint's payloads are framed, so the rank-0 coordinator
+        //    relays its frame (and each completed rank-ascending prefix)
+        //    while the remaining worker frames are still in flight.
+        self.transport.post_send(local)?;
+        let frames = self.transport.collect()?;
         if frames.len() != self.ranks {
             bail!("dist: transport returned {} frames for {} ranks", frames.len(), self.ranks);
         }
@@ -510,6 +526,7 @@ impl DistTrainer {
                 ("wire_bytes_total", json::num(self.wire_bytes as f64)),
                 ("frame_bytes_per_rank", json::num(self.frame_bytes_per_rank() as f64)),
                 ("reducer_state_bytes", json::num(self.reducer_state_bytes() as f64)),
+                ("gather_overlap_ms", json::num(self.gather_overlap_ms())),
             ]))?;
             logger.flush()?;
         }

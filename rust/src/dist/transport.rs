@@ -9,7 +9,19 @@
 //! parameter broadcast — the only per-step traffic is one gradient frame
 //! up per worker and one relay bundle down.
 //!
-//! Three implementations:
+//! The collective is split into two phases on the [`Transport`] trait —
+//! [`Transport::post_send`] (submit this endpoint's frames; starts the
+//! uplink) and [`Transport::collect`] (complete the gather) — so the
+//! rank-0 coordinator can **pipeline**: its own frame is already the head
+//! of the relay bundle while worker frames are still arriving, and each
+//! worker frame is relayed the moment the rank-ascending prefix it
+//! completes allows, instead of after the whole gather. The relayed byte
+//! stream is identical either way (bundles are self-delimiting,
+//! rank-ascending concatenations), so pipelining changes *when* bytes
+//! move, never *which* bytes — all four transports stay bit-identical to
+//! in-core loopback by construction.
+//!
+//! Four implementations:
 //!
 //! * [`Loopback`] — the single-process path ([`crate::dist::DistTrainer`]
 //!   hosts every rank). Frames still round-trip through
@@ -20,11 +32,19 @@
 //!   rendezvous socket ([`UdsPending::bind`]), workers connect and
 //!   identify themselves with a [`FLAG_HELLO`] frame, and
 //!   [`UdsPending::accept`] resolves them into rank-indexed streams.
+//! * [`TcpTransport`] — the multi-host twin of uds: the same
+//!   rendezvous/hello/bundle protocol over `TcpListener`/`TcpStream`
+//!   (`TCP_NODELAY` on every stream, `--rendezvous host:port`, ephemeral
+//!   `:0` ports resolved via [`TcpPending::local_addr`]). The wire spec
+//!   (`rust/src/dist/README.md`) needs no changes: frames are
+//!   byte-identical on every transport.
 //! * [`ShmTransport`] — file-backed shared memory: one single-writer /
 //!   single-reader mailbox file per direction per worker under the
 //!   rendezvous directory (tmpfs paths like `/dev/shm/...` make this a
 //!   page-cache-only exchange). The mailbox protocol is documented in
-//!   `rust/src/dist/README.md` §8.
+//!   `rust/src/dist/README.md` §8. Its downlink is one bundle message, so
+//!   the coordinator cannot stream the relay — but its gather still polls
+//!   all uplinks concurrently and observes out-of-order arrival.
 //!
 //! A worker's uplink per step is exactly one frame, so its
 //! [`Transport::bytes_sent`] grows by `FRAME_OVERHEAD +
@@ -35,7 +55,8 @@
 //! [`FRAME_OVERHEAD`]: crate::dist::wire::FRAME_OVERHEAD
 
 use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::fs::FileExt;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
@@ -43,7 +64,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::wire::{Frame, WireError, FLAG_HELLO, MAX_SECTION_BYTES};
+use super::wire::{Frame, FrameReader, WireError, FLAG_HELLO, MAX_SECTION_BYTES};
 
 /// How long a transport waits for a peer mid-run before giving up.
 /// Generous: a step on the native workloads takes milliseconds; a
@@ -52,6 +73,14 @@ pub const PEER_TIMEOUT: Duration = Duration::from_secs(120);
 /// How long a worker retries the rendezvous (rank 0 may still be setting
 /// up, or the operator starts workers by hand before the coordinator).
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(60);
+/// How long the rendezvous accept loop waits for a connected peer's hello
+/// frame before rejecting it. Deliberately much shorter than
+/// [`PEER_TIMEOUT`]: a legitimate worker sends its hello immediately after
+/// connecting, and a silent connection must not hold the accept loop
+/// hostage while other ranks queue behind it.
+pub const HELLO_WAIT: Duration = Duration::from_secs(10);
+/// Per-stream read timeout of the pipelined gather's round-robin poll.
+const GATHER_POLL: Duration = Duration::from_millis(1);
 
 /// Which transport a config/CLI names.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +90,9 @@ pub enum TransportKind {
     Loopback,
     /// Unix-domain stream sockets via a rendezvous socket path.
     Uds,
+    /// TCP sockets via a rendezvous `host:port` — the multi-host twin of
+    /// uds.
+    Tcp,
     /// File-backed shared-memory mailboxes under a rendezvous directory.
     Shm,
 }
@@ -70,8 +102,9 @@ pub fn parse_transport(s: &str) -> Result<TransportKind> {
     Ok(match s {
         "loopback" | "local" => TransportKind::Loopback,
         "uds" | "unix" => TransportKind::Uds,
+        "tcp" => TransportKind::Tcp,
         "shm" => TransportKind::Shm,
-        other => bail!("unknown transport {other} (expected loopback|uds|shm)"),
+        other => bail!("unknown transport {other} (expected loopback|uds|tcp|shm)"),
     })
 }
 
@@ -80,43 +113,88 @@ pub fn transport_name(k: TransportKind) -> &'static str {
     match k {
         TransportKind::Loopback => "loopback",
         TransportKind::Uds => "uds",
+        TransportKind::Tcp => "tcp",
         TransportKind::Shm => "shm",
     }
 }
 
-/// Default rendezvous path for a launcher-started run: a socket path
-/// (uds) or directory (shm) under the system temp dir, unique per
-/// process.
+/// Default rendezvous for a launcher-started run: a socket path (uds) or
+/// directory (shm) under the system temp dir, unique per process — or,
+/// for tcp, a loopback address with an ephemeral port (the launcher
+/// resolves the actually-bound port via [`TcpPending::local_addr`] before
+/// handing it to workers).
 pub fn default_rendezvous(kind: TransportKind) -> PathBuf {
     let tag = match kind {
         TransportKind::Loopback => "loop",
         TransportKind::Uds => "uds",
+        TransportKind::Tcp => return PathBuf::from("127.0.0.1:0"),
         TransportKind::Shm => "shm",
     };
     std::env::temp_dir().join(format!("microadam-rdv-{tag}-{}", std::process::id()))
 }
 
-/// The per-step frame collective every rank runs: submit the frames of
-/// the locally-hosted ranks, receive every rank's frame in rank order.
+/// The per-step frame collective every rank runs, split into the two
+/// phases of a pipelined gather: submit the frames of the locally-hosted
+/// ranks ([`Transport::post_send`]), then receive every rank's frame in
+/// rank order ([`Transport::collect`]).
 ///
 /// Implementations must be deterministic relays — they move bytes, never
 /// reorder ranks, and never touch payloads (the CRC in every frame pins
-/// that down).
+/// that down). Pipelining latitude is *timing only*: `collect` may relay
+/// and receive in any internal order, but the frames it returns (and the
+/// bundle bytes a worker sees) are always the rank-ascending set.
 pub trait Transport: Send {
-    /// Transport display name (`loopback` / `uds` / `shm`).
+    /// Transport display name (`loopback` / `uds` / `tcp` / `shm`).
     fn name(&self) -> &'static str;
     /// World size (total rank count across all processes).
     fn ranks(&self) -> usize;
-    /// Perform one gather-to-all: `local` holds this process's frames
-    /// (one per hosted rank, rank-ascending); the result holds all
-    /// `ranks()` frames, rank-ascending. Blocks until every peer has
-    /// contributed or [`PEER_TIMEOUT`] expires.
-    fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>>;
+    /// Phase 1 of the gather: submit this process's frames (one per
+    /// hosted rank, rank-ascending) and start the uplink. On the rank-0
+    /// coordinator this seeds the relay bundle with rank 0's frame, so
+    /// relaying can begin while worker frames are still arriving.
+    ///
+    /// ```
+    /// use microadam::dist::transport::{Loopback, Transport};
+    /// use microadam::dist::wire::{Frame, PayloadTag};
+    ///
+    /// let mut t = Loopback::new(1);
+    /// let f = Frame { rank: 0, step: 1, tag: PayloadTag::Dense, flags: 0,
+    ///                 loss: 0.25, payload: vec![7], stats: vec![] };
+    /// t.post_send(vec![f.clone()]).unwrap();
+    /// assert_eq!(t.collect().unwrap(), vec![f]);
+    /// // collect consumed the round: a second collect is an error
+    /// assert!(t.collect().is_err());
+    /// ```
+    fn post_send(&mut self, local: Vec<Frame>) -> Result<()>;
+    /// Phase 2 of the gather: block until every rank's frame of the round
+    /// opened by [`Transport::post_send`] has arrived (or [`PEER_TIMEOUT`]
+    /// expires) and return all `ranks()` frames, rank-ascending.
+    fn collect(&mut self) -> Result<Vec<Frame>>;
+    /// One whole gather-to-all: [`Transport::post_send`] then
+    /// [`Transport::collect`].
+    fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>> {
+        self.post_send(local)?;
+        self.collect()
+    }
     /// Framed bytes this endpoint has serialized and sent so far (for
     /// [`Loopback`], everything it has framed).
     fn bytes_sent(&self) -> u64;
     /// Framed bytes received from peers so far.
     fn bytes_received(&self) -> u64;
+    /// Cumulative milliseconds this endpoint spent relaying bundle bytes
+    /// *while* gather frames were still in flight — the wire latency the
+    /// pipelined coordinator hides. 0 on workers, loopback and shm (whose
+    /// downlink is a single bundle message).
+    fn overlap_ms(&self) -> f64 {
+        0.0
+    }
+    /// Ranks of the most recent completed gather in uplink-arrival order
+    /// (coordinator endpoints only; empty elsewhere). Pipelining means
+    /// this is *not* necessarily sorted — the regression tests assert the
+    /// aggregate is arrival-order-invariant.
+    fn last_arrival(&self) -> &[u16] {
+        &[]
+    }
 }
 
 fn wire_err(e: WireError) -> anyhow::Error {
@@ -128,7 +206,7 @@ fn wire_err(e: WireError) -> anyhow::Error {
 // ---------------------------------------------------------------------------
 
 /// The in-address-space transport: every rank lives in this process, and
-/// `exchange` is an encode/decode round trip per frame.
+/// a gather is an encode/decode round trip per frame.
 ///
 /// ```
 /// use microadam::dist::transport::{Loopback, Transport};
@@ -156,13 +234,15 @@ pub struct Loopback {
     ranks: usize,
     sent: u64,
     received: u64,
+    /// Encoded frames between `post_send` and `collect`.
+    pending: Option<Vec<Vec<u8>>>,
 }
 
 impl Loopback {
     /// Loopback transport hosting all `ranks` ranks.
     pub fn new(ranks: usize) -> Self {
         assert!(ranks > 0);
-        Self { ranks, sent: 0, received: 0 }
+        Self { ranks, sent: 0, received: 0, pending: None }
     }
 }
 
@@ -175,18 +255,32 @@ impl Transport for Loopback {
         self.ranks
     }
 
-    fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>> {
+    fn post_send(&mut self, local: Vec<Frame>) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("loopback: gather already in flight (post_send without collect)");
+        }
         if local.len() != self.ranks {
             bail!("loopback hosts all {} ranks, got {} frames", self.ranks, local.len());
         }
-        let mut out = Vec::with_capacity(local.len());
+        // The round trip is the point: loopback runs the same
+        // serialization the socket transports ship, so framed-byte
+        // accounting and codec coverage don't depend on the topology.
+        let mut encoded = Vec::with_capacity(local.len());
         for f in &local {
-            // The round trip is the point: loopback runs the same
-            // serialization the socket transports ship, so framed-byte
-            // accounting and codec coverage don't depend on the topology.
             let bytes = f.encode();
             self.sent += bytes.len() as u64;
-            let (back, used) = Frame::decode(&bytes).map_err(wire_err)?;
+            encoded.push(bytes);
+        }
+        self.pending = Some(encoded);
+        Ok(())
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        let encoded =
+            self.pending.take().ok_or_else(|| anyhow!("loopback: collect without post_send"))?;
+        let mut out = Vec::with_capacity(encoded.len());
+        for bytes in &encoded {
+            let (back, used) = Frame::decode(bytes).map_err(wire_err)?;
             debug_assert_eq!(used, bytes.len());
             self.received += used as u64;
             out.push(back);
@@ -204,6 +298,389 @@ impl Transport for Loopback {
 }
 
 // ---------------------------------------------------------------------------
+// Shared stream-endpoint machinery (uds + tcp)
+// ---------------------------------------------------------------------------
+
+/// What the stream hub needs from a socket beyond `Read + Write`: a
+/// settable receive timeout (reads only — `SO_RCVTIMEO` never blocks the
+/// relay writes).
+trait GatherStream: Read + Write + Send {
+    fn set_recv_timeout(&self, t: Option<Duration>) -> std::io::Result<()>;
+}
+
+impl GatherStream for UnixStream {
+    fn set_recv_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(t)
+    }
+}
+
+impl GatherStream for TcpStream {
+    fn set_recv_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(t)
+    }
+}
+
+/// Coordinator gather state between `post_send` and the end of `collect`.
+struct PendingGather {
+    step: u64,
+    /// Slot `r` holds rank `r`'s frame; slot 0 is filled by `post_send`.
+    frames: Vec<Option<Frame>>,
+    /// Encoded bytes of every gathered frame — the relay source.
+    encoded: Vec<Option<Vec<u8>>>,
+    /// `frames[0..prefix]` are all present. Bundles are rank-ascending,
+    /// so only this prefix may be relayed: frame `r` never overtakes a
+    /// missing frame `< r` on any worker's downlink.
+    prefix: usize,
+    /// Worker `i` (rank `i+1`) has delivered its uplink frame this round.
+    /// Only then is it guaranteed to be draining its downlink — relaying
+    /// earlier could deadlock two blocking writes against each other on
+    /// large frames.
+    ready: Vec<bool>,
+    /// Frames relayed to worker `i` so far this round.
+    sent_upto: Vec<usize>,
+    /// Ranks in uplink-arrival order.
+    arrival: Vec<u16>,
+}
+
+/// The rank-0 side of a stream transport: one stream per worker and the
+/// pipelined gather/relay loop over them.
+struct StreamHub<S: GatherStream> {
+    ranks: usize,
+    /// Index `i` = rank `i + 1`.
+    workers: Vec<S>,
+    /// Per-worker incremental frame assemblers (partial TCP segments,
+    /// bytes from a next-step frame that ran ahead — all handled here).
+    readers: Vec<FrameReader>,
+    pending: Option<PendingGather>,
+    last_arrival: Vec<u16>,
+    overlap_micros: u64,
+    sent: u64,
+    received: u64,
+}
+
+impl<S: GatherStream> StreamHub<S> {
+    fn new(workers: Vec<S>, ranks: usize) -> Self {
+        let readers = workers.iter().map(|_| FrameReader::new()).collect();
+        Self {
+            ranks,
+            workers,
+            readers,
+            pending: None,
+            last_arrival: Vec::new(),
+            overlap_micros: 0,
+            sent: 0,
+            received: 0,
+        }
+    }
+
+    fn post_send(&mut self, mine: Frame, kind: &str) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("{kind}: gather already in flight (post_send without collect)");
+        }
+        if mine.rank != 0 {
+            bail!("{kind} coordinator must host rank 0, got {}", mine.rank);
+        }
+        let mut frames: Vec<Option<Frame>> = (0..self.ranks).map(|_| None).collect();
+        let mut encoded: Vec<Option<Vec<u8>>> = (0..self.ranks).map(|_| None).collect();
+        let step = mine.step;
+        encoded[0] = Some(mine.encode());
+        frames[0] = Some(mine);
+        self.pending = Some(PendingGather {
+            step,
+            frames,
+            encoded,
+            prefix: 1,
+            ready: vec![false; self.workers.len()],
+            sent_upto: vec![0; self.workers.len()],
+            arrival: Vec::new(),
+        });
+        Ok(())
+    }
+
+    fn collect(&mut self, kind: &str) -> Result<Vec<Frame>> {
+        let mut p =
+            self.pending.take().ok_or_else(|| anyhow!("{kind}: collect without post_send"))?;
+        // Brief read timeouts during the gather: the round-robin poll must
+        // not freeze on one silent worker while another has bytes ready.
+        for w in &self.workers {
+            w.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
+        }
+        let res = self.collect_inner(&mut p, kind);
+        for w in &self.workers {
+            let _ = w.set_recv_timeout(Some(PEER_TIMEOUT));
+        }
+        self.last_arrival = std::mem::take(&mut p.arrival);
+        res
+    }
+
+    fn collect_inner(&mut self, p: &mut PendingGather, kind: &str) -> Result<Vec<Frame>> {
+        let n = self.workers.len();
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        loop {
+            let done = p.prefix == self.ranks && p.sent_upto.iter().all(|&s| s == self.ranks);
+            if done {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let have: Vec<usize> =
+                    (0..self.ranks).filter(|&r| p.frames[r].is_some()).collect();
+                bail!(
+                    "{kind}: gather timed out at step {} (have frames from ranks {have:?} \
+                     of 0..{})",
+                    p.step,
+                    self.ranks
+                );
+            }
+            // 1. poll every worker whose frame is still outstanding
+            for i in 0..n {
+                if p.frames[i + 1].is_some() {
+                    continue;
+                }
+                match self.readers[i].poll_read_raw(&mut self.workers[i]) {
+                    Ok(Some((f, raw))) => {
+                        if f.rank as usize != i + 1 || f.step != p.step {
+                            bail!(
+                                "{kind}: expected rank {}/step {}, got rank {}/step {}",
+                                i + 1,
+                                p.step,
+                                f.rank,
+                                f.step
+                            );
+                        }
+                        self.received += raw.len() as u64;
+                        p.arrival.push(f.rank);
+                        // relay the worker's exact (CRC-verified) wire
+                        // bytes — no re-encode pass on the hot path
+                        p.encoded[i + 1] = Some(raw);
+                        p.frames[i + 1] = Some(f);
+                        p.ready[i] = true;
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        return Err(wire_err(e))
+                            .with_context(|| format!("{kind}: gather from rank {}", i + 1))
+                    }
+                }
+            }
+            while p.prefix < self.ranks && p.frames[p.prefix].is_some() {
+                p.prefix += 1;
+            }
+            // 2. relay the completed rank-ascending prefix to every ready
+            //    worker — this is the pipelining: bundle bytes go out while
+            //    later gather frames are still in flight
+            let missing = p.frames.iter().filter(|f| f.is_none()).count();
+            let t0 = Instant::now();
+            let mut relayed = false;
+            for i in 0..n {
+                if !p.ready[i] {
+                    continue;
+                }
+                while p.sent_upto[i] < p.prefix {
+                    let bytes =
+                        p.encoded[p.sent_upto[i]].as_ref().expect("prefix frames are encoded");
+                    self.workers[i]
+                        .write_all(bytes)
+                        .with_context(|| format!("{kind}: relay to rank {}", i + 1))?;
+                    self.sent += bytes.len() as u64;
+                    p.sent_upto[i] += 1;
+                    relayed = true;
+                }
+            }
+            if relayed && missing > 0 {
+                self.overlap_micros += t0.elapsed().as_micros() as u64;
+            }
+        }
+        Ok(p.frames.iter_mut().map(|f| f.take().expect("all frames gathered")).collect())
+    }
+}
+
+/// One endpoint of a stream transport: the rank-0 hub, or a worker's
+/// single stream to rank 0.
+enum StreamRole<S: GatherStream> {
+    Coordinator { hub: StreamHub<S> },
+    Worker { stream: S, pending_step: Option<u64>, sent: u64, received: u64 },
+}
+
+struct StreamEndpoint<S: GatherStream> {
+    name: &'static str,
+    ranks: usize,
+    role: StreamRole<S>,
+}
+
+impl<S: GatherStream> StreamEndpoint<S> {
+    fn coordinator(name: &'static str, workers: Vec<S>, ranks: usize) -> Self {
+        Self { name, ranks, role: StreamRole::Coordinator { hub: StreamHub::new(workers, ranks) } }
+    }
+
+    fn worker(name: &'static str, stream: S, ranks: usize, hello_bytes: u64) -> Self {
+        Self {
+            name,
+            ranks,
+            role: StreamRole::Worker {
+                stream,
+                pending_step: None,
+                sent: hello_bytes,
+                received: 0,
+            },
+        }
+    }
+
+    fn post_send(&mut self, mut local: Vec<Frame>) -> Result<()> {
+        if local.len() != 1 {
+            bail!("{} endpoints host exactly one rank, got {} frames", self.name, local.len());
+        }
+        let mine = local.pop().expect("one frame");
+        let name = self.name;
+        match &mut self.role {
+            StreamRole::Coordinator { hub } => hub.post_send(mine, name),
+            StreamRole::Worker { stream, pending_step, sent, .. } => {
+                if pending_step.is_some() {
+                    bail!("{name}: gather already in flight (post_send without collect)");
+                }
+                let step = mine.step;
+                let bytes = mine.encode();
+                stream.write_all(&bytes).with_context(|| format!("{name}: send frame"))?;
+                *sent += bytes.len() as u64;
+                *pending_step = Some(step);
+                Ok(())
+            }
+        }
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        let name = self.name;
+        let ranks = self.ranks;
+        match &mut self.role {
+            StreamRole::Coordinator { hub } => hub.collect(name),
+            StreamRole::Worker { stream, pending_step, received, .. } => {
+                let step = pending_step
+                    .take()
+                    .ok_or_else(|| anyhow!("{name}: collect without post_send"))?;
+                let mut frames = Vec::with_capacity(ranks);
+                for r in 0..ranks {
+                    let f = Frame::read_from(stream)
+                        .map_err(wire_err)
+                        .with_context(|| format!("{name}: bundle frame {r}"))?;
+                    if f.rank as usize != r || f.step != step {
+                        bail!(
+                            "{name}: bundle out of order (expected rank {r}/step {step}, \
+                             got rank {}/step {})",
+                            f.rank,
+                            f.step
+                        );
+                    }
+                    *received += f.encoded_len() as u64;
+                    frames.push(f);
+                }
+                Ok(frames)
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        match &self.role {
+            StreamRole::Coordinator { hub } => hub.sent,
+            StreamRole::Worker { sent, .. } => *sent,
+        }
+    }
+
+    fn bytes_received(&self) -> u64 {
+        match &self.role {
+            StreamRole::Coordinator { hub } => hub.received,
+            StreamRole::Worker { received, .. } => *received,
+        }
+    }
+
+    fn overlap_ms(&self) -> f64 {
+        match &self.role {
+            StreamRole::Coordinator { hub } => hub.overlap_micros as f64 / 1000.0,
+            StreamRole::Worker { .. } => 0.0,
+        }
+    }
+
+    fn last_arrival(&self) -> &[u16] {
+        match &self.role {
+            StreamRole::Coordinator { hub } => &hub.last_arrival,
+            StreamRole::Worker { .. } => &[],
+        }
+    }
+}
+
+/// Shared accept loop of the rendezvous listeners: poll non-blocking
+/// accepts against the deadline, then demand a hello frame within
+/// `hello_wait` from each connection.
+fn read_hello<S: GatherStream>(stream: &mut S, name: &str, hello_wait: Duration) -> Result<Frame> {
+    stream.set_recv_timeout(Some(hello_wait))?;
+    let hello = match Frame::read_from(stream) {
+        Ok(f) => f,
+        Err(WireError::Io(e))
+            if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+        {
+            bail!(
+                "{name}: peer connected but sent no hello within {:.1}s — rejecting it \
+                 so the other ranks' rendezvous is not held up",
+                hello_wait.as_secs_f64()
+            );
+        }
+        Err(e) => return Err(wire_err(e)).with_context(|| format!("{name}: read hello")),
+    };
+    stream.set_recv_timeout(Some(PEER_TIMEOUT))?;
+    if hello.flags & FLAG_HELLO == 0 {
+        bail!("{name}: worker spoke before the handshake");
+    }
+    Ok(hello)
+}
+
+/// Place an accepted, hello-validated stream into its rank slot.
+fn place_worker<S>(slots: &mut [Option<S>], stream: S, rank: usize, name: &str) -> Result<()> {
+    let ranks = slots.len() + 1;
+    if rank == 0 || rank >= ranks {
+        bail!("{name}: hello from rank {rank}, world is 0..{ranks}");
+    }
+    if slots[rank - 1].replace(stream).is_some() {
+        bail!("{name}: two workers claimed rank {rank}");
+    }
+    Ok(())
+}
+
+/// The rendezvous accept loop shared by the stream listeners: poll
+/// `accept_one` (a non-blocking accept returning `WouldBlock` while no
+/// connection is pending, with any per-stream socket setup applied)
+/// against the peer deadline, demand each connection's hello within
+/// `hello_wait`, and return the workers rank-slotted.
+fn accept_workers<S, F>(
+    mut accept_one: F,
+    ranks: usize,
+    hello_wait: Duration,
+    name: &'static str,
+    rendezvous: &str,
+) -> Result<Vec<S>>
+where
+    S: GatherStream,
+    F: FnMut() -> std::io::Result<S>,
+{
+    let deadline = Instant::now() + PEER_TIMEOUT;
+    let mut slots: Vec<Option<S>> = (1..ranks).map(|_| None).collect();
+    for _ in 1..ranks {
+        let mut stream = loop {
+            match accept_one() {
+                Ok(s) => break s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("{name}: timed out waiting for workers at {rendezvous}");
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).with_context(|| format!("{name}: accept")),
+            }
+        };
+        let hello = read_hello(&mut stream, name, hello_wait)?;
+        place_worker(&mut slots, stream, hello.rank as usize, name)?;
+    }
+    Ok(slots.into_iter().map(|s| s.expect("every slot filled by the accept loop")).collect())
+}
+
+// ---------------------------------------------------------------------------
 // Unix-domain sockets
 // ---------------------------------------------------------------------------
 
@@ -213,6 +690,7 @@ pub struct UdsPending {
     listener: UnixListener,
     path: PathBuf,
     ranks: usize,
+    hello_wait: Duration,
 }
 
 impl UdsPending {
@@ -227,78 +705,58 @@ impl UdsPending {
         }
         let listener = UnixListener::bind(&path)
             .with_context(|| format!("uds: bind {}", path.display()))?;
-        Ok(UdsPending { listener, path, ranks })
+        Ok(UdsPending { listener, path, ranks, hello_wait: HELLO_WAIT })
+    }
+
+    /// Shrink (or grow) the per-connection hello wait — tests use this to
+    /// keep the never-sent-hello failure path fast.
+    pub fn set_hello_wait(&mut self, d: Duration) {
+        self.hello_wait = d;
     }
 
     /// Accept the `ranks - 1` workers. Each must introduce itself with a
-    /// [`FLAG_HELLO`] frame carrying its rank; duplicates and
-    /// out-of-range ranks abort the run. Gives up after [`PEER_TIMEOUT`]
-    /// if a worker never shows (e.g. it crashed at startup), so the
-    /// launcher can reap instead of hanging.
+    /// [`FLAG_HELLO`] frame carrying its rank within [`HELLO_WAIT`] of
+    /// connecting; duplicates, out-of-range ranks and silent connections
+    /// abort the run (a peer that never says hello is bounded by the
+    /// hello wait, not [`PEER_TIMEOUT`], so it cannot hold the accept
+    /// loop past the other ranks). Gives up after [`PEER_TIMEOUT`] if a
+    /// worker never shows (e.g. it crashed at startup), so the launcher
+    /// can reap instead of hanging.
     pub fn accept(self) -> Result<UdsTransport> {
         // UnixListener has no accept timeout; poll a non-blocking accept
         // against a deadline instead.
         self.listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + PEER_TIMEOUT;
-        let mut slots: Vec<Option<UnixStream>> = (1..self.ranks).map(|_| None).collect();
-        for _ in 1..self.ranks {
-            let (mut stream, _) = loop {
-                match self.listener.accept() {
-                    Ok(conn) => break conn,
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        if Instant::now() >= deadline {
-                            bail!(
-                                "uds: timed out waiting for workers at {}",
-                                self.path.display()
-                            );
-                        }
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                    Err(e) => return Err(e).context("uds: accept"),
-                }
-            };
-            // the accepted stream must block normally (it may inherit the
-            // listener's non-blocking mode on some platforms)
-            stream.set_nonblocking(false)?;
-            stream.set_read_timeout(Some(PEER_TIMEOUT))?;
-            let hello = Frame::read_from(&mut stream).map_err(wire_err)?;
-            if hello.flags & FLAG_HELLO == 0 {
-                bail!("uds: worker spoke before the handshake");
-            }
-            let r = hello.rank as usize;
-            if r == 0 || r >= self.ranks {
-                bail!("uds: hello from rank {r}, world is 0..{}", self.ranks);
-            }
-            if slots[r - 1].replace(stream).is_some() {
-                bail!("uds: two workers claimed rank {r}");
-            }
-        }
-        let workers = slots
-            .into_iter()
-            .map(|s| s.expect("every slot filled by the accept loop"))
-            .collect();
+        let rendezvous = self.path.display().to_string();
+        let workers = accept_workers(
+            || {
+                let (stream, _) = self.listener.accept()?;
+                // the accepted stream must block normally (it may inherit
+                // the listener's non-blocking mode on some platforms)
+                stream.set_nonblocking(false)?;
+                // Writes are bounded too: a worker that delivers its
+                // uplink but stops draining its downlink must fail the
+                // relay typed within the peer timeout, not hang the
+                // coordinator forever.
+                stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+                Ok(stream)
+            },
+            self.ranks,
+            self.hello_wait,
+            "uds",
+            &rendezvous,
+        )?;
         Ok(UdsTransport {
-            ranks: self.ranks,
-            role: UdsRole::Coordinator { workers, path: self.path },
-            sent: 0,
-            received: 0,
+            inner: StreamEndpoint::coordinator("uds", workers, self.ranks),
+            path: Some(self.path),
         })
     }
 }
 
-enum UdsRole {
-    /// Rank 0: one stream per worker, index `rank - 1`.
-    Coordinator { workers: Vec<UnixStream>, path: PathBuf },
-    /// A worker rank: the single stream to rank 0.
-    Worker { stream: UnixStream },
-}
-
 /// Unix-domain-socket transport (see [`UdsPending`] for the rank-0 side).
 pub struct UdsTransport {
-    ranks: usize,
-    role: UdsRole,
-    sent: u64,
-    received: u64,
+    inner: StreamEndpoint<UnixStream>,
+    /// The rendezvous socket file (coordinator only; removed on drop).
+    path: Option<PathBuf>,
 }
 
 impl UdsTransport {
@@ -322,20 +780,25 @@ impl UdsTransport {
             }
         };
         stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
         let hello = Frame::hello(rank).encode();
         stream.write_all(&hello).context("uds: send hello")?;
         Ok(UdsTransport {
-            ranks,
-            role: UdsRole::Worker { stream },
-            sent: hello.len() as u64,
-            received: 0,
+            inner: StreamEndpoint::worker("uds", stream, ranks, hello.len() as u64),
+            path: None,
         })
+    }
+
+    /// Ranks of the last completed gather in uplink-arrival order
+    /// (coordinator only; empty on workers).
+    pub fn last_arrival_order(&self) -> &[u16] {
+        self.inner.last_arrival()
     }
 }
 
 impl Drop for UdsTransport {
     fn drop(&mut self) {
-        if let UdsRole::Coordinator { path, .. } = &self.role {
+        if let Some(path) = &self.path {
             let _ = std::fs::remove_file(path);
         }
     }
@@ -347,82 +810,171 @@ impl Transport for UdsTransport {
     }
 
     fn ranks(&self) -> usize {
-        self.ranks
+        self.inner.ranks
     }
 
-    fn exchange(&mut self, mut local: Vec<Frame>) -> Result<Vec<Frame>> {
-        if local.len() != 1 {
-            bail!("uds endpoints host exactly one rank, got {} frames", local.len());
-        }
-        let mine = local.pop().expect("one frame");
-        match &mut self.role {
-            UdsRole::Coordinator { workers, .. } => {
-                if mine.rank != 0 {
-                    bail!("uds coordinator must host rank 0, got {}", mine.rank);
-                }
-                let step = mine.step;
-                let mut frames = Vec::with_capacity(self.ranks);
-                frames.push(mine);
-                // Gather: one frame per worker, read in rank order (the
-                // sockets buffer early senders).
-                for (i, w) in workers.iter_mut().enumerate() {
-                    let f = Frame::read_from(w)
-                        .map_err(wire_err)
-                        .with_context(|| format!("uds: gather from rank {}", i + 1))?;
-                    if f.rank as usize != i + 1 || f.step != step {
-                        bail!(
-                            "uds: expected rank {}/step {step}, got rank {}/step {}",
-                            i + 1,
-                            f.rank,
-                            f.step
-                        );
-                    }
-                    self.received += f.encoded_len() as u64;
-                    frames.push(f);
-                }
-                // Relay the full bundle back to every worker.
-                let mut bundle = Vec::new();
-                for f in &frames {
-                    f.encode_into(&mut bundle);
-                }
-                for w in workers.iter_mut() {
-                    w.write_all(&bundle).context("uds: relay bundle")?;
-                    self.sent += bundle.len() as u64;
-                }
-                Ok(frames)
-            }
-            UdsRole::Worker { stream } => {
-                let step = mine.step;
-                let bytes = mine.encode();
-                stream.write_all(&bytes).context("uds: send frame")?;
-                self.sent += bytes.len() as u64;
-                let mut frames = Vec::with_capacity(self.ranks);
-                for r in 0..self.ranks {
-                    let f = Frame::read_from(stream)
-                        .map_err(wire_err)
-                        .with_context(|| format!("uds: bundle frame {r}"))?;
-                    if f.rank as usize != r || f.step != step {
-                        bail!(
-                            "uds: bundle out of order (expected rank {r}/step {step}, \
-                             got rank {}/step {})",
-                            f.rank,
-                            f.step
-                        );
-                    }
-                    self.received += f.encoded_len() as u64;
-                    frames.push(f);
-                }
-                Ok(frames)
-            }
-        }
+    fn post_send(&mut self, local: Vec<Frame>) -> Result<()> {
+        self.inner.post_send(local)
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        self.inner.collect()
     }
 
     fn bytes_sent(&self) -> u64 {
-        self.sent
+        self.inner.bytes_sent()
     }
 
     fn bytes_received(&self) -> u64 {
-        self.received
+        self.inner.bytes_received()
+    }
+
+    fn overlap_ms(&self) -> f64 {
+        self.inner.overlap_ms()
+    }
+
+    fn last_arrival(&self) -> &[u16] {
+        self.inner.last_arrival()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP sockets (multi-host)
+// ---------------------------------------------------------------------------
+
+/// A bound-but-not-yet-connected TCP rendezvous — the multi-host twin of
+/// [`UdsPending`]. Rank 0 binds `host:port` *before* spawning (or telling
+/// the operator to start) workers; an ephemeral `:0` port is resolved via
+/// [`TcpPending::local_addr`].
+pub struct TcpPending {
+    listener: TcpListener,
+    addr: String,
+    ranks: usize,
+    hello_wait: Duration,
+}
+
+impl TcpPending {
+    /// Bind the rendezvous listener at `addr` (`host:port`) for a world
+    /// of `ranks`.
+    pub fn bind(addr: &str, ranks: usize) -> Result<TcpPending> {
+        assert!(ranks > 0);
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("tcp: bind {addr}"))?;
+        Ok(TcpPending { listener, addr: addr.to_string(), ranks, hello_wait: HELLO_WAIT })
+    }
+
+    /// Shrink (or grow) the per-connection hello wait — tests use this to
+    /// keep the never-sent-hello failure path fast.
+    pub fn set_hello_wait(&mut self, d: Duration) {
+        self.hello_wait = d;
+    }
+
+    /// The actually-bound address: with an ephemeral `:0` bind this is
+    /// the concrete port workers must be pointed at.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("tcp: local_addr")
+    }
+
+    /// Accept the `ranks - 1` workers — the same hello protocol as
+    /// [`UdsPending::accept`], with `TCP_NODELAY` set on every accepted
+    /// stream (frames are small; Nagle would serialize the pipelined
+    /// relay behind ACKs).
+    pub fn accept(self) -> Result<TcpTransport> {
+        self.listener.set_nonblocking(true)?;
+        let workers = accept_workers(
+            || {
+                let (stream, _) = self.listener.accept()?;
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                // bounded writes: a non-draining worker fails the relay
+                // typed instead of hanging the coordinator (see the uds
+                // twin)
+                stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+                Ok(stream)
+            },
+            self.ranks,
+            self.hello_wait,
+            "tcp",
+            &self.addr,
+        )?;
+        Ok(TcpTransport { inner: StreamEndpoint::coordinator("tcp", workers, self.ranks) })
+    }
+}
+
+/// TCP transport (see [`TcpPending`] for the rank-0 side): the same
+/// rendezvous/hello/config-digest/bundle session as uds, over
+/// `host:port` — runs between real hosts.
+pub struct TcpTransport {
+    inner: StreamEndpoint<TcpStream>,
+}
+
+impl TcpTransport {
+    /// Connect worker `rank` to the rendezvous address (`host:port`),
+    /// retrying until the coordinator has bound it (or
+    /// [`CONNECT_TIMEOUT`] passes), then send the hello frame.
+    /// `TCP_NODELAY` is set before any byte moves.
+    pub fn connect(addr: &str, rank: usize, ranks: usize) -> Result<TcpTransport> {
+        assert!(rank > 0 && rank < ranks, "workers are ranks 1..{ranks}, got {rank}");
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(e)).with_context(|| format!("tcp: connect {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+        let hello = Frame::hello(rank).encode();
+        stream.write_all(&hello).context("tcp: send hello")?;
+        Ok(TcpTransport {
+            inner: StreamEndpoint::worker("tcp", stream, ranks, hello.len() as u64),
+        })
+    }
+
+    /// Ranks of the last completed gather in uplink-arrival order
+    /// (coordinator only; empty on workers).
+    pub fn last_arrival_order(&self) -> &[u16] {
+        self.inner.last_arrival()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn ranks(&self) -> usize {
+        self.inner.ranks
+    }
+
+    fn post_send(&mut self, local: Vec<Frame>) -> Result<()> {
+        self.inner.post_send(local)
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        self.inner.collect()
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.inner.bytes_received()
+    }
+
+    fn overlap_ms(&self) -> f64 {
+        self.inner.overlap_ms()
+    }
+
+    fn last_arrival(&self) -> &[u16] {
+        self.inner.last_arrival()
     }
 }
 
@@ -556,9 +1108,9 @@ impl Mailbox {
         Ok(())
     }
 
-    /// Drain one message (blocks until the writer published one).
-    fn recv(&mut self) -> Result<Vec<u8>> {
-        self.wait_flag(1)?;
+    /// Drain the published message, which the caller knows is there (the
+    /// flag read 1).
+    fn drain(&mut self) -> Result<Vec<u8>> {
         let mut len8 = [0u8; 8];
         self.file.read_exact_at(&mut len8, 8)?;
         let len = u64::from_le_bytes(len8);
@@ -575,24 +1127,49 @@ impl Mailbox {
         self.file.write_all_at(&[0u8], 0)?;
         Ok(msg)
     }
+
+    /// Drain one message if the writer has published one — the
+    /// non-blocking poll of the coordinator's gather loop.
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.flag()? != 1 {
+            return Ok(None);
+        }
+        self.drain().map(Some)
+    }
+
+    /// Drain one message (blocks until the writer published one).
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.wait_flag(1)?;
+        self.drain()
+    }
+}
+
+/// Coordinator gather state between shm `post_send` and `collect`.
+struct PendingShm {
+    step: u64,
+    frames: Vec<Option<Frame>>,
+    arrival: Vec<u16>,
 }
 
 enum ShmRole {
     /// Rank 0: an (uplink, downlink) mailbox pair per worker, index
     /// `rank - 1`.
-    Coordinator { pairs: Vec<(Mailbox, Mailbox)>, dir: PathBuf },
+    Coordinator { pairs: Vec<(Mailbox, Mailbox)>, dir: PathBuf, pending: Option<PendingShm> },
     /// A worker: its own uplink + downlink.
-    Worker { up: Mailbox, down: Mailbox },
+    Worker { up: Mailbox, down: Mailbox, pending_step: Option<u64> },
 }
 
 /// Shared-memory transport over per-worker mailbox files. Put the
 /// rendezvous directory on tmpfs (e.g. under `/dev/shm`) and the exchange
-/// never leaves the page cache.
+/// never leaves the page cache. The downlink is a single bundle message,
+/// so the relay cannot stream (no overlap is reported), but the gather
+/// polls every uplink concurrently and records arrival order.
 pub struct ShmTransport {
     ranks: usize,
     role: ShmRole,
     sent: u64,
     received: u64,
+    last_arrival: Vec<u16>,
 }
 
 fn up_path(dir: &Path, rank: usize) -> PathBuf {
@@ -620,7 +1197,13 @@ impl ShmTransport {
                 ))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(ShmTransport { ranks, role: ShmRole::Coordinator { pairs, dir }, sent: 0, received: 0 })
+        Ok(ShmTransport {
+            ranks,
+            role: ShmRole::Coordinator { pairs, dir, pending: None },
+            sent: 0,
+            received: 0,
+            last_arrival: Vec::new(),
+        })
     }
 
     /// Worker side: open this rank's mailbox pair (waiting for the
@@ -630,7 +1213,19 @@ impl ShmTransport {
         let dir = dir.as_ref();
         let up = Mailbox::open_wait(up_path(dir, rank), max_frame_bytes())?;
         let down = Mailbox::open_wait(down_path(dir, rank), max_frame_bytes() * ranks as u64)?;
-        Ok(ShmTransport { ranks, role: ShmRole::Worker { up, down }, sent: 0, received: 0 })
+        Ok(ShmTransport {
+            ranks,
+            role: ShmRole::Worker { up, down, pending_step: None },
+            sent: 0,
+            received: 0,
+            last_arrival: Vec::new(),
+        })
+    }
+
+    /// Ranks of the last completed gather in uplink-arrival order
+    /// (coordinator only; empty on workers).
+    pub fn last_arrival_order(&self) -> &[u16] {
+        &self.last_arrival
     }
 }
 
@@ -640,7 +1235,7 @@ impl Drop for ShmTransport {
         // the directory iff that leaves it empty (non-recursive). The
         // rendezvous may be a user-supplied directory (/dev/shm itself,
         // say) — never delete anything we didn't make.
-        if let ShmRole::Coordinator { pairs, dir } = &self.role {
+        if let ShmRole::Coordinator { pairs, dir, .. } = &self.role {
             for (up, down) in pairs {
                 let _ = std::fs::remove_file(&up.path);
                 let _ = std::fs::remove_file(&down.path);
@@ -659,33 +1254,98 @@ impl Transport for ShmTransport {
         self.ranks
     }
 
-    fn exchange(&mut self, mut local: Vec<Frame>) -> Result<Vec<Frame>> {
+    fn post_send(&mut self, mut local: Vec<Frame>) -> Result<()> {
         if local.len() != 1 {
             bail!("shm endpoints host exactly one rank, got {} frames", local.len());
         }
         let mine = local.pop().expect("one frame");
         match &mut self.role {
-            ShmRole::Coordinator { pairs, .. } => {
+            ShmRole::Coordinator { pending, .. } => {
+                if pending.is_some() {
+                    bail!("shm: gather already in flight (post_send without collect)");
+                }
                 if mine.rank != 0 {
                     bail!("shm coordinator must host rank 0, got {}", mine.rank);
                 }
+                let mut frames: Vec<Option<Frame>> = (0..self.ranks).map(|_| None).collect();
                 let step = mine.step;
-                let mut frames = Vec::with_capacity(self.ranks);
-                frames.push(mine);
-                for (i, (up, _)) in pairs.iter_mut().enumerate() {
-                    let msg = up.recv().with_context(|| format!("shm: gather rank {}", i + 1))?;
-                    let (f, used) = Frame::decode(&msg).map_err(wire_err)?;
-                    if used != msg.len() || f.rank as usize != i + 1 || f.step != step {
+                frames[0] = Some(mine);
+                *pending = Some(PendingShm { step, frames, arrival: Vec::new() });
+                Ok(())
+            }
+            ShmRole::Worker { up, pending_step, .. } => {
+                if pending_step.is_some() {
+                    bail!("shm: gather already in flight (post_send without collect)");
+                }
+                let step = mine.step;
+                let bytes = mine.encode();
+                up.send(&bytes).context("shm: send frame")?;
+                self.sent += bytes.len() as u64;
+                *pending_step = Some(step);
+                Ok(())
+            }
+        }
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        match &mut self.role {
+            ShmRole::Coordinator { pairs, pending, .. } => {
+                let mut p = pending
+                    .take()
+                    .ok_or_else(|| anyhow!("shm: collect without post_send"))?;
+                // Poll every uplink concurrently: frames land in their
+                // rank slot in whatever order workers publish them.
+                let deadline = Instant::now() + PEER_TIMEOUT;
+                let mut spins = 0u32;
+                while p.frames.iter().any(|f| f.is_none()) {
+                    let mut progress = false;
+                    for (i, (up, _)) in pairs.iter_mut().enumerate() {
+                        if p.frames[i + 1].is_some() {
+                            continue;
+                        }
+                        let Some(msg) = up
+                            .try_recv()
+                            .with_context(|| format!("shm: gather rank {}", i + 1))?
+                        else {
+                            continue;
+                        };
+                        let (f, used) = Frame::decode(&msg).map_err(wire_err)?;
+                        if used != msg.len() || f.rank as usize != i + 1 || f.step != p.step {
+                            bail!(
+                                "shm: expected one rank-{}/step-{} frame, got rank {}/step {}",
+                                i + 1,
+                                p.step,
+                                f.rank,
+                                f.step
+                            );
+                        }
+                        self.received += used as u64;
+                        p.arrival.push(f.rank);
+                        p.frames[i + 1] = Some(f);
+                        progress = true;
+                    }
+                    if progress {
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        let have: Vec<usize> =
+                            (0..self.ranks).filter(|&r| p.frames[r].is_some()).collect();
                         bail!(
-                            "shm: expected one rank-{}/step-{step} frame, got rank {}/step {}",
-                            i + 1,
-                            f.rank,
-                            f.step
+                            "shm: gather timed out at step {} (have frames from ranks \
+                             {have:?} of 0..{})",
+                            p.step,
+                            self.ranks
                         );
                     }
-                    self.received += used as u64;
-                    frames.push(f);
+                    spins += 1;
+                    if spins > 1000 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    } else {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
                 }
+                let frames: Vec<Frame> =
+                    p.frames.into_iter().map(|f| f.expect("all gathered")).collect();
                 let mut bundle = Vec::new();
                 for f in &frames {
                     f.encode_into(&mut bundle);
@@ -694,13 +1354,13 @@ impl Transport for ShmTransport {
                     down.send(&bundle).context("shm: relay bundle")?;
                     self.sent += bundle.len() as u64;
                 }
+                self.last_arrival = p.arrival;
                 Ok(frames)
             }
-            ShmRole::Worker { up, down } => {
-                let step = mine.step;
-                let bytes = mine.encode();
-                up.send(&bytes).context("shm: send frame")?;
-                self.sent += bytes.len() as u64;
+            ShmRole::Worker { down, pending_step, .. } => {
+                let step = pending_step
+                    .take()
+                    .ok_or_else(|| anyhow!("shm: collect without post_send"))?;
                 let bundle = down.recv().context("shm: receive bundle")?;
                 self.received += bundle.len() as u64;
                 let frames = Frame::decode_bundle(&bundle, self.ranks).map_err(wire_err)?;
@@ -725,6 +1385,10 @@ impl Transport for ShmTransport {
 
     fn bytes_received(&self) -> u64 {
         self.received
+    }
+
+    fn last_arrival(&self) -> &[u16] {
+        &self.last_arrival
     }
 }
 
@@ -768,6 +1432,16 @@ mod tests {
     }
 
     #[test]
+    fn loopback_phases_enforce_their_order() {
+        let mut t = Loopback::new(1);
+        assert!(t.collect().is_err(), "collect before post_send");
+        t.post_send(vec![frame(0, 1, vec![1])]).unwrap();
+        assert!(t.post_send(vec![frame(0, 1, vec![1])]).is_err(), "double post_send");
+        assert_eq!(t.collect().unwrap().len(), 1);
+        assert!(t.collect().is_err(), "collect consumed the round");
+    }
+
+    #[test]
     fn uds_gathers_across_threads() {
         let path = unique_dir("uds").with_extension("sock");
         let ranks = 3;
@@ -789,6 +1463,10 @@ mod tests {
         let mut coord_views = Vec::new();
         for step in 1..=4u64 {
             coord_views.push(coord.exchange(vec![frame(0, step, vec![0, step as u8])]).unwrap());
+            // every gather saw both workers arrive, in some order
+            let mut order: Vec<u16> = coord.last_arrival_order().to_vec();
+            order.sort_unstable();
+            assert_eq!(order, vec![1, 2]);
         }
         for h in handles {
             let (sent, got) = h.join().unwrap();
@@ -802,6 +1480,36 @@ mod tests {
                 assert_eq!(f.rank as usize, r);
                 assert_eq!(f.step, s as u64 + 1);
             }
+        }
+    }
+
+    #[test]
+    fn tcp_gathers_across_threads() {
+        let ranks = 3;
+        let pending = TcpPending::bind("127.0.0.1:0", ranks).unwrap();
+        let addr = pending.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, r, ranks).unwrap();
+                let mut got = Vec::new();
+                for step in 1..=4u64 {
+                    let out = t.exchange(vec![frame(r, step, vec![r as u8, step as u8])]).unwrap();
+                    got.push(out);
+                }
+                (t.bytes_sent(), got)
+            }));
+        }
+        let mut coord = pending.accept().unwrap();
+        let mut coord_views = Vec::new();
+        for step in 1..=4u64 {
+            coord_views.push(coord.exchange(vec![frame(0, step, vec![0, step as u8])]).unwrap());
+        }
+        for h in handles {
+            let (sent, got) = h.join().unwrap();
+            assert_eq!(sent, 5 * FRAME_OVERHEAD as u64 + 4 * 2);
+            assert_eq!(got, coord_views, "every rank sees the same bundles");
         }
     }
 
@@ -836,7 +1544,12 @@ mod tests {
 
     #[test]
     fn transport_names_parse_back() {
-        for k in [TransportKind::Loopback, TransportKind::Uds, TransportKind::Shm] {
+        for k in [
+            TransportKind::Loopback,
+            TransportKind::Uds,
+            TransportKind::Tcp,
+            TransportKind::Shm,
+        ] {
             assert_eq!(parse_transport(transport_name(k)).unwrap(), k);
         }
         assert!(parse_transport("pigeon").is_err());

@@ -321,29 +321,144 @@ impl Frame {
     pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         let mut buf = vec![0u8; HEADER_BYTES];
         r.read_exact(&mut buf)?;
-        if buf[0..4] != MAGIC {
-            return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
-        }
-        let version = u16::from_le_bytes([buf[4], buf[5]]);
-        if version != VERSION {
-            return Err(WireError::BadVersion(version));
-        }
-        let payload_len =
-            u32::from_le_bytes(buf[22..26].try_into().expect("4 bytes")) as usize;
-        let stats_count =
-            u32::from_le_bytes(buf[26..30].try_into().expect("4 bytes")) as usize;
-        if payload_len > MAX_SECTION_BYTES {
-            return Err(WireError::TooLarge(payload_len));
-        }
-        if stats_count * 8 > MAX_SECTION_BYTES {
-            return Err(WireError::TooLarge(stats_count * 8));
-        }
-        let total = HEADER_BYTES + payload_len + 8 * stats_count + CRC_BYTES;
+        let total = frame_len(&buf)?;
         buf.resize(total, 0);
         r.read_exact(&mut buf[HEADER_BYTES..])?;
         let (frame, used) = Frame::decode(&buf)?;
         debug_assert_eq!(used, total);
         Ok(frame)
+    }
+}
+
+/// Total encoded length of the frame whose first [`HEADER_BYTES`] bytes are
+/// `header`, after validating everything a header alone can prove: magic,
+/// exact version match, and the section-length caps. This is the fail-fast
+/// gate of the streaming readers — a stale-version or garbage peer is
+/// rejected as soon as its header is in, before any payload byte arrives.
+pub fn frame_len(header: &[u8]) -> Result<usize, WireError> {
+    assert!(header.len() >= HEADER_BYTES, "frame_len needs a full header");
+    if header[0..4] != MAGIC {
+        return Err(WireError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let payload_len = u32::from_le_bytes(header[22..26].try_into().expect("4 bytes")) as usize;
+    let stats_count = u32::from_le_bytes(header[26..30].try_into().expect("4 bytes")) as usize;
+    if payload_len > MAX_SECTION_BYTES {
+        return Err(WireError::TooLarge(payload_len));
+    }
+    if stats_count * 8 > MAX_SECTION_BYTES {
+        return Err(WireError::TooLarge(stats_count * 8));
+    }
+    Ok(HEADER_BYTES + payload_len + 8 * stats_count + CRC_BYTES)
+}
+
+/// Incremental frame assembler for non-blocking / timeout-polled streams.
+///
+/// A TCP (or Unix) socket delivers a frame in arbitrary segments; a
+/// pipelined gather cannot afford to block on any one peer while others
+/// have bytes ready. `FrameReader` buffers whatever a stream has available
+/// and yields a frame the moment its last byte is in:
+///
+/// * the header is validated ([`frame_len`]) as soon as its 30 bytes have
+///   arrived — a bad-magic or stale-version peer fails *before* its
+///   payload is read;
+/// * `WouldBlock` / read-timeout just means "no frame yet" (`Ok(None)`);
+/// * EOF mid-frame (a peer that disconnected) is a typed
+///   [`WireError::Truncated`], never a hang or a partial frame;
+/// * bytes past a frame boundary are kept for the next frame, so a peer
+///   that runs ahead loses nothing.
+///
+/// ```
+/// use microadam::dist::wire::{Frame, FrameReader, PayloadTag, WireError};
+/// use std::io::Cursor;
+///
+/// let f = Frame { rank: 1, step: 3, tag: PayloadTag::Dense, flags: 0,
+///                 loss: 0.5, payload: vec![9, 9], stats: vec![] };
+/// let bytes = f.encode();
+/// // a peer that runs ahead: two frames land in one read
+/// let mut both = bytes.clone();
+/// both.extend_from_slice(&bytes);
+/// let mut reader = FrameReader::new();
+/// let mut src = Cursor::new(both);
+/// assert_eq!(reader.poll_read(&mut src).unwrap().unwrap(), f);
+/// // the second frame is served from the buffered remainder
+/// assert_eq!(reader.poll_read(&mut src).unwrap().unwrap(), f);
+/// // a peer that disconnects mid-frame is a typed error, never a hang
+/// let mut reader = FrameReader::new();
+/// let mut cut = Cursor::new(bytes[..bytes.len() - 3].to_vec());
+/// assert!(matches!(reader.poll_read(&mut cut), Err(WireError::Truncated { .. })));
+/// ```
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Total frame length once the header has been parsed and validated.
+    need: Option<usize>,
+}
+
+impl FrameReader {
+    /// Fresh reader with no buffered bytes.
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), need: None }
+    }
+
+    /// Bytes buffered toward the next frame (0 = sitting between frames).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pull whatever `r` has available and return a frame if one is now
+    /// complete. `Ok(None)` means "not yet" (the stream would block);
+    /// every corruption, cap violation and mid-frame disconnect is a typed
+    /// [`WireError`].
+    pub fn poll_read<R: Read>(&mut self, r: &mut R) -> Result<Option<Frame>, WireError> {
+        Ok(self.poll_read_raw(r)?.map(|(frame, _)| frame))
+    }
+
+    /// Like [`FrameReader::poll_read`], but also hands back the frame's
+    /// exact wire bytes (already CRC-verified). A relay that forwards the
+    /// frame can reuse them verbatim instead of re-encoding — no second
+    /// O(payload) pass, and byte preservation holds by construction.
+    pub fn poll_read_raw<R: Read>(
+        &mut self,
+        r: &mut R,
+    ) -> Result<Option<(Frame, Vec<u8>)>, WireError> {
+        let mut chunk = [0u8; 16384];
+        loop {
+            if self.need.is_none() && self.buf.len() >= HEADER_BYTES {
+                self.need = Some(frame_len(&self.buf)?);
+            }
+            if let Some(need) = self.need {
+                if self.buf.len() >= need {
+                    let raw: Vec<u8> = self.buf.drain(..need).collect();
+                    let (frame, used) = Frame::decode(&raw)?;
+                    debug_assert_eq!(used, need);
+                    self.need = None;
+                    return Ok(Some((frame, raw)));
+                }
+            }
+            match r.read(&mut chunk) {
+                // EOF with a frame outstanding: the peer disconnected
+                // mid-frame (or before sending one we are waiting for)
+                Ok(0) => {
+                    return Err(WireError::Truncated {
+                        need: self.need.unwrap_or(HEADER_BYTES),
+                        have: self.buf.len(),
+                    })
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
     }
 }
 

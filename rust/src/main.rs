@@ -20,7 +20,7 @@ use microadam::coordinator::schedule::LrSchedule;
 use microadam::coordinator::trainer::Trainer;
 use microadam::dist::{
     default_rendezvous, parse_reducer, parse_transport, transport_name, DistTrainer,
-    ShmTransport, Transport, TransportKind, UdsPending, UdsTransport,
+    ShmTransport, TcpPending, TcpTransport, Transport, TransportKind, UdsPending, UdsTransport,
 };
 use microadam::runtime::Runtime;
 
@@ -80,17 +80,20 @@ USAGE:
                     [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
                     [--checkpoint path.bin]
                     [--ranks N] [--reduce dense|topk|eftopk]
-                    [--transport loopback|uds|shm] [--rendezvous PATH]
+                    [--transport loopback|uds|tcp|shm] [--rendezvous PATH|host:port]
                     [--external yes]
                       (--ranks > 1, or any --reduce/--transport, routes
                        through the data-parallel engine; artifact-free
                        models use the native mlp_tiny/mlp_small workloads.
-                       With --transport uds|shm, rank 0 spawns one worker
-                       process per extra rank; --rendezvous only picks the
-                       socket path / mailbox dir. Pass --external yes to
-                       join workers you started by hand instead — each one
-                       runs `train --dist-rank R --rendezvous PATH` with
-                       the same config.)
+                       With --transport uds|tcp|shm, rank 0 spawns one
+                       worker process per extra rank; --rendezvous only
+                       picks the socket path / mailbox dir / tcp
+                       host:port (tcp defaults to 127.0.0.1:0 — an
+                       ephemeral port workers inherit resolved). Pass
+                       --external yes to join workers you started by hand
+                       instead — each one runs `train --dist-rank R
+                       --rendezvous ADDR` with the same config; with tcp
+                       the workers may live on other hosts.)
   microadam repro   <memory|fig1|fig8|fig9|theory|table1|table2|table3|table4|dist|all>
                     [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
   microadam list    [--artifacts artifacts]
@@ -298,6 +301,10 @@ fn dist_summary(
         trainer.opt_state_bytes(),
         trainer.reducer_state_bytes(),
     );
+    let overlap = trainer.gather_overlap_ms();
+    if overlap > 0.0 {
+        println!("gather/relay overlap (pipelined coordinator): {overlap:.1} ms hidden");
+    }
     if let Some(path) = args.get("checkpoint") {
         trainer.save_checkpoint(path)?;
         println!(
@@ -309,14 +316,14 @@ fn dist_summary(
 }
 
 /// Launch a multi-process run: rank 0 binds the rendezvous, spawns one
-/// worker process per extra rank (unless `--rendezvous` points at workers
-/// started by hand), trains as rank 0, then reaps the workers.
+/// worker process per extra rank (unless `--external yes` points at
+/// workers started by hand), trains as rank 0, then reaps the workers.
 fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
     let ranks = cfg.ranks;
     let kind = cfg.transport;
-    // --rendezvous only picks the path; --external yes switches to
+    // --rendezvous only picks the path/address; --external yes switches to
     // join-by-hand mode (the operator starts the workers themselves with
-    // `train --dist-rank R --rendezvous PATH`).
+    // `train --dist-rank R --rendezvous ADDR`).
     let spawn_workers = !matches!(args.get("external"), Some("yes") | Some("true") | Some("1"));
     let rdv = match args.get("rendezvous") {
         Some(p) => std::path::PathBuf::from(p),
@@ -326,12 +333,23 @@ fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
     // Bind/create the rendezvous BEFORE spawning so no worker can race it.
     let pending = match kind {
         TransportKind::Uds => Some(UdsPending::bind(&rdv, ranks)?),
-        TransportKind::Shm => None,
+        TransportKind::Tcp | TransportKind::Shm => None,
         TransportKind::Loopback => unreachable!("loopback has no launcher"),
+    };
+    let tcp_pending = match kind {
+        TransportKind::Tcp => Some(TcpPending::bind(&rdv.to_string_lossy(), ranks)?),
+        _ => None,
     };
     let shm = match kind {
         TransportKind::Shm => Some(ShmTransport::coordinator(&rdv, ranks)?),
         _ => None,
+    };
+    // What workers are pointed at. For tcp this is the *resolved* bound
+    // address — `--rendezvous 127.0.0.1:0` becomes a concrete ephemeral
+    // port only after the bind, and workers must inherit that port.
+    let worker_rdv: std::path::PathBuf = match &tcp_pending {
+        Some(p) => p.local_addr()?.to_string().into(),
+        None => rdv.clone(),
     };
 
     // Workers get the full provenance config plus their rank.
@@ -349,7 +367,7 @@ fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
                 .arg("--dist-rank")
                 .arg(r.to_string())
                 .arg("--rendezvous")
-                .arg(&rdv)
+                .arg(&worker_rdv)
                 .spawn();
             match spawned {
                 Ok(child) => children.push(child),
@@ -368,13 +386,25 @@ fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
             "[dist] launched {} worker process(es) ({} rendezvous {})",
             ranks - 1,
             transport_name(kind),
-            rdv.display()
+            worker_rdv.display()
+        );
+    } else {
+        // External mode: the operator starts the workers by hand, so the
+        // *resolved* rendezvous must be surfaced — for tcp an ephemeral
+        // `:0` bind only has a concrete port after the bind above.
+        eprintln!(
+            "[dist] waiting for {} hand-started worker(s) — each must run:\n\
+             [dist]   microadam train --config <same config> --dist-rank R \
+             --rendezvous {}",
+            ranks - 1,
+            worker_rdv.display()
         );
     }
 
     let mut result = (|| -> Result<()> {
         let transport: Box<dyn Transport> = match kind {
             TransportKind::Uds => Box::new(pending.expect("bound above").accept()?),
+            TransportKind::Tcp => Box::new(tcp_pending.expect("bound above").accept()?),
             TransportKind::Shm => Box::new(shm.expect("created above")),
             TransportKind::Loopback => unreachable!(),
         };
@@ -424,9 +454,10 @@ fn cmd_train_dist_worker(args: &Args, mut cfg: TrainConfig) -> Result<()> {
     cfg.out = String::new();
     let transport: Box<dyn Transport> = match cfg.transport {
         TransportKind::Uds => Box::new(UdsTransport::connect(&rdv, rank, ranks)?),
+        TransportKind::Tcp => Box::new(TcpTransport::connect(&rdv, rank, ranks)?),
         TransportKind::Shm => Box::new(ShmTransport::worker(&rdv, rank, ranks)?),
         TransportKind::Loopback => {
-            bail!("--dist-rank only applies to the uds/shm transports")
+            bail!("--dist-rank only applies to the uds/tcp/shm transports")
         }
     };
     let mut trainer = DistTrainer::with_transport(cfg, transport, vec![rank])?;

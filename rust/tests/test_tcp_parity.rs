@@ -1,0 +1,468 @@
+//! TCP transport parity + fault injection: the multi-host exchange must
+//! be a bit-perfect re-plumbing of the loopback engine, and every way a
+//! peer can misbehave must fail with a typed error inside its timeout —
+//! never a hang, never corrupted rank-0 state.
+//!
+//! Everything here is pinned to `127.0.0.1` ephemeral ports: no external
+//! network is touched, so the suite runs in any sandboxed CI lane.
+//!
+//! * thread-endpoint TCP runs are **bit-identical** to loopback (loss
+//!   series and final parameters) for all three reducers × ranks ∈ {2, 4};
+//! * framed bytes measured over the real socket equal
+//!   `wire_bytes_per_rank() + FRAME_OVERHEAD` per rank per step;
+//! * the actual `microadam train --transport tcp` launcher (separate OS
+//!   processes) reproduces the loopback metrics JSONL at ranks = 4 — the
+//!   acceptance criterion of the multi-host engine;
+//! * fault injection: silent connections, stale-version peers, mid-frame
+//!   disconnects, 1-byte-at-a-time slow writers, and mismatched-config
+//!   peers;
+//! * pipelining: the coordinator's `collect` observes out-of-order worker
+//!   arrival (a later rank before rank 1) and still returns the
+//!   rank-ascending set whose aggregate is bit-identical to sorted-order
+//!   loopback.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use microadam::coordinator::config::TrainConfig;
+use microadam::coordinator::metrics::MetricsLogger;
+use microadam::coordinator::schedule::LrSchedule;
+use microadam::dist::wire::{Frame, PayloadTag, HELLO_DIGEST_BYTES};
+use microadam::dist::{
+    build_reducer, DistTrainer, ReducerKind, SparseReduceConfig, TcpPending, TcpTransport,
+    Transport, TransportKind, FRAME_OVERHEAD,
+};
+use microadam::exec::ExecPool;
+use microadam::optim::OptimizerKind;
+use microadam::util::json::Json;
+
+const STEPS: u64 = 8;
+
+fn cfg(ranks: usize, reduce: ReducerKind, transport: TransportKind) -> TrainConfig {
+    TrainConfig {
+        model: "mlp_tiny".into(),
+        optimizer: OptimizerKind::MicroAdam,
+        schedule: LrSchedule::Const { lr: 3e-3 },
+        steps: STEPS,
+        seed: 7,
+        log_every: 10_000,
+        workers: 2,
+        ranks,
+        reduce,
+        transport,
+        ..Default::default()
+    }
+}
+
+fn bind_local(ranks: usize) -> (TcpPending, String) {
+    let pending = TcpPending::bind("127.0.0.1:0", ranks).unwrap();
+    let addr = pending.local_addr().unwrap().to_string();
+    (pending, addr)
+}
+
+/// Loss series (bit patterns) + final params of a loopback run.
+fn run_loopback(ranks: usize, reduce: ReducerKind) -> (Vec<u32>, Vec<f32>) {
+    let mut t = DistTrainer::new(cfg(ranks, reduce, TransportKind::Loopback)).unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    (logger.history.iter().map(|m| m.loss.to_bits()).collect(), t.params_vec())
+}
+
+struct EndpointReport {
+    losses: Vec<u32>,
+    params: Vec<f32>,
+    bytes_sent: u64,
+    bytes_received: u64,
+    wire_per_rank: usize,
+    overlap_ms: f64,
+}
+
+fn run_endpoint(
+    ranks: usize,
+    reduce: ReducerKind,
+    transport: Box<dyn Transport>,
+    rank: usize,
+) -> EndpointReport {
+    let mut t =
+        DistTrainer::with_transport(cfg(ranks, reduce, TransportKind::Tcp), transport, vec![rank])
+            .unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    EndpointReport {
+        losses: logger.history.iter().map(|m| m.loss.to_bits()).collect(),
+        params: t.params_vec(),
+        bytes_sent: t.transport_bytes_sent(),
+        bytes_received: t.transport_bytes_received(),
+        wire_per_rank: t.frame_bytes_per_rank() - FRAME_OVERHEAD,
+        overlap_ms: t.gather_overlap_ms(),
+    }
+}
+
+fn run_tcp(ranks: usize, reduce: ReducerKind) -> (EndpointReport, Vec<EndpointReport>) {
+    let (pending, addr) = bind_local(ranks);
+    let workers: Vec<_> = (1..ranks)
+        .map(|r| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let t = TcpTransport::connect(&addr, r, ranks).unwrap();
+                run_endpoint(ranks, reduce, Box::new(t), r)
+            })
+        })
+        .collect();
+    let coord = run_endpoint(ranks, reduce, Box::new(pending.accept().unwrap()), 0);
+    (coord, workers.into_iter().map(|w| w.join().unwrap()).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Parity: bit-identical to loopback, measured bytes match the accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_matches_loopback_bitwise() {
+    for ranks in [2usize, 4] {
+        for reduce in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let (loop_losses, loop_params) = run_loopback(ranks, reduce);
+            assert_eq!(loop_losses.len(), STEPS as usize);
+            let (coord, workers) = run_tcp(ranks, reduce);
+            assert_eq!(coord.losses, loop_losses, "{reduce:?} x{ranks} loss series");
+            assert_eq!(coord.params, loop_params, "{reduce:?} x{ranks} final params");
+            assert!(coord.overlap_ms >= 0.0);
+            for (i, w) in workers.iter().enumerate() {
+                assert_eq!(w.params, loop_params, "{reduce:?} x{ranks} worker {}", i + 1);
+                assert!(w.losses.is_empty(), "workers run silent");
+            }
+        }
+    }
+}
+
+#[test]
+fn framed_socket_bytes_match_accounting() {
+    // Acceptance criterion: bytes measured over the real TCP socket equal
+    // the reducer's accounted wire bytes plus the documented overhead.
+    let ranks = 3usize;
+    let digest = (FRAME_OVERHEAD + HELLO_DIGEST_BYTES) as u64;
+    let hello = FRAME_OVERHEAD as u64;
+    let (coord, workers) = run_tcp(ranks, ReducerKind::EfTopK);
+    let framed = (coord.wire_per_rank + FRAME_OVERHEAD) as u64;
+    for w in &workers {
+        // uplink: the one-time rendezvous hello + config-digest frame,
+        // then exactly one gradient frame per step
+        assert_eq!(w.bytes_sent, STEPS * framed + digest + hello, "worker uplink");
+        // downlink: the full bundle for the handshake round and every step
+        assert_eq!(w.bytes_received, (STEPS * framed + digest) * ranks as u64, "bundle");
+    }
+    // the coordinator gathered one frame per worker per round
+    assert_eq!(
+        coord.bytes_received,
+        (STEPS * framed + digest) * (ranks as u64 - 1),
+        "coordinator gather"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pipelining: out-of-order arrival at the hub
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_collect_handles_out_of_order_arrival() {
+    let ranks = 4usize;
+    let d = 300usize;
+    let pool = ExecPool::serial();
+    // Reference: compress every rank in-core and aggregate in sorted
+    // (loopback) order.
+    let mut reference =
+        build_reducer(ReducerKind::EfTopK, d, ranks, SparseReduceConfig::default());
+    let grads: Vec<Vec<f32>> = (0..ranks)
+        .map(|r| (0..d).map(|i| ((i + r * 31) % 17) as f32 * 0.1 - 0.8).collect())
+        .collect();
+    let payloads: Vec<Vec<u8>> =
+        (0..ranks).map(|r| reference.compress_payload(r, &grads[r])).collect();
+    let mut ref_out = vec![0f32; d];
+    reference.aggregate_payloads(&payloads, &mut ref_out, &pool).unwrap();
+
+    let (pending, addr) = bind_local(ranks);
+    let handles: Vec<_> = (1..ranks)
+        .map(|r| {
+            let addr = addr.clone();
+            let payload = payloads[r].clone();
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, r, ranks).unwrap();
+                if r == 1 {
+                    // rank 1 lags (generously, so scheduler noise cannot
+                    // flip the ordering): ranks 2 and 3 reach the hub first
+                    std::thread::sleep(Duration::from_millis(1500));
+                }
+                let f = Frame {
+                    rank: r as u16,
+                    step: 1,
+                    tag: PayloadTag::EfTopK,
+                    flags: 0,
+                    loss: 0.0,
+                    payload,
+                    stats: vec![],
+                };
+                t.exchange(vec![f]).unwrap().len()
+            })
+        })
+        .collect();
+    let mut coord = pending.accept().unwrap();
+    let f0 = Frame {
+        rank: 0,
+        step: 1,
+        tag: PayloadTag::EfTopK,
+        flags: 0,
+        loss: 0.0,
+        payload: payloads[0].clone(),
+        stats: vec![],
+    };
+    let frames = coord.exchange(vec![f0]).unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), ranks);
+    }
+    // collect returned the rank-ascending set regardless of arrival order
+    for (r, f) in frames.iter().enumerate() {
+        assert_eq!(f.rank as usize, r);
+    }
+    // ... and the hub really did observe a later rank before rank 1
+    let arrival = coord.last_arrival_order().to_vec();
+    assert_eq!(arrival.len(), ranks - 1);
+    assert_ne!(arrival[0], 1, "a fast rank should have arrived before the lagging rank 1");
+    assert_eq!(*arrival.last().unwrap(), 1, "rank 1 arrived last: {arrival:?}");
+    assert!(coord.overlap_ms() >= 0.0, "overlap is recorded, never negative");
+    // the gathered payloads aggregate bit-identically to sorted-order
+    // loopback (arrival order cannot leak into the math)
+    let gathered: Vec<Vec<u8>> = frames.into_iter().map(|f| f.payload).collect();
+    assert_eq!(gathered, payloads);
+    let mut agg = build_reducer(ReducerKind::EfTopK, d, ranks, SparseReduceConfig::default());
+    let mut out = vec![0f32; d];
+    agg.aggregate_payloads(&gathered, &mut out, &pool).unwrap();
+    assert_eq!(out, ref_out);
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: every misbehaving peer fails typed, inside its timeout
+// ---------------------------------------------------------------------------
+
+/// A bound on "did not hang": every fault below must surface well before
+/// the transport's 120 s peer timeout.
+const FAULT_BUDGET: Duration = Duration::from_secs(30);
+
+#[test]
+fn silent_connection_cannot_hold_the_rendezvous() {
+    let (mut pending, addr) = bind_local(2);
+    pending.set_hello_wait(Duration::from_millis(300));
+    // connect, never send the hello — hold the socket open so the failure
+    // is the bounded hello wait, not a disconnect
+    let _silent = TcpStream::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let err = pending.accept().err().expect("silent peer must be rejected");
+    assert!(t0.elapsed() < FAULT_BUDGET, "accept hung: {:?}", t0.elapsed());
+    let msg = format!("{err:#}");
+    assert!(msg.contains("hello"), "{msg}");
+}
+
+#[test]
+fn stale_version_peer_is_rejected_at_hello() {
+    let (pending, addr) = bind_local(2);
+    let mut stale = TcpStream::connect(&addr).unwrap();
+    let mut bytes = Frame::hello(1).encode();
+    bytes[4] = 2; // version field: speak v2 at a v1 receiver
+    stale.write_all(&bytes).unwrap();
+    let t0 = Instant::now();
+    let err = pending.accept().err().expect("stale-version peer must be rejected");
+    assert!(t0.elapsed() < FAULT_BUDGET);
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version"), "{msg}");
+}
+
+#[test]
+fn mid_frame_disconnect_is_a_typed_error() {
+    let ranks = 2usize;
+    let (pending, addr) = bind_local(ranks);
+    let worker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&Frame::hello(1).encode()).unwrap();
+        // begin a legitimate frame, then vanish mid-payload
+        let f = Frame {
+            rank: 1,
+            step: 1,
+            tag: PayloadTag::TopK,
+            flags: 0,
+            loss: 0.5,
+            payload: vec![7u8; 64],
+            stats: vec![],
+        };
+        let bytes = f.encode();
+        s.write_all(&bytes[..bytes.len() / 2]).unwrap();
+        // s drops here: mid-frame disconnect
+    });
+    let mut coord = pending.accept().unwrap();
+    worker.join().unwrap();
+    let mine = Frame {
+        rank: 0,
+        step: 1,
+        tag: PayloadTag::TopK,
+        flags: 0,
+        loss: 0.5,
+        payload: vec![1u8; 64],
+        stats: vec![],
+    };
+    let t0 = Instant::now();
+    let err = coord.exchange(vec![mine]).err().expect("disconnect must fail the gather");
+    assert!(t0.elapsed() < FAULT_BUDGET, "gather hung: {:?}", t0.elapsed());
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gather from rank 1"), "{msg}");
+    assert!(msg.contains("truncated"), "typed truncation, got: {msg}");
+}
+
+#[test]
+fn slow_writer_partial_segments_still_parse() {
+    // A worker that trickles its frame one byte at a time exercises the
+    // incremental FrameReader over real TCP segment boundaries; the
+    // gather must reassemble the identical frame.
+    let ranks = 2usize;
+    let (pending, addr) = bind_local(ranks);
+    let f1 = Frame {
+        rank: 1,
+        step: 1,
+        tag: PayloadTag::TopK,
+        flags: 0,
+        loss: 2.5,
+        payload: (0..48).collect(),
+        stats: vec![],
+    };
+    let expect = f1.clone();
+    let worker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.write_all(&Frame::hello(1).encode()).unwrap();
+        for (i, b) in f1.encode().iter().enumerate() {
+            s.write_all(&[*b]).unwrap();
+            if i % 16 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // hold the socket open until the coordinator is done reading
+        std::thread::sleep(Duration::from_millis(500));
+    });
+    let mut coord = pending.accept().unwrap();
+    let mine = Frame {
+        rank: 0,
+        step: 1,
+        tag: PayloadTag::TopK,
+        flags: 0,
+        loss: 0.5,
+        payload: vec![1u8; 48],
+        stats: vec![],
+    };
+    let frames = coord.exchange(vec![mine.clone()]).unwrap();
+    worker.join().unwrap();
+    assert_eq!(frames.len(), 2);
+    assert_eq!(frames[0], mine);
+    assert_eq!(frames[1], expect, "trickled frame reassembled bit-exactly");
+}
+
+#[test]
+fn mismatched_worker_config_is_rejected_at_handshake() {
+    // A hand-started worker with a different seed must fail the round-0
+    // config-digest exchange on BOTH endpoints — never train divergently.
+    let (pending, addr) = bind_local(2);
+    let worker = std::thread::spawn(move || {
+        let t = TcpTransport::connect(&addr, 1, 2).unwrap();
+        let mut bad = cfg(2, ReducerKind::EfTopK, TransportKind::Tcp);
+        bad.seed = 999; // trajectory-relevant mismatch
+        DistTrainer::with_transport(bad, Box::new(t), vec![1]).err().map(|e| e.to_string())
+    });
+    let good = cfg(2, ReducerKind::EfTopK, TransportKind::Tcp);
+    let coord = DistTrainer::with_transport(good, Box::new(pending.accept().unwrap()), vec![0]);
+    let coord_err = coord.err().expect("coordinator must reject the mismatch").to_string();
+    assert!(coord_err.contains("digest"), "{coord_err}");
+    let worker_err = worker.join().unwrap().expect("worker must reject the mismatch");
+    assert!(worker_err.contains("digest"), "{worker_err}");
+}
+
+// ---------------------------------------------------------------------------
+// True multi-process: the real `microadam train --transport tcp` launcher
+// ---------------------------------------------------------------------------
+
+fn unique_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "microadam-tcppar-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::SeqCst)
+    ))
+}
+
+/// Extract the (step, loss-as-string) series and the final_loss record
+/// from a metrics JSONL file. Losses compare as their serialized strings:
+/// equal f32 bits serialize identically, so string equality is bit
+/// equality.
+fn metrics_series(path: &std::path::Path) -> (Vec<(u64, String)>, Option<String>) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut series = Vec::new();
+    let mut final_loss = None;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        if let (Some(step), Some(loss)) = (j.get("step"), j.get("loss")) {
+            series.push((step.as_f64().unwrap() as u64, loss.to_string()));
+        }
+        if let Some(fl) = j.get("final_loss") {
+            final_loss = Some(fl.to_string());
+        }
+    }
+    (series, final_loss)
+}
+
+fn launch(transport: &str, out: &std::path::Path) {
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_microadam"))
+        .args([
+            "train",
+            "--model",
+            "mlp_tiny",
+            "--optimizer",
+            "micro-adam",
+            "--ranks",
+            "4",
+            "--reduce",
+            "eftopk",
+            "--transport",
+            transport,
+            "--steps",
+            "8",
+            "--seed",
+            "7",
+            "--workers",
+            "2",
+            "--lr",
+            "3e-3",
+            "--out",
+        ])
+        .arg(out)
+        .status()
+        .expect("spawn microadam train");
+    assert!(status.success(), "microadam train --transport {transport} failed");
+}
+
+#[test]
+fn launcher_processes_match_loopback_metrics() {
+    // The acceptance criterion: `microadam train --ranks 4 --transport
+    // tcp` (loopback addresses, ephemeral port, real worker processes)
+    // produces metrics JSONL bit-identical to `--transport loopback`
+    // with the same seeds.
+    let dir = unique_path("launch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let loop_out = dir.join("loopback.jsonl");
+    launch("loopback", &loop_out);
+    let (loop_series, loop_final) = metrics_series(&loop_out);
+    assert_eq!(loop_series.len(), 8);
+    let out = dir.join("tcp.jsonl");
+    launch("tcp", &out);
+    let (series, final_loss) = metrics_series(&out);
+    assert_eq!(series, loop_series, "tcp per-step losses");
+    assert_eq!(final_loss, loop_final, "tcp final loss");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -184,6 +184,35 @@ fn framed_socket_bytes_match_accounting() {
 }
 
 #[test]
+fn silent_uds_connection_cannot_hold_the_accept_loop() {
+    // Regression: a peer that connects but never sends its hello frame
+    // used to hold the accept loop for the full PEER_TIMEOUT while the
+    // other ranks queued behind it. The hello wait is now bounded per
+    // connection, so the rendezvous fails fast and typed instead.
+    use std::os::unix::net::UnixStream;
+    let rdv = unique_path("hello");
+    let mut pending = UdsPending::bind(&rdv, 3).unwrap();
+    pending.set_hello_wait(std::time::Duration::from_millis(300));
+    // one legitimate worker (connect + hello; the aborted run is expected)
+    let rdv2 = rdv.clone();
+    let real = std::thread::spawn(move || {
+        let _t = UdsTransport::connect(&rdv2, 1, 3).unwrap();
+    });
+    // ...and one that connects but never speaks, held open so the failure
+    // is the bounded hello wait, not a disconnect
+    let _silent = UnixStream::connect(&rdv).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = pending.accept().err().expect("silent peer must abort the rendezvous");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "accept loop hung for {:?}",
+        t0.elapsed()
+    );
+    assert!(format!("{err:#}").contains("hello"), "{err:#}");
+    real.join().unwrap();
+}
+
+#[test]
 fn mismatched_worker_config_is_rejected_at_handshake() {
     // A hand-started worker with a different seed must fail the round-0
     // config-digest exchange on BOTH endpoints — never train divergently.

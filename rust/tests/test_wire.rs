@@ -10,8 +10,8 @@
 //!   stats blocks and header values encode -> decode bit-exactly.
 
 use microadam::dist::wire::{
-    crc32, dense_from_payload, dense_payload, slab_from_payload, slab_payload, Frame, PayloadTag,
-    WireError, CRC_BYTES, FRAME_OVERHEAD, HEADER_BYTES, MAGIC, VERSION,
+    crc32, dense_from_payload, dense_payload, slab_from_payload, slab_payload, Frame, FrameReader,
+    PayloadTag, WireError, CRC_BYTES, FRAME_OVERHEAD, HEADER_BYTES, MAGIC, VERSION,
 };
 use microadam::dist::{build_reducer, ReducerKind, SparseReduceConfig};
 use microadam::quant::BucketStats;
@@ -220,6 +220,136 @@ fn arbitrary_slab_geometries_roundtrip_bit_exactly() {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming fault injection: the incremental FrameReader under short
+// reads, slow writers, disconnects and stale peers
+// ---------------------------------------------------------------------------
+
+/// The worst-case slow writer: at most one byte per read, every other
+/// call a `WouldBlock` hiccup, then EOF.
+struct Trickle {
+    bytes: Vec<u8>,
+    pos: usize,
+    hiccup: bool,
+}
+
+impl Trickle {
+    fn new(bytes: Vec<u8>) -> Self {
+        Self { bytes, pos: 0, hiccup: false }
+    }
+}
+
+impl std::io::Read for Trickle {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.hiccup {
+            self.hiccup = false;
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        self.hiccup = true;
+        if self.pos >= self.bytes.len() {
+            return Ok(0);
+        }
+        buf[0] = self.bytes[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+#[test]
+fn frame_reader_reassembles_one_byte_segments() {
+    // A frame delivered one byte at a time, interleaved with WouldBlock,
+    // reassembles bit-exactly — the slow-writer / short-read case the
+    // pipelined TCP gather must survive.
+    let f = frame((0..96).collect(), vec![BucketStats { lo: -1.0, hi: 3.0 }; 3]);
+    let bytes = f.encode();
+    let mut src = Trickle::new(bytes.clone());
+    let mut reader = FrameReader::new();
+    let mut polls = 0usize;
+    let got = loop {
+        polls += 1;
+        assert!(polls < 10 * bytes.len(), "reader never completed");
+        match reader.poll_read(&mut src) {
+            Ok(Some(frame)) => break frame,
+            Ok(None) => {}
+            Err(e) => panic!("trickled frame failed: {e}"),
+        }
+    };
+    assert_eq!(got, f);
+    assert_eq!(reader.pending_bytes(), 0);
+    // the stream then closes between frames: a typed error, not a hang
+    // (skip the trickler's WouldBlock hiccups to reach the EOF)
+    let err = loop {
+        match reader.poll_read(&mut src) {
+            Ok(Some(f)) => panic!("closed stream yielded {f:?}"),
+            Ok(None) => {}
+            Err(e) => break e,
+        }
+    };
+    assert!(matches!(err, WireError::Truncated { .. }), "{err}");
+}
+
+#[test]
+fn frame_reader_mid_frame_disconnect_is_truncated() {
+    // Disconnects anywhere — mid-header, mid-payload, mid-stats, mid-CRC —
+    // surface as WireError::Truncated, never a partial frame or a hang.
+    let bytes = frame((0..64).collect(), vec![BucketStats { lo: 0.0, hi: 1.0 }; 2]).encode();
+    for cut in [1, HEADER_BYTES - 1, HEADER_BYTES + 5, bytes.len() - 9, bytes.len() - 1] {
+        let mut src = Trickle::new(bytes[..cut].to_vec());
+        let mut reader = FrameReader::new();
+        let err = loop {
+            match reader.poll_read(&mut src) {
+                Ok(Some(f)) => panic!("cut at {cut} still yielded {f:?}"),
+                Ok(None) => {}
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, WireError::Truncated { .. }), "cut {cut}: {err}");
+    }
+}
+
+#[test]
+fn frame_reader_rejects_stale_version_as_soon_as_the_header_arrives() {
+    // A v2 peer is rejected the moment its header is complete — the
+    // payload (which never arrives here) is not waited for.
+    let mut bytes = frame(vec![9; 500], vec![]).encode();
+    bytes[4] = 2; // version field
+    let mut src = std::io::Cursor::new(bytes[..HEADER_BYTES].to_vec());
+    let mut reader = FrameReader::new();
+    assert!(matches!(reader.poll_read(&mut src), Err(WireError::BadVersion(2))));
+    // same for garbage magic
+    let mut bytes = frame(vec![9; 500], vec![]).encode();
+    bytes[0] = b'X';
+    let mut src = std::io::Cursor::new(bytes[..HEADER_BYTES].to_vec());
+    let mut reader = FrameReader::new();
+    assert!(matches!(reader.poll_read(&mut src), Err(WireError::BadMagic(_))));
+}
+
+#[test]
+fn frame_reader_caps_lying_length_fields() {
+    // An absurd payload_len fails at the header, before any allocation.
+    let mut bytes = frame(vec![5; 8], vec![]).encode();
+    bytes[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+    let mut src = std::io::Cursor::new(bytes);
+    let mut reader = FrameReader::new();
+    assert!(matches!(reader.poll_read(&mut src), Err(WireError::TooLarge(_))));
+}
+
+#[test]
+fn frame_reader_keeps_bytes_past_a_frame_boundary() {
+    // A peer that runs ahead (two frames in one segment) loses nothing:
+    // the second frame is served from the buffered remainder.
+    let a = frame(vec![1, 2, 3], vec![]);
+    let b = Frame { rank: 9, step: 18, ..frame(vec![4, 5], vec![]) };
+    let mut bytes = a.encode();
+    bytes.extend_from_slice(&b.encode());
+    let mut src = std::io::Cursor::new(bytes);
+    let mut reader = FrameReader::new();
+    assert_eq!(reader.poll_read(&mut src).unwrap().unwrap(), a);
+    assert!(reader.pending_bytes() > 0, "second frame buffered");
+    assert_eq!(reader.poll_read(&mut src).unwrap().unwrap(), b);
+    assert_eq!(reader.pending_bytes(), 0);
 }
 
 #[test]
