@@ -1,7 +1,21 @@
 # MicroAdam reproduction — build/test lanes.
 #
 #   make ci          default lane: XLA-free build + tests + doctests +
-#                    warning-clean rustdoc (runs anywhere)
+#                    warning-clean rustdoc + `make lint` (runs anywhere)
+#   make lint        correctness-analysis lane, toolchain-free: repolint
+#                    self-test + repolint over the repo, then clippy with
+#                    -D warnings where clippy is installed (the allowlist
+#                    is committed in the root Cargo.toml [workspace.lints])
+#   make loom        model-checking lane: RUSTFLAGS="--cfg loom" builds the
+#                    rust/tests/loom suite against the in-tree minloom
+#                    checker and explores the ExecPool dispatch/barrier and
+#                    StreamHub relay-ordering protocols schedule-by-schedule
+#   make miri        nightly-gated: Miri over the unsafe-exercising unit
+#                    tests (exec dispatch, checkpoint byte reinterprets);
+#                    skips with a notice where no nightly+miri toolchain
+#   make ci-sanitize nightly-gated: ThreadSanitizer over the exec pool and
+#                    the uds/tcp transport parity tests; skips with a
+#                    notice where nightly+rust-src are unavailable
 #   make ci-pjrt     PJRT-gated lane: `cargo test --features pjrt` where the
 #                    vendored xla crate exists (see rust/Cargo.toml); skips
 #                    with a notice elsewhere, so CI can always invoke it.
@@ -27,7 +41,7 @@ XLA_RS ?= /opt/xla-rs
 # Where the smoke lane writes its JSON record.
 BENCH_JSON ?= BENCH_SMOKE.json
 
-.PHONY: ci ci-pjrt bench-smoke artifacts test-tcp
+.PHONY: ci ci-pjrt bench-smoke artifacts test-tcp lint loom miri ci-sanitize
 
 ci:
 	cargo build --release
@@ -37,6 +51,66 @@ ci:
 	cargo test -q
 	cargo test --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	$(MAKE) lint
+
+# Static invariants (rust/tools/repolint: SAFETY comments on unsafe,
+# panic-free dist:: decode paths, wire constants pinned to the normative
+# spec, lossless byte accounting) + clippy. The repolint self-test runs
+# first: every rule must fire on its seeded fixture violation before the
+# real tree is trusted to a clean pass.
+lint:
+	cargo run --release -p repolint -- --self-test
+	cargo run --release -p repolint -- --root .
+	@if cargo clippy --version >/dev/null 2>&1; then \
+		cargo clippy --workspace --all-targets -- -D warnings; \
+	else \
+		echo "lint: cargo clippy not installed — skipping the clippy leg"; \
+	fi
+
+# Model-checking lane. --cfg loom swaps the exec/dist sync shims for the
+# scheduler-instrumented minloom types (rust/Cargo.toml maps the `loom`
+# name onto rust/tools/minloom, so resolution stays offline) and compiles
+# the rust/tests/loom suite, which is empty under a plain `cargo test`.
+# Release mode: the checker replays each test thousands of times.
+loom:
+	RUSTFLAGS="--cfg loom" cargo test --release -p microadam --test loom
+
+# Miri over the targeted unsafe-exercising tests: the ExecPool dispatch
+# protocol (raw job pointer + barrier) and the checkpoint f32/i32 byte
+# reinterprets. Gated: runs only where a nightly toolchain with the miri
+# component exists, and skips loudly otherwise so CI can always invoke it.
+miri:
+	@if ! cargo +nightly miri --version >/dev/null 2>&1; then \
+		echo "miri: no nightly toolchain with the miri component — skipping"; \
+		echo "      (rustup toolchain install nightly && rustup +nightly component add miri)"; \
+		exit 0; \
+	fi; \
+	MIRIFLAGS="-Zmiri-disable-isolation" \
+		cargo +nightly miri test -p microadam --lib -- exec:: checkpoint:: bf16
+# -Zmiri-disable-isolation: the trainer/checkpoint tests touch the real
+# filesystem (tempdirs) and the clock.
+
+# ThreadSanitizer over the threaded subsystems: the exec pool unit tests
+# and the uds/tcp transport parity suites (launcher_ tests excluded — they
+# drive the release `microadam` binary, which TSan did not instrument).
+# Needs nightly + rust-src (-Zbuild-std rebuilds std with TSan); skips
+# loudly otherwise.
+ci-sanitize:
+	@if ! cargo +nightly --version >/dev/null 2>&1; then \
+		echo "ci-sanitize: no nightly toolchain — skipping"; \
+		exit 0; \
+	fi; \
+	if ! rustup +nightly component list --installed 2>/dev/null | grep -q rust-src; then \
+		echo "ci-sanitize: nightly rust-src component missing — skipping"; \
+		echo "             (rustup +nightly component add rust-src)"; \
+		exit 0; \
+	fi; \
+	HOST=$$(rustc -vV | sed -n 's/^host: //p'); \
+	RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+		--target $$HOST -p microadam --lib -- exec:: && \
+	RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+		--target $$HOST -p microadam --test test_transport_parity \
+		--test test_tcp_parity -- --skip launcher_
 
 # The tcp transport lane by itself (also part of `make ci` via cargo test).
 test-tcp:

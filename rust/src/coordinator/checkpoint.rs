@@ -96,6 +96,9 @@ impl Checkpoint {
 }
 
 fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // SAFETY: `f32` is plain-old-data with no padding, so viewing the
+    // slice as `xs.len() * 4` initialized bytes is valid; the borrow is
+    // consumed by `write_all` before `xs` can move or drop.
     let bytes =
         unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
     w.write_all(bytes)?;
@@ -103,6 +106,9 @@ fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
 }
 
 fn write_i32s<W: Write>(w: &mut W, xs: &[i32]) -> Result<()> {
+    // SAFETY: `i32` is plain-old-data with no padding, so viewing the
+    // slice as `xs.len() * 4` initialized bytes is valid; the borrow is
+    // consumed by `write_all` before `xs` can move or drop.
     let bytes =
         unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
     w.write_all(bytes)?;

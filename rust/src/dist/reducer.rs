@@ -422,6 +422,7 @@ impl SparseCore {
                     idx,
                     val,
                     ef,
+                    // repolint: allow(no-panic): sels was sized to one scratch per rank above.
                     sel: sel_iter.next().expect("one scratch per rank"),
                 });
             }

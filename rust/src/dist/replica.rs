@@ -19,7 +19,7 @@
 //! what makes the `ranks=1` + dense-reduce parity guarantee testable
 //! bit-for-bit.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::trainer::Data;
 use crate::data::NliDataset;
@@ -139,8 +139,15 @@ impl ArtifactReplica {
         let mut inputs = vec![params.clone()];
         inputs.extend(self.data.next_batch_literals()?);
         let mut outs = rt.execute_named(model, &inputs)?;
-        let g = outs.pop().unwrap();
-        let loss = outs.pop().unwrap();
+        if outs.len() < 2 {
+            bail!("dist: fwd/bwd artifact returned {} outputs, expected loss + grads", outs.len());
+        }
+        let Some(g) = outs.pop() else {
+            bail!("dist: fwd/bwd artifact returned no gradient output");
+        };
+        let Some(loss) = outs.pop() else {
+            bail!("dist: fwd/bwd artifact returned no loss output");
+        };
         self.last_loss = runtime::scalar_f32(&loss)?;
         self.grads = runtime::to_f32(&g)?;
         Ok(())

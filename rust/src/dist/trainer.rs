@@ -136,7 +136,7 @@ impl DistTrainer {
         }
         if local_ranks.is_empty()
             || local_ranks.windows(2).any(|w| w[0] >= w[1])
-            || *local_ranks.last().expect("non-empty") >= ranks
+            || local_ranks.iter().any(|&r| r >= ranks)
         {
             bail!("dist: local_ranks must be ascending, unique and < {ranks}");
         }

@@ -476,8 +476,13 @@ impl<S: GatherStream> StreamHub<S> {
                     continue;
                 }
                 while p.sent_upto[i] < p.prefix {
-                    let bytes =
-                        p.encoded[p.sent_upto[i]].as_ref().expect("prefix frames are encoded");
+                    let bytes = p.encoded[p.sent_upto[i]].as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "{kind}: relay invariant broken — rank {} is inside the gathered \
+                             prefix but has no encoded bytes",
+                            p.sent_upto[i]
+                        )
+                    })?;
                     self.workers[i]
                         .write_all(bytes)
                         .with_context(|| format!("{kind}: relay to rank {}", i + 1))?;
@@ -490,7 +495,15 @@ impl<S: GatherStream> StreamHub<S> {
                 self.overlap_micros += t0.elapsed().as_micros() as u64;
             }
         }
-        Ok(p.frames.iter_mut().map(|f| f.take().expect("all frames gathered")).collect())
+        p.frames
+            .iter_mut()
+            .enumerate()
+            .map(|(r, f)| {
+                f.take().ok_or_else(|| {
+                    anyhow!("{kind}: gather loop finished with rank {r}'s frame missing")
+                })
+            })
+            .collect()
     }
 }
 
@@ -529,7 +542,9 @@ impl<S: GatherStream> StreamEndpoint<S> {
         if local.len() != 1 {
             bail!("{} endpoints host exactly one rank, got {} frames", self.name, local.len());
         }
-        let mine = local.pop().expect("one frame");
+        let Some(mine) = local.pop() else {
+            bail!("{}: post_send needs this endpoint's frame", self.name);
+        };
         let name = self.name;
         match &mut self.role {
             StreamRole::Coordinator { hub } => hub.post_send(mine, name),
@@ -677,7 +692,15 @@ where
         let hello = read_hello(&mut stream, name, hello_wait)?;
         place_worker(&mut slots, stream, hello.rank as usize, name)?;
     }
-    Ok(slots.into_iter().map(|s| s.expect("every slot filled by the accept loop")).collect())
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.ok_or_else(|| {
+                anyhow!("{name}: accept loop ended with rank {}'s stream unfilled", i + 1)
+            })
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -1258,7 +1281,9 @@ impl Transport for ShmTransport {
         if local.len() != 1 {
             bail!("shm endpoints host exactly one rank, got {} frames", local.len());
         }
-        let mine = local.pop().expect("one frame");
+        let Some(mine) = local.pop() else {
+            bail!("shm: post_send needs this endpoint's frame");
+        };
         match &mut self.role {
             ShmRole::Coordinator { pending, .. } => {
                 if pending.is_some() {
@@ -1344,8 +1369,16 @@ impl Transport for ShmTransport {
                         std::thread::sleep(Duration::from_micros(50));
                     }
                 }
-                let frames: Vec<Frame> =
-                    p.frames.into_iter().map(|f| f.expect("all gathered")).collect();
+                let frames: Vec<Frame> = p
+                    .frames
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, f)| {
+                        f.ok_or_else(|| {
+                            anyhow!("shm: gather loop finished with rank {r}'s frame missing")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
                 let mut bundle = Vec::new();
                 for f in &frames {
                     f.encode_into(&mut bundle);
@@ -1389,6 +1422,195 @@ impl Transport for ShmTransport {
 
     fn last_arrival(&self) -> &[u16] {
         &self.last_arrival
+    }
+}
+
+/// In-memory stream harness for the loom model-checking lane
+/// (`rust/tests/loom/`): drives the *real* [`StreamHub`] gather/relay
+/// loop over scheduler-instrumented pipes and machine-checks the relay
+/// ordering invariant — the hub never writes relay bytes to a worker
+/// before that worker's own uplink frame has fully landed (the
+/// `PendingGather::ready` gating; relaying earlier can deadlock two
+/// blocking writes against each other on real sockets).
+#[cfg(loom)]
+pub mod loom_model {
+    use std::io::{Read, Write};
+
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    use super::{GatherStream, StreamHub};
+    use crate::dist::wire::{Frame, PayloadTag};
+
+    /// One direction of a model pipe: appended by the writer, consumed
+    /// front-to-back by the reader.
+    #[derive(Default)]
+    struct Dir {
+        data: Vec<u8>,
+        read: usize,
+    }
+
+    /// One hub<->worker connection.
+    struct Conn {
+        up: Mutex<Dir>,
+        down: Mutex<Dir>,
+        /// Exact byte length of the worker's uplink frame this round —
+        /// the hub may only relay once all of it has been consumed.
+        expected_uplink: usize,
+    }
+
+    /// The hub's side: non-blocking reads (WouldBlock + a scheduler
+    /// yield when the uplink is drained), relay writes checked against
+    /// the ordering invariant.
+    struct HubSide {
+        conn: Arc<Conn>,
+    }
+
+    impl Read for HubSide {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            {
+                let mut up = self.conn.up.lock().unwrap_or_else(|e| e.into_inner());
+                if up.read < up.data.len() {
+                    let n = out.len().min(up.data.len() - up.read);
+                    out[..n].copy_from_slice(&up.data[up.read..up.read + n]);
+                    up.read += n;
+                    return Ok(n);
+                }
+            }
+            // Park until a worker makes progress, then report "no bytes
+            // yet" exactly like a timed-out socket read.
+            thread::yield_now();
+            Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "model uplink empty"))
+        }
+    }
+
+    impl Write for HubSide {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            {
+                let up = self.conn.up.lock().unwrap_or_else(|e| e.into_inner());
+                assert!(
+                    up.data.len() == self.conn.expected_uplink && up.read == up.data.len(),
+                    "relay-ordering violation: hub relayed to a worker whose uplink \
+                     frame has not fully landed ({} of {} bytes consumed)",
+                    up.read,
+                    self.conn.expected_uplink
+                );
+            }
+            let mut down = self.conn.down.lock().unwrap_or_else(|e| e.into_inner());
+            down.data.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl GatherStream for HubSide {
+        fn set_recv_timeout(&self, _t: Option<std::time::Duration>) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// A worker's side: blocking reads (cooperatively spinning on the
+    /// scheduler), appending writes.
+    struct WorkerSide {
+        conn: Arc<Conn>,
+    }
+
+    impl Read for WorkerSide {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            loop {
+                {
+                    let mut down = self.conn.down.lock().unwrap_or_else(|e| e.into_inner());
+                    if down.read < down.data.len() {
+                        let n = out.len().min(down.data.len() - down.read);
+                        out[..n].copy_from_slice(&down.data[down.read..down.read + n]);
+                        down.read += n;
+                        return Ok(n);
+                    }
+                }
+                thread::yield_now();
+            }
+        }
+    }
+
+    impl Write for WorkerSide {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let mut up = self.conn.up.lock().unwrap_or_else(|e| e.into_inner());
+            up.data.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// One model round of the pipelined gather, `ranks = 3`: two worker
+    /// threads upload their frames (split mid-header, so the hub's
+    /// incremental assembly is exercised), the hub gathers and relays,
+    /// and each worker reads back the full rank-ascending bundle.
+    /// Checked on every explored schedule: the relay-ordering invariant
+    /// (in [`HubSide::write`]), rank-ascending bundles at the workers,
+    /// and a complete rank-ordered gather at the hub.
+    pub fn relay_ordering_model() {
+        const RANKS: usize = 3;
+        const STEP: u64 = 7;
+        let mk = |rank: usize| Frame {
+            rank: rank as u16,
+            step: STEP,
+            tag: PayloadTag::Dense,
+            flags: 0,
+            loss: 0.25,
+            payload: vec![rank as u8; 3],
+            stats: Vec::new(),
+        };
+
+        let conns: Vec<Arc<Conn>> = (1..RANKS)
+            .map(|r| {
+                Arc::new(Conn {
+                    up: Mutex::new(Dir::default()),
+                    down: Mutex::new(Dir::default()),
+                    expected_uplink: mk(r).encoded_len(),
+                })
+            })
+            .collect();
+
+        let workers: Vec<_> = (1..RANKS)
+            .map(|r| {
+                let conn = Arc::clone(&conns[r - 1]);
+                let frame = mk(r);
+                thread::spawn(move || {
+                    let mut s = WorkerSide { conn };
+                    let bytes = frame.encode();
+                    // Split mid-header: the hub must assemble partial
+                    // segments without ever relaying early.
+                    let cut = 10.min(bytes.len());
+                    s.write_all(&bytes[..cut]).expect("model pipe write");
+                    thread::yield_now();
+                    s.write_all(&bytes[cut..]).expect("model pipe write");
+                    for want in 0..RANKS {
+                        let f = Frame::read_from(&mut s).expect("bundle frame");
+                        assert_eq!(f.rank as usize, want, "bundle must be rank-ascending");
+                        assert_eq!(f.step, STEP, "bundle frame from the wrong step");
+                    }
+                })
+            })
+            .collect();
+
+        let hub_sides: Vec<HubSide> =
+            conns.iter().map(|c| HubSide { conn: Arc::clone(c) }).collect();
+        let mut hub = StreamHub::new(hub_sides, RANKS);
+        hub.post_send(mk(0), "loom").expect("hub post_send");
+        let frames = hub.collect("loom").expect("hub collect");
+        assert_eq!(frames.len(), RANKS, "gather must return every rank's frame");
+        for (r, f) in frames.iter().enumerate() {
+            assert_eq!(f.rank as usize, r, "gather must be rank-ordered");
+        }
+        for w in workers {
+            w.join().expect("model worker");
+        }
     }
 }
 

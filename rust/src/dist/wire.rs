@@ -193,6 +193,32 @@ const CRC_TABLE: [u32; 256] = {
     table
 };
 
+// Little-endian field readers for the decode paths. Callers verify the
+// buffer length before slicing (decode and frame_len both gate on
+// HEADER_BYTES / the computed total first), and building the byte arrays
+// by index keeps the hot decode path free of `try_into().expect(..)` —
+// the no-panic rule for this module is machine-enforced by repolint.
+fn le_u16(b: &[u8], o: usize) -> u16 {
+    u16::from_le_bytes([b[o], b[o + 1]])
+}
+
+fn le_u32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
+}
+
+fn le_u64(b: &[u8], o: usize) -> u64 {
+    u64::from_le_bytes([
+        b[o],
+        b[o + 1],
+        b[o + 2],
+        b[o + 3],
+        b[o + 4],
+        b[o + 5],
+        b[o + 6],
+        b[o + 7],
+    ])
+}
+
 /// IEEE CRC-32 of `bytes` (zlib-compatible).
 pub fn crc32(bytes: &[u8]) -> u32 {
     let mut c = 0xFFFF_FFFFu32;
@@ -260,19 +286,17 @@ impl Frame {
         if buf[0..4] != MAGIC {
             return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
         }
-        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        let version = le_u16(buf, 4);
         if version != VERSION {
             return Err(WireError::BadVersion(version));
         }
-        let rank = u16::from_le_bytes([buf[6], buf[7]]);
-        let step = u64::from_le_bytes(buf[8..16].try_into().expect("8 bytes"));
+        let rank = le_u16(buf, 6);
+        let step = le_u64(buf, 8);
         let tag = PayloadTag::from_byte(buf[16])?;
         let flags = buf[17];
-        let loss = f32::from_bits(u32::from_le_bytes(buf[18..22].try_into().expect("4 bytes")));
-        let payload_len =
-            u32::from_le_bytes(buf[22..26].try_into().expect("4 bytes")) as usize;
-        let stats_count =
-            u32::from_le_bytes(buf[26..30].try_into().expect("4 bytes")) as usize;
+        let loss = f32::from_bits(le_u32(buf, 18));
+        let payload_len = le_u32(buf, 22) as usize;
+        let stats_count = le_u32(buf, 26) as usize;
         if payload_len > MAX_SECTION_BYTES {
             return Err(WireError::TooLarge(payload_len));
         }
@@ -283,7 +307,7 @@ impl Frame {
         if buf.len() < total {
             return Err(WireError::Truncated { need: total, have: buf.len() });
         }
-        let expect = u32::from_le_bytes(buf[total - 4..total].try_into().expect("4 bytes"));
+        let expect = le_u32(buf, total - 4);
         let got = crc32(&buf[..total - 4]);
         if expect != got {
             return Err(WireError::BadCrc { expect, got });
@@ -292,10 +316,8 @@ impl Frame {
         let mut stats = Vec::with_capacity(stats_count);
         let mut o = HEADER_BYTES + payload_len;
         for _ in 0..stats_count {
-            let lo = f32::from_bits(u32::from_le_bytes(buf[o..o + 4].try_into().expect("4 bytes")));
-            let hi = f32::from_bits(u32::from_le_bytes(
-                buf[o + 4..o + 8].try_into().expect("4 bytes"),
-            ));
+            let lo = f32::from_bits(le_u32(buf, o));
+            let hi = f32::from_bits(le_u32(buf, o + 4));
             stats.push(BucketStats { lo, hi });
             o += 8;
         }
@@ -340,12 +362,12 @@ pub fn frame_len(header: &[u8]) -> Result<usize, WireError> {
     if header[0..4] != MAGIC {
         return Err(WireError::BadMagic([header[0], header[1], header[2], header[3]]));
     }
-    let version = u16::from_le_bytes([header[4], header[5]]);
+    let version = le_u16(header, 4);
     if version != VERSION {
         return Err(WireError::BadVersion(version));
     }
-    let payload_len = u32::from_le_bytes(header[22..26].try_into().expect("4 bytes")) as usize;
-    let stats_count = u32::from_le_bytes(header[26..30].try_into().expect("4 bytes")) as usize;
+    let payload_len = le_u32(header, 22) as usize;
+    let stats_count = le_u32(header, 26) as usize;
     if payload_len > MAX_SECTION_BYTES {
         return Err(WireError::TooLarge(payload_len));
     }

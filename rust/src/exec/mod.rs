@@ -26,8 +26,55 @@
 //! they stay warm whichever worker picks the shard up.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+
+use self::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use self::sync::{Arc, Condvar, Mutex};
+
+/// Sync-primitive shim for the loom model-checking lane.
+///
+/// Under a plain build this re-exports `std`; under `--cfg loom`
+/// (`make loom`) it swaps in the scheduler-instrumented types from the
+/// in-tree `minloom` crate so `rust/tests/loom/` can exhaustively
+/// explore the dispatch/barrier protocol below. Production code paths
+/// are identical either way — only the primitive types change.
+pub(crate) mod sync {
+    #[cfg(not(loom))]
+    pub(crate) use std::sync::{Arc, Condvar, Mutex};
+    #[cfg(not(loom))]
+    pub(crate) mod atomic {
+        pub(crate) use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    }
+    #[cfg(not(loom))]
+    pub(crate) type JoinHandle = std::thread::JoinHandle<()>;
+    #[cfg(not(loom))]
+    pub(crate) fn spawn_worker(name: String, f: impl FnOnce() + Send + 'static) -> JoinHandle {
+        std::thread::Builder::new().name(name).spawn(f).expect("spawn exec worker")
+    }
+
+    #[cfg(loom)]
+    pub(crate) use loom::sync::{Arc, Condvar, Mutex};
+    #[cfg(loom)]
+    pub(crate) mod atomic {
+        pub(crate) use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    }
+    #[cfg(loom)]
+    pub(crate) type JoinHandle = loom::thread::JoinHandle<()>;
+    #[cfg(loom)]
+    pub(crate) fn spawn_worker(_name: String, f: impl FnOnce() + Send + 'static) -> JoinHandle {
+        loom::thread::spawn(f)
+    }
+
+    /// Cooperative pause inside spin/poll loops: a real yield on std,
+    /// a scheduling point under loom so polling cannot starve the
+    /// model's other threads.
+    #[allow(dead_code)]
+    pub(crate) fn yield_now() {
+        #[cfg(not(loom))]
+        std::thread::yield_now();
+        #[cfg(loom)]
+        loom::thread::yield_now();
+    }
+}
 
 /// A fixed-width pool of persistent, parked worker threads.
 ///
@@ -64,8 +111,11 @@ impl Default for ExecPool {
 struct Job {
     task: *const (dyn Fn(usize) + Sync),
 }
-// The pointee is Sync and the pointer is only dereferenced between
-// dispatch and barrier, while the caller guarantees it stays alive.
+// SAFETY: the pointee is `Sync` (shared calls from several threads are
+// fine) and the pointer is only dereferenced between dispatch and the
+// completion barrier; `run_shards` pins the pointee's stack frame for
+// exactly that window via `WaitGuard`, so sending the pointer to the
+// workers cannot outlive the data.
 unsafe impl Send for Job {}
 
 struct PoolState {
@@ -89,7 +139,7 @@ struct PoolHandle {
     inner: Arc<PoolInner>,
     /// Serializes dispatches from clones sharing the threads.
     dispatch: Mutex<()>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    threads: Vec<sync::JoinHandle>,
 }
 
 impl Drop for PoolHandle {
@@ -121,8 +171,11 @@ fn worker_loop(inner: Arc<PoolInner>, id: usize) {
                 st = inner.work_cv.wait(st).unwrap();
             }
         };
-        // Safe: the dispatcher keeps the pointee alive until every worker
-        // has checked back in below.
+        // SAFETY: `job.task` was published under the state lock together
+        // with this epoch, and the dispatching `run_shards` frame (which
+        // owns the pointee) blocks in `WaitGuard::drop` until this worker
+        // decrements `remaining` below — the pointee is alive for the
+        // whole call.
         unsafe { (&*job.task)(id) };
         let mut st = inner.state.lock().unwrap();
         st.remaining -= 1;
@@ -171,10 +224,7 @@ impl ExecPool {
         let threads = (1..workers)
             .map(|i| {
                 let inner = Arc::clone(&inner);
-                std::thread::Builder::new()
-                    .name(format!("microadam-exec-{i}"))
-                    .spawn(move || worker_loop(inner, i))
-                    .expect("spawn exec worker")
+                sync::spawn_worker(format!("microadam-exec-{i}"), move || worker_loop(inner, i))
             })
             .collect();
         Self { workers, handle: Some(Arc::new(PoolHandle { inner, dispatch: Mutex::new(()), threads })) }
@@ -247,9 +297,10 @@ impl ExecPool {
         };
 
         let task: &(dyn Fn(usize) + Sync) = &run;
-        // Erase the borrow's lifetime into the raw job pointer. Sound
-        // because the WaitGuard below pins this stack frame until every
-        // worker has finished dereferencing it.
+        // SAFETY: erases the borrow's lifetime into a raw job pointer.
+        // Sound because the `WaitGuard` below pins this stack frame (even
+        // through an unwinding shard panic) until every worker checks in,
+        // so no worker can dereference it after `run` is gone.
         let task: *const (dyn Fn(usize) + Sync) =
             unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task) };
         let inner: &PoolInner = &handle.inner;
@@ -400,7 +451,10 @@ mod tests {
         // spawn per step. Correctness leg: every dispatch sees every shard.
         let pool = ExecPool::new(4);
         let mut data = vec![0u64; 64];
-        for round in 0..200u64 {
+        // Miri exercises the unsafe dispatch path just as well with a
+        // handful of rounds and is ~100x slower per round.
+        let rounds: u64 = if cfg!(miri) { 8 } else { 200 };
+        for round in 0..rounds {
             let shards: Vec<&mut [u64]> = data.chunks_mut(16).collect();
             pool.run_shards(shards, |_, chunk| {
                 for v in chunk {
@@ -408,7 +462,7 @@ mod tests {
                 }
             });
         }
-        let expect = (1..=200u64).sum::<u64>();
+        let expect = (1..=rounds).sum::<u64>();
         assert!(data.iter().all(|&v| v == expect), "{} != {expect}", data[0]);
     }
 
@@ -466,6 +520,24 @@ mod tests {
             });
         }));
         assert!(r.is_err());
+        let mut data = vec![0u32; 8];
+        let shards: Vec<&mut u32> = data.iter_mut().collect();
+        pool.run_shards(shards, |i, v| *v = i as u32 + 1);
+        assert_eq!(data.iter().sum::<u32>(), (1..=8).sum::<u32>());
+    }
+
+    #[test]
+    fn every_shard_panicking_cannot_deadlock_the_barrier() {
+        // Worst case for the barrier: *all* shards panic, including the
+        // caller's own. The WaitGuard must still drain the workers, the
+        // step must surface the panic, and the pool must stay usable.
+        let pool = ExecPool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_shards((0..12).collect::<Vec<usize>>(), |_, v| {
+                panic!("shard {v} down");
+            });
+        }));
+        assert!(r.is_err(), "the panic must propagate to the caller");
         let mut data = vec![0u32; 8];
         let shards: Vec<&mut u32> = data.iter_mut().collect();
         pool.run_shards(shards, |i, v| *v = i as u32 + 1);

@@ -178,7 +178,9 @@ pub fn empty_u8() -> Literal {
 }
 
 fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
-    // Safety: plain-old-data reinterpretation for literal upload only.
+    // SAFETY: `T: Copy` here is always a primitive numeric type with no
+    // padding; the byte view covers exactly `size_of_val(data)` initialized
+    // bytes and lives only for the literal upload call.
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     }

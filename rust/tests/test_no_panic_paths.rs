@@ -1,0 +1,89 @@
+//! Regression tests for the `dist::` no-panic guarantee.
+//!
+//! repolint (rust/tools/repolint, run by `make lint`) statically forbids
+//! `unwrap`/`expect`/`panic!` in the dist wire/transport/reducer decode
+//! paths; these tests pin the behavioural side of that contract: feed
+//! the paths the failure modes that used to be "can't happen" expects —
+//! truncated frames, a peer that dies mid-round — and assert they come
+//! back as typed errors on `Result`, never as panics or hangs. (The
+//! poisoned-lock leg lives with the `ExecPool` unit tests:
+//! `pool_survives_a_caught_shard_panic` and
+//! `every_shard_panicking_cannot_deadlock_the_barrier`.)
+
+use microadam::dist::transport::{TcpPending, TcpTransport, Transport, UdsPending, UdsTransport};
+use microadam::dist::wire::{Frame, FrameReader, PayloadTag, WireError};
+
+fn gframe(rank: usize, step: u64) -> Frame {
+    Frame {
+        rank: rank as u16,
+        step,
+        tag: PayloadTag::Dense,
+        flags: 0,
+        loss: 0.0,
+        payload: vec![1, 2, 3, 4],
+        stats: Vec::new(),
+    }
+}
+
+#[test]
+fn truncated_frames_are_typed_errors_not_panics() {
+    let bytes = gframe(0, 1).encode();
+    // cut inside the header, at field boundaries, and one byte short of
+    // a complete frame — every prefix is a typed Truncated error
+    for cut in [0usize, 4, 12, 29, bytes.len() - 1] {
+        match Frame::decode(&bytes[..cut]) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+        }
+    }
+    // and through the incremental reader: a peer that disconnects
+    // mid-frame is a typed error, not a hang or a partial frame
+    let mut r = FrameReader::new();
+    let mut cut = std::io::Cursor::new(bytes[..bytes.len() - 3].to_vec());
+    assert!(matches!(r.poll_read(&mut cut), Err(WireError::Truncated { .. })));
+}
+
+#[test]
+fn tcp_worker_survives_a_dead_coordinator() {
+    let pending = TcpPending::bind("127.0.0.1:0", 2).unwrap();
+    let addr = pending.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let mut t = TcpTransport::connect(&addr, 1, 2).unwrap();
+        // The coordinator dies between rendezvous and the exchange. The
+        // send may succeed (kernel-buffered) or fail with a broken pipe;
+        // either way the round must end in an error, not a panic.
+        let posted = t.post_send(vec![gframe(1, 1)]);
+        match posted {
+            Ok(()) => t.collect().map(|_| ()),
+            Err(e) => Err(e),
+        }
+    });
+    let coord = pending.accept().unwrap();
+    drop(coord);
+    let res = h.join().expect("worker thread must not panic");
+    assert!(res.is_err(), "a dead coordinator must surface as a typed error");
+}
+
+#[test]
+fn uds_worker_survives_a_dead_coordinator() {
+    let path = std::env::temp_dir().join(format!(
+        "microadam-nopanic-{}-{:?}.sock",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let pending = UdsPending::bind(&path, 2).unwrap();
+    let sock = path.clone();
+    let h = std::thread::spawn(move || {
+        let mut t = UdsTransport::connect(&sock, 1, 2).unwrap();
+        let posted = t.post_send(vec![gframe(1, 1)]);
+        match posted {
+            Ok(()) => t.collect().map(|_| ()),
+            Err(e) => Err(e),
+        }
+    });
+    let coord = pending.accept().unwrap();
+    drop(coord);
+    let res = h.join().expect("worker thread must not panic");
+    assert!(res.is_err(), "a dead coordinator must surface as a typed error");
+    let _ = std::fs::remove_file(&path);
+}

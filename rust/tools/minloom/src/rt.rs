@@ -1,0 +1,498 @@
+//! The cooperative scheduler and DFS schedule explorer.
+//!
+//! One [`Runtime`] is built per execution. Model threads are real OS
+//! threads, but exactly one is ever granted the right to run: at every
+//! scheduling point the running thread parks itself and hands control
+//! to the scheduler (the `model()` caller's thread), which either
+//! replays the recorded decision prefix or extends it with a default
+//! choice, logging the untried alternatives for later backtracking.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+pub(crate) type Tid = usize;
+
+/// Silent-unwind payload used to tear threads down once the scheduler
+/// has recorded a failure; `resume_unwind` skips the panic hook, so the
+/// teardown does not spray spurious backtraces over the real report.
+pub(crate) struct AbortExecution;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    /// Parked by `yield_now` until another thread makes progress.
+    Yielded,
+    BlockedMutex(usize),
+    BlockedCondvar(usize),
+    BlockedJoin(Tid),
+    Finished,
+}
+
+#[derive(Default)]
+struct MutexState {
+    owner: Option<Tid>,
+    poisoned: bool,
+}
+
+#[derive(Default)]
+struct CvState {
+    /// `(waiter, mutex)` pairs: which thread is parked and which mutex
+    /// it must re-acquire once notified.
+    waiters: Vec<(Tid, usize)>,
+}
+
+struct RtState {
+    running: Option<Tid>,
+    threads: Vec<Status>,
+    mutexes: Vec<MutexState>,
+    condvars: Vec<CvState>,
+    /// Thread that completed the most recent step (continuation
+    /// candidate for preemption accounting).
+    last: Option<Tid>,
+    steps: usize,
+    failure: Option<String>,
+}
+
+pub(crate) struct Runtime {
+    state: Mutex<RtState>,
+    cv: Condvar,
+    max_steps: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Runtime>, Tid)>> = const { RefCell::new(None) };
+}
+
+fn with_rt<R>(f: impl FnOnce(&Arc<Runtime>, Tid) -> R) -> R {
+    CURRENT.with(|c| {
+        let borrow = c.borrow();
+        let (rt, tid) = borrow
+            .as_ref()
+            .expect("minloom sync primitives may only be used inside minloom::model");
+        f(rt, *tid)
+    })
+}
+
+fn abort_unwind() -> ! {
+    std::panic::resume_unwind(Box::new(AbortExecution));
+}
+
+impl Runtime {
+    fn new(max_steps: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(RtState {
+                running: None,
+                threads: Vec::new(),
+                mutexes: Vec::new(),
+                condvars: Vec::new(),
+                last: None,
+                steps: 0,
+                failure: None,
+            }),
+            cv: Condvar::new(),
+            max_steps,
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RtState> {
+        // The runtime's own mutex is only poisoned if minloom itself
+        // has a bug mid-panic; recover so the diagnostic still surfaces.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Park the calling model thread with `status` (after applying
+    /// `pre` under the state lock) and block until the scheduler grants
+    /// it the next step. The heart of every scheduling point.
+    fn transition(self: &Arc<Self>, me: Tid, status: Status, pre: impl FnOnce(&mut RtState)) {
+        let mut st = self.lock();
+        pre(&mut st);
+        st.steps += 1;
+        if st.steps > self.max_steps && st.failure.is_none() {
+            st.failure = Some(format!(
+                "per-execution step bound {} exceeded — livelock, or a model too big \
+                 for exhaustive exploration",
+                self.max_steps
+            ));
+        }
+        st.threads[me] = status;
+        // Progress by this thread unparks everyone who yielded to wait
+        // for it.
+        for t in 0..st.threads.len() {
+            if t != me && st.threads[t] == Status::Yielded {
+                st.threads[t] = Status::Runnable;
+            }
+        }
+        st.last = Some(me);
+        st.running = None;
+        self.cv.notify_all();
+        loop {
+            if st.running == Some(me) {
+                return;
+            }
+            if st.failure.is_some() {
+                drop(st);
+                if std::thread::panicking() {
+                    // Already unwinding (e.g. a guard drop): let the
+                    // existing unwind continue instead of double-panicking.
+                    return;
+                }
+                abort_unwind();
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// First park of a freshly spawned thread: wait to be granted
+    /// without counting a step. Returns false if the execution was
+    /// already abandoned.
+    fn wait_first_grant(self: &Arc<Self>, me: Tid) -> bool {
+        let mut st = self.lock();
+        loop {
+            if st.running == Some(me) {
+                return true;
+            }
+            if st.failure.is_some() {
+                return false;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn record_failure(self: &Arc<Self>, msg: String) {
+        let mut st = self.lock();
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.running = None;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-facing operations (called from sync/thread modules via TLS)
+// ---------------------------------------------------------------------
+
+/// A plain scheduling point (atomic access, explicit interleave).
+pub(crate) fn sched_point() {
+    with_rt(|rt, me| rt.transition(me, Status::Runnable, |_| {}));
+}
+
+/// Park until another thread makes progress.
+pub(crate) fn yield_now() {
+    with_rt(|rt, me| rt.transition(me, Status::Yielded, |_| {}));
+}
+
+pub(crate) fn register_mutex() -> usize {
+    with_rt(|rt, _| {
+        let mut st = rt.lock();
+        st.mutexes.push(MutexState::default());
+        st.mutexes.len() - 1
+    })
+}
+
+pub(crate) fn register_condvar() -> usize {
+    with_rt(|rt, _| {
+        let mut st = rt.lock();
+        st.condvars.push(CvState::default());
+        st.condvars.len() - 1
+    })
+}
+
+/// Cooperative mutex acquire: an interleaving point, then either an
+/// immediate grab or a block until the scheduler hands over ownership.
+/// Returns the poison flag.
+pub(crate) fn mutex_lock(id: usize) -> bool {
+    with_rt(|rt, me| {
+        rt.transition(me, Status::Runnable, |_| {});
+        let contended = {
+            let mut st = rt.lock();
+            if st.mutexes[id].owner.is_none() {
+                st.mutexes[id].owner = Some(me);
+                false
+            } else {
+                true
+            }
+        };
+        if contended {
+            // The scheduler assigns ownership as part of the grant.
+            rt.transition(me, Status::BlockedMutex(id), |_| {});
+        }
+        rt.lock().mutexes[id].poisoned
+    })
+}
+
+pub(crate) fn mutex_unlock(id: usize) {
+    with_rt(|rt, me| {
+        rt.transition(me, Status::Runnable, |st| {
+            st.mutexes[id].owner = None;
+            if std::thread::panicking() {
+                st.mutexes[id].poisoned = true;
+            }
+        });
+    });
+}
+
+pub(crate) fn mutex_poisoned(id: usize) -> bool {
+    with_rt(|rt, _| rt.lock().mutexes[id].poisoned)
+}
+
+/// Atomically enqueue on the condvar and release the mutex, park until
+/// notified, then re-acquire the mutex (the scheduler grants ownership
+/// with the wakeup). Returns the mutex poison flag.
+pub(crate) fn condvar_wait(cv: usize, mutex: usize) -> bool {
+    with_rt(|rt, me| {
+        rt.transition(me, Status::BlockedCondvar(cv), |st| {
+            st.condvars[cv].waiters.push((me, mutex));
+            st.mutexes[mutex].owner = None;
+        });
+        // Granted: the scheduler moved us to BlockedMutex on notify and
+        // set ownership before waking us.
+        rt.lock().mutexes[mutex].poisoned
+    })
+}
+
+pub(crate) fn condvar_notify(cv: usize, all: bool) {
+    with_rt(|rt, me| {
+        rt.transition(me, Status::Runnable, |st| {
+            let n = if all { st.condvars[cv].waiters.len() } else { 1 };
+            for _ in 0..n {
+                if st.condvars[cv].waiters.is_empty() {
+                    break;
+                }
+                let (t, m) = st.condvars[cv].waiters.remove(0);
+                st.threads[t] = Status::BlockedMutex(m);
+            }
+        });
+    });
+}
+
+/// Register and launch a model thread running `body`; `body` runs on a
+/// real OS thread gated by the scheduler and must store its own result
+/// before returning. Returns the new thread's id.
+pub(crate) fn spawn_thread(body: Box<dyn FnOnce() + Send>) -> Tid {
+    with_rt(|rt, me| {
+        let tid = {
+            let mut st = rt.lock();
+            st.threads.push(Status::Runnable);
+            st.threads.len() - 1
+        };
+        let rt2 = Arc::clone(rt);
+        std::thread::Builder::new()
+            .name(format!("minloom-{tid}"))
+            .spawn(move || run_model_thread(rt2, tid, body))
+            .expect("spawn minloom model thread");
+        // The spawn itself is an interleaving point: the child may run
+        // before the parent's next instruction.
+        rt.transition(me, Status::Runnable, |_| {});
+        tid
+    })
+}
+
+/// Block until `target` finishes.
+pub(crate) fn join_thread(target: Tid) {
+    with_rt(|rt, me| {
+        rt.transition(me, Status::BlockedJoin(target), |_| {});
+    });
+}
+
+fn run_model_thread(rt: Arc<Runtime>, tid: Tid, body: Box<dyn FnOnce() + Send>) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&rt), tid)));
+    if !rt.wait_first_grant(tid) {
+        return;
+    }
+    let result = catch_unwind(AssertUnwindSafe(body));
+    if let Err(payload) = result {
+        if payload.downcast_ref::<AbortExecution>().is_none() {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            rt.record_failure(format!("thread {tid} panicked: {msg}"));
+        }
+    }
+    let mut st = rt.lock();
+    st.threads[tid] = Status::Finished;
+    for t in 0..st.threads.len() {
+        if t != tid && st.threads[t] == Status::Yielded {
+            st.threads[t] = Status::Runnable;
+        }
+    }
+    st.last = Some(tid);
+    st.running = None;
+    rt.cv.notify_all();
+}
+
+// ---------------------------------------------------------------------
+// The explorer
+// ---------------------------------------------------------------------
+
+/// One recorded scheduling decision: which thread was granted and which
+/// grantable alternatives remain untried. (The continuation thread is
+/// recomputed during replay — the model is deterministic under a fixed
+/// schedule, so it always matches what extension saw.)
+#[derive(Debug)]
+struct Decision {
+    chosen: Tid,
+    untried: Vec<Tid>,
+}
+
+fn grantable(st: &RtState, t: Tid) -> bool {
+    match st.threads[t] {
+        Status::Runnable => true,
+        Status::BlockedMutex(m) => st.mutexes[m].owner.is_none(),
+        Status::BlockedJoin(t2) => st.threads[t2] == Status::Finished,
+        Status::Yielded | Status::BlockedCondvar(_) | Status::Finished => false,
+    }
+}
+
+fn grant(st: &mut RtState, t: Tid) {
+    if let Status::BlockedMutex(m) = st.threads[t] {
+        st.mutexes[m].owner = Some(t);
+    }
+    st.threads[t] = Status::Runnable;
+    st.running = Some(t);
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run one full execution following (and extending) `schedule`.
+fn run_once(
+    f: Arc<dyn Fn() + Send + Sync>,
+    schedule: &mut Vec<Decision>,
+    preemption_bound: usize,
+    max_steps: usize,
+) -> Result<(), String> {
+    let rt = Runtime::new(max_steps);
+    {
+        let mut st = rt.lock();
+        st.threads.push(Status::Runnable); // tid 0: the model main thread
+    }
+    {
+        let rt2 = Arc::clone(&rt);
+        std::thread::Builder::new()
+            .name("minloom-0".to_string())
+            .spawn(move || run_model_thread(rt2, 0, Box::new(move || f())))
+            .expect("spawn minloom main thread");
+    }
+
+    let mut cursor = 0usize;
+    let mut preemptions = 0usize;
+    loop {
+        let mut st = rt.lock();
+        while st.running.is_some() && st.failure.is_none() {
+            st = rt.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(msg) = st.failure.clone() {
+            return Err(msg);
+        }
+        if st.threads.iter().all(|s| *s == Status::Finished) {
+            return Ok(());
+        }
+        let mut cands: Vec<Tid> =
+            (0..st.threads.len()).filter(|&t| grantable(&st, t)).collect();
+        if cands.is_empty() {
+            // All-yielded means every thread is waiting for someone
+            // else's progress: unpark the lot and let the step bound
+            // catch true livelocks. Anything else is a deadlock.
+            let yielded: Vec<Tid> = (0..st.threads.len())
+                .filter(|&t| st.threads[t] == Status::Yielded)
+                .collect();
+            if yielded.is_empty() {
+                let detail: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .map(|(t, s)| format!("thread {t}: {s:?}"))
+                    .collect();
+                return Err(format!("deadlock — no thread can run ({})", detail.join("; ")));
+            }
+            for t in yielded {
+                st.threads[t] = Status::Runnable;
+                cands.push(t);
+            }
+        }
+        let cont = st.last.filter(|t| cands.contains(t));
+        let chosen = if cursor < schedule.len() {
+            let d = &schedule[cursor];
+            if !cands.contains(&d.chosen) {
+                return Err(format!(
+                    "non-deterministic model: replayed choice {} is not grantable \
+                     at step {cursor}",
+                    d.chosen
+                ));
+            }
+            d.chosen
+        } else {
+            let chosen = cont.unwrap_or_else(|| cands[0]);
+            let untried: Vec<Tid> = match cont {
+                // Alternatives to a continuation are preemptions: only
+                // explorable while the budget lasts.
+                Some(c) if preemptions < preemption_bound => {
+                    cands.iter().copied().filter(|&t| t != c).collect()
+                }
+                Some(_) => Vec::new(),
+                // Forced switch: every successor is explored.
+                None => cands.iter().copied().filter(|&t| t != chosen).collect(),
+            };
+            schedule.push(Decision { chosen, untried });
+            chosen
+        };
+        if let Some(c) = cont {
+            if chosen != c {
+                preemptions += 1;
+            }
+        }
+        cursor += 1;
+        grant(&mut st, chosen);
+        rt.cv.notify_all();
+    }
+}
+
+/// Exhaustively model-check `f` (see the crate docs for the exact
+/// guarantee). Panics, with the failing schedule, on the first
+/// execution that deadlocks, livelocks, or panics.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let preemption_bound = env_usize("MINLOOM_PREEMPTIONS", 2);
+    let max_executions = env_usize("MINLOOM_MAX_EXECUTIONS", 20_000);
+    let max_steps = env_usize("MINLOOM_MAX_STEPS", 100_000);
+    let mut schedule: Vec<Decision> = Vec::new();
+    let mut executions = 0usize;
+    loop {
+        executions += 1;
+        if let Err(msg) = run_once(Arc::clone(&f), &mut schedule, preemption_bound, max_steps) {
+            let trace: Vec<Tid> = schedule.iter().map(|d| d.chosen).collect();
+            panic!(
+                "minloom: model failed on execution {executions}: {msg}\nschedule: {trace:?}"
+            );
+        }
+        // Backtrack to the deepest decision with an untried branch.
+        while matches!(schedule.last(), Some(d) if d.untried.is_empty()) {
+            schedule.pop();
+        }
+        match schedule.last_mut() {
+            None => break, // tree exhausted
+            Some(d) => {
+                let next = d.untried.pop().expect("non-empty by the loop above");
+                d.chosen = next;
+            }
+        }
+        if executions >= max_executions {
+            eprintln!(
+                "minloom: exploration truncated at {executions} executions \
+                 (raise MINLOOM_MAX_EXECUTIONS for a deeper search)"
+            );
+            return;
+        }
+    }
+}

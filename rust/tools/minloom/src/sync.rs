@@ -1,0 +1,189 @@
+//! Scheduler-aware drop-ins for `std::sync` types.
+//!
+//! Same shapes as `std` (and loom): `lock()` returns a `LockResult`,
+//! guards poison on panic, `Condvar::wait` consumes and returns the
+//! guard. `Arc` needs no scheduling semantics, so the std type is
+//! re-exported unchanged.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError, TryLockError};
+
+pub use std::sync::Arc;
+
+use crate::rt;
+
+pub mod atomic {
+    //! Scheduler-aware atomics. Every access is a scheduling point and
+    //! executes `SeqCst` regardless of the ordering the caller asked
+    //! for — minloom explores sequentially-consistent interleavings
+    //! only (see the crate docs).
+
+    pub use std::sync::atomic::Ordering;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    use crate::rt;
+
+    #[derive(Debug, Default)]
+    pub struct AtomicUsize {
+        v: std::sync::atomic::AtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub fn new(v: usize) -> Self {
+            Self { v: std::sync::atomic::AtomicUsize::new(v) }
+        }
+
+        pub fn load(&self, _order: Ordering) -> usize {
+            rt::sched_point();
+            self.v.load(SeqCst)
+        }
+
+        pub fn store(&self, val: usize, _order: Ordering) {
+            rt::sched_point();
+            self.v.store(val, SeqCst);
+        }
+
+        pub fn fetch_add(&self, val: usize, _order: Ordering) -> usize {
+            rt::sched_point();
+            self.v.fetch_add(val, SeqCst)
+        }
+
+        pub fn fetch_sub(&self, val: usize, _order: Ordering) -> usize {
+            rt::sched_point();
+            self.v.fetch_sub(val, SeqCst)
+        }
+
+        pub fn swap(&self, val: usize, _order: Ordering) -> usize {
+            rt::sched_point();
+            self.v.swap(val, SeqCst)
+        }
+    }
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        v: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub fn new(v: bool) -> Self {
+            Self { v: std::sync::atomic::AtomicBool::new(v) }
+        }
+
+        pub fn load(&self, _order: Ordering) -> bool {
+            rt::sched_point();
+            self.v.load(SeqCst)
+        }
+
+        pub fn store(&self, val: bool, _order: Ordering) {
+            rt::sched_point();
+            self.v.store(val, SeqCst);
+        }
+
+        pub fn swap(&self, val: bool, _order: Ordering) -> bool {
+            rt::sched_point();
+            self.v.swap(val, SeqCst)
+        }
+    }
+}
+
+/// Cooperative mutex: contention and poisoning are modelled by the
+/// scheduler; the inner `std` mutex only stores the data and is, by
+/// construction, never contended.
+#[derive(Debug)]
+pub struct Mutex<T> {
+    id: usize,
+    data: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    /// Whether dropping this guard releases the scheduler-side lock
+    /// (false while a `Condvar::wait` hand-off owns the release).
+    rt_armed: bool,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(data: T) -> Self {
+        Self { id: rt::register_mutex(), data: std::sync::Mutex::new(data) }
+    }
+
+    fn data_guard(&self) -> std::sync::MutexGuard<'_, T> {
+        match self.data.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                unreachable!("minloom scheduler granted a contended data mutex")
+            }
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let poisoned = rt::mutex_lock(self.id);
+        let guard = MutexGuard { lock: self, inner: Some(self.data_guard()), rt_armed: true };
+        if poisoned {
+            Err(PoisonError::new(guard))
+        } else {
+            Ok(guard)
+        }
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the data lock")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the data lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.rt_armed {
+            rt::mutex_unlock(self.lock.id);
+        }
+    }
+}
+
+/// Cooperative condition variable. Wakeups are FIFO and never spurious
+/// (a deliberate narrowing: it keeps the schedule tree small, and every
+/// call site in this repo re-checks its predicate in a loop anyway).
+#[derive(Debug)]
+pub struct Condvar {
+    id: usize,
+}
+
+impl Condvar {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { id: rt::register_condvar() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        drop(guard.inner.take());
+        guard.rt_armed = false; // the wait hand-off releases the rt lock
+        drop(guard);
+        let poisoned = rt::condvar_wait(self.id, lock.id);
+        let guard = MutexGuard { lock, inner: Some(lock.data_guard()), rt_armed: true };
+        if poisoned {
+            Err(PoisonError::new(guard))
+        } else {
+            Ok(guard)
+        }
+    }
+
+    pub fn notify_one(&self) {
+        rt::condvar_notify(self.id, false);
+    }
+
+    pub fn notify_all(&self) {
+        rt::condvar_notify(self.id, true);
+    }
+}

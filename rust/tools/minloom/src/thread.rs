@@ -1,0 +1,51 @@
+//! Scheduler-aware replacements for `std::thread::{spawn, yield_now}`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::rt;
+
+/// Handle to a model thread. `join` parks the caller until the target
+/// finishes and returns the closure's result (or its panic payload,
+/// matching `std::thread::JoinHandle`).
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: Arc<Mutex<Option<std::thread::Result<T>>>>,
+}
+
+/// Spawn a model thread under the scheduler.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let slot = Arc::new(Mutex::new(None));
+    let out = Arc::clone(&slot);
+    let tid = rt::spawn_thread(Box::new(move || {
+        // A panic in `f` unwinds past this closure into the runtime,
+        // which records it as a model failure; the result slot then
+        // simply stays empty (nobody joins a failed execution).
+        let value = f();
+        *out.lock().unwrap_or_else(|e| e.into_inner()) = Some(Ok(value));
+    }));
+    JoinHandle { tid, slot }
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        rt::join_thread(self.tid);
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("joined thread stored its result")
+    }
+}
+
+/// Park the calling thread until another model thread makes progress.
+/// This is the cooperative analogue of a spin-loop hint: a loop that
+/// yields while polling cannot explode the schedule tree, because the
+/// yielding thread is only rescheduled after the state it polls had a
+/// chance to change.
+pub fn yield_now() {
+    rt::yield_now();
+}

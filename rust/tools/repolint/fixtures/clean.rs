@@ -1,0 +1,22 @@
+//@ path: rust/src/dist/transport.rs
+//@ expect: clean
+// Control fixture: exercises every rule's *passing* form — documented
+// unsafe, a justified allowlisted expect, widening-only accounting
+// casts, and rule keywords inside string literals (which the lexer
+// must ignore). Never compiled — scanned as text only.
+
+pub fn good(xs: &[u32]) -> u32 {
+    let banner = "unsafe .unwrap() panic! as u8"; // only prose, in a string
+    debug_assert!(!xs.is_empty(), "{banner}");
+    // SAFETY: the debug_assert above pins xs non-empty; index 0 is in
+    // bounds for the lifetime of the borrow.
+    let head = unsafe { *xs.as_ptr() };
+    // repolint: allow(no-panic): non-empty pinned by the debug_assert above.
+    let tail = xs.last().expect("non-empty");
+    head + tail
+}
+
+pub fn state_bytes(slots: usize) -> usize {
+    let wide = slots as u64;
+    (wide * 4) as usize
+}

@@ -1,0 +1,15 @@
+//@ path: rust/src/optim/fixture.rs
+//@ expect: lossy-cast
+// Seeded violation: a truncating cast inside a bytes-accounting
+// function. Never compiled — scanned as text only.
+
+impl Accounting {
+    pub fn state_bytes(&self) -> usize {
+        (self.slots * self.width) as u32 as usize
+    }
+
+    pub fn other(&self) -> usize {
+        // Outside an accounting fn: casts are the optimizer's business.
+        self.slots as u32 as usize
+    }
+}

@@ -1,0 +1,15 @@
+//@ path: rust/src/dist/wire.rs
+//@ expect: no-panic
+// Seeded violations: panicking calls in a dist:: decode path, one bare
+// and one with an allowlist tag that is missing its mandatory reason.
+// Never compiled — scanned as text only.
+
+pub fn decode_fixture(buf: &[u8]) -> u32 {
+    let first = buf.first().unwrap();
+    if *first > 7 {
+        panic!("bad frame");
+    }
+    // repolint: allow(no-panic)
+    let second = buf.get(1).expect("two bytes");
+    u32::from(*first) + u32::from(*second)
+}

@@ -1,0 +1,13 @@
+//@ path: rust/src/exec/fixture.rs
+//@ expect: unsafe-safety
+// Seeded violation: an `unsafe` block whose safety invariant is never
+// written down in the required form. Never compiled — scanned as text
+// only. (The filler below keeps this header outside the rule's
+// five-line lookback window.)
+
+pub fn first(xs: &[u32]) -> u32 {
+    let _ = xs.len();
+    let _ = xs.is_empty();
+    // The pointer is in bounds, honest!  (Not the required comment.)
+    unsafe { *xs.as_ptr() }
+}

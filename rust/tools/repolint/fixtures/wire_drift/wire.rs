@@ -1,0 +1,24 @@
+//! Drifted-spec fixture: a miniature wire.rs whose constants disagree
+//! with the README sitting next to it (the code says version 2, the
+//! document still says 1). Never compiled — scanned as text only.
+//!
+//! ```text
+//! off len field          contents
+//!   0   4 magic          "uADM" (0x75 0x41 0x44 0x4D)
+//!   4   2 version        u16, currently 2; receivers reject any other
+//!   6   2 rank           u16 sender rank
+//!   8   8 step           u64 training step the payload belongs to
+//!  16   1 tag            payload kind: 0 dense / 1 topk / 2 eftopk
+//!  17   1 flags          bit 0 = handshake (empty payload); rest 0
+//!  18   4 loss           f32 bits, sender's local batch loss
+//!  22   4 payload_len    u32 byte length of the payload section
+//!  26   4 stats_count    u32 count of Quant4 bucket-stats records
+//!  30   . payload        reducer payload
+//!   .   4 crc32          IEEE CRC-32 over every preceding byte
+//! ```
+
+pub const MAGIC: [u8; 4] = *b"uADM";
+pub const VERSION: u16 = 2;
+pub const HEADER_BYTES: usize = 30;
+pub const CRC_BYTES: usize = 4;
+pub const FRAME_OVERHEAD: usize = HEADER_BYTES + CRC_BYTES;

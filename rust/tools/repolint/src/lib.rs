@@ -1,0 +1,1000 @@
+//! repolint — machine-checked repo invariants for the MicroAdam tree.
+//!
+//! The crate is a static-analysis pass over the repository's own Rust
+//! sources (plus the normative wire spec in `rust/src/dist/README.md`).
+//! It exists so the invariants the docs promise cannot silently drift
+//! from the code that implements them. Four rules:
+//!
+//! * **`unsafe-safety`** — every `unsafe` occurrence must carry a
+//!   `// SAFETY:` comment on the same line or within the five lines
+//!   above it, stating the invariant the block relies on.
+//! * **`no-panic`** — the `dist::` wire/transport/reducer decode and
+//!   teardown paths ([`NO_PANIC_FILES`]) must not call
+//!   `.unwrap()` / `.expect(` / `panic!` / `unreachable!` / `todo!` /
+//!   `unimplemented!` outside `#[cfg(test)]` / `#[cfg(loom)]` modules.
+//!   Typed errors (`WireError`, `anyhow::Result`) are required; a
+//!   structurally-infallible case may be kept with an inline allowlist
+//!   comment `// repolint: allow(no-panic): <reason>` on the same or the
+//!   preceding line (the reason is mandatory).
+//! * **`wire-spec`** — the normative constants in
+//!   `rust/src/dist/wire.rs` (magic, version, 30-byte header, 4-byte
+//!   CRC, 34-byte frame overhead, header field order) must match the
+//!   numbers written in `rust/src/dist/README.md` §2, row for row.
+//! * **`lossy-cast`** — the bytes-accounting functions
+//!   ([`ACCOUNTING_FNS`]: `wire_bytes_per_rank`, `state_bytes`, …) must
+//!   not contain lossy `as` casts (`as u32`, `as i64`, `as f64`, …);
+//!   only `as u64` and `as usize` are widening on every supported
+//!   target and therefore allowed. Allowlist syntax:
+//!   `// repolint: allow(lossy-cast): <reason>`.
+//!
+//! The scanner is line-oriented but lexes comments, strings (including
+//! raw strings), and char literals so that rule patterns never match
+//! inside string literals or prose. It is deliberately not a full Rust
+//! parser: the rules are all local, and a pattern-level scanner keeps
+//! the tool dependency-free (the workspace's no-new-deps rule applies
+//! to its lint tool too).
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Names of every rule, in the order they are documented above.
+pub const RULES: &[&str] = &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast"];
+
+/// Files (matched by path suffix) subject to the `no-panic` rule: the
+/// `dist::` wire/transport/reducer decode paths the spec requires to
+/// fail with typed errors rather than abort the process.
+pub const NO_PANIC_FILES: &[&str] = &[
+    "rust/src/dist/wire.rs",
+    "rust/src/dist/transport.rs",
+    "rust/src/dist/reducer.rs",
+    "rust/src/dist/trainer.rs",
+    "rust/src/dist/replica.rs",
+];
+
+/// Function names whose bodies form the bytes-accounting paths checked
+/// by the `lossy-cast` rule.
+pub const ACCOUNTING_FNS: &[&str] = &[
+    "wire_bytes_per_rank",
+    "state_bytes",
+    "paper_state_bytes",
+    "residual_state_bytes",
+    "frame_bytes_per_rank",
+    "wire_bytes_total",
+    "encoded_len",
+    "slab_bytes_per_rank",
+];
+
+/// One rule violation, formatted `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One source line after lexical preparation: `code` keeps the code with
+/// string/char contents blanked (quotes preserved) and comments removed;
+/// `comment` holds the concatenated comment text of the line.
+pub struct PreparedLine {
+    pub code: String,
+    pub comment: String,
+}
+
+/// A lexed source file plus a mask of lines inside `#[cfg(test)]` /
+/// `#[cfg(loom)]` modules (exempt from the `no-panic` rule).
+pub struct Prepared {
+    pub lines: Vec<PreparedLine>,
+    pub masked: Vec<bool>,
+}
+
+/// Lex `src` into per-line code/comment channels. Handles line and
+/// (nested) block comments, string literals with escapes, raw strings
+/// (`r"…"`, `r#"…"#`, byte variants), char literals, and lifetimes.
+pub fn prepare(src: &str) -> Prepared {
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u8),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<PreparedLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::Line) {
+                st = St::Code;
+            }
+            lines.push(PreparedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::Line;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    i += 2;
+                    continue;
+                }
+                // Raw (byte) strings: r"…", r#"…"#, br"…", br#"…"#.
+                if c == 'r' || (c == 'b' && chars.get(i + 1) == Some(&'r')) {
+                    let j = if c == 'b' { i + 2 } else { i + 1 };
+                    let mut hashes = 0usize;
+                    let mut k = j;
+                    while chars.get(k) == Some(&'#') {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if chars.get(k) == Some(&'"') {
+                        code.push('"');
+                        st = St::RawStr(hashes as u8);
+                        i = k + 1;
+                        continue;
+                    }
+                }
+                if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    match (chars.get(i + 1), chars.get(i + 2)) {
+                        (Some('\\'), _) => {
+                            // Escaped char literal: skip the escape, then
+                            // scan to the closing quote.
+                            code.push('\'');
+                            code.push('\'');
+                            let mut k = i + 3;
+                            while k < chars.len() && chars[k] != '\'' {
+                                k += 1;
+                            }
+                            i = k + 1;
+                            continue;
+                        }
+                        (Some(_), Some('\'')) => {
+                            // Plain char literal 'x'.
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            i += 3;
+                            continue;
+                        }
+                        _ => {
+                            // Lifetime tick.
+                            code.push('\'');
+                            i += 1;
+                            continue;
+                        }
+                    }
+                }
+                code.push(c);
+                i += 1;
+            }
+            St::Line => {
+                comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                }
+                i += 1;
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let closed = (0..h as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        code.push('"');
+                        st = St::Code;
+                        i += 1 + h as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(PreparedLine { code, comment });
+    }
+    let masked = mask_test_mods(&lines);
+    Prepared { lines, masked }
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whole-word search for `word` in `hay`; returns true on a match whose
+/// neighbours are not identifier characters.
+fn contains_word(hay: &str, word: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_word_byte(bytes[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= bytes.len() || !is_word_byte(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + word.len();
+    }
+    false
+}
+
+/// Mark the line extents of `#[cfg(test)]` and `#[cfg(loom)]` modules.
+fn mask_test_mods(lines: &[PreparedLine]) -> Vec<bool> {
+    let mut masked = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let gate = lines[i].code.contains("#[cfg(test)]")
+            || lines[i].code.contains("#[cfg(loom)]")
+            || lines[i].code.contains("#[cfg(all(test");
+        if !gate {
+            i += 1;
+            continue;
+        }
+        // The gated item must be a module within the next few lines
+        // (further attributes may sit in between).
+        let mut m = None;
+        for j in i..lines.len().min(i + 4) {
+            if contains_word(&lines[j].code, "mod") {
+                m = Some(j);
+                break;
+            }
+        }
+        let Some(m) = m else {
+            i += 1;
+            continue;
+        };
+        // Mask from the attribute through the module's closing brace
+        // (or through `mod name;` for out-of-line modules).
+        let mut depth = 0i64;
+        let mut seen_brace = false;
+        let mut end = lines.len() - 1;
+        for j in m..lines.len() {
+            for ch in lines[j].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        seen_brace = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if seen_brace && depth <= 0 {
+                end = j;
+                break;
+            }
+            if !seen_brace && lines[j].code.contains(';') {
+                end = j;
+                break;
+            }
+        }
+        for flag in masked.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    masked
+}
+
+/// Inline-allowlist check: `// repolint: allow(<key>): <reason>` on the
+/// same or the immediately preceding line, with a non-empty reason.
+fn allowlisted(p: &Prepared, line: usize, key: &str) -> bool {
+    let tag = format!("repolint: allow({key})");
+    let lo = line.saturating_sub(1);
+    for l in &p.lines[lo..=line] {
+        if let Some(pos) = l.comment.find(&tag) {
+            let reason = l.comment[pos + tag.len()..]
+                .trim_start_matches(|c: char| c == ':' || c == '-' || c.is_whitespace());
+            if !reason.trim().is_empty() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Rule `unsafe-safety`: every `unsafe` token needs a `SAFETY:` comment
+/// on the same line or within the five lines above.
+pub fn rule_unsafe_safety(path: &str, p: &Prepared) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (i, line) in p.lines.iter().enumerate() {
+        if !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(5);
+        let documented = p.lines[lo..=i].iter().any(|l| l.comment.contains("SAFETY:"));
+        if !documented {
+            out.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "unsafe-safety",
+                msg: "`unsafe` without a `// SAFETY:` comment within the 5 lines above — \
+                      state the invariant the block relies on"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Rule `no-panic`: forbid panicking calls in the `dist::` decode and
+/// teardown paths (outside test/loom modules), unless allowlisted.
+pub fn rule_no_panic(path: &str, p: &Prepared) -> Vec<Violation> {
+    if !NO_PANIC_FILES.iter().any(|f| path.ends_with(f)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in p.lines.iter().enumerate() {
+        if p.masked[i] {
+            continue;
+        }
+        for pat in PANIC_PATTERNS {
+            if line.code.contains(pat) && !allowlisted(p, i, "no-panic") {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: i + 1,
+                    rule: "no-panic",
+                    msg: format!(
+                        "`{pat}` in a dist:: wire/transport path — return a typed \
+                         WireError/anyhow error, or justify with \
+                         `// repolint: allow(no-panic): <reason>`"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+const LOSSY_TARGETS: &[&str] = &[
+    "u8", "u16", "u32", "u128", "i8", "i16", "i32", "i64", "i128", "f32", "f64", "isize",
+];
+
+/// Rule `lossy-cast`: inside the accounting functions, forbid `as` casts
+/// to any type that can truncate a byte count. `as u64` / `as usize`
+/// stay legal (widening on every supported target).
+pub fn rule_lossy_cast(path: &str, p: &Prepared) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (name, start, end) in fn_regions(p, ACCOUNTING_FNS) {
+        for (j, line) in p.lines.iter().enumerate().take(end + 1).skip(start) {
+            for ty in LOSSY_TARGETS {
+                let pat = format!(" as {ty}");
+                let bytes = line.code.as_bytes();
+                let mut s = 0usize;
+                while let Some(pos) = line.code[s..].find(&pat) {
+                    let after = s + pos + pat.len();
+                    s = after;
+                    if after < bytes.len() && is_word_byte(bytes[after]) {
+                        continue; // e.g. ` as u16x8` — a different identifier
+                    }
+                    if !allowlisted(p, j, "lossy-cast") {
+                        out.push(Violation {
+                            file: path.to_string(),
+                            line: j + 1,
+                            rule: "lossy-cast",
+                            msg: format!(
+                                "lossy `as {ty}` inside accounting fn `{name}` — byte \
+                                 counts must stay usize/u64, or justify with \
+                                 `// repolint: allow(lossy-cast): <reason>`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Locate the line extents of function bodies whose names are in
+/// `names`. Bodiless trait declarations (`fn f(…) -> T;`) are skipped.
+fn fn_regions(p: &Prepared, names: &[&str]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in p.lines.iter().enumerate() {
+        for &name in names {
+            let pat = format!("fn {name}");
+            let Some(pos) = line.code.find(&pat) else {
+                continue;
+            };
+            let bytes = line.code.as_bytes();
+            let after = pos + pat.len();
+            if after < bytes.len() && is_word_byte(bytes[after]) {
+                continue; // prefix of a longer identifier
+            }
+            let mut depth = 0i64;
+            let mut seen_brace = false;
+            let mut body = None;
+            'scan: for j in i..p.lines.len() {
+                for ch in p.lines[j].code.chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            seen_brace = true;
+                        }
+                        '}' => {
+                            depth -= 1;
+                            if seen_brace && depth == 0 {
+                                body = Some(j);
+                                break 'scan;
+                            }
+                        }
+                        ';' if !seen_brace && depth == 0 => break 'scan,
+                        _ => {}
+                    }
+                }
+            }
+            if let Some(end) = body {
+                out.push((name.to_string(), i, end));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// wire-spec: pin rust/src/dist/wire.rs against rust/src/dist/README.md
+// ---------------------------------------------------------------------
+
+#[derive(Debug, PartialEq)]
+struct Row {
+    off: usize,
+    len: usize,
+    name: String,
+}
+
+/// Parse `off len name …` rows (the fixed-width header fields) from an
+/// iterator of raw table lines.
+fn parse_rows<'a>(lines: impl Iterator<Item = &'a str>) -> Vec<Row> {
+    let mut out = Vec::new();
+    for l in lines {
+        let l = l.trim_start().trim_start_matches("//!").trim();
+        let mut it = l.split_whitespace();
+        let (Some(a), Some(b), Some(c)) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        let (Ok(off), Ok(len)) = (a.parse::<usize>(), b.parse::<usize>()) else {
+            continue;
+        };
+        if !c.bytes().all(is_word_byte) {
+            continue;
+        }
+        out.push(Row {
+            off,
+            len,
+            name: c.to_string(),
+        });
+    }
+    out
+}
+
+/// Offset of the variable-length `payload` row (`30   .  payload`).
+fn payload_offset<'a>(lines: impl Iterator<Item = &'a str>) -> Option<usize> {
+    for l in lines {
+        let l = l.trim_start().trim_start_matches("//!").trim();
+        let mut it = l.split_whitespace();
+        let (Some(a), Some(_), Some(c)) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        if c == "payload" {
+            if let Ok(off) = a.parse::<usize>() {
+                return Some(off);
+            }
+        }
+    }
+    None
+}
+
+fn parse_const(src: &str, name: &str) -> Option<(usize, u64)> {
+    for (i, l) in src.lines().enumerate() {
+        let t = l.trim();
+        let Some(rest) = t.strip_prefix(&format!("pub const {name}:")) else {
+            continue;
+        };
+        let Some(eq) = rest.find('=') else { continue };
+        let v = rest[eq + 1..].trim().trim_end_matches(';').trim();
+        if let Ok(n) = v.parse::<u64>() {
+            return Some((i + 1, n));
+        }
+    }
+    None
+}
+
+fn all_integers(line: &str) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in line.chars() {
+        if c.is_ascii_digit() {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            if let Ok(n) = cur.parse() {
+                out.push(n);
+            }
+            cur.clear();
+        }
+    }
+    if let Ok(n) = cur.parse() {
+        out.push(n);
+    }
+    out
+}
+
+/// Rule `wire-spec` over in-memory sources (the repo runner reads the
+/// real files; the self-test feeds drifted fixtures).
+pub fn rule_wire_spec(wire_src: &str, readme_src: &str) -> Vec<Violation> {
+    const WIRE: &str = "rust/src/dist/wire.rs";
+    const README: &str = "rust/src/dist/README.md";
+    let mut out = Vec::new();
+    let mut fail = |file: &str, line: usize, msg: String| {
+        out.push(Violation {
+            file: file.to_string(),
+            line,
+            rule: "wire-spec",
+            msg,
+        });
+    };
+
+    // --- constants from wire.rs -------------------------------------
+    let magic = wire_src
+        .lines()
+        .enumerate()
+        .find(|(_, l)| l.trim_start().starts_with("pub const MAGIC:"))
+        .and_then(|(i, l)| {
+            let s = l.split("b\"").nth(1)?.split('"').next()?;
+            Some((i + 1, s.to_string()))
+        });
+    let version = parse_const(wire_src, "VERSION");
+    let header = parse_const(wire_src, "HEADER_BYTES");
+    let crc = parse_const(wire_src, "CRC_BYTES");
+    let Some((_, magic)) = magic else {
+        fail(WIRE, 1, "couldn't locate `pub const MAGIC: [u8; 4] = *b\"…\"`".into());
+        return out;
+    };
+    let (Some((_, version)), Some((_, header)), Some((_, crc))) = (version, header, crc) else {
+        fail(
+            WIRE,
+            1,
+            "couldn't locate VERSION / HEADER_BYTES / CRC_BYTES constants".into(),
+        );
+        return out;
+    };
+    let overhead = header + crc;
+    match wire_src
+        .lines()
+        .enumerate()
+        .find(|(_, l)| l.trim_start().starts_with("pub const FRAME_OVERHEAD:"))
+    {
+        Some((i, l)) if l.contains("HEADER_BYTES") && l.contains("CRC_BYTES") => {
+            let _ = i;
+        }
+        Some((i, _)) => fail(
+            WIRE,
+            i + 1,
+            "FRAME_OVERHEAD must be defined as HEADER_BYTES + CRC_BYTES".into(),
+        ),
+        None => fail(WIRE, 1, "couldn't locate `pub const FRAME_OVERHEAD`".into()),
+    }
+
+    // --- header table from the wire.rs module doc -------------------
+    let doc_lines = || wire_src.lines().filter(|l| l.trim_start().starts_with("//!"));
+    let wire_rows = parse_rows(doc_lines());
+    let wire_payload = payload_offset(doc_lines());
+
+    // --- README §2 region -------------------------------------------
+    let lines: Vec<&str> = readme_src.lines().collect();
+    let sec_start = lines.iter().position(|l| l.starts_with("## 2."));
+    let Some(sec_start) = sec_start else {
+        fail(README, 1, "couldn't locate section `## 2.` (frame layout)".into());
+        return out;
+    };
+    let sec_end = lines[sec_start + 1..]
+        .iter()
+        .position(|l| l.starts_with("## "))
+        .map(|p| sec_start + 1 + p)
+        .unwrap_or(lines.len());
+    let sec = &lines[sec_start..sec_end];
+    let readme_rows = parse_rows(sec.iter().copied());
+    let readme_payload = payload_offset(sec.iter().copied());
+
+    // --- cross-checks ------------------------------------------------
+    if wire_rows.is_empty() {
+        fail(WIRE, 1, "module doc has no parseable `off len field` table".into());
+    }
+    if readme_rows.is_empty() {
+        fail(README, sec_start + 1, "§2 has no parseable `offset len field` table".into());
+    }
+    if !wire_rows.is_empty() && !readme_rows.is_empty() && wire_rows != readme_rows {
+        fail(
+            README,
+            sec_start + 1,
+            format!(
+                "§2 header table disagrees with the wire.rs module doc \
+                 (README: {:?}; wire.rs: {:?})",
+                readme_rows
+                    .iter()
+                    .map(|r| format!("{}@{}+{}", r.name, r.off, r.len))
+                    .collect::<Vec<_>>(),
+                wire_rows
+                    .iter()
+                    .map(|r| format!("{}@{}+{}", r.name, r.off, r.len))
+                    .collect::<Vec<_>>(),
+            ),
+        );
+    }
+    // Field contiguity: offsets tile [0, HEADER_BYTES) exactly.
+    let mut expect = 0usize;
+    for r in &readme_rows {
+        if r.off != expect {
+            fail(
+                README,
+                sec_start + 1,
+                format!("field `{}` at offset {} — expected {}", r.name, r.off, expect),
+            );
+        }
+        expect = r.off + r.len;
+    }
+    if !readme_rows.is_empty() && expect as u64 != header {
+        fail(
+            README,
+            sec_start + 1,
+            format!("fixed header fields end at {expect}, HEADER_BYTES is {header}"),
+        );
+    }
+    for (file, off) in [(WIRE, wire_payload), (README, readme_payload)] {
+        match off {
+            Some(o) if o as u64 == header => {}
+            Some(o) => fail(
+                file,
+                1,
+                format!("payload row at offset {o}, HEADER_BYTES is {header}"),
+            ),
+            None => fail(file, 1, "couldn't locate the payload table row".into()),
+        }
+    }
+
+    // README magic line: ASCII "uADM" = 75 41 44 4D.
+    match sec.iter().enumerate().find(|(_, l)| l.contains("ASCII \"")) {
+        Some((i, l)) => {
+            let quoted = l.split("ASCII \"").nth(1).and_then(|s| s.split('"').next());
+            if quoted != Some(magic.as_str()) {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!("magic string {quoted:?} != wire.rs MAGIC {magic:?}"),
+                );
+            }
+            let hex: Vec<u8> = l
+                .rsplit('=')
+                .next()
+                .unwrap_or("")
+                .split_whitespace()
+                .filter_map(|t| u8::from_str_radix(t, 16).ok())
+                .collect();
+            if hex != magic.as_bytes() {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!("magic hex {hex:02x?} != MAGIC bytes {:02x?}", magic.as_bytes()),
+                );
+            }
+        }
+        None => fail(README, sec_start + 1, "couldn't locate the ASCII magic line".into()),
+    }
+
+    // README version: `this spec = N`.
+    match sec.iter().enumerate().find(|(_, l)| l.contains("this spec =")) {
+        Some((i, l)) => {
+            let n = l
+                .split("this spec =")
+                .nth(1)
+                .map(|s| all_integers(s))
+                .and_then(|v| v.first().copied());
+            if n != Some(version) {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!("spec version {n:?} != wire.rs VERSION {version}"),
+                );
+            }
+        }
+        None => fail(README, sec_start + 1, "couldn't locate `this spec = N`".into()),
+    }
+
+    // README overhead sentence: `= 30 header bytes + 4 CRC bytes = **34 bytes**`.
+    match sec
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.contains("frame overhead"))
+    {
+        Some((i, l)) => {
+            let ints = all_integers(l);
+            if ints != vec![header, crc, overhead] {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!(
+                        "frame-overhead sentence says {ints:?}, constants say \
+                         [{header}, {crc}, {overhead}]"
+                    ),
+                );
+            }
+        }
+        None => fail(README, sec_start + 1, "couldn't locate the frame-overhead sentence".into()),
+    }
+
+    // README formula: `frame_bytes = wire_bytes_per_rank() + 34`.
+    match sec
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.contains("wire_bytes_per_rank() +"))
+    {
+        Some((i, l)) => {
+            let n = l
+                .split("wire_bytes_per_rank() +")
+                .nth(1)
+                .map(|s| all_integers(s))
+                .and_then(|v| v.first().copied());
+            if n != Some(overhead) {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!("frame_bytes formula adds {n:?}, FRAME_OVERHEAD is {overhead}"),
+                );
+            }
+        }
+        None => fail(
+            README,
+            sec_start + 1,
+            "couldn't locate the `frame_bytes = wire_bytes_per_rank() + N` formula".into(),
+        ),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------
+
+/// Run the per-file rules on one source file.
+pub fn lint_file(rel_path: &str, src: &str) -> Vec<Violation> {
+    let p = prepare(src);
+    let mut v = rule_unsafe_safety(rel_path, &p);
+    v.extend(rule_no_panic(rel_path, &p));
+    v.extend(rule_lossy_cast(rel_path, &p));
+    v
+}
+
+/// Collect the `.rs` files under `<root>/rust` and `<root>/examples`,
+/// skipping build output and the seeded-violation fixtures.
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack: Vec<PathBuf> = ["rust", "examples"]
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|d| d.is_dir())
+        .collect();
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if path.is_dir() {
+                if !matches!(name, "target" | "fixtures" | ".git") {
+                    stack.push(path);
+                }
+            } else if name.ends_with(".rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every rule over the repository rooted at `root`.
+pub fn lint_repo(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut out = Vec::new();
+    for f in rust_files(root)? {
+        let src = fs::read_to_string(&f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .display()
+            .to_string();
+        out.extend(lint_file(&rel, &src));
+    }
+    let wire = root.join("rust/src/dist/wire.rs");
+    let readme = root.join("rust/src/dist/README.md");
+    match (fs::read_to_string(&wire), fs::read_to_string(&readme)) {
+        (Ok(w), Ok(r)) => out.extend(rule_wire_spec(&w, &r)),
+        _ => out.push(Violation {
+            file: "rust/src/dist".to_string(),
+            line: 0,
+            rule: "wire-spec",
+            msg: "wire.rs or README.md missing — wrong --root?".to_string(),
+        }),
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Self-test: every rule must fire on its seeded fixture
+// ---------------------------------------------------------------------
+
+/// Per-file fixtures. Each declares its virtual repo path and the rule
+/// it expects to trip (or `clean`) in `//@` header directives.
+pub const FIXTURES: &[(&str, &str)] = &[
+    (
+        "unsafe_no_safety.rs",
+        include_str!("../fixtures/unsafe_no_safety.rs"),
+    ),
+    (
+        "panic_in_decode.rs",
+        include_str!("../fixtures/panic_in_decode.rs"),
+    ),
+    ("lossy_cast.rs", include_str!("../fixtures/lossy_cast.rs")),
+    ("clean.rs", include_str!("../fixtures/clean.rs")),
+];
+
+/// Drifted wire-spec pair (README claims a different version).
+pub const WIRE_DRIFT: (&str, &str) = (
+    include_str!("../fixtures/wire_drift/wire.rs"),
+    include_str!("../fixtures/wire_drift/README.md"),
+);
+
+fn directive<'a>(src: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("//@ {key}:");
+    src.lines()
+        .find_map(|l| l.strip_prefix(&tag).map(str::trim))
+}
+
+/// Run the rules against the seeded fixtures; `Err` describes the first
+/// rule that failed to behave. Returns the number of checks performed.
+pub fn self_test() -> Result<usize, String> {
+    let mut checks = 0usize;
+    for (fname, src) in FIXTURES {
+        let path = directive(src, "path")
+            .ok_or_else(|| format!("{fname}: missing `//@ path:` directive"))?;
+        let expect = directive(src, "expect")
+            .ok_or_else(|| format!("{fname}: missing `//@ expect:` directive"))?;
+        let got = lint_file(path, src);
+        if expect == "clean" {
+            if !got.is_empty() {
+                return Err(format!(
+                    "{fname}: expected clean, got {} violation(s): {}",
+                    got.len(),
+                    got[0]
+                ));
+            }
+        } else {
+            if !got.iter().any(|v| v.rule == expect) {
+                return Err(format!("{fname}: rule `{expect}` did not fire"));
+            }
+            if let Some(stray) = got.iter().find(|v| v.rule != expect) {
+                return Err(format!("{fname}: unexpected extra violation: {stray}"));
+            }
+        }
+        checks += 1;
+    }
+    let drift = rule_wire_spec(WIRE_DRIFT.0, WIRE_DRIFT.1);
+    if drift.is_empty() {
+        return Err("wire_drift: rule `wire-spec` did not fire on the drifted pair".into());
+    }
+    checks += 1;
+    Ok(checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_rule_fires_on_its_fixture() {
+        match self_test() {
+            Ok(n) => assert!(n >= 5, "expected at least 5 fixture checks, ran {n}"),
+            Err(e) => panic!("self-test failed: {e}"),
+        }
+    }
+
+    #[test]
+    fn scanner_ignores_strings_and_comments() {
+        let p = prepare(
+            "fn f() {\n    let s = \"unsafe .unwrap() panic!\";\n    // unsafe in prose\n}\n",
+        );
+        assert!(!contains_word(&p.lines[1].code, "unsafe"));
+        assert!(!p.lines[1].code.contains(".unwrap()"));
+        assert!(contains_word(&p.lines[2].comment, "unsafe"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_lex_cleanly() {
+        let p = prepare("fn g<'a>(x: &'a str) -> char { let c = '\\''; let d = 'x'; 'q' }\n");
+        // The lifetime must not swallow the rest of the line as a char
+        // literal: `let d` survives in the code channel.
+        assert!(p.lines[0].code.contains("let d"));
+    }
+
+    #[test]
+    fn test_mod_lines_are_masked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x.unwrap() }\n}\nfn c() {}\n";
+        let p = prepare(src);
+        assert!(!p.masked[0]);
+        assert!(p.masked[1] && p.masked[2] && p.masked[3] && p.masked[4]);
+        assert!(!p.masked[5]);
+    }
+
+    #[test]
+    fn allowlist_requires_a_reason() {
+        let with_reason =
+            "//@ x\nfn f() {\n    // repolint: allow(no-panic): sized two lines above.\n    a.unwrap()\n}\n";
+        let p = prepare(with_reason);
+        assert!(allowlisted(&p, 3, "no-panic"));
+        let bare = "fn f() {\n    // repolint: allow(no-panic)\n    a.unwrap()\n}\n";
+        let p = prepare(bare);
+        assert!(!allowlisted(&p, 2, "no-panic"));
+    }
+
+    #[test]
+    fn accounting_fn_regions_skip_trait_declarations() {
+        let src = "trait T {\n    fn state_bytes(&self) -> usize;\n}\nimpl T for S {\n    fn state_bytes(&self) -> usize {\n        self.n as u32 as usize\n    }\n}\n";
+        let p = prepare(src);
+        let regions = fn_regions(&p, &["state_bytes"]);
+        assert_eq!(regions.len(), 1);
+        let v = rule_lossy_cast("rust/src/x.rs", &p);
+        assert_eq!(v.len(), 1, "exactly the impl-body cast: {v:?}");
+    }
+}

@@ -1,0 +1,78 @@
+//! repolint CLI: `repolint [--root DIR] [--self-test]`.
+//!
+//! Exit status 0 means the tree satisfies every rule (or, with
+//! `--self-test`, that every rule fires on its seeded fixture);
+//! violations are printed one per line as `file:line: [rule] message`
+//! and exit with status 1. `make lint` runs the self-test first, then
+//! the repo pass, so a rule that silently stopped matching can never
+//! green-light the tree.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--self-test" => self_test = true,
+            "--root" => match args.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => {
+                    eprintln!("repolint: --root needs a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: repolint [--root DIR] [--self-test]");
+                println!("rules: {}", repolint::RULES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("repolint: unknown argument `{other}` (see --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    if self_test {
+        return match repolint::self_test() {
+            Ok(n) => {
+                println!("repolint self-test: {n} fixture checks passed, every rule fires");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("repolint self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let root = root.unwrap_or_else(|| PathBuf::from("."));
+    if !root.join("rust/src/dist/wire.rs").is_file() {
+        eprintln!(
+            "repolint: {} does not look like the repo root (rust/src/dist/wire.rs not found); \
+             run from the repo root or pass --root",
+            root.display()
+        );
+        return ExitCode::FAILURE;
+    }
+    match repolint::lint_repo(&root) {
+        Ok(v) if v.is_empty() => {
+            println!("repolint: clean ({} rules)", repolint::RULES.len());
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            for violation in &v {
+                eprintln!("{violation}");
+            }
+            eprintln!("repolint: {} violation(s)", v.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("repolint: io error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
