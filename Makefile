@@ -29,6 +29,12 @@
 #                    gather/compress overlap ms) + the artifact-free
 #                    perf_probe --native row, so every PR can record the
 #                    perf trajectory
+#   make trace-smoke observability lane (part of `make ci`): a short traced
+#                    2-rank eftopk training run, then `microadam tracecheck`
+#                    validates both sinks (the Chrome trace-event file and
+#                    the JSONL {"kind":"trace"} records incl. the EF-health
+#                    gauges), then the disabled-tracing overhead bound
+#                    (< 1% of a fused step) is asserted
 #   make artifacts   AOT-lower the L2 graphs (needs python/ + JAX; only for
 #                    machines building the artifact set)
 #
@@ -41,7 +47,7 @@ XLA_RS ?= /opt/xla-rs
 # Where the smoke lane writes its JSON record.
 BENCH_JSON ?= BENCH_SMOKE.json
 
-.PHONY: ci ci-pjrt bench-smoke artifacts test-tcp lint loom miri ci-sanitize
+.PHONY: ci ci-pjrt bench-smoke trace-smoke artifacts test-tcp lint loom miri ci-sanitize
 
 ci:
 	cargo build --release
@@ -52,6 +58,7 @@ ci:
 	cargo test --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	$(MAKE) lint
+	$(MAKE) trace-smoke
 
 # Static invariants (rust/tools/repolint: SAFETY comments on unsafe,
 # panic-free dist:: decode paths, wire constants pinned to the normative
@@ -134,6 +141,23 @@ bench-smoke:
 		cargo bench --bench bench_optimizer_step
 	cargo run --release --bin perf_probe -- --native 262144 5
 	@echo "bench-smoke: record in $(BENCH_JSON)"
+
+# Observability lane: a short traced 2-rank eftopk run (loopback — no
+# sockets), both sinks validated by `microadam tracecheck` (--require-ef
+# insists on the EF-health gauges the reducer computes per step), then the
+# disabled-tracing overhead bound asserted by the bench (< 1% of a fused
+# step, MICROADAM_TRACE_ASSERT=1 turns the bound into a hard failure).
+trace-smoke:
+	mkdir -p runs
+	cargo run --release --bin microadam -- train \
+		--model mlp_tiny --ranks 2 --reduce eftopk --steps 25 \
+		--out runs/trace_smoke.jsonl --trace runs/trace_smoke.trace.json
+	cargo run --release --bin microadam -- tracecheck \
+		--chrome runs/trace_smoke.trace.json \
+		--jsonl runs/trace_smoke.jsonl --require-ef yes
+	MICROADAM_TRACE_ASSERT=1 MICROADAM_BENCH_SMOKE=1 \
+		cargo bench --bench bench_optimizer_step
+	@echo "trace-smoke: sinks validated (runs/trace_smoke.*)"
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts

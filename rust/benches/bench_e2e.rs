@@ -13,6 +13,12 @@ use microadam::optim::OptimizerKind;
 fn main() {
     std::env::set_var("MICROADAM_QUIET", "1");
 
+    // MICROADAM_TRACE=path turns the whole bench into a trace session:
+    // time_it medians land as counter samples and the dist probes record
+    // their transport spans; the Chrome trace file is written on exit.
+    let trace_path = std::env::var("MICROADAM_TRACE").ok().filter(|p| !p.is_empty());
+    let session = trace_path.as_deref().map(microadam::trace::session_to);
+
     // Measured resident optimizer-state footprints (allocated buffers, not
     // the paper accounting): microadam's bf16 window vs the adamw/adamw8bit
     // baselines, at a Table-2-ish dimension. Artifact-free.
@@ -37,6 +43,7 @@ fn main() {
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\nbench_e2e: artifacts/ missing — run `make artifacts` for the AOT rows");
+        finish_trace(session, trace_path.as_deref());
         return;
     }
     for model in ["lm_tiny", "lm_small"] {
@@ -75,4 +82,14 @@ fn main() {
         }
     }
     println!("\npaper shape (Table 2 runtime): MicroAdam within ~15% of AdamW wall-clock.");
+    finish_trace(session, trace_path.as_deref());
+}
+
+fn finish_trace(session: Option<microadam::trace::TraceSession>, path: Option<&str>) {
+    if let Some(s) = session {
+        match s.finish() {
+            Ok(()) => println!("chrome trace written to {}", path.unwrap_or("?")),
+            Err(e) => eprintln!("bench_e2e: trace write failed: {e}"),
+        }
+    }
 }

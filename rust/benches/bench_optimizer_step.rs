@@ -30,6 +30,19 @@ fn main() {
     let iters = if smoke { 3 } else { 7 };
     let rows = bench::bench_parallel_scaling(d_scale, iters);
 
+    // Disabled-tracing cost of one traced-capable fused step, as % of the
+    // step. The trace-smoke lane (`MICROADAM_TRACE_ASSERT=1`) turns the
+    // < 1% acceptance bound into a hard failure.
+    println!("\n== disabled-tracing overhead ==");
+    let overhead_pct = bench::trace_overhead_pct(d_scale, if smoke { 5 } else { 9 });
+    if std::env::var("MICROADAM_TRACE_ASSERT").map(|v| v == "1").unwrap_or(false) {
+        assert!(
+            overhead_pct < 1.0,
+            "disabled tracing costs {overhead_pct:.4}% of a fused step (bound: 1%)"
+        );
+        println!("trace overhead assert: {overhead_pct:.4}% < 1% OK");
+    }
+
     if let Ok(path) = std::env::var("MICROADAM_BENCH_JSON") {
         if !path.is_empty() {
             // Real-socket probe for the gather/relay overlap record
@@ -45,7 +58,7 @@ fn main() {
                     None
                 }
             };
-            let record = bench::smoke_json(d_scale, &rows, tcp.as_ref());
+            let record = bench::smoke_json(d_scale, &rows, tcp.as_ref(), Some(overhead_pct));
             match std::fs::write(&path, record.to_string()) {
                 Ok(()) => println!("\nbench record written to {path}"),
                 Err(e) => eprintln!("\nfailed to write {path}: {e}"),

@@ -624,6 +624,11 @@ pub struct TcpProbe {
     pub coordinator_received_bytes: u64,
     /// Gather/relay overlap the pipelined coordinator recorded (ms).
     pub overlap_ms: f64,
+    /// Ranks in the order their frames completed the final gather.
+    pub arrival_order: Vec<u16>,
+    /// Arrival latency of each frame (ms since that gather opened),
+    /// parallel to `arrival_order`.
+    pub arrival_ms: Vec<f64>,
     pub final_loss: f32,
 }
 
@@ -649,6 +654,15 @@ impl TcpProbe {
             if self.overlap_ms >= 0.0 { "ok" } else { "VIOLATED" },
             self.final_loss
         );
+        if !self.arrival_order.is_empty() {
+            let pairs: Vec<String> = self
+                .arrival_order
+                .iter()
+                .zip(&self.arrival_ms)
+                .map(|(r, ms)| format!("r{r}@{ms:.3}ms"))
+                .collect();
+            println!("  final-gather arrivals: {}", pairs.join(" "));
+        }
     }
 }
 
@@ -722,6 +736,8 @@ pub fn run_tcp_probe(steps: u64) -> Result<TcpProbe> {
         expected_uplink_bytes: steps * framed + handshakes,
         coordinator_received_bytes: tr.transport_bytes_received(),
         overlap_ms: tr.gather_overlap_ms(),
+        arrival_order: tr.last_arrival_order().to_vec(),
+        arrival_ms: tr.last_arrival_ms().to_vec(),
         final_loss: logger.tail_loss(10),
     })
 }
@@ -747,7 +763,60 @@ pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
     let _ = write!(line, "{name:<46} median {:>10.3} ms", med * 1e3);
     let _ = write!(line, "  (min {:.3} ms, n={iters})", samples[0] * 1e3);
     println!("{line}");
+    // Under a trace session the measurement also lands in the machine
+    // sinks (gauges -> JSONL drain + Chrome counter track), so bench
+    // numbers stop living only in stdout.
+    if crate::trace::enabled() {
+        crate::trace::gauge(&format!("bench.median_ms.{name}"), med * 1e3);
+        crate::trace::gauge(&format!("bench.min_ms.{name}"), samples[0] * 1e3);
+    }
     med
+}
+
+/// Measured cost of the *disabled* tracing instrumentation in one fused
+/// MicroAdam step, as a percent of the step's wall time. CI-stable by
+/// construction: rather than comparing two step timings across runs
+/// (whose run-to-run jitter dwarfs 1%), it times the exact per-block
+/// mark sequence a step executes with the gate off and divides by a
+/// measured step time — an upper bound on what `--trace`-capable code
+/// costs an untraced run. The `make trace-smoke` lane asserts < 1%.
+/// Call with tracing disabled (no active session); an enabled gate would
+/// measure the live-recording cost instead.
+pub fn trace_overhead_pct(d: usize, iters: usize) -> f64 {
+    use crate::exec::ExecPool;
+    use crate::trace::PhaseAcc;
+
+    let pool = ExecPool::new(1);
+    let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
+    let mut params = vec![0.1f32; d];
+    let grads: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+    let t_step = time_it("fused step (tracing disabled)", crate::WINDOW + 2, iters, || {
+        opt.step_sharded(&mut params, &grads, 1e-3, &pool)
+    });
+
+    // The disabled instrumentation that step just paid: one PhaseAcc with
+    // 5 marks per block. Re-run it alone, many times, behind black_box so
+    // the dead `on == false` branches are not optimized away.
+    let blocks = ((d + crate::BLOCK - 1) / crate::BLOCK).max(1);
+    let reps = 64u32;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut acc = PhaseAcc::<5>::start();
+        for _ in 0..blocks {
+            for p in 0..5 {
+                std::hint::black_box(&mut acc).mark(p);
+            }
+        }
+        std::hint::black_box(acc).finish("bench.overhead", ["a", "b", "c", "d", "e"], 0);
+    }
+    let t_marks = t0.elapsed().as_secs_f64() / f64::from(reps);
+    let pct = 100.0 * t_marks / t_step;
+    println!(
+        "disabled-tracing overhead: {:.3} us of marks per {:.3} ms step = {pct:.4}%",
+        t_marks * 1e6,
+        t_step * 1e3
+    );
+    pct
 }
 
 /// One measured (label, median seconds) row of the scaling benchmark.
@@ -868,8 +937,15 @@ pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
 /// scaling rows, measured resident bytes/param, the bf16 window bytes per
 /// value, the per-rank wire bytes of each reducer at this dimension, and
 /// (when the caller ran one) the real-socket [`TcpProbe`] with its
-/// gather/relay overlap ms. Pure assembly — the caller runs the probe.
-pub fn smoke_json(d: usize, rows: &[BenchRow], tcp: Option<&TcpProbe>) -> crate::util::json::Json {
+/// gather/relay overlap ms and per-rank arrival latencies, plus the
+/// measured [`trace_overhead_pct`] when the caller ran that check. Pure
+/// assembly — the caller runs the probe and the overhead benchmark.
+pub fn smoke_json(
+    d: usize,
+    rows: &[BenchRow],
+    tcp: Option<&TcpProbe>,
+    trace_overhead_pct: Option<f64>,
+) -> crate::util::json::Json {
     use crate::dist::{build_reducer, ReducerKind, SparseReduceConfig};
     use crate::util::json::{self, Json};
 
@@ -912,6 +988,14 @@ pub fn smoke_json(d: usize, rows: &[BenchRow], tcp: Option<&TcpProbe>) -> crate:
             ("uplink_measured_bytes", json::num(p.worker_uplink_bytes as f64)),
             ("uplink_accounted_bytes", json::num(p.expected_uplink_bytes as f64)),
             ("gather_overlap_ms", json::num(p.overlap_ms)),
+            (
+                "arrival_order",
+                Json::Arr(p.arrival_order.iter().map(|&r| json::num(r as f64)).collect()),
+            ),
+            (
+                "arrival_ms",
+                Json::Arr(p.arrival_ms.iter().map(|&ms| json::num(ms)).collect()),
+            ),
         ]),
         None => json::obj(vec![("error", json::s("tcp probe not run"))]),
     };
@@ -924,6 +1008,10 @@ pub fn smoke_json(d: usize, rows: &[BenchRow], tcp: Option<&TcpProbe>) -> crate:
         ("resident_state", Json::Arr(state_rows)),
         ("wire", Json::Arr(wires)),
         ("tcp_probe", tcp),
+        (
+            "trace_overhead_pct",
+            trace_overhead_pct.map(json::num).unwrap_or(Json::Null),
+        ),
     ])
 }
 

@@ -58,7 +58,15 @@ fn main() -> Result<()> {
     if args.first().map(|a| a == "--native").unwrap_or(false) {
         let d: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(1 << 20);
         let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
+        // MICROADAM_TRACE=path records the probe (per-phase fused-step
+        // spans + time_it medians) and writes a Chrome trace file.
+        let trace_path = std::env::var("MICROADAM_TRACE").ok().filter(|p| !p.is_empty());
+        let session = trace_path.as_deref().map(microadam::trace::session_to);
         native_probe(d, iters);
+        if let Some(s) = session {
+            s.finish()?;
+            println!("chrome trace written to {}", trace_path.unwrap_or_default());
+        }
         return Ok(());
     }
     if args.len() < 2 {

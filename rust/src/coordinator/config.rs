@@ -36,6 +36,11 @@ pub struct TrainConfig {
     pub grad_accum: usize,
     /// Metrics JSONL path (empty = no file logging).
     pub out: String,
+    /// Chrome trace-event JSON path (empty = tracing disabled). When set,
+    /// the run records [`crate::trace`] spans/gauges: phase spans and
+    /// EF-health records drain into the metrics JSONL, and the Chrome
+    /// trace file is written at the end of the run.
+    pub trace: String,
     /// Log every n steps.
     pub log_every: u64,
     pub artifacts_dir: String,
@@ -67,6 +72,7 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             grad_accum: 1,
             out: String::new(),
+            trace: String::new(),
             log_every: 10,
             artifacts_dir: "artifacts".into(),
             workers: 0,
@@ -109,6 +115,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("out").and_then(Json::as_str) {
             cfg.out = v.to_string();
+        }
+        if let Some(v) = j.get("trace").and_then(Json::as_str) {
+            cfg.trace = v.to_string();
         }
         if let Some(v) = j.get("log_every").and_then(Json::as_f64) {
             cfg.log_every = (v as u64).max(1);
@@ -177,6 +186,7 @@ impl TrainConfig {
             ("weight_decay", json::num(self.weight_decay as f64)),
             ("grad_accum", json::num(self.grad_accum as f64)),
             ("out", json::s(&self.out)),
+            ("trace", json::s(&self.trace)),
             ("log_every", json::num(self.log_every as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("workers", json::num(self.workers as f64)),
@@ -234,6 +244,7 @@ mod tests {
             weight_decay: 0.1,
             grad_accum: 4,
             out: "runs/x.jsonl".into(),
+            trace: "runs/x.trace.json".into(),
             log_every: 5,
             artifacts_dir: "artifacts".into(),
             workers: 3,
@@ -250,6 +261,7 @@ mod tests {
         assert_eq!(back.schedule, cfg.schedule);
         assert_eq!(back.steps, cfg.steps);
         assert_eq!(back.grad_accum, 4);
+        assert_eq!(back.trace, "runs/x.trace.json");
         assert_eq!(back.ranks, 4);
         assert_eq!(back.reduce, ReducerKind::EfTopK);
         assert_eq!(back.transport, TransportKind::Uds);

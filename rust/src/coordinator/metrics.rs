@@ -1,6 +1,16 @@
 //! Run metrics: JSONL step logs + summaries (the training-curve figures are
 //! regenerated from these files).
+//!
+//! Each step line carries both the cumulative `elapsed_s` and the
+//! per-step wall time `step_ms` (the delta since the previous
+//! `log_step`), so per-step regressions are visible without
+//! differentiating the cumulative clock. The in-memory `history` is a
+//! bounded ring ([`MetricsLogger::with_capacity`], default
+//! [`DEFAULT_HISTORY_CAP`]): long runs evict the oldest records instead
+//! of growing without limit, while the JSONL file always keeps every
+//! line.
 
+use std::collections::VecDeque;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -10,26 +20,47 @@ use anyhow::Result;
 
 use crate::util::json::{self, Json};
 
+/// Default bound of the in-memory `history` ring. Generous for every
+/// in-repo run (tests and benches log a few hundred steps) while keeping
+/// a pathological multi-million-step run at a few hundred KB.
+pub const DEFAULT_HISTORY_CAP: usize = 4096;
+
 /// One training-step record.
 #[derive(Debug, Clone)]
 pub struct StepMetrics {
     pub step: u64,
     pub loss: f32,
     pub lr: f32,
+    /// Seconds since the logger was created (cumulative clock).
     pub elapsed_s: f64,
+    /// Wall milliseconds since the previous `log_step` (the first step
+    /// measures from logger creation).
+    pub step_ms: f64,
 }
 
-/// JSONL writer (one object per line), plus an in-memory history for
-/// summaries and tests.
+/// JSONL writer (one object per line), plus a bounded in-memory history
+/// for summaries and tests.
 pub struct MetricsLogger {
     file: Option<BufWriter<File>>,
     start: Instant,
-    pub history: Vec<StepMetrics>,
+    /// When the previous `log_step` fired (`step_ms` zero point).
+    last: Instant,
+    /// Ring bound: `history` never exceeds this many records.
+    cap: usize,
+    pub history: VecDeque<StepMetrics>,
 }
 
 impl MetricsLogger {
-    /// `path` empty -> memory-only logging.
+    /// `path` empty -> memory-only logging. History bounded at
+    /// [`DEFAULT_HISTORY_CAP`].
     pub fn new(path: &str) -> Result<Self> {
+        Self::with_capacity(path, DEFAULT_HISTORY_CAP)
+    }
+
+    /// `path` empty -> memory-only logging; `cap` bounds the in-memory
+    /// `history` ring (oldest records evicted; the JSONL file keeps
+    /// everything).
+    pub fn with_capacity(path: &str, cap: usize) -> Result<Self> {
         let file = if path.is_empty() {
             None
         } else {
@@ -38,7 +69,14 @@ impl MetricsLogger {
             }
             Some(BufWriter::new(File::create(path)?))
         };
-        Ok(Self { file, start: Instant::now(), history: Vec::new() })
+        let now = Instant::now();
+        Ok(Self {
+            file,
+            start: now,
+            last: now,
+            cap: cap.max(1),
+            history: VecDeque::new(),
+        })
     }
 
     /// Write a free-form header record (run provenance: config, etc.).
@@ -50,21 +88,34 @@ impl MetricsLogger {
     }
 
     pub fn log_step(&mut self, step: u64, loss: f32, lr: f32) -> Result<()> {
-        let m = StepMetrics { step, loss, lr, elapsed_s: self.start.elapsed().as_secs_f64() };
+        let now = Instant::now();
+        let m = StepMetrics {
+            step,
+            loss,
+            lr,
+            elapsed_s: now.duration_since(self.start).as_secs_f64(),
+            step_ms: now.duration_since(self.last).as_secs_f64() * 1e3,
+        };
+        self.last = now;
         if let Some(f) = &mut self.file {
             let j = json::obj(vec![
                 ("step", json::num(step as f64)),
                 ("loss", json::num(loss as f64)),
                 ("lr", json::num(lr as f64)),
                 ("elapsed_s", json::num(m.elapsed_s)),
+                ("step_ms", json::num(m.step_ms)),
             ]);
             writeln!(f, "{}", j.to_string())?;
         }
-        self.history.push(m);
+        if self.history.len() == self.cap {
+            self.history.pop_front();
+        }
+        self.history.push_back(m);
         Ok(())
     }
 
-    /// Write an arbitrary record (eval accuracy, memory snapshots, ...).
+    /// Write an arbitrary record (eval accuracy, memory snapshots, trace
+    /// drains, ...).
     pub fn log_record(&mut self, j: Json) -> Result<()> {
         if let Some(f) = &mut self.file {
             writeln!(f, "{}", j.to_string())?;
@@ -79,19 +130,19 @@ impl MetricsLogger {
         Ok(())
     }
 
-    /// Mean loss over the last `n` steps (curve-tail summary).
+    /// Mean loss over the last `n` retained steps (curve-tail summary).
     pub fn tail_loss(&self, n: usize) -> f32 {
-        let h = &self.history;
-        if h.is_empty() {
+        if self.history.is_empty() {
             return f32::NAN;
         }
-        let k = n.min(h.len());
-        h[h.len() - k..].iter().map(|m| m.loss).sum::<f32>() / k as f32
+        let k = n.min(self.history.len());
+        self.history.iter().rev().take(k).map(|m| m.loss).sum::<f32>() / k as f32
     }
 
-    /// First-step loss (for improvement assertions).
+    /// Loss of the oldest *retained* step (the true first step unless the
+    /// ring has evicted it) — for improvement assertions.
     pub fn first_loss(&self) -> f32 {
-        self.history.first().map(|m| m.loss).unwrap_or(f32::NAN)
+        self.history.front().map(|m| m.loss).unwrap_or(f32::NAN)
     }
 }
 
@@ -107,6 +158,24 @@ mod tests {
         }
         assert_eq!(l.history.len(), 10);
         assert!(l.tail_loss(3) < l.first_loss());
+        // per-step wall time is a positive delta, bounded by the total
+        for m in &l.history {
+            assert!(m.step_ms >= 0.0);
+            assert!(m.step_ms <= m.elapsed_s * 1e3 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn history_ring_is_bounded() {
+        let mut l = MetricsLogger::with_capacity("", 4).unwrap();
+        for t in 1..=10u64 {
+            l.log_step(t, t as f32, 0.1).unwrap();
+        }
+        assert_eq!(l.history.len(), 4);
+        // oldest evicted: steps 7..=10 remain
+        assert_eq!(l.history.front().map(|m| m.step), Some(7));
+        assert_eq!(l.first_loss(), 7.0);
+        assert_eq!(l.tail_loss(2), 9.5);
     }
 
     #[test]
@@ -126,6 +195,7 @@ mod tests {
         }
         let rec = Json::parse(lines[2]).unwrap();
         assert_eq!(rec.get("step").unwrap().as_f64(), Some(2.0));
+        assert!(rec.get("step_ms").and_then(Json::as_f64).is_some());
         let _ = std::fs::remove_file(path);
     }
 }

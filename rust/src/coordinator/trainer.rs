@@ -27,6 +27,7 @@ use crate::data::{ImageDataset, MarkovCorpus, NliDataset};
 use crate::exec::ExecPool;
 use crate::optim::{self, Optimizer, OptimizerKind};
 use crate::runtime::{self, lit_f32, lit_i32, ArtifactMeta, Literal, Runtime};
+use crate::trace;
 use crate::util::json;
 
 /// Data source driving the model artifact's batch inputs. Shared with the
@@ -305,6 +306,17 @@ impl Trainer {
         Ok(loss_sum / accum as f32)
     }
 
+    /// Per-step coordinator gauges into the trace sink: optimizer state
+    /// footprint normalized per parameter (paper accounting, and the
+    /// measured resident bytes when the backend is native).
+    fn emit_gauges(&self) {
+        let d = self.layout.d_padded.max(1) as f64;
+        trace::gauge("coord.paper_bytes_per_param", self.opt.paper_state_bytes() as f64 / d);
+        if let Some(resident) = self.opt.resident_state_bytes() {
+            trace::gauge("coord.resident_bytes_per_param", resident as f64 / d);
+        }
+    }
+
     /// Run the configured number of steps, logging to `logger`.
     pub fn train(&mut self, logger: &mut MetricsLogger) -> Result<()> {
         logger.log_header(self.cfg.to_json())?;
@@ -316,6 +328,12 @@ impl Trainer {
                 bail!("non-finite loss at step {step}");
             }
             logger.log_step(step, loss, lr)?;
+            if trace::enabled() {
+                self.emit_gauges();
+                for rec in trace::drain_step_records(step) {
+                    logger.log_record(rec)?;
+                }
+            }
             if step % self.cfg.log_every == 0 || step == steps {
                 eprintln!(
                     "[train {} {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e}",

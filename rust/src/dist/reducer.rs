@@ -138,6 +138,25 @@ pub trait GradReducer: Send {
         let _ = rank;
         0.0
     }
+    /// Fraction of rank `r`'s `|a_r|` mass the last Top-K selection
+    /// captured (1.0 for lossless reducers). EF-health telemetry: only
+    /// refreshed while [`crate::trace::enabled`] — stale otherwise.
+    fn topk_mass(&self, rank: usize) -> f32 {
+        let _ = rank;
+        1.0
+    }
+    /// Mean absolute Quant4 error of rank `r`'s last residual
+    /// re-quantization (0 when the residual is unquantized). EF-health
+    /// telemetry: only refreshed while [`crate::trace::enabled`].
+    fn quant_abs_err(&self, rank: usize) -> f32 {
+        let _ = rank;
+        0.0
+    }
+    /// Fraction of coordinates each rank communicates per step (the slab
+    /// density `nb*kb/d`; 1.0 for dense exchange).
+    fn slab_density(&self) -> f64 {
+        1.0
+    }
 }
 
 /// Shared compression geometry for the sparse reducers (defaults follow the
@@ -322,6 +341,18 @@ struct SparseCore {
     ef_dense: Vec<f32>,
     /// Per-rank Top-K quickselect scratch.
     sels: Vec<Vec<u16>>,
+    /// Per-rank EF-health snapshot from the last compress — refreshed only
+    /// while [`crate::trace::enabled`] (the extra `O(d)` passes are skipped
+    /// otherwise, so the hot path stays untouched).
+    health: Vec<RankHealth>,
+}
+
+/// One rank's EF-health sample (see [`GradReducer::topk_mass`] /
+/// [`GradReducer::quant_abs_err`]).
+#[derive(Debug, Clone, Copy, Default)]
+struct RankHealth {
+    topk_mass: f32,
+    quant_abs_err: f32,
 }
 
 impl SparseCore {
@@ -368,6 +399,7 @@ impl SparseCore {
             ef_dense,
             // quickselect scratch pre-sized from the layout's block length
             sels: (0..ranks).map(|_| Vec::with_capacity(block)).collect(),
+            health: vec![RankHealth::default(); ranks],
         }
     }
 
@@ -394,7 +426,7 @@ impl SparseCore {
             let mut efs_rest = &mut self.ef_stats[..];
             let mut efd_rest = &mut self.ef_dense[..];
             let mut sel_iter = self.sels.iter_mut();
-            for &g in grads {
+            for (&g, health) in grads.iter().zip(&mut self.health) {
                 let (acc, ar) = acc_rest.split_at_mut(d_pad);
                 acc_rest = ar;
                 let (idx, ir) = idx_rest.split_at_mut(nb * kb);
@@ -424,6 +456,7 @@ impl SparseCore {
                     ef,
                     // repolint: allow(no-panic): sels was sized to one scratch per rank above.
                     sel: sel_iter.next().expect("one scratch per rank"),
+                    health,
                 });
             }
             // Group ranks so at most `workers` threads run (the ExecPool
@@ -467,6 +500,7 @@ impl SparseCore {
             val: &mut self.val[rank * nbkb..(rank + 1) * nbkb],
             ef,
             sel: &mut self.sels[rank],
+            health: &mut self.health[rank],
         };
         compress_rank(self.d, self.block, self.kb, &self.quant, sh);
     }
@@ -573,6 +607,10 @@ impl SparseCore {
         }
     }
 
+    fn slab_density(&self) -> f64 {
+        (self.nb * self.kb) as f64 / self.d as f64
+    }
+
     fn residual_norm(&self, rank: usize) -> f32 {
         assert!(rank < self.ranks);
         match self.ef {
@@ -600,6 +638,7 @@ struct RankShard<'a> {
     val: &'a mut [u16],
     ef: RankEf<'a>,
     sel: &'a mut Vec<u16>,
+    health: &'a mut RankHealth,
 }
 
 enum RankEf<'a> {
@@ -613,7 +652,7 @@ enum RankEf<'a> {
 /// wire), zero the selected entries, re-quantize the remainder into the
 /// residual.
 fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShard) {
-    let RankShard { grad, acc, idx, val, mut ef, sel } = sh;
+    let RankShard { grad, acc, idx, val, mut ef, sel, health } = sh;
     acc[..d].copy_from_slice(grad);
     acc[d..].fill(0.0);
     match &mut ef {
@@ -631,6 +670,13 @@ fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShar
     // gradient mass from the EF contract. No real gradient ever lives
     // beyond `d`, so clearing is exact.
     acc[d..].fill(0.0);
+    // EF-health sampling has to happen inline: the remainder is overwritten
+    // into the residual below, so the captured-mass fraction is measurable
+    // only between selection and re-quantization. The extra O(d) passes run
+    // only while tracing is on.
+    let tracing = crate::trace::enabled();
+    let total_abs: f64 =
+        if tracing { acc.iter().map(|a| a.abs() as f64).sum() } else { 0.0 };
     let nb = acc.len() / block;
     for b in 0..nb {
         let blk = b * block..(b + 1) * block;
@@ -641,10 +687,23 @@ fn compress_rank(d: usize, block: usize, kb: usize, quant: &Quant4, sh: RankShar
             accb[i as usize] = 0.0;
         }
     }
+    if tracing {
+        let rem_abs: f64 = acc.iter().map(|a| a.abs() as f64).sum();
+        health.topk_mass =
+            if total_abs > 0.0 { ((total_abs - rem_abs) / total_abs) as f32 } else { 1.0 };
+    }
     match &mut ef {
         RankEf::Off => {}
         RankEf::Dense(e) => e.copy_from_slice(acc),
         RankEf::Quant4 { packed, stats } => quant.quantize(acc, packed, stats),
+    }
+    if tracing {
+        // `acc` still holds the pre-quantization remainder: compare it to
+        // the residual the next step will actually dequantize.
+        health.quant_abs_err = match &ef {
+            RankEf::Quant4 { packed, stats } => quant.mean_abs_err(packed, stats, acc),
+            _ => 0.0,
+        };
     }
 }
 
@@ -703,6 +762,14 @@ impl GradReducer for TopKReduce {
 
     fn residual_state_bytes(&self) -> usize {
         0
+    }
+
+    fn topk_mass(&self, rank: usize) -> f32 {
+        self.core.health[rank].topk_mass
+    }
+
+    fn slab_density(&self) -> f64 {
+        self.core.slab_density()
     }
 }
 
@@ -784,6 +851,18 @@ impl GradReducer for EfTopKReduce {
 
     fn residual_norm(&self, rank: usize) -> f32 {
         self.core.residual_norm(rank)
+    }
+
+    fn topk_mass(&self, rank: usize) -> f32 {
+        self.core.health[rank].topk_mass
+    }
+
+    fn quant_abs_err(&self, rank: usize) -> f32 {
+        self.core.health[rank].quant_abs_err
+    }
+
+    fn slab_density(&self) -> f64 {
+        self.core.slab_density()
     }
 }
 

@@ -51,6 +51,7 @@ use crate::exec::ExecPool;
 use crate::models::mlp::Mlp;
 use crate::optim::{self, Optimizer};
 use crate::runtime::{self, lit_f32, Runtime};
+use crate::trace;
 use crate::util::json;
 
 use super::reducer::{build_reducer, reducer_name, GradReducer, SparseReduceConfig};
@@ -193,11 +194,13 @@ impl DistTrainer {
         Ok(me)
     }
 
-    /// Digest of everything trajectory-relevant in the config. `out` is
-    /// endpoint-local (workers clear it) and deliberately excluded.
+    /// Digest of everything trajectory-relevant in the config. `out` and
+    /// `trace` are endpoint-local sinks (workers clear them) and
+    /// deliberately excluded.
     fn config_digest(cfg: &TrainConfig) -> u64 {
         let mut c = cfg.clone();
         c.out = String::new();
+        c.trace = String::new();
         wire::fnv1a64(c.to_json().to_string().as_bytes())
     }
 
@@ -368,6 +371,18 @@ impl DistTrainer {
         self.transport.overlap_ms()
     }
 
+    /// Ranks in the order their frames completed in the most recent
+    /// gather (coordinator only; empty on workers/loopback).
+    pub fn last_arrival_order(&self) -> &[u16] {
+        self.transport.last_arrival()
+    }
+
+    /// Per-frame arrival latency (ms since the gather opened), parallel
+    /// to [`DistTrainer::last_arrival_order`].
+    pub fn last_arrival_ms(&self) -> &[f64] {
+        self.transport.last_arrival_ms()
+    }
+
     /// Reducer display name.
     pub fn reducer_name(&self) -> String {
         self.reducer.name()
@@ -384,6 +399,7 @@ impl DistTrainer {
         self.t += 1;
 
         // 1. local gradients on every hosted rank
+        let sp = trace::begin();
         match &mut self.engine {
             Engine::Native { mlp, spec, replicas } => {
                 let params = &self.params[..];
@@ -406,8 +422,10 @@ impl DistTrainer {
                 }
             }
         }
+        sp.end("dist", "local_grad", 0);
 
         // 2. compress each hosted rank and frame its payload
+        let sp = trace::begin();
         let tag = self.reducer.payload_tag();
         let wire_per_rank = self.reducer.wire_bytes_per_rank();
         let mut local = Vec::with_capacity(self.local_ranks.len());
@@ -445,6 +463,7 @@ impl DistTrainer {
                 }
             }
         }
+        sp.end("dist", "compress", 0);
 
         // 3. gather-to-all and aggregate (identical on every endpoint).
         //    The phases are explicit: post_send fires the moment this
@@ -475,6 +494,7 @@ impl DistTrainer {
         self.wire_bytes += (self.ranks * (wire_per_rank + wire::FRAME_OVERHEAD)) as u64;
 
         // 4. replicated optimizer step over the real tensor boundaries
+        let sp = trace::begin();
         optim::step_with_layout(
             self.opt.as_mut(),
             &self.tensors,
@@ -484,7 +504,31 @@ impl DistTrainer {
             lr,
             &self.pool,
         );
+        sp.end("dist", "optim_step", 0);
         Ok(loss)
+    }
+
+    /// Per-step EF-health gauges into the trace sink, sampled from the
+    /// ranks this endpoint hosts (the compress phase refreshes them only
+    /// while tracing is enabled). Also re-emits the last gather's
+    /// per-rank arrival latencies as gauges so they land in the JSONL
+    /// next to the health numbers.
+    fn emit_ef_gauges(&self) {
+        let n = self.local_ranks.len() as f32;
+        let (mut rn, mut tm, mut qe) = (0f32, 0f32, 0f32);
+        for &r in &self.local_ranks {
+            rn += self.reducer.residual_norm(r);
+            tm += self.reducer.topk_mass(r);
+            qe += self.reducer.quant_abs_err(r);
+        }
+        trace::gauge("ef.residual_norm", (rn / n) as f64);
+        trace::gauge("ef.topk_mass", (tm / n) as f64);
+        trace::gauge("ef.quant_abs_err", (qe / n) as f64);
+        trace::gauge("ef.slab_density", self.reducer.slab_density());
+        let arrival = self.transport.last_arrival();
+        for (&rk, &ms) in arrival.iter().zip(self.transport.last_arrival_ms()) {
+            trace::gauge(&format!("dist.arrival_ms.r{rk}"), ms);
+        }
     }
 
     /// Run the configured number of steps. Only the primary endpoint
@@ -504,6 +548,12 @@ impl DistTrainer {
             }
             if primary {
                 logger.log_step(step, loss, lr)?;
+                if trace::enabled() {
+                    self.emit_ef_gauges();
+                    for rec in trace::drain_step_records(step) {
+                        logger.log_record(rec)?;
+                    }
+                }
                 if step % self.cfg.log_every == 0 || step == steps {
                     eprintln!(
                         "[dist x{} {} {} via {}] step {step}/{steps} loss {loss:.4} lr {lr:.2e} wire {} MB",

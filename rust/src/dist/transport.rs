@@ -195,6 +195,13 @@ pub trait Transport: Send {
     fn last_arrival(&self) -> &[u16] {
         &[]
     }
+    /// Milliseconds after the round opened ([`Transport::post_send`]) at
+    /// which each uplink frame of the most recent completed gather
+    /// arrived — index-aligned with [`Transport::last_arrival`]
+    /// (coordinator endpoints only; empty elsewhere).
+    fn last_arrival_ms(&self) -> &[f64] {
+        &[]
+    }
 }
 
 fn wire_err(e: WireError) -> anyhow::Error {
@@ -265,6 +272,7 @@ impl Transport for Loopback {
         // The round trip is the point: loopback runs the same
         // serialization the socket transports ship, so framed-byte
         // accounting and codec coverage don't depend on the topology.
+        let sp = crate::trace::begin();
         let mut encoded = Vec::with_capacity(local.len());
         for f in &local {
             let bytes = f.encode();
@@ -272,12 +280,14 @@ impl Transport for Loopback {
             encoded.push(bytes);
         }
         self.pending = Some(encoded);
+        sp.end("dist", "post_send", 0);
         Ok(())
     }
 
     fn collect(&mut self) -> Result<Vec<Frame>> {
         let encoded =
             self.pending.take().ok_or_else(|| anyhow!("loopback: collect without post_send"))?;
+        let sp = crate::trace::begin();
         let mut out = Vec::with_capacity(encoded.len());
         for bytes in &encoded {
             let (back, used) = Frame::decode(bytes).map_err(wire_err)?;
@@ -285,6 +295,7 @@ impl Transport for Loopback {
             self.received += used as u64;
             out.push(back);
         }
+        sp.end("dist", "gather", 0);
         Ok(out)
     }
 
@@ -340,6 +351,12 @@ struct PendingGather {
     sent_upto: Vec<usize>,
     /// Ranks in uplink-arrival order.
     arrival: Vec<u16>,
+    /// When `post_send` opened this round — the zero point of the
+    /// per-frame arrival latencies.
+    opened: Instant,
+    /// Milliseconds after `opened` at which each frame arrived,
+    /// index-aligned with `arrival`.
+    arrival_ms: Vec<f64>,
 }
 
 /// The rank-0 side of a stream transport: one stream per worker and the
@@ -353,6 +370,7 @@ struct StreamHub<S: GatherStream> {
     readers: Vec<FrameReader>,
     pending: Option<PendingGather>,
     last_arrival: Vec<u16>,
+    last_arrival_ms: Vec<f64>,
     overlap_micros: u64,
     sent: u64,
     received: u64,
@@ -367,6 +385,7 @@ impl<S: GatherStream> StreamHub<S> {
             readers,
             pending: None,
             last_arrival: Vec::new(),
+            last_arrival_ms: Vec::new(),
             overlap_micros: 0,
             sent: 0,
             received: 0,
@@ -393,6 +412,8 @@ impl<S: GatherStream> StreamHub<S> {
             ready: vec![false; self.workers.len()],
             sent_upto: vec![0; self.workers.len()],
             arrival: Vec::new(),
+            opened: Instant::now(),
+            arrival_ms: Vec::new(),
         });
         Ok(())
     }
@@ -405,11 +426,24 @@ impl<S: GatherStream> StreamHub<S> {
         for w in &self.workers {
             w.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
         }
+        let sp = crate::trace::begin();
+        let overlap_before = self.overlap_micros;
         let res = self.collect_inner(&mut p, kind);
         for w in &self.workers {
             let _ = w.set_recv_timeout(Some(PEER_TIMEOUT));
         }
         self.last_arrival = std::mem::take(&mut p.arrival);
+        self.last_arrival_ms = std::mem::take(&mut p.arrival_ms);
+        // The relay time hidden under this round's gather, as a real span
+        // nested at the gather's start (complements the cumulative
+        // `overlap_ms()` float).
+        crate::trace::span_at(
+            "dist",
+            "relay_overlap",
+            0,
+            sp.start_ns(),
+            (self.overlap_micros - overlap_before) * 1000,
+        );
         res
     }
 
@@ -449,6 +483,7 @@ impl<S: GatherStream> StreamHub<S> {
                         }
                         self.received += raw.len() as u64;
                         p.arrival.push(f.rank);
+                        p.arrival_ms.push(p.opened.elapsed().as_secs_f64() * 1e3);
                         // relay the worker's exact (CRC-verified) wire
                         // bytes — no re-encode pass on the hot path
                         p.encoded[i + 1] = Some(raw);
@@ -546,7 +581,8 @@ impl<S: GatherStream> StreamEndpoint<S> {
             bail!("{}: post_send needs this endpoint's frame", self.name);
         };
         let name = self.name;
-        match &mut self.role {
+        let sp = crate::trace::begin();
+        let res = match &mut self.role {
             StreamRole::Coordinator { hub } => hub.post_send(mine, name),
             StreamRole::Worker { stream, pending_step, sent, .. } => {
                 if pending_step.is_some() {
@@ -559,13 +595,16 @@ impl<S: GatherStream> StreamEndpoint<S> {
                 *pending_step = Some(step);
                 Ok(())
             }
-        }
+        };
+        sp.end("dist", "post_send", 0);
+        res
     }
 
     fn collect(&mut self) -> Result<Vec<Frame>> {
         let name = self.name;
         let ranks = self.ranks;
-        match &mut self.role {
+        let sp = crate::trace::begin();
+        let res = match &mut self.role {
             StreamRole::Coordinator { hub } => hub.collect(name),
             StreamRole::Worker { stream, pending_step, received, .. } => {
                 let step = pending_step
@@ -589,7 +628,9 @@ impl<S: GatherStream> StreamEndpoint<S> {
                 }
                 Ok(frames)
             }
-        }
+        };
+        sp.end("dist", "gather", 0);
+        res
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -616,6 +657,13 @@ impl<S: GatherStream> StreamEndpoint<S> {
     fn last_arrival(&self) -> &[u16] {
         match &self.role {
             StreamRole::Coordinator { hub } => &hub.last_arrival,
+            StreamRole::Worker { .. } => &[],
+        }
+    }
+
+    fn last_arrival_ms(&self) -> &[f64] {
+        match &self.role {
+            StreamRole::Coordinator { hub } => &hub.last_arrival_ms,
             StreamRole::Worker { .. } => &[],
         }
     }
@@ -859,6 +907,10 @@ impl Transport for UdsTransport {
     fn last_arrival(&self) -> &[u16] {
         self.inner.last_arrival()
     }
+
+    fn last_arrival_ms(&self) -> &[f64] {
+        self.inner.last_arrival_ms()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -998,6 +1050,10 @@ impl Transport for TcpTransport {
 
     fn last_arrival(&self) -> &[u16] {
         self.inner.last_arrival()
+    }
+
+    fn last_arrival_ms(&self) -> &[f64] {
+        self.inner.last_arrival_ms()
     }
 }
 
@@ -1172,6 +1228,10 @@ struct PendingShm {
     step: u64,
     frames: Vec<Option<Frame>>,
     arrival: Vec<u16>,
+    /// When `post_send` opened this round (arrival-latency zero point).
+    opened: Instant,
+    /// Milliseconds after `opened` per arrived frame, aligned with `arrival`.
+    arrival_ms: Vec<f64>,
 }
 
 enum ShmRole {
@@ -1193,6 +1253,7 @@ pub struct ShmTransport {
     sent: u64,
     received: u64,
     last_arrival: Vec<u16>,
+    last_arrival_ms: Vec<f64>,
 }
 
 fn up_path(dir: &Path, rank: usize) -> PathBuf {
@@ -1226,6 +1287,7 @@ impl ShmTransport {
             sent: 0,
             received: 0,
             last_arrival: Vec::new(),
+            last_arrival_ms: Vec::new(),
         })
     }
 
@@ -1242,6 +1304,7 @@ impl ShmTransport {
             sent: 0,
             received: 0,
             last_arrival: Vec::new(),
+            last_arrival_ms: Vec::new(),
         })
     }
 
@@ -1284,7 +1347,8 @@ impl Transport for ShmTransport {
         let Some(mine) = local.pop() else {
             bail!("shm: post_send needs this endpoint's frame");
         };
-        match &mut self.role {
+        let sp = crate::trace::begin();
+        let res = match &mut self.role {
             ShmRole::Coordinator { pending, .. } => {
                 if pending.is_some() {
                     bail!("shm: gather already in flight (post_send without collect)");
@@ -1295,7 +1359,13 @@ impl Transport for ShmTransport {
                 let mut frames: Vec<Option<Frame>> = (0..self.ranks).map(|_| None).collect();
                 let step = mine.step;
                 frames[0] = Some(mine);
-                *pending = Some(PendingShm { step, frames, arrival: Vec::new() });
+                *pending = Some(PendingShm {
+                    step,
+                    frames,
+                    arrival: Vec::new(),
+                    opened: Instant::now(),
+                    arrival_ms: Vec::new(),
+                });
                 Ok(())
             }
             ShmRole::Worker { up, pending_step, .. } => {
@@ -1309,11 +1379,14 @@ impl Transport for ShmTransport {
                 *pending_step = Some(step);
                 Ok(())
             }
-        }
+        };
+        sp.end("dist", "post_send", 0);
+        res
     }
 
     fn collect(&mut self) -> Result<Vec<Frame>> {
-        match &mut self.role {
+        let sp = crate::trace::begin();
+        let res = match &mut self.role {
             ShmRole::Coordinator { pairs, pending, .. } => {
                 let mut p = pending
                     .take()
@@ -1346,6 +1419,7 @@ impl Transport for ShmTransport {
                         }
                         self.received += used as u64;
                         p.arrival.push(f.rank);
+                        p.arrival_ms.push(p.opened.elapsed().as_secs_f64() * 1e3);
                         p.frames[i + 1] = Some(f);
                         progress = true;
                     }
@@ -1388,6 +1462,7 @@ impl Transport for ShmTransport {
                     self.sent += bundle.len() as u64;
                 }
                 self.last_arrival = p.arrival;
+                self.last_arrival_ms = p.arrival_ms;
                 Ok(frames)
             }
             ShmRole::Worker { down, pending_step, .. } => {
@@ -1409,7 +1484,9 @@ impl Transport for ShmTransport {
                 }
                 Ok(frames)
             }
-        }
+        };
+        sp.end("dist", "gather", 0);
+        res
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -1422,6 +1499,10 @@ impl Transport for ShmTransport {
 
     fn last_arrival(&self) -> &[u16] {
         &self.last_arrival
+    }
+
+    fn last_arrival_ms(&self) -> &[f64] {
+        &self.last_arrival_ms
     }
 }
 

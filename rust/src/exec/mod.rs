@@ -274,8 +274,11 @@ impl ExecPool {
             Some(h) if n > 1 => h,
             _ => {
                 for (i, w) in shards.into_iter().enumerate() {
+                    let sp = crate::trace::begin();
                     f(i, w);
+                    sp.end("exec", "shard", i as u32);
                 }
+                crate::trace::flush_local();
                 return;
             }
         };
@@ -285,15 +288,22 @@ impl ExecPool {
         let slots: Vec<Mutex<Option<W>>> = shards.into_iter().map(|w| Mutex::new(Some(w))).collect();
         let cursor = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
-        let run = |_worker: usize| loop {
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
+        let run = |_worker: usize| {
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let w = slots[i].lock().unwrap().take().expect("shard claimed once");
+                let sp = crate::trace::begin();
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, w))).is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                }
+                sp.end("exec", "shard", i as u32);
             }
-            let w = slots[i].lock().unwrap().take().expect("shard claimed once");
-            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, w))).is_err() {
-                panicked.store(true, Ordering::SeqCst);
-            }
+            // Drain this worker's trace buffer once per dispatch, so the
+            // collector sees every shard span without per-event locking.
+            crate::trace::flush_local();
         };
 
         let task: &(dyn Fn(usize) + Sync) = &run;

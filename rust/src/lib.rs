@@ -29,6 +29,11 @@
 //!   [`dist::DistTrainer`] loop runs behind `microadam train --ranks N
 //!   --reduce eftopk [--transport uds|shm]`; the multi-process runs are
 //!   bit-identical to loopback with the same seeds.
+//! * **[`trace`]** — zero-dependency tracing/metrics: per-shard/per-phase
+//!   spans over the fused engine, transport gather/relay spans, EF-health
+//!   gauges (residual norm, Top-K captured mass, Quant4 error), drained
+//!   into the metrics JSONL and exportable as Chrome trace-event JSON
+//!   (`--trace <path>`). True no-op when disabled.
 //!
 //! See the repo-level `README.md` for the CLI quickstart and the
 //! paper→module map. Library quickstart:
@@ -53,6 +58,7 @@ pub mod optim;
 pub mod quant;
 pub mod runtime;
 pub mod topk;
+pub mod trace;
 pub mod util;
 
 /// Paper-default Top-K block size `B_d` (must stay below 2^15 so

@@ -23,6 +23,8 @@ use microadam::dist::{
     ShmTransport, TcpPending, TcpTransport, Transport, TransportKind, UdsPending, UdsTransport,
 };
 use microadam::runtime::Runtime;
+use microadam::trace;
+use microadam::util::json::Json;
 
 struct Args {
     flags: HashMap<String, String>,
@@ -78,7 +80,11 @@ USAGE:
                     [--backend aot|native] [--steps N] [--lr F] [--schedule const|warmup-cosine]
                     [--warmup N] [--weight-decay F] [--seed N] [--grad-accum N]
                     [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
-                    [--checkpoint path.bin]
+                    [--checkpoint path.bin] [--trace runs/x.trace.json]
+                      (--trace enables the tracing layer: per-phase span /
+                       EF-health records go into the --out JSONL and a
+                       Chrome trace-event file is written to the given
+                       path — open it in Perfetto or chrome://tracing.)
                     [--ranks N] [--reduce dense|topk|eftopk]
                     [--transport loopback|uds|tcp|shm] [--rendezvous PATH|host:port]
                     [--external yes]
@@ -98,6 +104,12 @@ USAGE:
                     [--steps N] [--model NAME] [--out-dir runs] [--artifacts artifacts]
   microadam list    [--artifacts artifacts]
   microadam selftest [--artifacts artifacts]
+  microadam tracecheck [--chrome out.trace.json] [--jsonl runs/x.jsonl]
+                    [--require-ef yes]
+                      (validate the two trace sinks: the Chrome
+                       trace-event file and/or the JSONL
+                       {\"kind\":\"trace\"} records; --require-ef yes also
+                       insists on the EF-health gauges.)
 
 Optimizers: micro-adam adam adamw adamw-8bit sgd adafactor came galore galore-ef
 ";
@@ -121,6 +133,7 @@ fn run(argv: &[String]) -> Result<()> {
         "repro" => cmd_repro(&args),
         "list" => cmd_list(&args),
         "selftest" => cmd_selftest(&args),
+        "tracecheck" => cmd_tracecheck(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -161,6 +174,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get("out") {
         cfg.out = v.into();
+    }
+    if let Some(v) = args.get("trace") {
+        cfg.trace = v.into();
     }
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
@@ -240,10 +256,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     let mut trainer = Trainer::new(cfg)?;
+    let session = (!trainer.cfg.trace.is_empty()).then(|| trace::session_to(&trainer.cfg.trace));
     let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
     let t0 = std::time::Instant::now();
     trainer.train(&mut logger)?;
     let dt = t0.elapsed().as_secs_f64();
+    if let Some(s) = session {
+        s.finish()?;
+        println!("chrome trace written to {}", trainer.cfg.trace);
+    }
     println!(
         "done: {} steps in {:.1}s ({:.2} steps/s), loss {:.4} -> {:.4}, opt state {} bytes",
         trainer.cfg.steps,
@@ -267,10 +288,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     let mut trainer = DistTrainer::new(cfg)?;
+    let session = (!trainer.cfg.trace.is_empty()).then(|| trace::session_to(&trainer.cfg.trace));
     let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
     let t0 = std::time::Instant::now();
     trainer.train(&mut logger)?;
-    dist_summary(args, &trainer, &logger, t0.elapsed().as_secs_f64())
+    let dt = t0.elapsed().as_secs_f64();
+    if let Some(s) = session {
+        s.finish()?;
+        println!("chrome trace written to {}", trainer.cfg.trace);
+    }
+    dist_summary(args, &trainer, &logger, dt)
 }
 
 /// The coordinator-side wrap-up shared by the loopback and multi-process
@@ -409,10 +436,17 @@ fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
             TransportKind::Loopback => unreachable!(),
         };
         let mut trainer = DistTrainer::with_transport(cfg, transport, vec![0])?;
+        let session =
+            (!trainer.cfg.trace.is_empty()).then(|| trace::session_to(&trainer.cfg.trace));
         let mut logger = MetricsLogger::new(&trainer.cfg.out)?;
         let t0 = std::time::Instant::now();
         trainer.train(&mut logger)?;
-        dist_summary(args, &trainer, &logger, t0.elapsed().as_secs_f64())
+        let dt = t0.elapsed().as_secs_f64();
+        if let Some(s) = session {
+            s.finish()?;
+            println!("chrome trace written to {}", trainer.cfg.trace);
+        }
+        dist_summary(args, &trainer, &logger, dt)
     })();
 
     // Reap every worker (kill first if the run already failed — they would
@@ -450,8 +484,9 @@ fn cmd_train_dist_worker(args: &Args, mut cfg: TrainConfig) -> Result<()> {
         .get("rendezvous")
         .ok_or_else(|| anyhow!("--dist-rank needs --rendezvous"))?
         .to_string();
-    // Only the coordinator writes metrics/checkpoints.
+    // Only the coordinator writes metrics/checkpoints/traces.
     cfg.out = String::new();
+    cfg.trace = String::new();
     let transport: Box<dyn Transport> = match cfg.transport {
         TransportKind::Uds => Box::new(UdsTransport::connect(&rdv, rank, ranks)?),
         TransportKind::Tcp => Box::new(TcpTransport::connect(&rdv, rank, ranks)?),
@@ -463,6 +498,128 @@ fn cmd_train_dist_worker(args: &Args, mut cfg: TrainConfig) -> Result<()> {
     let mut trainer = DistTrainer::with_transport(cfg, transport, vec![rank])?;
     let mut logger = MetricsLogger::new("")?;
     trainer.train(&mut logger)
+}
+
+/// Validate the two trace sinks (the `make trace-smoke` lane is built on
+/// this): `--chrome FILE` checks the Chrome trace-event document parses,
+/// has a non-empty `traceEvents` array and a monotonic `ts`; `--jsonl
+/// FILE` checks every `{"kind":"trace"}` record against the v1 schema.
+/// `--require-ef yes` additionally insists the JSONL carries the three
+/// EF-health gauges.
+fn cmd_tracecheck(args: &Args) -> Result<()> {
+    let mut checked = false;
+    if let Some(path) = args.get("chrome") {
+        check_chrome_trace(path)?;
+        checked = true;
+    }
+    if let Some(path) = args.get("jsonl") {
+        let require_ef =
+            matches!(args.get("require-ef"), Some("yes") | Some("true") | Some("1"));
+        check_jsonl_trace(path, require_ef)?;
+        checked = true;
+    }
+    if !checked {
+        bail!("tracecheck needs --chrome FILE and/or --jsonl FILE\n{USAGE}");
+    }
+    Ok(())
+}
+
+fn check_chrome_trace(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{path}: not JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{path}: no traceEvents array"))?;
+    if events.is_empty() {
+        bail!("{path}: traceEvents is empty");
+    }
+    let (mut spans, mut counters) = (0usize, 0usize);
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{path}: event {i} has no ph"))?;
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("{path}: event {i} has no ts"))?;
+        if ev.get("name").and_then(Json::as_str).is_none() {
+            bail!("{path}: event {i} has no name");
+        }
+        if ts < last_ts {
+            bail!("{path}: ts not monotonic at event {i} ({ts} < {last_ts})");
+        }
+        last_ts = ts;
+        match ph {
+            "X" => spans += 1,
+            "C" => counters += 1,
+            other => bail!("{path}: event {i}: unexpected ph {other:?}"),
+        }
+    }
+    println!("tracecheck chrome: {path} OK ({spans} spans, {counters} counter samples)");
+    Ok(())
+}
+
+fn check_jsonl_trace(path: &str, require_ef: bool) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let mut n = 0usize;
+    // residual_norm / topk_mass / quant_abs_err seen?
+    let mut ef = [false; 3];
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let j = Json::parse(line).map_err(|e| anyhow!("{path}:{lineno}: bad JSON: {e}"))?;
+        if j.get("kind").and_then(Json::as_str) != Some("trace") {
+            continue;
+        }
+        n += 1;
+        if j.get("v").and_then(Json::as_f64) != Some(trace::SCHEMA_VERSION as f64) {
+            bail!("{path}:{lineno}: trace record with wrong schema version");
+        }
+        if j.get("step").and_then(Json::as_f64).is_none() {
+            bail!("{path}:{lineno}: trace record has no step");
+        }
+        let ty = j.get("type").and_then(Json::as_str).unwrap_or("");
+        let well_formed = match ty {
+            "gauge" | "counter" => {
+                j.get("name").and_then(Json::as_str).is_some()
+                    && j.get("value").and_then(Json::as_f64).is_some()
+            }
+            "spans" => {
+                j.get("cat").and_then(Json::as_str).is_some()
+                    && j.get("name").and_then(Json::as_str).is_some()
+                    && j.get("count").and_then(Json::as_f64).is_some()
+                    && j.get("total_us").and_then(Json::as_f64).is_some()
+            }
+            _ => false,
+        };
+        if !well_formed {
+            bail!("{path}:{lineno}: malformed trace record (type {ty:?})");
+        }
+        if ty == "gauge" {
+            match j.get("name").and_then(Json::as_str) {
+                Some("ef.residual_norm") => ef[0] = true,
+                Some("ef.topk_mass") => ef[1] = true,
+                Some("ef.quant_abs_err") => ef[2] = true,
+                _ => {}
+            }
+        }
+    }
+    if n == 0 {
+        bail!("{path}: no {{\"kind\":\"trace\"}} records");
+    }
+    if require_ef && ef != [true; 3] {
+        bail!(
+            "{path}: missing EF-health gauges \
+             (residual_norm/topk_mass/quant_abs_err seen: {ef:?})"
+        );
+    }
+    println!("tracecheck jsonl: {path} OK ({n} trace records)");
+    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

@@ -48,6 +48,7 @@ use crate::topk::{
     stats_accum_bf16, stats_accum_f32, topk_abs_block, topk_abs_block_bf16, SlidingWindow,
     WinDtype,
 };
+use crate::trace;
 
 /// How the error-feedback accumulator is stored.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -356,6 +357,17 @@ impl MicroAdam {
         let w1 = self.window.folded_weights(t, self.cfg.beta1);
         let w2 = self.window.folded_weights(t, self.cfg.beta2);
 
+        if trace::enabled() {
+            trace::gauge(
+                "optim.window_bytes_per_value",
+                match self.window.dtype {
+                    WinDtype::Bf16 => 2.0,
+                    WinDtype::F32 => 4.0,
+                },
+            );
+            trace::gauge("optim.state_bytes", self.state_bytes() as f64);
+        }
+
         let nshards = pool.workers().min(self.nb);
         while self.arenas.len() < nshards {
             self.arenas.push(Arena::new(self.block));
@@ -438,9 +450,13 @@ impl MicroAdam {
                 arena: arenas.next().expect("one arena per shard"),
             });
         }
-        pool.run_shards(shards, |_, sh| run_shard(ctx, sh));
+        pool.run_shards(shards, |i, sh| run_shard(ctx, i, sh));
     }
 }
+
+/// Span names of the five fused stages, in pass order — the `optim.phase`
+/// trace category emits exactly these per shard per step.
+pub const PHASE_NAMES: [&str; 5] = ["ef_dequant", "topk", "requant", "stats", "update"];
 
 /// Step-invariant context shared (read-only) by every worker.
 #[derive(Clone, Copy)]
@@ -507,9 +523,15 @@ enum EfShard<'a> {
 /// The fused per-block pass: for each block in the shard, run EF
 /// decompress + Top-K + re-quantize + AdamStats + parameter update
 /// back-to-back while the block's working set is cache-resident.
-fn run_shard(ctx: StepCtx, sh: Shard) {
+///
+/// Per-phase timing goes through [`trace::PhaseAcc`]: one clock read per
+/// stage boundary when tracing is on, none at all when it is off, and
+/// exactly [`PHASE_NAMES`]`.len()` spans per shard per step (per-block
+/// stage costs accumulate into the shard's five phase totals).
+fn run_shard(ctx: StepCtx, shard_id: usize, sh: Shard) {
     let Shard { params, grads, acc, win_idx, mut win_val, mut ef, arena } = sh;
     let nb_local = acc.len() / ctx.block;
+    let mut phases = trace::PhaseAcc::<5>::start();
     for bl in 0..nb_local {
         let base = bl * ctx.block;
         // valid (unpadded) element count of this block
@@ -534,6 +556,7 @@ fn run_shard(ctx: StepCtx, sh: Shard) {
                 ctx.quant.dequantize_add(pb, sb, acc_b);
             }
         }
+        phases.mark(0);
 
         // Top-K into the window row (rounded to the storage dtype); zero
         // the selected entries at full precision (6-7, 10).
@@ -557,6 +580,7 @@ fn run_shard(ctx: StepCtx, sh: Shard) {
         for &i in win_idx[wo..wo + ctx.kb].iter() {
             acc_b[i as usize] = 0.0;
         }
+        phases.mark(1);
 
         // Compress the remainder back into the EF store (8-9).
         match &mut ef {
@@ -568,6 +592,7 @@ fn run_shard(ctx: StepCtx, sh: Shard) {
                 ctx.quant.quantize(acc_b, pb, sb);
             }
         }
+        phases.mark(2);
 
         // AdamStats over this block's contiguous window history (11-12),
         // widening each stored value back to f32. These are the same
@@ -591,13 +616,16 @@ fn run_shard(ctx: StepCtx, sh: Shard) {
                 }
             }
         }
+        phases.mark(3);
 
         // Parameter update (13).
         for j in 0..n {
             let u = ctx.lr * z1[j] / (ctx.eps + z2[j].sqrt());
             params[base + j] = ctx.decay * params[base + j] - u;
         }
+        phases.mark(4);
     }
+    phases.finish("optim.phase", PHASE_NAMES, shard_id as u32);
 }
 
 impl Optimizer for MicroAdam {

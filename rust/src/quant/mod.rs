@@ -174,6 +174,30 @@ impl Quant4 {
         }
         sum.sqrt()
     }
+
+    /// Mean absolute quantization error `mean_i |Q^-1(Q(x))[i] - x[i]|`,
+    /// streamed per bucket — no dense scratch. `reference` must be the
+    /// exact slice `quantize` consumed when producing `packed`/`stats`.
+    pub fn mean_abs_err(&self, packed: &[u8], stats: &[BucketStats], reference: &[f32]) -> f32 {
+        assert_eq!(reference.len(), packed.len() * 2);
+        assert_eq!(stats.len(), self.n_buckets(reference.len()));
+        if reference.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0f64;
+        for (b, st) in stats.iter().enumerate() {
+            let u = st.step(4);
+            let ps = &packed[b * self.bucket / 2..(b + 1) * self.bucket / 2];
+            let rs = &reference[b * self.bucket..(b + 1) * self.bucket];
+            for (i, &p) in ps.iter().enumerate() {
+                let x0 = (p & 0xF) as f32 * u + st.lo;
+                let x1 = (p >> 4) as f32 * u + st.lo;
+                sum += (x0 - rs[2 * i]).abs() as f64;
+                sum += (x1 - rs[2 * i + 1]).abs() as f64;
+            }
+        }
+        (sum / reference.len() as f64) as f32
+    }
 }
 
 #[inline]

@@ -1,0 +1,200 @@
+//! Integration tests for the `trace::` observability layer.
+//!
+//! These tests take real [`microadam::trace`] sessions (which serialize
+//! on a process-wide lock), so they live here rather than in the lib's
+//! unit tests: the lib test binary runs its tests concurrently in one
+//! process, and a session taken there would race every other test that
+//! happens to touch an instrumented code path.
+
+use microadam::coordinator::config::TrainConfig;
+use microadam::coordinator::metrics::MetricsLogger;
+use microadam::coordinator::schedule::LrSchedule;
+use microadam::dist::{DistTrainer, ReducerKind};
+use microadam::exec::ExecPool;
+use microadam::optim::microadam::{MicroAdam, MicroAdamConfig, PHASE_NAMES};
+use microadam::optim::{Optimizer, OptimizerKind};
+use microadam::trace;
+use microadam::util::json::Json;
+
+/// 8 blocks: enough shards for every worker count the tests sweep.
+const D: usize = 8 * microadam::BLOCK;
+
+fn grads(d: usize) -> Vec<f32> {
+    (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect()
+}
+
+#[test]
+fn disabled_tracing_records_nothing_and_allocates_nothing() {
+    // session_disabled holds the session lock with the gate OFF, so no
+    // parallel test can enable tracing mid-flight.
+    let session = trace::session_disabled();
+    assert!(!trace::enabled());
+    let pool = ExecPool::new(4);
+    let mut opt = MicroAdam::new(D, MicroAdamConfig::default());
+    let mut params = vec![0.1f32; D];
+    let g = grads(D);
+    for _ in 0..3 {
+        opt.step_sharded(&mut params, &g, 1e-3, &pool);
+    }
+    assert_eq!(trace::collected_len(), 0, "disabled run must record nothing");
+    assert_eq!(trace::span_count("optim.phase"), 0);
+    // Zero-cost also means zero allocation: this thread's event buffer
+    // must never have grown.
+    assert_eq!(trace::local_buffer_stats(), (0, 0));
+    session.finish().unwrap();
+}
+
+#[test]
+fn phase_span_count_is_shards_times_phases() {
+    let g = grads(D);
+    for workers in [1usize, 2, 4, 8] {
+        let session = trace::session();
+        let pool = ExecPool::new(workers);
+        let mut opt = MicroAdam::new(D, MicroAdamConfig::default());
+        let mut params = vec![0.1f32; D];
+        opt.step_sharded(&mut params, &g, 1e-3, &pool);
+        // nshards = min(workers, nb) = workers here (nb = 8): every shard
+        // emits exactly one span per fused phase, plus one exec-level
+        // shard span.
+        assert_eq!(
+            trace::span_count("optim.phase"),
+            workers * PHASE_NAMES.len(),
+            "workers = {workers}"
+        );
+        assert_eq!(trace::span_count("exec"), workers, "workers = {workers}");
+        session.finish().unwrap();
+    }
+}
+
+#[test]
+fn chrome_trace_parses_and_ts_is_monotonic() {
+    let session = trace::session();
+    let pool = ExecPool::new(2);
+    let mut opt = MicroAdam::new(D, MicroAdamConfig::default());
+    let mut params = vec![0.1f32; D];
+    let g = grads(D);
+    opt.step_sharded(&mut params, &g, 1e-3, &pool);
+    trace::gauge("test.gauge", 1.25);
+
+    let doc = session.chrome_json();
+    // Round-trip through the serializer: the file the CLI writes is
+    // exactly this document's to_string().
+    let parsed = Json::parse(&doc.to_string()).expect("chrome trace must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        assert!(ph == "X" || ph == "C", "unexpected ph {ph:?}");
+        assert!(ev.get("name").and_then(Json::as_str).is_some());
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        assert!(ts >= last_ts, "ts must be sorted ({ts} < {last_ts})");
+        last_ts = ts;
+    }
+    assert!(events.iter().any(|e| {
+        e.get("cat").and_then(Json::as_str) == Some("optim.phase")
+    }));
+    session.finish().unwrap();
+}
+
+#[test]
+fn jsonl_records_roundtrip_through_util_json() {
+    let session = trace::session();
+    let sp = trace::begin();
+    std::hint::black_box(0u64);
+    sp.end("t", "work", 3);
+    trace::counter("t.bytes", 128.0);
+    trace::gauge("ef.residual_norm", 0.5);
+
+    let recs = trace::drain_step_records(7);
+    assert_eq!(recs.len(), 3, "one span summary + one counter + one gauge");
+    for rec in &recs {
+        let back = Json::parse(&rec.to_string()).expect("record must reparse");
+        assert_eq!(back.get("kind").and_then(Json::as_str), Some("trace"));
+        assert_eq!(
+            back.get("v").and_then(Json::as_f64),
+            Some(trace::SCHEMA_VERSION as f64)
+        );
+        assert_eq!(back.get("step").and_then(Json::as_f64), Some(7.0));
+        let ty = back.get("type").and_then(Json::as_str).unwrap();
+        match ty {
+            "spans" => {
+                assert_eq!(back.get("cat").and_then(Json::as_str), Some("t"));
+                assert_eq!(back.get("count").and_then(Json::as_f64), Some(1.0));
+                assert!(back.get("total_us").and_then(Json::as_f64).unwrap() >= 0.0);
+            }
+            "counter" => {
+                assert_eq!(back.get("value").and_then(Json::as_f64), Some(128.0));
+            }
+            "gauge" => {
+                assert_eq!(
+                    back.get("name").and_then(Json::as_str),
+                    Some("ef.residual_norm")
+                );
+                assert_eq!(back.get("value").and_then(Json::as_f64), Some(0.5));
+            }
+            other => panic!("unexpected record type {other:?}"),
+        }
+    }
+    // A second drain with nothing new collected is empty (the cursor
+    // advanced past everything).
+    assert!(trace::drain_step_records(8).is_empty());
+    session.finish().unwrap();
+}
+
+#[test]
+fn traced_eftopk_training_emits_ef_health_records() {
+    let path = std::env::temp_dir().join("microadam_test_trace_dist.jsonl");
+    let path = path.to_string_lossy().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = TrainConfig {
+        model: "mlp_tiny".into(),
+        optimizer: OptimizerKind::MicroAdam,
+        schedule: LrSchedule::Const { lr: 3e-3 },
+        steps: 6,
+        seed: 11,
+        log_every: 10_000,
+        workers: 1,
+        ranks: 2,
+        reduce: ReducerKind::EfTopK,
+        out: path.clone(),
+        ..Default::default()
+    };
+    let session = trace::session();
+    let mut tr = DistTrainer::new(cfg).unwrap();
+    let mut logger = MetricsLogger::new(&path).unwrap();
+    tr.train(&mut logger).unwrap();
+    logger.flush().unwrap();
+    session.finish().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut gauges = Vec::new();
+    let mut span_cats = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = Json::parse(line).expect("every JSONL line parses");
+        if j.get("kind").and_then(Json::as_str) != Some("trace") {
+            continue;
+        }
+        match j.get("type").and_then(Json::as_str) {
+            Some("gauge") => {
+                gauges.push(j.get("name").and_then(Json::as_str).unwrap().to_string())
+            }
+            Some("spans") => {
+                span_cats.push(j.get("cat").and_then(Json::as_str).unwrap().to_string())
+            }
+            _ => {}
+        }
+    }
+    // The per-step EF-health telemetry the paper's convergence story
+    // rests on, plus the phase/transport spans.
+    for name in ["ef.residual_norm", "ef.topk_mass", "ef.quant_abs_err", "ef.slab_density"] {
+        assert!(gauges.iter().any(|g| g == name), "missing gauge {name}: {gauges:?}");
+    }
+    assert!(span_cats.iter().any(|c| c == "optim.phase"), "cats: {span_cats:?}");
+    assert!(span_cats.iter().any(|c| c == "dist"), "cats: {span_cats:?}");
+    let _ = std::fs::remove_file(&path);
+}

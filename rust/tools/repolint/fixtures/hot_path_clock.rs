@@ -1,0 +1,17 @@
+//@ path: rust/src/exec/pool.rs
+//@ expect: hot-path-clock
+// Seeded violation: an unconditional wall-clock read inside a step-engine
+// inner loop. Timing in exec::/optim:: must go through the gated
+// `trace::` layer. Never compiled — scanned as text only.
+
+pub fn dispatch(n: usize) -> f64 {
+    let mut total = 0.0;
+    for _ in 0..n {
+        let t0 = std::time::Instant::now();
+        work();
+        total += t0.elapsed().as_secs_f64();
+    }
+    total
+}
+
+fn work() {}

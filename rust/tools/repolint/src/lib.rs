@@ -3,7 +3,7 @@
 //! The crate is a static-analysis pass over the repository's own Rust
 //! sources (plus the normative wire spec in `rust/src/dist/README.md`).
 //! It exists so the invariants the docs promise cannot silently drift
-//! from the code that implements them. Four rules:
+//! from the code that implements them. Five rules:
 //!
 //! * **`unsafe-safety`** — every `unsafe` occurrence must carry a
 //!   `// SAFETY:` comment on the same line or within the five lines
@@ -26,6 +26,13 @@
 //!   only `as u64` and `as usize` are widening on every supported
 //!   target and therefore allowed. Allowlist syntax:
 //!   `// repolint: allow(lossy-cast): <reason>`.
+//! * **`hot-path-clock`** — the step-engine hot paths
+//!   ([`HOT_PATH_CLOCK_DIRS`]: `exec::`, `optim::`) must not read the
+//!   wall clock directly (`Instant::now()` / `SystemTime::now()`):
+//!   timing there belongs to the `trace::` layer, whose entry points are
+//!   gated on the tracing flag and free when tracing is off. An
+//!   intentional clock read stays with
+//!   `// repolint: allow(hot-path-clock): <reason>`.
 //!
 //! The scanner is line-oriented but lexes comments, strings (including
 //! raw strings), and char literals so that rule patterns never match
@@ -40,7 +47,8 @@ use std::io;
 use std::path::{Path, PathBuf};
 
 /// Names of every rule, in the order they are documented above.
-pub const RULES: &[&str] = &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast"];
+pub const RULES: &[&str] =
+    &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast", "hot-path-clock"];
 
 /// Files (matched by path suffix) subject to the `no-panic` rule: the
 /// `dist::` wire/transport/reducer decode paths the spec requires to
@@ -394,6 +402,46 @@ pub fn rule_no_panic(path: &str, p: &Prepared) -> Vec<Violation> {
                         "`{pat}` in a dist:: wire/transport path — return a typed \
                          WireError/anyhow error, or justify with \
                          `// repolint: allow(no-panic): <reason>`"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Directories (matched by path substring) subject to the
+/// `hot-path-clock` rule: the fused step engine and its worker pool,
+/// whose inner loops run per block per step and must stay free of
+/// unconditional clock reads.
+pub const HOT_PATH_CLOCK_DIRS: &[&str] = &["rust/src/exec/", "rust/src/optim/"];
+
+const CLOCK_PATTERNS: &[&str] = &["Instant::now()", "SystemTime::now()"];
+
+/// Rule `hot-path-clock`: forbid direct wall-clock reads in the
+/// `exec::`/`optim::` hot paths (outside test/loom modules) — timing
+/// belongs to `trace::`, whose gated entry points cost one relaxed load
+/// when tracing is off. Allowlist: `// repolint: allow(hot-path-clock):
+/// <reason>`.
+pub fn rule_hot_path_clock(path: &str, p: &Prepared) -> Vec<Violation> {
+    if !HOT_PATH_CLOCK_DIRS.iter().any(|d| path.contains(d)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in p.lines.iter().enumerate() {
+        if p.masked[i] {
+            continue;
+        }
+        for pat in CLOCK_PATTERNS {
+            if line.code.contains(pat) && !allowlisted(p, i, "hot-path-clock") {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: i + 1,
+                    rule: "hot-path-clock",
+                    msg: format!(
+                        "`{pat}` in an exec::/optim:: hot path — route timing through \
+                         the gated `trace::` layer, or justify with \
+                         `// repolint: allow(hot-path-clock): <reason>`"
                     ),
                 });
             }
@@ -816,6 +864,7 @@ pub fn lint_file(rel_path: &str, src: &str) -> Vec<Violation> {
     let mut v = rule_unsafe_safety(rel_path, &p);
     v.extend(rule_no_panic(rel_path, &p));
     v.extend(rule_lossy_cast(rel_path, &p));
+    v.extend(rule_hot_path_clock(rel_path, &p));
     v
 }
 
@@ -887,6 +936,10 @@ pub const FIXTURES: &[(&str, &str)] = &[
         include_str!("../fixtures/panic_in_decode.rs"),
     ),
     ("lossy_cast.rs", include_str!("../fixtures/lossy_cast.rs")),
+    (
+        "hot_path_clock.rs",
+        include_str!("../fixtures/hot_path_clock.rs"),
+    ),
     ("clean.rs", include_str!("../fixtures/clean.rs")),
 ];
 
@@ -945,7 +998,7 @@ mod tests {
     #[test]
     fn every_rule_fires_on_its_fixture() {
         match self_test() {
-            Ok(n) => assert!(n >= 5, "expected at least 5 fixture checks, ran {n}"),
+            Ok(n) => assert!(n >= 6, "expected at least 6 fixture checks, ran {n}"),
             Err(e) => panic!("self-test failed: {e}"),
         }
     }
