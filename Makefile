@@ -1,7 +1,9 @@
 # MicroAdam reproduction — build/test lanes.
 #
 #   make ci          default lane: XLA-free build + tests + doctests +
-#                    warning-clean rustdoc + `make lint` (runs anywhere)
+#                    the simd feature matrix (scalar-only build + a full
+#                    --features simd test pass) + warning-clean rustdoc +
+#                    `make lint` (runs anywhere)
 #   make lint        correctness-analysis lane, toolchain-free: repolint
 #                    self-test + repolint over the repo, then clippy with
 #                    -D warnings where clippy is installed (the allowlist
@@ -25,10 +27,12 @@
 #                    doctests live in the default (XLA-free) ci lane only
 #   make bench-smoke few-second perf probe: bench_optimizer_step in smoke
 #                    mode (writes $(BENCH_JSON): steps/s, resident
-#                    bytes/param, wire bytes, and the real-socket tcp
-#                    gather/compress overlap ms) + the artifact-free
-#                    perf_probe --native row, so every PR can record the
-#                    perf trajectory
+#                    bytes/param, wire bytes, per-kernel scalar-vs-simd
+#                    medians, and the real-socket tcp gather/compress
+#                    overlap ms) + bench_kernels in smoke mode + the
+#                    artifact-free perf_probe --native size sweep, all
+#                    built --features simd so the vector kernels are the
+#                    ones measured; every PR records the perf trajectory
 #   make trace-smoke observability lane (part of `make ci`): a short traced
 #                    2-rank eftopk training run, then `microadam tracecheck`
 #                    validates both sinks (the Chrome trace-event file and
@@ -56,6 +60,12 @@ ci:
 	# external network needed); run it alone via `make test-tcp`
 	cargo test -q
 	cargo test --doc -q
+	# Feature matrix: the scalar kernels must build standalone, and the
+	# simd feature (runtime-dispatched vector kernels) must pass the whole
+	# suite — including the scalar-vs-simd bit-exactness parity tiers.
+	cargo build --release --no-default-features
+	cargo build --release --features simd
+	cargo test -q --features simd
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	$(MAKE) lint
 	$(MAKE) trace-smoke
@@ -138,8 +148,10 @@ ci-pjrt:
 
 bench-smoke:
 	MICROADAM_BENCH_SMOKE=1 MICROADAM_BENCH_JSON=$(BENCH_JSON) \
-		cargo bench --bench bench_optimizer_step
-	cargo run --release --bin perf_probe -- --native 262144 5
+		cargo bench --features simd --bench bench_optimizer_step
+	MICROADAM_BENCH_SMOKE=1 cargo bench --features simd --bench bench_kernels
+	cargo run --release --features simd --bin perf_probe -- \
+		--native 262144 5 --sizes 64k,256k,1m
 	@echo "bench-smoke: record in $(BENCH_JSON)"
 
 # Observability lane: a short traced 2-rank eftopk run (loopback — no

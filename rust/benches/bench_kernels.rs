@@ -1,8 +1,11 @@
 //! Substrate kernels micro-benchmark: block Top-K, 4-bit quantize /
 //! dequantize, dynamic-8bit, AdamStats window accumulation — the pieces of
-//! the paper's CUDA §3.1 implementation, timed on this CPU.
+//! the paper's CUDA §3.1 implementation, timed on this CPU — plus the
+//! per-kernel scalar-vs-simd comparison rows that `make bench-smoke`
+//! records into `BENCH_*.json`.
 //!
-//! Run: `cargo bench --bench bench_kernels`
+//! Run: `cargo bench --bench bench_kernels` (set `MICROADAM_BENCH_SMOKE=1`
+//! for the few-second smoke sweep at a smaller dimension).
 
 use microadam::bench::time_it;
 use microadam::exec::ExecPool;
@@ -17,8 +20,11 @@ fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    let smoke = std::env::var("MICROADAM_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     let mut rng = Rng::seed_from_u64(0);
-    let d: usize = 1 << 22; // 4M params
+    let d: usize = if smoke { 1 << 18 } else { 1 << 22 }; // 256K smoke / 4M full
+    let iters = if smoke { 3 } else { 9 };
+    let iters_slow = if smoke { 3 } else { 5 };
     let block = microadam::BLOCK;
     let kb = microadam::kb_for_block(block, microadam::DENSITY);
     let x = randvec(&mut rng, d);
@@ -29,7 +35,7 @@ fn main() {
     let mut idx = vec![0u16; kb];
     let mut vals = vec![0f32; kb];
     let mut scratch = Vec::new();
-    time_it("topk_abs_block x all blocks", 1, 9, || {
+    time_it("topk_abs_block x all blocks", 1, iters, || {
         for b in 0..d / block {
             topk_abs_block(&x[b * block..(b + 1) * block], kb, &mut idx, &mut vals, &mut scratch);
         }
@@ -39,11 +45,11 @@ fn main() {
     let q = Quant4::new(microadam::QBUCKET);
     let mut packed = vec![0u8; d / 2];
     let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; d / microadam::QBUCKET];
-    time_it("quant4 quantize (full EF)", 1, 9, || {
+    time_it("quant4 quantize (full EF)", 1, iters, || {
         q.quantize(&x, &mut packed, &mut stats);
     });
     let mut out = vec![0f32; d];
-    time_it("quant4 dequantize_add (full EF)", 1, 9, || {
+    time_it("quant4 dequantize_add (full EF)", 1, iters, || {
         q.dequantize_add(&packed, &stats, &mut out);
     });
 
@@ -51,10 +57,10 @@ fn main() {
     let d8 = Dynamic8::unsigned();
     let mut codes = vec![0u8; d];
     let mut scales = vec![0f32; d / 256];
-    time_it("dynamic8 quantize", 1, 5, || {
+    time_it("dynamic8 quantize", 1, iters_slow, || {
         d8.quantize(&x, 256, &mut codes, &mut scales);
     });
-    time_it("dynamic8 dequantize", 1, 5, || {
+    time_it("dynamic8 dequantize", 1, iters_slow, || {
         d8.dequantize(&codes, 256, &scales, &mut out);
     });
 
@@ -79,7 +85,7 @@ fn main() {
         let w2 = win.folded_weights(m as u64, 0.999);
         let mut z1 = vec![0f32; block];
         let mut z2 = vec![0f32; block];
-        time_it(&format!("adamstats + update (full window, {dtype:?} vals)"), 1, 9, || {
+        time_it(&format!("adamstats + update (full window, {dtype:?} vals)"), 1, iters, || {
             for b in 0..nb {
                 z1.fill(0.0);
                 z2.fill(0.0);
@@ -105,12 +111,12 @@ fn main() {
     let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
     let mut p = randvec(&mut rng, d);
     let warm = microadam::WINDOW + 1;
-    let t_ref = time_it("microadam step_reference (4 sweeps)", warm, 5, || {
+    let t_ref = time_it("microadam step_reference (4 sweeps)", warm, iters_slow, || {
         opt.step_reference(&mut p, &grads, 1e-3)
     });
     let mut opt = MicroAdam::new(d, MicroAdamConfig::default());
     let mut p = randvec(&mut rng, d);
-    let t_fused = time_it("microadam fused step (1 worker)", warm, 5, || {
+    let t_fused = time_it("microadam fused step (1 worker)", warm, iters_slow, || {
         opt.step(&mut p, &grads, 1e-3)
     });
     let pool = ExecPool::auto();
@@ -119,7 +125,7 @@ fn main() {
     let t_par = time_it(
         &format!("microadam fused step ({} workers)", pool.workers()),
         warm,
-        5,
+        iters_slow,
         || opt.step_sharded(&mut p, &grads, 1e-3, &pool),
     );
     println!(
@@ -128,4 +134,11 @@ fn main() {
         t_fused / t_par,
         t_ref / t_par
     );
+
+    // Per-kernel scalar vs simd: every dispatched kernel timed at
+    // Level::Scalar and at the host's detected vector level (identical
+    // math — the columns differ only in codegen). These are the rows
+    // `make bench-smoke` records into BENCH_*.json.
+    println!("\n== per-kernel scalar vs simd ==");
+    microadam::bench::bench_kernel_rows(d, iters_slow);
 }

@@ -10,7 +10,8 @@
 //! sweep to a few seconds, and `MICROADAM_BENCH_JSON=path` writes a
 //! `BENCH_*.json` record (steps/s per engine configuration, measured
 //! resident state bytes/param, bf16 window bytes/value, per-rank wire
-//! bytes) so the perf trajectory is recorded across PRs.
+//! bytes, per-kernel scalar-vs-simd medians) so the perf trajectory is
+//! recorded across PRs.
 
 use microadam::bench;
 
@@ -29,6 +30,11 @@ fn main() {
     let d_scale = if smoke { 1 << 18 } else { 1 << 20 };
     let iters = if smoke { 3 } else { 7 };
     let rows = bench::bench_parallel_scaling(d_scale, iters);
+
+    // Per-kernel scalar-vs-simd medians (same math both columns — the
+    // simd feature is a codegen knob, so the delta is pure vectorization).
+    println!("\n== per-kernel scalar vs simd ==");
+    let kernels = bench::bench_kernel_rows(d_scale, if smoke { 3 } else { 7 });
 
     // Disabled-tracing cost of one traced-capable fused step, as % of the
     // step. The trace-smoke lane (`MICROADAM_TRACE_ASSERT=1`) turns the
@@ -58,7 +64,8 @@ fn main() {
                     None
                 }
             };
-            let record = bench::smoke_json(d_scale, &rows, tcp.as_ref(), Some(overhead_pct));
+            let record =
+                bench::smoke_json(d_scale, &rows, &kernels, tcp.as_ref(), Some(overhead_pct));
             match std::fs::write(&path, record.to_string()) {
                 Ok(()) => println!("\nbench record written to {path}"),
                 Err(e) => eprintln!("\nfailed to write {path}: {e}"),

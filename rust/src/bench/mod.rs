@@ -822,6 +822,126 @@ pub fn trace_overhead_pct(d: usize, iters: usize) -> f64 {
 /// One measured (label, median seconds) row of the scaling benchmark.
 pub type BenchRow = (String, f64);
 
+/// One `(kernel, scalar median s, simd median s)` comparison row from
+/// [`bench_kernel_rows`]. When the host resolves no vector level (simd
+/// feature off, unsupported cpu, `MICROADAM_SIMD=scalar`) both columns
+/// time the scalar kernels and the speedup is ~1.
+pub type KernelRow = (String, f64, f64);
+
+/// Time one kernel at [`Level::Scalar`](crate::simd::Level::Scalar) and at
+/// the host's detected vector level.
+fn kernel_pair<F: FnMut(crate::simd::Level)>(
+    name: &str,
+    iters: usize,
+    vec_level: crate::simd::Level,
+    mut f: F,
+) -> KernelRow {
+    use crate::simd::{level_name, Level};
+    let ts = time_it(&format!("{name} [scalar]"), 2, iters, || f(Level::Scalar));
+    let tv = time_it(&format!("{name} [{}]", level_name(vec_level)), 2, iters, || f(vec_level));
+    (name.to_string(), ts, tv)
+}
+
+/// Per-kernel scalar-vs-simd medians over the fused step's hot kernels
+/// (bf16 converters, Quant4 pack/unpack, Top-K select, AdamStats
+/// accumulation, the update phase) plus the whole fused step under
+/// [`Policy::Scalar`](crate::simd::Policy::Scalar) vs
+/// [`Policy::Auto`](crate::simd::Policy::Auto). Feeds the `kernels`
+/// section of the smoke lane's `BENCH_*.json` via [`smoke_json`]. Both
+/// columns run the same math (the simd path is the scalar kernels
+/// re-instantiated — see [`crate::simd`]), so the delta is pure codegen.
+pub fn bench_kernel_rows(d: usize, iters: usize) -> Vec<KernelRow> {
+    use crate::exec::ExecPool;
+    use crate::quant::{BucketStats, Quant4};
+    use crate::simd::{self, level_name, Policy};
+
+    let d = crate::pad_up(d.max(crate::BLOCK), crate::BLOCK);
+    let vec_level = simd::detected();
+    println!("\nper-kernel scalar vs simd (detected: {}), d = {d}:", level_name(vec_level));
+    let xs: Vec<f32> = (0..d).map(|i| ((i * 37 % 101) as f32 - 50.0) / 7.0).collect();
+    let mut rows: Vec<KernelRow> = Vec::new();
+
+    let mut bits = vec![0u16; d];
+    rows.push(kernel_pair("kernel bf16_round", iters, vec_level, |lvl| {
+        simd::bf16_round(lvl, &xs, &mut bits)
+    }));
+    let mut wide = vec![0f32; d];
+    rows.push(kernel_pair("kernel bf16_widen", iters, vec_level, |lvl| {
+        simd::bf16_widen(lvl, &bits, &mut wide)
+    }));
+
+    let q = Quant4::new(crate::QBUCKET);
+    let mut packed = vec![0u8; d / 2];
+    let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; d / crate::QBUCKET];
+    rows.push(kernel_pair("kernel quant4_quantize", iters, vec_level, |lvl| {
+        simd::quant4_quantize(lvl, &q, &xs, &mut packed, &mut stats)
+    }));
+    let mut acc = vec![0f32; d];
+    rows.push(kernel_pair("kernel quant4_dequantize_add", iters, vec_level, |lvl| {
+        simd::quant4_dequantize_add(lvl, &q, &packed, &stats, &mut acc)
+    }));
+
+    let kb = crate::kb_for_block(crate::BLOCK, crate::DENSITY);
+    let mut idx = vec![0u16; kb];
+    let mut vals = vec![0u16; kb];
+    let mut scratch: Vec<u16> = Vec::with_capacity(crate::BLOCK);
+    rows.push(kernel_pair("kernel topk_select", iters, vec_level, |lvl| {
+        for b in 0..d / crate::BLOCK {
+            crate::topk::topk_abs_block_bf16_with(
+                lvl,
+                &xs[b * crate::BLOCK..(b + 1) * crate::BLOCK],
+                kb,
+                &mut idx,
+                &mut vals,
+                &mut scratch,
+            );
+        }
+    }));
+
+    // One window row's worth of gathered indices per block, replayed
+    // m x nb times — the shape the stats phase runs per step.
+    let idx_w: Vec<u16> = (0..kb as u16).map(|i| i * 97 % crate::BLOCK as u16).collect();
+    let val_bf: Vec<u16> = (0..kb).map(|i| crate::util::bf16::f32_to_bf16(xs[i])).collect();
+    let val_f: Vec<f32> = xs[..kb].to_vec();
+    let mut z1 = vec![0f32; crate::BLOCK];
+    let mut z2 = vec![0f32; crate::BLOCK];
+    let reps = crate::WINDOW * (d / crate::BLOCK);
+    rows.push(kernel_pair("kernel stats_accum_bf16", iters, vec_level, |lvl| {
+        for _ in 0..reps {
+            simd::stats_accum_bf16(lvl, &idx_w, &val_bf, 0.5, 0.25, &mut z1, &mut z2);
+        }
+    }));
+    rows.push(kernel_pair("kernel stats_accum_f32", iters, vec_level, |lvl| {
+        for _ in 0..reps {
+            simd::stats_accum_f32(lvl, &idx_w, &val_f, 0.5, 0.25, &mut z1, &mut z2);
+        }
+    }));
+
+    let z1p: Vec<f32> = xs.iter().map(|v| v * 0.5).collect();
+    let z2p: Vec<f32> = xs.iter().map(|v| v * v).collect();
+    let mut params = vec![0.1f32; d];
+    rows.push(kernel_pair("kernel adam_update", iters, vec_level, |lvl| {
+        simd::adam_update(lvl, &mut params, &z1p, &z2p, 1e-3, 1e-8, 0.999)
+    }));
+
+    // Whole fused step, policy vs policy — the acceptance-gate row.
+    let warmup = crate::WINDOW + 2;
+    let pool = ExecPool::new(1);
+    let mut fused = |policy: Policy, label: &str| -> f64 {
+        let mut opt = MicroAdam::new(d, MicroAdamConfig { simd: policy, ..Default::default() });
+        let mut p = vec![0.1f32; d];
+        time_it(label, warmup, iters, || opt.step_sharded(&mut p, &xs, 1e-3, &pool))
+    };
+    let ts = fused(Policy::Scalar, "fused step [scalar]");
+    let tv = fused(Policy::Auto, &format!("fused step [{}]", level_name(vec_level)));
+    rows.push(("fused_step".to_string(), ts, tv));
+
+    for (name, ts, tv) in &rows {
+        println!("    {name:<34} speedup {:.2}x", ts / tv.max(1e-12));
+    }
+    rows
+}
+
 /// Sequential-vs-parallel step throughput for the block-sharded fused
 /// engine (MicroAdam + the dense baselines routed through the same pool).
 ///
@@ -938,11 +1058,13 @@ pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
 /// value, the per-rank wire bytes of each reducer at this dimension, and
 /// (when the caller ran one) the real-socket [`TcpProbe`] with its
 /// gather/relay overlap ms and per-rank arrival latencies, plus the
-/// measured [`trace_overhead_pct`] when the caller ran that check. Pure
-/// assembly — the caller runs the probe and the overhead benchmark.
+/// measured [`trace_overhead_pct`] when the caller ran that check, and
+/// the per-kernel scalar-vs-simd medians from [`bench_kernel_rows`]. Pure
+/// assembly — the caller runs the probe and the benchmarks.
 pub fn smoke_json(
     d: usize,
     rows: &[BenchRow],
+    kernels: &[KernelRow],
     tcp: Option<&TcpProbe>,
     trace_overhead_pct: Option<f64>,
 ) -> crate::util::json::Json {
@@ -999,6 +1121,21 @@ pub fn smoke_json(
         ]),
         None => json::obj(vec![("error", json::s("tcp probe not run"))]),
     };
+    let kernel_rows: Vec<Json> = kernels
+        .iter()
+        .map(|(name, ts, tv)| {
+            json::obj(vec![
+                ("kernel", json::s(name)),
+                ("scalar_ms", json::num(ts * 1e3)),
+                ("simd_ms", json::num(tv * 1e3)),
+                ("speedup", json::num(ts / tv.max(1e-12))),
+            ])
+        })
+        .collect();
+    let simd = json::obj(vec![
+        ("level", json::s(crate::simd::level_name(crate::simd::detected()))),
+        ("kernels", Json::Arr(kernel_rows)),
+    ]);
     let probe = MicroAdam::new(d, MicroAdamConfig::default());
     json::obj(vec![
         ("bench", json::s("smoke")),
@@ -1007,6 +1144,7 @@ pub fn smoke_json(
         ("steps_per_s", json::obj(steps)),
         ("resident_state", Json::Arr(state_rows)),
         ("wire", Json::Arr(wires)),
+        ("simd", simd),
         ("tcp_probe", tcp),
         (
             "trace_overhead_pct",

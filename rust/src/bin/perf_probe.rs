@@ -2,7 +2,7 @@
 //!
 //! Usage:
 //!   perf_probe <manifest-dir> <artifact-name> [iters]
-//!   perf_probe --native [d] [iters]
+//!   perf_probe --native [d] [iters] [--sizes 64k,256k,1m]
 //!
 //! Artifact mode builds zero-filled inputs of the manifest shapes, compiles
 //! the artifact, and reports median wall time per execute. Used to
@@ -11,13 +11,17 @@
 //!
 //! `--native` needs no artifacts (it runs on the stub runtime too): it
 //! times the fused MicroAdam step at several worker counts on the
-//! persistent pool — the smoke-lane probe behind `make bench-smoke`.
+//! persistent pool, plus a scalar-vs-simd fused row — the smoke-lane probe
+//! behind `make bench-smoke`. `--sizes` runs the probe once per listed
+//! dimension (`k` = x1024, `m` = x1048576) instead of the single
+//! positional `d`, so one invocation sweeps the cache-residency regimes.
 
 use anyhow::{bail, Result};
 use microadam::exec::ExecPool;
 use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
 use microadam::optim::Optimizer;
 use microadam::runtime::{lit_f32, lit_i32, lit_u8, Runtime};
+use microadam::simd::{self, Policy};
 use microadam::util::rng::Rng;
 
 /// Median fused-step wall time at 1/2/4/8 workers plus the 4-pass
@@ -44,6 +48,20 @@ fn native_probe(d: usize, iters: usize) {
         });
         println!("    -> {:.1} steps/s ({:.2}x vs reference)", 1.0 / t, t_ref / t);
     }
+
+    // Scalar-vs-simd fused row: same math under both policies (simd is a
+    // codegen knob, never a numerics knob), so the ratio is vectorization.
+    let mut fused = |policy: Policy, label: &str| -> f64 {
+        let mut opt = MicroAdam::new(d, MicroAdamConfig { simd: policy, ..Default::default() });
+        let mut params = vec![0.1f32; d];
+        microadam::bench::time_it(&format!("fused step (1 worker, {label})"), warm, iters, || {
+            opt.step(&mut params, &grads, 1e-3)
+        })
+    };
+    let level = simd::level_name(simd::detected());
+    let ts = fused(Policy::Scalar, "scalar");
+    let tv = fused(Policy::Auto, level);
+    println!("    simd fused speedup: {:.2}x (detected: {level})", ts / tv.max(1e-12));
     let probe = MicroAdam::new(d, MicroAdamConfig::default());
     println!(
         "state: {} B resident ({:.3} B/param), window {} B/value",
@@ -53,16 +71,47 @@ fn native_probe(d: usize, iters: usize) {
     );
 }
 
+/// Parse one `--sizes` element: an integer with an optional `k` (x1024)
+/// or `m` (x1048576) suffix, e.g. `64k`, `256k`, `1m`.
+fn parse_size(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(n) = t.strip_suffix('k') {
+        (n, 1usize << 10)
+    } else if let Some(n) = t.strip_suffix('m') {
+        (n, 1usize << 20)
+    } else {
+        (t.as_str(), 1)
+    };
+    match digits.parse::<usize>() {
+        Ok(v) if v > 0 => Ok(v * mult),
+        _ => bail!("bad --sizes element {s:?} (want e.g. 64k, 256k, 1m)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.first().map(|a| a == "--native").unwrap_or(false) {
-        let d: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(1 << 20);
-        let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
+        // Positional [d] [iters] stop at the first `--` flag.
+        let pos: Vec<&String> = args.iter().skip(1).take_while(|a| !a.starts_with("--")).collect();
+        let d: usize = pos.first().map(|v| v.parse()).transpose()?.unwrap_or(1 << 20);
+        let iters: usize = pos.get(1).map(|v| v.parse()).transpose()?.unwrap_or(5);
+        let sizes: Vec<usize> = match args.iter().position(|a| a == "--sizes") {
+            Some(i) => match args.get(i + 1) {
+                Some(list) => list.split(',').map(parse_size).collect::<Result<_>>()?,
+                None => bail!("--sizes needs a comma-separated list (e.g. 64k,256k,1m)"),
+            },
+            None => vec![d],
+        };
         // MICROADAM_TRACE=path records the probe (per-phase fused-step
         // spans + time_it medians) and writes a Chrome trace file.
         let trace_path = std::env::var("MICROADAM_TRACE").ok().filter(|p| !p.is_empty());
         let session = trace_path.as_deref().map(microadam::trace::session_to);
-        native_probe(d, iters);
+        for (i, &d) in sizes.iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            native_probe(d, iters);
+        }
         if let Some(s) = session {
             s.finish()?;
             println!("chrome trace written to {}", trace_path.unwrap_or_default());
@@ -70,7 +119,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     if args.len() < 2 {
-        bail!("usage: perf_probe <manifest-dir> <artifact> [iters] | perf_probe --native [d] [iters]");
+        bail!("usage: perf_probe <manifest-dir> <artifact> [iters] | perf_probe --native [d] [iters] [--sizes 64k,256k,1m]");
     }
     let iters: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(5);
     let mut rt = Runtime::load(&args[0])?;

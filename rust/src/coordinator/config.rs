@@ -47,6 +47,10 @@ pub struct TrainConfig {
     /// Worker count for the native block-sharded optimizer step
     /// (0 = auto-detect from the machine / `MICROADAM_WORKERS`).
     pub workers: usize,
+    /// Pin exec workers to cpus (NUMA-aware placement + static shard
+    /// striping + first-touch warm pass; see [`crate::exec`]). Best
+    /// effort: off by default, a no-op where the platform refuses.
+    pub pin_workers: bool,
     /// Data-parallel replica count (1 = single-process training; > 1
     /// routes through [`crate::dist::DistTrainer`]).
     pub ranks: usize,
@@ -76,6 +80,7 @@ impl Default for TrainConfig {
             log_every: 10,
             artifacts_dir: "artifacts".into(),
             workers: 0,
+            pin_workers: false,
             ranks: 1,
             reduce: ReducerKind::Dense,
             transport: TransportKind::Loopback,
@@ -127,6 +132,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("workers").and_then(Json::as_f64) {
             cfg.workers = v as usize;
+        }
+        if let Some(v) = j.get("pin_workers").and_then(Json::as_bool) {
+            cfg.pin_workers = v;
         }
         if let Some(v) = j.get("ranks").and_then(Json::as_f64) {
             cfg.ranks = (v as usize).max(1);
@@ -190,6 +198,7 @@ impl TrainConfig {
             ("log_every", json::num(self.log_every as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("workers", json::num(self.workers as f64)),
+            ("pin_workers", Json::Bool(self.pin_workers)),
             ("ranks", json::num(self.ranks as f64)),
             ("reduce", json::s(reducer_name(self.reduce))),
             ("transport", json::s(transport_name(self.transport))),
@@ -248,6 +257,7 @@ mod tests {
             log_every: 5,
             artifacts_dir: "artifacts".into(),
             workers: 3,
+            pin_workers: true,
             ranks: 4,
             reduce: ReducerKind::EfTopK,
             transport: TransportKind::Uds,
@@ -256,6 +266,7 @@ mod tests {
         let back = TrainConfig::from_json(&j).unwrap();
         assert_eq!(back.model, cfg.model);
         assert_eq!(back.workers, 3);
+        assert!(back.pin_workers);
         assert_eq!(back.optimizer, cfg.optimizer);
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.schedule, cfg.schedule);
@@ -275,6 +286,7 @@ mod tests {
         assert_eq!(cfg.steps, 100);
         assert_eq!(cfg.ranks, 1);
         assert_eq!(cfg.reduce, ReducerKind::Dense);
+        assert!(!cfg.pin_workers);
     }
 
     #[test]

@@ -177,7 +177,11 @@ impl Trainer {
 
         let flat = layout.init_flat(cfg.seed);
         let params = lit_f32(&flat, &[d])?;
-        let pool = if cfg.workers == 0 { ExecPool::auto() } else { ExecPool::new(cfg.workers) };
+        let pool = if cfg.workers == 0 {
+            ExecPool::auto_with(cfg.pin_workers)
+        } else {
+            ExecPool::new_with(cfg.workers, cfg.pin_workers)
+        };
         Ok(Self {
             cfg,
             rt,

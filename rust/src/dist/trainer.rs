@@ -173,7 +173,11 @@ impl DistTrainer {
 
         let opt = optim::build(cfg.optimizer, d, &tensors, cfg.weight_decay);
         let reducer = build_reducer(cfg.reduce, d, ranks, SparseReduceConfig::default());
-        let pool = if cfg.workers == 0 { ExecPool::auto() } else { ExecPool::new(cfg.workers) };
+        let pool = if cfg.workers == 0 {
+            ExecPool::auto_with(cfg.pin_workers)
+        } else {
+            ExecPool::new_with(cfg.workers, cfg.pin_workers)
+        };
         let mut me = Self {
             cfg,
             ranks,

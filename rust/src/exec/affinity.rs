@@ -1,0 +1,108 @@
+//! Best-effort thread→cpu pinning.
+//!
+//! The crate carries no libc dependency, so `sched_setaffinity` is issued
+//! as a raw syscall with inline asm on the two supported Linux
+//! architectures. Everywhere else — other OSes/arches, Miri, the loom
+//! model-checking lane — pinning compiles to a no-op that reports
+//! `false`, which [`crate::exec::ExecPool`] treats as "run unpinned".
+//! Failure is always tolerated at the call site: container cpusets and
+//! seccomp filters can deny the call at runtime even where it compiles.
+
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri),
+    not(loom)
+))]
+mod imp {
+    /// Linux cpu_set_t is 1024 bits.
+    const MASK_WORDS: usize = 16;
+
+    pub fn supported() -> bool {
+        true
+    }
+
+    /// Pin the *calling* thread to `cpu`. Returns whether the kernel
+    /// accepted the new mask.
+    pub fn pin_to_cpu(cpu: usize) -> bool {
+        if cpu >= MASK_WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        let size = core::mem::size_of_val(&mask);
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sched_setaffinity(pid=0 → calling thread, len, mask) is
+        // nr 203 on x86_64. The mask buffer outlives the syscall (it is a
+        // live stack local), the kernel only reads `size` bytes from it,
+        // and rcx/r11 are declared clobbered as the syscall ABI requires.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 203isize => ret,
+                in("rdi") 0usize,
+                in("rsi") size,
+                in("rdx") mask.as_ptr(),
+                out("rcx") _,
+                out("r11") _,
+                options(nostack),
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: sched_setaffinity is nr 122 on aarch64 (`svc 0` with the
+        // number in x8, args in x0..x2). The mask buffer outlives the
+        // syscall and the kernel only reads `size` bytes from it.
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") 122isize,
+                inlateout("x0") 0isize => ret,
+                in("x1") size,
+                in("x2") mask.as_ptr(),
+                options(nostack),
+            );
+        }
+        ret == 0
+    }
+}
+
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri),
+    not(loom)
+)))]
+mod imp {
+    pub fn supported() -> bool {
+        false
+    }
+
+    pub fn pin_to_cpu(_cpu: usize) -> bool {
+        false
+    }
+}
+
+pub use imp::{pin_to_cpu, supported};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_is_best_effort() {
+        // Run the real attempt on a scratch thread so a success does not
+        // leave the test-runner thread pinned. Success is NOT asserted:
+        // cpusets, seccomp, or an unsupported platform may all say no —
+        // the contract is only "no crash, honest boolean".
+        let ok = std::thread::spawn(|| pin_to_cpu(0)).join().unwrap();
+        if !supported() {
+            assert!(!ok);
+        }
+    }
+
+    #[test]
+    fn out_of_range_cpu_is_rejected() {
+        assert!(!pin_to_cpu(usize::MAX));
+    }
+}

@@ -24,8 +24,23 @@
 //! the layout's block length and reused every step so the hot path stays
 //! allocation-free. Arenas travel with the *shard*, not the OS thread, so
 //! they stay warm whichever worker picks the shard up.
+//!
+//! Placement ([`ExecPool::new_with`], `--pin-workers`): the pool can pin
+//! each spawned worker to a cpu chosen by [`topology`] (NUMA nodes first,
+//! cpus within a node second) via [`affinity`]'s raw `sched_setaffinity`.
+//! A pinned pool claims shards by **static striping** (worker `w` takes
+//! shards `w, w + workers, ...`) instead of the atomic cursor, so the
+//! shard→worker mapping is the same every step — which is what makes the
+//! optimizer's first-touch warm pass stick: the pages a worker touched at
+//! step 1 are the pages it keeps touching. Pinning is best-effort
+//! everywhere: an unsupported platform or a denied syscall just leaves
+//! workers floating, and the achieved count is reported through the
+//! `exec.pinned_workers` trace gauge.
 
 use std::ops::Range;
+
+pub mod affinity;
+pub mod topology;
 
 use self::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use self::sync::{Arc, Condvar, Mutex};
@@ -85,6 +100,9 @@ pub(crate) mod sync {
 #[derive(Clone)]
 pub struct ExecPool {
     workers: usize,
+    /// Placement-aware mode: workers were asked to pin and shard claiming
+    /// uses static striping (see the module docs).
+    pin: bool,
     handle: Option<Arc<PoolHandle>>,
 }
 
@@ -92,6 +110,7 @@ impl std::fmt::Debug for ExecPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ExecPool")
             .field("workers", &self.workers)
+            .field("pin", &self.pin)
             .field("persistent", &self.handle.is_some())
             .finish()
     }
@@ -140,6 +159,12 @@ struct PoolHandle {
     /// Serializes dispatches from clones sharing the threads.
     dispatch: Mutex<()>,
     threads: Vec<sync::JoinHandle>,
+    /// Spawned workers whose `sched_setaffinity` succeeded. Plain std
+    /// atomic (not the loom shim): it is telemetry, not synchronization,
+    /// and pinning is compiled out under loom anyway.
+    pinned: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    /// Workers the placement plan covered (0 when pinning was not asked).
+    pin_target: usize,
 }
 
 impl Drop for PoolHandle {
@@ -205,13 +230,25 @@ impl Drop for WaitGuard<'_> {
 impl ExecPool {
     /// Single-worker pool: every shard runs inline, no threads spawned.
     pub fn serial() -> Self {
-        Self { workers: 1, handle: None }
+        Self { workers: 1, pin: false, handle: None }
     }
 
     /// Pool with exactly `workers` workers (clamped to >= 1). For
     /// `workers > 1` this spawns `workers - 1` persistent threads now, so
     /// the steady-state step pays a wake + barrier instead of a spawn.
     pub fn new(workers: usize) -> Self {
+        Self::new_with(workers, false)
+    }
+
+    /// [`ExecPool::new`] with optional placement-aware mode. With
+    /// `pin == true` each spawned worker pins itself to the cpu
+    /// [`topology::plan`] assigns it (best-effort — a refused
+    /// `sched_setaffinity` leaves that worker floating) and shard claiming
+    /// switches to static striping so the shard→worker mapping is stable
+    /// across steps. The calling thread (worker 0) is never re-pinned: its
+    /// affinity belongs to the embedding application. A `workers <= 1`
+    /// pool has no threads to place, so `pin` is ignored there.
+    pub fn new_with(workers: usize, pin: bool) -> Self {
         let workers = workers.max(1);
         if workers == 1 {
             return Self::serial();
@@ -221,19 +258,47 @@ impl ExecPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
+        let plan = if pin { topology::plan(workers) } else { Vec::new() };
+        let pinned = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let threads = (1..workers)
             .map(|i| {
                 let inner = Arc::clone(&inner);
-                sync::spawn_worker(format!("microadam-exec-{i}"), move || worker_loop(inner, i))
+                let pinned = std::sync::Arc::clone(&pinned);
+                let cpu = plan.get(i).copied();
+                sync::spawn_worker(format!("microadam-exec-{i}"), move || {
+                    if let Some(c) = cpu {
+                        if affinity::pin_to_cpu(c) {
+                            pinned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    worker_loop(inner, i)
+                })
             })
             .collect();
-        Self { workers, handle: Some(Arc::new(PoolHandle { inner, dispatch: Mutex::new(()), threads })) }
+        let pin_target = if pin { workers - 1 } else { 0 };
+        Self {
+            workers,
+            pin,
+            handle: Some(Arc::new(PoolHandle {
+                inner,
+                dispatch: Mutex::new(()),
+                threads,
+                pinned,
+                pin_target,
+            })),
+        }
     }
 
     /// Pool sized to the machine: `MICROADAM_WORKERS` env override, else
     /// `std::thread::available_parallelism()`. Zero (in either source)
     /// means auto-detect, matching the `TrainConfig::workers` convention.
     pub fn auto() -> Self {
+        Self::auto_with(false)
+    }
+
+    /// [`ExecPool::auto`] with optional placement-aware mode (see
+    /// [`ExecPool::new_with`]).
+    pub fn auto_with(pin: bool) -> Self {
         let n = std::env::var("MICROADAM_WORKERS")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
@@ -241,11 +306,35 @@ impl ExecPool {
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
             });
-        Self::new(n)
+        Self::new_with(n, pin)
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Whether this pool runs in placement-aware mode (pinning requested
+    /// and worker threads exist). The optimizer keys its NUMA first-touch
+    /// warm pass on this.
+    pub fn pinned(&self) -> bool {
+        self.pin && self.handle.is_some()
+    }
+
+    /// Spawned workers whose pin actually stuck — the achieved placement,
+    /// `<=` [`ExecPool::pin_target`]. (Workers pin asynchronously at
+    /// startup, so this can transiently undercount right after
+    /// construction.)
+    pub fn pinned_workers(&self) -> usize {
+        self.handle
+            .as_ref()
+            .map(|h| h.pinned.load(std::sync::atomic::Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Workers the placement plan covered: `workers - 1` when pinning was
+    /// requested (the caller's thread is never re-pinned), else 0.
+    pub fn pin_target(&self) -> usize {
+        self.handle.as_ref().map(|h| h.pin_target).unwrap_or(0)
     }
 
     /// Run one closure invocation per shard, fanned out across the pool.
@@ -283,23 +372,37 @@ impl ExecPool {
             }
         };
 
-        // Each slot is claimed exactly once via the cursor; the Mutex is
+        if self.pin && crate::trace::enabled() {
+            crate::trace::gauge("exec.pinned_workers", self.pinned_workers() as f64);
+            crate::trace::gauge("exec.pin_target", self.pin_target() as f64);
+        }
+
+        // Shard claiming: unpinned pools share an atomic cursor (dynamic,
+        // load-balancing); pinned pools stripe statically (worker w takes
+        // w, w + workers, ...) so the shard→worker mapping — and therefore
+        // the first-touch page placement — is identical every step. Either
+        // way each slot is claimed exactly once and the Mutex is
         // uncontended by construction (one lock per shard lifetime).
+        let stride = if self.pin { Some(self.workers) } else { None };
         let slots: Vec<Mutex<Option<W>>> = shards.into_iter().map(|w| Mutex::new(Some(w))).collect();
         let cursor = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
-        let run = |_worker: usize| {
-            loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let w = slots[i].lock().unwrap().take().expect("shard claimed once");
+        let run = |worker: usize| {
+            let mut next = match stride {
+                Some(_) => worker,
+                None => cursor.fetch_add(1, Ordering::Relaxed),
+            };
+            while next < n {
+                let w = slots[next].lock().unwrap().take().expect("shard claimed once");
                 let sp = crate::trace::begin();
-                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, w))).is_err() {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(next, w))).is_err() {
                     panicked.store(true, Ordering::SeqCst);
                 }
-                sp.end("exec", "shard", i as u32);
+                sp.end("exec", "shard", next as u32);
+                next = match stride {
+                    Some(s) => next + s,
+                    None => cursor.fetch_add(1, Ordering::Relaxed),
+                };
             }
             // Drain this worker's trace buffer once per dispatch, so the
             // collector sees every shard span without per-event locking.
@@ -552,6 +655,48 @@ mod tests {
         let shards: Vec<&mut u32> = data.iter_mut().collect();
         pool.run_shards(shards, |i, v| *v = i as u32 + 1);
         assert_eq!(data.iter().sum::<u32>(), (1..=8).sum::<u32>());
+    }
+
+    #[test]
+    fn pinned_pool_runs_correctly_and_reports_placement() {
+        let pool = ExecPool::new_with(4, true);
+        assert!(pool.pinned());
+        assert_eq!(pool.pin_target(), 3);
+        // Achieved placement is best-effort (cpusets may refuse) and
+        // workers pin asynchronously — only the bound is guaranteed.
+        assert!(pool.pinned_workers() <= 3);
+        let mut data = vec![0u32; 16];
+        let shards: Vec<&mut [u32]> = data.chunks_mut(4).collect();
+        pool.run_shards(shards, |i, chunk| {
+            for v in chunk {
+                *v = i as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&v| (1..=4).contains(&v)));
+    }
+
+    #[test]
+    fn unpinned_pools_report_no_placement() {
+        let pool = ExecPool::new(2);
+        assert!(!pool.pinned());
+        assert_eq!(pool.pin_target(), 0);
+        assert_eq!(pool.pinned_workers(), 0);
+        assert!(!ExecPool::serial().pinned());
+        // a 1-worker pool has nothing to place: pin is ignored
+        assert!(!ExecPool::new_with(1, true).pinned());
+    }
+
+    #[test]
+    fn pinned_striping_covers_more_shards_than_workers() {
+        // Static striping must still claim every shard exactly once when
+        // shards outnumber workers.
+        let pool = ExecPool::new_with(3, true);
+        let hits = AtomicUsize::new(0);
+        pool.run_shards((0..23).collect::<Vec<usize>>(), |i, v| {
+            assert_eq!(i, v);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 23);
     }
 
     #[test]

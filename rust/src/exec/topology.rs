@@ -1,0 +1,126 @@
+//! CPU/NUMA topology discovery for worker placement.
+//!
+//! Reads the kernel's node→cpu map from
+//! `/sys/devices/system/node/node<N>/cpulist` and turns it into a
+//! deterministic worker→cpu plan: workers round-robin across nodes first
+//! (so memory bandwidth spreads over every memory controller), then
+//! across the cpus within a node. On machines without the sysfs tree
+//! (non-Linux, sandboxes, containers with a masked `/sys`) detection
+//! degrades to a single node covering `available_parallelism()` cpus —
+//! the plan is still well-formed, it just encodes no locality.
+
+use std::fs;
+
+/// Parse a kernel cpulist string (`"0-3,8,10-11"`) into explicit cpu ids.
+/// Malformed pieces are skipped rather than failing the whole list —
+/// placement is best-effort by design.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                // Cap the expansion so a corrupt "0-18446744073709551615"
+                // cannot allocate the universe.
+                if a <= b && b - a < 4096 {
+                    out.extend(a..=b);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// The machine's NUMA nodes as lists of cpu ids, from sysfs. Falls back
+/// to one synthetic node spanning `available_parallelism()` cpus when the
+/// sysfs tree is absent or yields nothing — callers never see an empty
+/// topology.
+pub fn nodes() -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    // Node directories are numbered densely from 0; stop at the first gap.
+    for n in 0..1024 {
+        match fs::read_to_string(format!("/sys/devices/system/node/node{n}/cpulist")) {
+            Ok(s) => {
+                let cpus = parse_cpulist(&s);
+                if !cpus.is_empty() {
+                    out.push(cpus);
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if out.is_empty() {
+        let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        out.push((0..ncpu).collect());
+    }
+    out
+}
+
+/// Worker→cpu plan over the detected topology: `plan(w)[i]` is the cpu
+/// worker `i` should pin to. See [`plan_over`] for the placement rule.
+pub fn plan(workers: usize) -> Vec<usize> {
+    plan_over(&nodes(), workers)
+}
+
+/// Deterministic placement over an explicit topology: worker `w` goes to
+/// node `w % n_nodes`, taking that node's cpus in order (wrapping when
+/// there are more workers than cpus). Nodes first, cpus second — adjacent
+/// workers land on different memory controllers.
+pub fn plan_over(nodes: &[Vec<usize>], workers: usize) -> Vec<usize> {
+    let nodes: Vec<&Vec<usize>> = nodes.iter().filter(|c| !c.is_empty()).collect();
+    if nodes.is_empty() {
+        return vec![0; workers];
+    }
+    (0..workers)
+        .map(|w| {
+            let node = nodes[w % nodes.len()];
+            node[(w / nodes.len()) % node.len()]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3,8"), vec![0, 1, 2, 3, 8]);
+        assert_eq!(parse_cpulist("0\n"), vec![0]);
+        assert_eq!(parse_cpulist("4-4"), vec![4]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        // malformed pieces are skipped, not fatal
+        assert_eq!(parse_cpulist("x,2,3-z,5-4,7"), vec![2, 7]);
+        // absurd ranges are refused instead of expanded
+        assert_eq!(parse_cpulist("0-99999999"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_round_robins_nodes_first() {
+        let topo = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        assert_eq!(plan_over(&topo, 4), vec![0, 4, 1, 5]);
+        // more workers than cpus wraps within each node
+        assert_eq!(plan_over(&topo, 10), vec![0, 4, 1, 5, 2, 6, 3, 7, 0, 4]);
+    }
+
+    #[test]
+    fn plan_handles_degenerate_topologies() {
+        assert_eq!(plan_over(&[], 3), vec![0, 0, 0]);
+        assert_eq!(plan_over(&[vec![]], 2), vec![0, 0]);
+        assert_eq!(plan_over(&[vec![5]], 3), vec![5, 5, 5]);
+    }
+
+    #[test]
+    fn detection_never_returns_empty() {
+        let topo = nodes();
+        assert!(!topo.is_empty());
+        assert!(topo.iter().all(|n| !n.is_empty()));
+        let p = plan(4);
+        assert_eq!(p.len(), 4);
+    }
+}

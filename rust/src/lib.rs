@@ -57,6 +57,7 @@ pub mod models;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+pub mod simd;
 pub mod topk;
 pub mod trace;
 pub mod util;

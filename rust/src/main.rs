@@ -79,7 +79,13 @@ USAGE:
   microadam train   [--config cfg.json] [--model lm_tiny] [--optimizer micro-adam]
                     [--backend aot|native] [--steps N] [--lr F] [--schedule const|warmup-cosine]
                     [--warmup N] [--weight-decay F] [--seed N] [--grad-accum N]
-                    [--workers N (0 = auto)] [--out runs/x.jsonl] [--artifacts artifacts]
+                    [--workers N (0 = auto)] [--pin-workers yes]
+                      (--pin-workers pins each exec worker to a cpu —
+                       NUMA nodes round-robin first — and keeps the
+                       shard→worker mapping static so first-touch page
+                       placement sticks; best-effort, silently unpinned
+                       where the platform refuses.)
+                    [--out runs/x.jsonl] [--artifacts artifacts]
                     [--checkpoint path.bin] [--trace runs/x.trace.json]
                       (--trace enables the tracing layer: per-phase span /
                        EF-health records go into the --out JSONL and a
@@ -165,6 +171,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.weight_decay = args.get_f32("weight-decay", cfg.weight_decay)?;
     cfg.grad_accum = args.get_u64("grad-accum", cfg.grad_accum as u64)? as usize;
     cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
+    if let Some(v) = args.get("pin-workers") {
+        cfg.pin_workers = matches!(v, "yes" | "true" | "1");
+    }
     cfg.ranks = (args.get_u64("ranks", cfg.ranks as u64)? as usize).max(1);
     if let Some(v) = args.get("reduce") {
         cfg.reduce = parse_reducer(v)?;

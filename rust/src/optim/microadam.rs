@@ -44,10 +44,8 @@ use super::Optimizer;
 use crate::coordinator::state::MicroAdamSnapshot;
 use crate::exec::{self, Arena, ExecPool};
 use crate::quant::{BucketStats, Quant4};
-use crate::topk::{
-    stats_accum_bf16, stats_accum_f32, topk_abs_block, topk_abs_block_bf16, SlidingWindow,
-    WinDtype,
-};
+use crate::simd::{self, Level, Policy};
+use crate::topk::{topk_abs_block_bf16_with, topk_abs_block_with, SlidingWindow, WinDtype};
 use crate::trace;
 
 /// How the error-feedback accumulator is stored.
@@ -81,6 +79,12 @@ pub struct MicroAdamConfig {
     /// (default) is the paper dtype; [`WinDtype::F32`] keeps the
     /// full-precision baseline for the tolerance-bounded parity tier.
     pub win_dtype: WinDtype,
+    /// Kernel dispatch policy. [`Policy::Auto`] (default) resolves once at
+    /// construction to the widest compiled instruction set the host
+    /// supports; [`Policy::Scalar`] pins the always-compiled scalar
+    /// kernels. Both produce identical bits (see [`crate::simd`]), so
+    /// this is a speed knob, never a numerics knob.
+    pub simd: Policy,
 }
 
 impl Default for MicroAdamConfig {
@@ -96,6 +100,7 @@ impl Default for MicroAdamConfig {
             weight_decay: 0.0,
             ef: EfMode::Quant4,
             win_dtype: WinDtype::Bf16,
+            simd: Policy::Auto,
         }
     }
 }
@@ -123,6 +128,8 @@ pub struct MicroAdam {
     /// Per-worker scratch arenas (z1/z2 + Top-K select), pre-sized from
     /// the block length and kept warm across steps.
     arenas: Vec<Arena>,
+    /// Kernel instruction-set level, resolved once from `cfg.simd`.
+    level: Level,
     t: u64,
 }
 
@@ -163,8 +170,15 @@ impl MicroAdam {
             ef_dense,
             acc: vec![0.0; d_pad],
             arenas: Vec::new(),
+            level: simd::resolve(cfg.simd),
             t: 0,
         }
+    }
+
+    /// The kernel instruction-set level this optimizer dispatches to
+    /// (resolved once from the configured [`Policy`]).
+    pub fn simd_level(&self) -> Level {
+        self.level
     }
 
     /// Effective Top-K entries per block.
@@ -387,71 +401,177 @@ impl MicroAdam {
             lr,
             decay: 1.0 - lr * self.cfg.weight_decay,
             eps: self.cfg.eps,
+            level: self.level,
             w1: &w1,
             w2: &w2,
             quant: &self.quant,
         };
 
-        // Carve every buffer into disjoint per-shard &mut sub-slices. The
-        // per-shard window spans come from the layout's own offset math so
-        // they can never drift from the window's own indexing.
+        // The per-shard window spans come from the layout's own offset
+        // math so they can never drift from the window's own indexing.
         let wspans: Vec<usize> =
             ranges.iter().map(|r| self.window.block_range(r.clone()).len()).collect();
-        let mut p_rest = params;
-        let mut g_rest = grads;
-        let mut acc_rest = &mut self.acc[..];
-        let mut wi_rest = &mut self.window.idx[..];
-        let mut wv_rest = match self.window.dtype {
-            WinDtype::Bf16 => WinVals::Bf16(&mut self.window.val[..]),
-            WinDtype::F32 => WinVals::F32(&mut self.window.val_f32[..]),
+        let geom = CarveGeom {
+            block: self.block,
+            bpb: self.bpb,
+            d: self.d,
+            ef: self.cfg.ef,
+            ranges: &ranges,
+            wspans: &wspans,
         };
-        let mut efp_rest = &mut self.ef_packed[..];
-        let mut efs_rest = &mut self.ef_stats[..];
-        let mut efd_rest = &mut self.ef_dense[..];
-        let mut arenas = self.arenas[..nshards].iter_mut();
-        let mut shards = Vec::with_capacity(ranges.len());
-        let mut pstart = 0usize;
-        for (r, &wspan) in ranges.iter().zip(&wspans) {
-            let nblk = r.len();
-            let pend = (r.end * self.block).min(self.d);
-            let (p, pr) = p_rest.split_at_mut(pend - pstart);
-            p_rest = pr;
-            let (g, gr) = g_rest.split_at(pend - pstart);
-            g_rest = gr;
-            pstart = pend;
-            let (a, ar) = acc_rest.split_at_mut(nblk * self.block);
-            acc_rest = ar;
-            let (wi, wir) = wi_rest.split_at_mut(wspan);
-            wi_rest = wir;
-            let (wv, wvr) = wv_rest.split_at_mut(wspan);
-            wv_rest = wvr;
-            let ef = match self.cfg.ef {
-                EfMode::Off => EfShard::Off,
-                EfMode::Dense => {
-                    let (e, er) = efd_rest.split_at_mut(nblk * self.block);
-                    efd_rest = er;
-                    EfShard::Dense(e)
-                }
-                EfMode::Quant4 => {
-                    let (pk, pkr) = efp_rest.split_at_mut(nblk * self.block / 2);
-                    efp_rest = pkr;
-                    let (st, str_) = efs_rest.split_at_mut(nblk * self.bpb);
-                    efs_rest = str_;
-                    EfShard::Quant4 { packed: pk, stats: st }
-                }
-            };
-            shards.push(Shard {
-                params: p,
-                grads: g,
-                acc: a,
-                win_idx: wi,
-                win_val: wv,
-                ef,
-                arena: arenas.next().expect("one arena per shard"),
-            });
+
+        // NUMA first touch: when workers are pinned, have each worker
+        // write every page of its own shard's state slabs once before the
+        // first real pass, so the kernel's first-touch policy places those
+        // pages on the owning worker's node. At t == 1 the buffers are
+        // freshly allocated all-zeros (restore at t = 0 is also all-zero
+        // state), so the fill never changes a value; the static shard
+        // striping `run_shards` uses under pinning keeps the shard→worker
+        // mapping identical between this pass and every later step.
+        if t == 1 && pool.pinned() {
+            let warm = carve_shards(
+                geom,
+                &mut *params,
+                grads,
+                &mut self.acc,
+                &mut self.window.idx,
+                match self.window.dtype {
+                    WinDtype::Bf16 => WinVals::Bf16(&mut self.window.val[..]),
+                    WinDtype::F32 => WinVals::F32(&mut self.window.val_f32[..]),
+                },
+                &mut self.ef_packed,
+                &mut self.ef_stats,
+                &mut self.ef_dense,
+                &mut self.arenas[..nshards],
+            );
+            pool.run_shards(warm, |_i, sh| warm_shard(sh));
         }
+
+        let shards = carve_shards(
+            geom,
+            params,
+            grads,
+            &mut self.acc,
+            &mut self.window.idx,
+            match self.window.dtype {
+                WinDtype::Bf16 => WinVals::Bf16(&mut self.window.val[..]),
+                WinDtype::F32 => WinVals::F32(&mut self.window.val_f32[..]),
+            },
+            &mut self.ef_packed,
+            &mut self.ef_stats,
+            &mut self.ef_dense,
+            &mut self.arenas[..nshards],
+        );
         pool.run_shards(shards, |i, sh| run_shard(ctx, i, sh));
     }
+}
+
+/// The carve geometry: everything [`carve_shards`] needs besides the
+/// buffers themselves.
+#[derive(Clone, Copy)]
+struct CarveGeom<'a> {
+    block: usize,
+    bpb: usize,
+    /// Unpadded parameter dimension.
+    d: usize,
+    ef: EfMode,
+    /// Contiguous block ranges, one per shard.
+    ranges: &'a [std::ops::Range<usize>],
+    /// Window span (idx/val entries) per shard, from the layout's offset math.
+    wspans: &'a [usize],
+}
+
+/// Carve every state buffer into disjoint per-shard `&mut` sub-slices.
+/// Free function (not a method) so a step can carve twice — once for the
+/// NUMA first-touch pass, once for the real pass — without fighting the
+/// borrow checker over `&mut self`.
+#[allow(clippy::too_many_arguments)]
+fn carve_shards<'a>(
+    geom: CarveGeom<'_>,
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    acc: &'a mut [f32],
+    win_idx: &'a mut [u16],
+    win_val: WinVals<'a>,
+    ef_packed: &'a mut [u8],
+    ef_stats: &'a mut [BucketStats],
+    ef_dense: &'a mut [f32],
+    arenas: &'a mut [Arena],
+) -> Vec<Shard<'a>> {
+    let mut p_rest = params;
+    let mut g_rest = grads;
+    let mut acc_rest = acc;
+    let mut wi_rest = win_idx;
+    let mut wv_rest = win_val;
+    let mut efp_rest = ef_packed;
+    let mut efs_rest = ef_stats;
+    let mut efd_rest = ef_dense;
+    let mut arenas = arenas.iter_mut();
+    let mut shards = Vec::with_capacity(geom.ranges.len());
+    let mut pstart = 0usize;
+    for (r, &wspan) in geom.ranges.iter().zip(geom.wspans) {
+        let nblk = r.len();
+        let pend = (r.end * geom.block).min(geom.d);
+        let (p, pr) = p_rest.split_at_mut(pend - pstart);
+        p_rest = pr;
+        let (g, gr) = g_rest.split_at(pend - pstart);
+        g_rest = gr;
+        pstart = pend;
+        let (a, ar) = acc_rest.split_at_mut(nblk * geom.block);
+        acc_rest = ar;
+        let (wi, wir) = wi_rest.split_at_mut(wspan);
+        wi_rest = wir;
+        let (wv, wvr) = wv_rest.split_at_mut(wspan);
+        wv_rest = wvr;
+        let ef = match geom.ef {
+            EfMode::Off => EfShard::Off,
+            EfMode::Dense => {
+                let (e, er) = efd_rest.split_at_mut(nblk * geom.block);
+                efd_rest = er;
+                EfShard::Dense(e)
+            }
+            EfMode::Quant4 => {
+                let (pk, pkr) = efp_rest.split_at_mut(nblk * geom.block / 2);
+                efp_rest = pkr;
+                let (st, str_) = efs_rest.split_at_mut(nblk * geom.bpb);
+                efs_rest = str_;
+                EfShard::Quant4 { packed: pk, stats: st }
+            }
+        };
+        shards.push(Shard {
+            params: p,
+            grads: g,
+            acc: a,
+            win_idx: wi,
+            win_val: wv,
+            ef,
+            arena: arenas.next().expect("one arena per shard"),
+        });
+    }
+    shards
+}
+
+/// NUMA first-touch pass body: write every page of the shard's mutable
+/// state slabs from the worker that owns the shard. Values are untouched
+/// in effect — this only runs at t == 1, when every slab is all-zeros.
+fn warm_shard(sh: Shard) {
+    let Shard { params: _, grads: _, acc, win_idx, win_val, ef, arena } = sh;
+    acc.fill(0.0);
+    win_idx.fill(0);
+    match win_val {
+        WinVals::Bf16(wv) => wv.fill(0),
+        WinVals::F32(wv) => wv.fill(0.0),
+    }
+    match ef {
+        EfShard::Off => {}
+        EfShard::Dense(e) => e.fill(0.0),
+        EfShard::Quant4 { packed, stats } => {
+            packed.fill(0);
+            stats.fill(BucketStats { lo: 0.0, hi: 0.0 });
+        }
+    }
+    arena.z1.fill(0.0);
+    arena.z2.fill(0.0);
 }
 
 /// Span names of the five fused stages, in pass order — the `optim.phase`
@@ -470,6 +590,7 @@ struct StepCtx<'a> {
     lr: f32,
     decay: f32,
     eps: f32,
+    level: Level,
     w1: &'a [f32],
     w2: &'a [f32],
     quant: &'a Quant4,
@@ -553,7 +674,7 @@ fn run_shard(ctx: StepCtx, shard_id: usize, sh: Shard) {
             EfShard::Quant4 { packed, stats } => {
                 let pb = &packed[base / 2..(base + ctx.block) / 2];
                 let sb = &stats[bl * ctx.bpb..(bl + 1) * ctx.bpb];
-                ctx.quant.dequantize_add(pb, sb, acc_b);
+                simd::quant4_dequantize_add(ctx.level, ctx.quant, pb, sb, acc_b);
             }
         }
         phases.mark(0);
@@ -562,14 +683,16 @@ fn run_shard(ctx: StepCtx, shard_id: usize, sh: Shard) {
         // the selected entries at full precision (6-7, 10).
         let wo = (bl * ctx.m + ctx.row) * ctx.kb;
         match &mut win_val {
-            WinVals::Bf16(wv) => topk_abs_block_bf16(
+            WinVals::Bf16(wv) => topk_abs_block_bf16_with(
+                ctx.level,
                 acc_b,
                 ctx.kb,
                 &mut win_idx[wo..wo + ctx.kb],
                 &mut wv[wo..wo + ctx.kb],
                 &mut arena.sel,
             ),
-            WinVals::F32(wv) => topk_abs_block(
+            WinVals::F32(wv) => topk_abs_block_with(
+                ctx.level,
                 acc_b,
                 ctx.kb,
                 &mut win_idx[wo..wo + ctx.kb],
@@ -589,7 +712,7 @@ fn run_shard(ctx: StepCtx, shard_id: usize, sh: Shard) {
             EfShard::Quant4 { packed, stats } => {
                 let pb = &mut packed[base / 2..(base + ctx.block) / 2];
                 let sb = &mut stats[bl * ctx.bpb..(bl + 1) * ctx.bpb];
-                ctx.quant.quantize(acc_b, pb, sb);
+                simd::quant4_quantize(ctx.level, ctx.quant, acc_b, pb, sb);
             }
         }
         phases.mark(2);
@@ -606,23 +729,21 @@ fn run_shard(ctx: StepCtx, shard_id: usize, sh: Shard) {
             WinVals::Bf16(wv) => {
                 for i in 0..ctx.valid {
                     let o = (bl * ctx.m + i) * ctx.kb;
-                    stats_accum_bf16(&win_idx[o..o + ctx.kb], &wv[o..o + ctx.kb], ctx.w1[i], ctx.w2[i], z1, z2);
+                    simd::stats_accum_bf16(ctx.level, &win_idx[o..o + ctx.kb], &wv[o..o + ctx.kb], ctx.w1[i], ctx.w2[i], z1, z2);
                 }
             }
             WinVals::F32(wv) => {
                 for i in 0..ctx.valid {
                     let o = (bl * ctx.m + i) * ctx.kb;
-                    stats_accum_f32(&win_idx[o..o + ctx.kb], &wv[o..o + ctx.kb], ctx.w1[i], ctx.w2[i], z1, z2);
+                    simd::stats_accum_f32(ctx.level, &win_idx[o..o + ctx.kb], &wv[o..o + ctx.kb], ctx.w1[i], ctx.w2[i], z1, z2);
                 }
             }
         }
         phases.mark(3);
 
-        // Parameter update (13).
-        for j in 0..n {
-            let u = ctx.lr * z1[j] / (ctx.eps + z2[j].sqrt());
-            params[base + j] = ctx.decay * params[base + j] - u;
-        }
+        // Parameter update (13) — lane-parallel `m̂/(ε+√v̂)` under the
+        // vector instantiations, same float-op chain at every level.
+        simd::adam_update(ctx.level, &mut params[base..base + n], &z1[..n], &z2[..n], ctx.lr, ctx.eps, ctx.decay);
         phases.mark(4);
     }
     phases.finish("optim.phase", PHASE_NAMES, shard_id as u32);
@@ -716,6 +837,28 @@ mod tests {
                     assert_eq!(fused.error_norm(), refr.error_norm(), "{win:?} {ef:?} step {s}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn scalar_policy_matches_auto_bitwise() {
+        // Policy is a speed knob, never a numerics knob: the Auto path
+        // (whatever level the host resolves to, including the Top-K
+        // prefilter, which engages at block >= 128) must produce the same
+        // bits as the pinned scalar oracle, step after step.
+        let d = 2048; // 8 blocks of 256
+        let cfg = MicroAdamConfig { m: 4, block: 256, density: 0.05, qbucket: 16, ..Default::default() };
+        let mut auto_opt = MicroAdam::new(d, cfg);
+        let mut scalar_opt = MicroAdam::new(d, MicroAdamConfig { simd: Policy::Scalar, ..cfg });
+        assert_eq!(scalar_opt.simd_level(), Level::Scalar);
+        let mut xa = randvec(17, d, 1.0);
+        let mut xs = xa.clone();
+        for s in 0..10 {
+            let g = randvec(600 + s, d, 1.0);
+            auto_opt.step(&mut xa, &g, 0.01);
+            scalar_opt.step(&mut xs, &g, 0.01);
+            assert_eq!(xa, xs, "step {s} ({:?})", auto_opt.simd_level());
+            assert_eq!(auto_opt.error_norm(), scalar_opt.error_norm(), "step {s}");
         }
     }
 

@@ -72,6 +72,13 @@ impl Quant4 {
 
     /// Deterministic (round-to-nearest) quantization of `x` into
     /// pre-allocated `packed` (`d/2` bytes) and `stats` (`d/B_q`).
+    ///
+    /// Scalar twin of the vector instantiations in [`crate::simd`]
+    /// (`inline(always)` so the `target_feature` wrappers re-codegen this
+    /// exact body). The `min_max` reduction inside is order-sensitive and
+    /// deliberately stays a scalar fold either way; the `code4` pack loop
+    /// is the part that lane-parallelizes.
+    #[inline(always)]
     pub fn quantize(&self, x: &[f32], packed: &mut [u8], stats: &mut [BucketStats]) {
         let nb = self.n_buckets(x.len());
         assert_eq!(packed.len(), x.len() / 2);
@@ -140,6 +147,11 @@ impl Quant4 {
     /// Dequantize-and-add: `out[i] += Q^-1(packed)[i]`. This is the
     /// paper's "accumulate EF straight into the grad buffer" trick (§3.1),
     /// avoiding a dense scratch vector.
+    ///
+    /// Scalar twin of the vector instantiations in [`crate::simd`]: the
+    /// nibble unpack + `code·u + lo` accumulate is elementwise and
+    /// lane-parallelizes under the `target_feature` re-codegen.
+    #[inline(always)]
     pub fn dequantize_add(&self, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
         assert_eq!(out.len(), packed.len() * 2);
         // A short stats slice would silently skip the tail buckets (the
@@ -200,7 +212,7 @@ impl Quant4 {
     }
 }
 
-#[inline]
+#[inline(always)]
 fn code4(x: f32, lo: f32, u: f32, xi: f32) -> u8 {
     let q = ((x - lo) / u + xi).floor();
     q.clamp(0.0, levels(4)) as u8

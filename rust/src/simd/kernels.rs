@@ -1,0 +1,133 @@
+//! `target_feature` instantiations of the fused-step kernels.
+//!
+//! Nothing in this file contains new math: every function below calls its
+//! `#[inline(always)]` scalar twin, so LLVM inlines the one-and-only body
+//! into a context where AVX2 (x86_64) or NEON (aarch64) is enabled and
+//! auto-vectorizes the elementwise loops. Inlining is always legal in
+//! this direction (the callee's feature set — none — is a subset of the
+//! caller's), and Rust's strict IEEE float semantics make every such
+//! re-codegen value-preserving; see the [`crate::simd`] module doc for
+//! the full bit-exactness argument.
+//!
+//! Scalar twin: each wrapper names its twin in its doc comment; the twins
+//! live in `util::bf16`, `quant`, `topk`, and `simd` itself.
+//!
+//! The functions are `unsafe fn` solely because `#[target_feature]`
+//! requires it: calling one on a machine without the feature is UB, which
+//! is why the only call sites are the [`crate::simd`] dispatchers, gated
+//! on the cached runtime probe.
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::quant::{BucketStats, Quant4};
+
+/// Scalar twin: [`crate::util::bf16::widen_into`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn bf16_widen_avx2(src: &[u16], dst: &mut [f32]) {
+    crate::util::bf16::widen_into(src, dst);
+}
+
+/// Scalar twin: [`crate::util::bf16::widen_into`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn bf16_widen_neon(src: &[u16], dst: &mut [f32]) {
+    crate::util::bf16::widen_into(src, dst);
+}
+
+/// Scalar twin: [`crate::util::bf16::round_into`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn bf16_round_avx2(src: &[f32], dst: &mut [u16]) {
+    crate::util::bf16::round_into(src, dst);
+}
+
+/// Scalar twin: [`crate::util::bf16::round_into`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn bf16_round_neon(src: &[f32], dst: &mut [u16]) {
+    crate::util::bf16::round_into(src, dst);
+}
+
+/// Scalar twin: [`crate::quant::Quant4::quantize`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quant4_quantize_avx2(q: &Quant4, x: &[f32], packed: &mut [u8], stats: &mut [BucketStats]) {
+    q.quantize(x, packed, stats);
+}
+
+/// Scalar twin: [`crate::quant::Quant4::quantize`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn quant4_quantize_neon(q: &Quant4, x: &[f32], packed: &mut [u8], stats: &mut [BucketStats]) {
+    q.quantize(x, packed, stats);
+}
+
+/// Scalar twin: [`crate::quant::Quant4::dequantize_add`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quant4_dequantize_add_avx2(q: &Quant4, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
+    q.dequantize_add(packed, stats, out);
+}
+
+/// Scalar twin: [`crate::quant::Quant4::dequantize_add`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn quant4_dequantize_add_neon(q: &Quant4, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
+    q.dequantize_add(packed, stats, out);
+}
+
+/// Scalar twin: [`crate::topk::stats_accum_bf16`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn stats_accum_bf16_avx2(idx: &[u16], val: &[u16], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    crate::topk::stats_accum_bf16(idx, val, w1, w2, z1, z2);
+}
+
+/// Scalar twin: [`crate::topk::stats_accum_bf16`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn stats_accum_bf16_neon(idx: &[u16], val: &[u16], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    crate::topk::stats_accum_bf16(idx, val, w1, w2, z1, z2);
+}
+
+/// Scalar twin: [`crate::topk::stats_accum_f32`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn stats_accum_f32_avx2(idx: &[u16], val: &[f32], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    crate::topk::stats_accum_f32(idx, val, w1, w2, z1, z2);
+}
+
+/// Scalar twin: [`crate::topk::stats_accum_f32`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn stats_accum_f32_neon(idx: &[u16], val: &[f32], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    crate::topk::stats_accum_f32(idx, val, w1, w2, z1, z2);
+}
+
+/// Scalar twin: [`crate::simd::adam_update_scalar`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn adam_update_avx2(params: &mut [f32], z1: &[f32], z2: &[f32], lr: f32, eps: f32, decay: f32) {
+    crate::simd::adam_update_scalar(params, z1, z2, lr, eps, decay);
+}
+
+/// Scalar twin: [`crate::simd::adam_update_scalar`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn adam_update_neon(params: &mut [f32], z1: &[f32], z2: &[f32], lr: f32, eps: f32, decay: f32) {
+    crate::simd::adam_update_scalar(params, z1, z2, lr, eps, decay);
+}
+
+/// Scalar twin: [`crate::topk::count_abs_ge`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn count_abs_ge_avx2(block: &[f32], thr: u32) -> usize {
+    crate::topk::count_abs_ge(block, thr)
+}
+
+/// Scalar twin: [`crate::topk::count_abs_ge`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn count_abs_ge_neon(block: &[f32], thr: u32) -> usize {
+    crate::topk::count_abs_ge(block, thr)
+}

@@ -1,0 +1,351 @@
+//! Runtime-dispatched vector acceleration for the fused-step kernels.
+//!
+//! ## Strategy: one body, many instantiations
+//!
+//! Every hot kernel in the fused five-phase step keeps exactly one
+//! implementation — the scalar body that already ships in its home module
+//! (the **scalar twin**), marked `#[inline(always)]`. The `simd` cargo
+//! feature compiles the [`kernels`] wrappers, which are nothing but the
+//! same bodies re-instantiated inside `#[target_feature(enable = ...)]`
+//! functions (AVX2 on x86_64, NEON on aarch64) so LLVM re-codegens them
+//! with wide registers enabled and auto-vectorizes the elementwise loops.
+//! Which instantiation runs is decided once, at optimizer construction,
+//! by [`resolve`] — a cached CPUID/`hwcap` probe plus the
+//! `MICROADAM_SIMD=scalar` env override — and threaded through the step
+//! as a [`Level`] value (no global mutable state, so tests can pin both
+//! paths in one process via [`Policy`]).
+//!
+//! ## Why this is bit-exact by construction
+//!
+//! Rust floating-point semantics are strict IEEE-754: the compiler may
+//! not reassociate float reductions, contract mul+add into FMA, or apply
+//! any fast-math value change. Every transform LLVM runs on a
+//! `target_feature` instantiation is therefore semantics-preserving —
+//! elementwise loops (bf16 widen/round, nibble unpack `code*u+lo`, the
+//! `m̂/(√v̂+ε)` update) vectorize because each lane's result is the same
+//! chain of ops as the scalar loop iteration, while order-sensitive
+//! float reductions (e.g. `min_max` in [`crate::quant`]) simply stay
+//! scalar. That is the whole parity argument: the vector path cannot
+//! produce different bits because it *is* the scalar path, compiled
+//! twice. `rust/tests/test_simd_parity.rs` enforces this over
+//! adversarial bit patterns, and the `simd × WinDtype × workers` tier in
+//! `rust/tests/test_parallel_parity.rs` enforces it end to end.
+//!
+//! (Deliberate deviation: `std::simd` is nightly-only, and this crate
+//! builds on stable — the `target_feature` re-instantiation approach
+//! delivers the same runtime-dispatched AVX2/NEON code paths with the
+//! scalar kernels as the always-compiled fallback and parity oracle.)
+//!
+//! Scalar twin: [`crate::util::bf16::widen_into`] / [`round_into`](crate::util::bf16::round_into),
+//! [`crate::quant::Quant4::quantize`] / [`dequantize_add`](crate::quant::Quant4::dequantize_add),
+//! [`crate::topk::stats_accum_bf16`] / [`stats_accum_f32`](crate::topk::stats_accum_f32),
+//! [`crate::topk::count_abs_ge`], and [`adam_update_scalar`] in this module.
+
+use crate::quant::{BucketStats, Quant4};
+
+#[cfg(feature = "simd")]
+pub(crate) mod kernels;
+
+/// Requested dispatch policy — carried in `MicroAdamConfig` so the level
+/// is a per-optimizer decision, not process-global state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Use the widest instruction set the host supports (the default).
+    /// Identical to [`Policy::Scalar`] when the `simd` feature is off.
+    #[default]
+    Auto,
+    /// Force the scalar kernels — the parity oracle and the baseline side
+    /// of every scalar-vs-simd bench row.
+    Scalar,
+}
+
+/// Resolved instruction-set level, decided once per optimizer and
+/// threaded through the step context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// The always-compiled scalar kernels.
+    Scalar,
+    /// x86_64 AVX2 instantiations (256-bit lanes).
+    Avx2,
+    /// aarch64 NEON instantiations (128-bit lanes).
+    Neon,
+}
+
+/// Short lowercase name for bench records and trace gauges.
+pub fn level_name(level: Level) -> &'static str {
+    match level {
+        Level::Scalar => "scalar",
+        Level::Avx2 => "avx2",
+        Level::Neon => "neon",
+    }
+}
+
+fn detect_uncached() -> Level {
+    if std::env::var("MICROADAM_SIMD").map(|v| v == "scalar").unwrap_or(false) {
+        return Level::Scalar;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Level::Neon;
+        }
+    }
+    Level::Scalar
+}
+
+/// The widest level this host supports (cached after the first probe).
+/// [`Level::Scalar`] whenever the `simd` feature is off, the arch has no
+/// compiled instantiations, or `MICROADAM_SIMD=scalar` is set.
+pub fn detected() -> Level {
+    use std::sync::OnceLock;
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(detect_uncached)
+}
+
+/// Resolve a configured [`Policy`] to the [`Level`] the step will run at.
+pub fn resolve(policy: Policy) -> Level {
+    match policy {
+        Policy::Auto => detected(),
+        Policy::Scalar => Level::Scalar,
+    }
+}
+
+/// Every level worth testing on this host: always `Scalar`, plus the
+/// detected vector level when there is one. Parity tests sweep this.
+pub fn active_levels() -> Vec<Level> {
+    let mut out = vec![Level::Scalar];
+    if detected() != Level::Scalar {
+        out.push(detected());
+    }
+    out
+}
+
+/// Scalar twin of the vectorized `update` phase: `u = lr·ẑ1/(ε+√ẑ2)`,
+/// `p = decay·p − u`, lane-parallel under the vector instantiations.
+/// The float-op chain matches `step_reference`'s update loop exactly.
+#[inline(always)]
+pub fn adam_update_scalar(params: &mut [f32], z1: &[f32], z2: &[f32], lr: f32, eps: f32, decay: f32) {
+    for (p, (&a, &b)) in params.iter_mut().zip(z1.iter().zip(z2)) {
+        let u = lr * a / (eps + b.sqrt());
+        *p = decay * *p - u;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers: match the resolved level to an instantiation. Each arm is
+// cfg-gated to the arch that compiles it; everything else falls through
+// to the scalar twin. The `unsafe` here discharges the target_feature
+// obligation only — the wrapped body is safe code.
+// ---------------------------------------------------------------------
+
+/// Widen a bf16 slab to f32. Scalar twin: [`crate::util::bf16::widen_into`].
+pub fn bf16_widen(level: Level, src: &[u16], dst: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced by `detect_uncached` after
+        // `is_x86_feature_detected!("avx2")` returned true on this host.
+        unsafe { kernels::bf16_widen_avx2(src, dst) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::bf16_widen_neon(src, dst) };
+        return;
+    }
+    let _ = level;
+    crate::util::bf16::widen_into(src, dst);
+}
+
+/// Round an f32 slab to bf16 (RNE). Scalar twin: [`crate::util::bf16::round_into`].
+pub fn bf16_round(level: Level, src: &[f32], dst: &mut [u16]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::bf16_round_avx2(src, dst) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::bf16_round_neon(src, dst) };
+        return;
+    }
+    let _ = level;
+    crate::util::bf16::round_into(src, dst);
+}
+
+/// 4-bit EF quantization. Scalar twin: [`crate::quant::Quant4::quantize`].
+pub fn quant4_quantize(level: Level, q: &Quant4, x: &[f32], packed: &mut [u8], stats: &mut [BucketStats]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::quant4_quantize_avx2(q, x, packed, stats) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::quant4_quantize_neon(q, x, packed, stats) };
+        return;
+    }
+    let _ = level;
+    q.quantize(x, packed, stats);
+}
+
+/// 4-bit EF dequantize-accumulate. Scalar twin:
+/// [`crate::quant::Quant4::dequantize_add`].
+pub fn quant4_dequantize_add(level: Level, q: &Quant4, packed: &[u8], stats: &[BucketStats], out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::quant4_dequantize_add_avx2(q, packed, stats, out) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::quant4_dequantize_add_neon(q, packed, stats, out) };
+        return;
+    }
+    let _ = level;
+    q.dequantize_add(packed, stats, out);
+}
+
+/// AdamStats accumulation, bf16-stored values. Scalar twin:
+/// [`crate::topk::stats_accum_bf16`].
+pub fn stats_accum_bf16(level: Level, idx: &[u16], val: &[u16], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::stats_accum_bf16_avx2(idx, val, w1, w2, z1, z2) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::stats_accum_bf16_neon(idx, val, w1, w2, z1, z2) };
+        return;
+    }
+    let _ = level;
+    crate::topk::stats_accum_bf16(idx, val, w1, w2, z1, z2);
+}
+
+/// AdamStats accumulation, f32-stored values. Scalar twin:
+/// [`crate::topk::stats_accum_f32`].
+pub fn stats_accum_f32(level: Level, idx: &[u16], val: &[f32], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::stats_accum_f32_avx2(idx, val, w1, w2, z1, z2) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::stats_accum_f32_neon(idx, val, w1, w2, z1, z2) };
+        return;
+    }
+    let _ = level;
+    crate::topk::stats_accum_f32(idx, val, w1, w2, z1, z2);
+}
+
+/// The `update` phase. Scalar twin: [`adam_update_scalar`].
+pub fn adam_update(level: Level, params: &mut [f32], z1: &[f32], z2: &[f32], lr: f32, eps: f32, decay: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        unsafe { kernels::adam_update_avx2(params, z1, z2, lr, eps, decay) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        unsafe { kernels::adam_update_neon(params, z1, z2, lr, eps, decay) };
+        return;
+    }
+    let _ = level;
+    adam_update_scalar(params, z1, z2, lr, eps, decay);
+}
+
+/// Count entries whose |x| bit pattern is >= `thr` — the vectorized
+/// magnitude pass Top-K uses to shrink its quickselect candidate set.
+/// Scalar twin: [`crate::topk::count_abs_ge`].
+pub fn count_abs_ge(level: Level, block: &[f32], thr: u32) -> usize {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level == Level::Avx2 {
+        // SAFETY: Level::Avx2 is only produced after runtime AVX2 detection.
+        return unsafe { kernels::count_abs_ge_avx2(block, thr) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if level == Level::Neon {
+        // SAFETY: Level::Neon is only produced after runtime NEON detection.
+        return unsafe { kernels::count_abs_ge_neon(block, thr) };
+    }
+    let _ = level;
+    crate::topk::count_abs_ge(block, thr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_policy_always_resolves_scalar() {
+        assert_eq!(resolve(Policy::Scalar), Level::Scalar);
+    }
+
+    #[test]
+    fn active_levels_start_with_scalar() {
+        let ls = active_levels();
+        assert_eq!(ls[0], Level::Scalar);
+        assert!(ls.len() <= 2);
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(ls, vec![Level::Scalar]);
+    }
+
+    #[test]
+    fn auto_policy_resolves_to_detected() {
+        assert_eq!(resolve(Policy::Auto), detected());
+    }
+
+    #[test]
+    fn dispatchers_match_scalar_on_every_active_level() {
+        let n = 1027; // odd length exercises the remainder lanes
+        let src: Vec<f32> = (0..n).map(|i| ((i * 37 % 101) as f32 - 50.0) / 7.0).collect();
+        let mut bits_ref = vec![0u16; n];
+        crate::util::bf16::round_into(&src, &mut bits_ref);
+        for level in active_levels() {
+            let mut bits = vec![0u16; n];
+            bf16_round(level, &src, &mut bits);
+            assert_eq!(bits, bits_ref, "{level:?}");
+            let mut wide = vec![0f32; n];
+            bf16_widen(level, &bits, &mut wide);
+            let mut wide_ref = vec![0f32; n];
+            crate::util::bf16::widen_into(&bits_ref, &mut wide_ref);
+            assert_eq!(wide, wide_ref, "{level:?}");
+            let mut p = src.clone();
+            let mut p_ref = src.clone();
+            let z1: Vec<f32> = src.iter().map(|v| v * 0.5).collect();
+            let z2: Vec<f32> = src.iter().map(|v| v * v).collect();
+            adam_update(level, &mut p, &z1, &z2, 1e-3, 1e-8, 0.999);
+            adam_update_scalar(&mut p_ref, &z1, &z2, 1e-3, 1e-8, 0.999);
+            assert!(p.iter().zip(&p_ref).all(|(a, b)| a.to_bits() == b.to_bits()), "{level:?}");
+            let thr = 1.0f32.to_bits();
+            assert_eq!(count_abs_ge(level, &src, thr), crate::topk::count_abs_ge(&src, thr));
+        }
+    }
+
+    #[test]
+    fn level_names_are_stable() {
+        assert_eq!(level_name(Level::Scalar), "scalar");
+        assert_eq!(level_name(Level::Avx2), "avx2");
+        assert_eq!(level_name(Level::Neon), "neon");
+    }
+}

@@ -13,6 +13,7 @@
 //! for the tolerance-bounded parity tier (see
 //! `rust/tests/test_parallel_parity.rs`).
 
+use crate::simd::{self, Level};
 use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
 
 /// Select the `k` largest-|x| entries of `block` (len <= 2^15).
@@ -23,7 +24,15 @@ use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
 /// scratch is reused across calls (per-worker arenas pre-size it from the
 /// layout so steady state never reallocates).
 pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32], scratch: &mut Vec<u16>) {
-    topk_select(block, k, idx, scratch);
+    topk_abs_block_with(Level::Scalar, block, k, idx, vals, scratch);
+}
+
+/// [`topk_abs_block`] with an explicit simd [`Level`]: a non-scalar level
+/// engages the vectorized magnitude prefilter in `topk_select`. The
+/// selected set is identical at every level (the ranking is a strict
+/// total order), so this changes speed, never output.
+pub fn topk_abs_block_with(level: Level, block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32], scratch: &mut Vec<u16>) {
+    topk_select(level, block, k, idx, scratch);
     for (o, &s) in idx.iter().enumerate().take(k.min(block.len())) {
         vals[o] = block[s as usize];
     }
@@ -33,27 +42,105 @@ pub fn topk_abs_block(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [f32]
 /// the full-precision f32 magnitudes; only the stored value is rounded to
 /// bf16 (round-to-nearest-even).
 pub fn topk_abs_block_bf16(block: &[f32], k: usize, idx: &mut [u16], vals: &mut [u16], scratch: &mut Vec<u16>) {
-    topk_select(block, k, idx, scratch);
+    topk_abs_block_bf16_with(Level::Scalar, block, k, idx, vals, scratch);
+}
+
+/// [`topk_abs_block_bf16`] with an explicit simd [`Level`] (see
+/// [`topk_abs_block_with`]).
+pub fn topk_abs_block_bf16_with(level: Level, block: &[f32], k: usize, idx: &mut [u16], vals: &mut [u16], scratch: &mut Vec<u16>) {
+    topk_select(level, block, k, idx, scratch);
     for (o, &s) in idx.iter().enumerate().take(k.min(block.len())) {
         vals[o] = f32_to_bf16(block[s as usize]);
     }
 }
 
+/// |x| as an ordered bit pattern: for non-negative IEEE-754 floats the
+/// unsigned bit order *is* the magnitude order (subnormals < normals <
+/// inf < NaN payloads), which gives the selection ranking below a strict
+/// total order with no float compares.
+#[inline(always)]
+fn abs_bits(v: f32) -> u32 {
+    v.to_bits() & 0x7FFF_FFFF
+}
+
+/// Count entries with |x| bit pattern >= `thr`. Written as an integer
+/// sum of per-lane predicates — associative, so it lane-parallelizes
+/// under the `target_feature` instantiations.
+///
+/// Scalar twin of the vector instantiations in [`crate::simd`].
+#[inline(always)]
+pub fn count_abs_ge(block: &[f32], thr: u32) -> usize {
+    block.iter().map(|&v| usize::from(abs_bits(v) >= thr)).sum()
+}
+
+/// The selection ranking: |x| bits descending, index ascending on ties.
+/// Total and antisymmetric for *any* input bits — NaN magnitudes order
+/// above infinities by payload instead of poisoning the quickselect
+/// pivot order (the old `partial_cmp(..).unwrap_or(Equal)` hazard) —
+/// and since no two candidates share an index, the top-k *set* is
+/// unique: every selection algorithm over this ranking returns the same
+/// sorted index output.
+#[inline(always)]
+fn rank(block: &[f32], a: u16, b: u16) -> std::cmp::Ordering {
+    abs_bits(block[b as usize])
+        .cmp(&abs_bits(block[a as usize]))
+        .then(a.cmp(&b))
+}
+
 /// Shared selection core: leaves the chosen block-relative indices
 /// (sorted ascending) in `idx`.
-fn topk_select(block: &[f32], k: usize, idx: &mut [u16], scratch: &mut Vec<u16>) {
+///
+/// At a non-scalar [`Level`], a vectorized magnitude pass first shrinks
+/// the quickselect candidate set: binary-search the largest exponent
+/// threshold `e` with [`count_abs_ge`]`(block, e << 23) >= k` (8 wide
+/// counting passes), then quickselect only the candidates above it. The
+/// k-th largest magnitude is >= that threshold by construction, so the
+/// candidate set always contains the true top-k, and the shared [`rank`]
+/// total order makes the output identical to the full quickselect.
+fn topk_select(level: Level, block: &[f32], k: usize, idx: &mut [u16], scratch: &mut Vec<u16>) {
     let n = block.len();
     debug_assert!(n <= u16::MAX as usize + 1);
     let k = k.min(n);
     scratch.clear();
     scratch.reserve(n);
+    if level != Level::Scalar && k > 0 && k < n && n >= 128 {
+        let mut lo_e = 0u32;
+        let mut hi_e = 255u32;
+        let mut cand = n;
+        while lo_e < hi_e {
+            let mid = (lo_e + hi_e + 1) / 2;
+            let c = simd::count_abs_ge(level, block, mid << 23);
+            if c >= k {
+                lo_e = mid;
+                cand = c;
+            } else {
+                hi_e = mid - 1;
+            }
+        }
+        // Engage only when the filter actually pays: with >= n/2
+        // candidates (flat magnitude spectra) fall through to the plain
+        // full-index quickselect below.
+        if cand < n / 2 {
+            let thr = lo_e << 23;
+            for (i, &v) in block.iter().enumerate() {
+                if abs_bits(v) >= thr {
+                    scratch.push(i as u16);
+                }
+            }
+            debug_assert_eq!(scratch.len(), cand);
+            if k < scratch.len() {
+                scratch.select_nth_unstable_by(k - 1, |&a, &b| rank(block, a, b));
+            }
+            let sel = &mut scratch[..k];
+            sel.sort_unstable();
+            idx[..k].copy_from_slice(sel);
+            return;
+        }
+        scratch.clear();
+    }
     scratch.extend(0..n as u16);
     if k < n {
-        scratch.select_nth_unstable_by(k - 1, |&a, &b| {
-            let fa = block[a as usize].abs();
-            let fb = block[b as usize].abs();
-            fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        scratch.select_nth_unstable_by(k - 1, |&a, &b| rank(block, a, b));
     }
     let sel = &mut scratch[..k];
     sel.sort_unstable();
@@ -66,21 +153,49 @@ fn topk_select(block: &[f32], k: usize, idx: &mut [u16], scratch: &mut Vec<u16>)
 /// Free function shared verbatim by the fused engine (over carved window
 /// shards) and [`SlidingWindow::accumulate_stats`] (the reference sweep),
 /// so the two paths cannot diverge by a single float op.
-#[inline]
+///
+/// Scalar twin of the vector instantiations in [`crate::simd`]: the
+/// per-element bounds checks are hoisted into one vectorizable max-index
+/// validation pass, so the gather/widen/multiply runs lane-parallel and
+/// only the scatter into `z1`/`z2` stays scalar.
+#[inline(always)]
 pub fn stats_accum_bf16(idx: &[u16], val: &[u16], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    let n = z1.len().min(z2.len());
+    let mut ok = true;
+    for &j in idx {
+        ok &= (j as usize) < n;
+    }
+    assert!(ok, "window index out of block range");
     for (&j, &v) in idx.iter().zip(val) {
         let v = bf16_to_f32(v);
-        z1[j as usize] += w1 * v;
-        z2[j as usize] += w2 * v * v;
+        // SAFETY: the validation pass above checked every index in `idx`
+        // against both z-slab lengths (`n = min(len z1, len z2)`).
+        unsafe {
+            *z1.get_unchecked_mut(j as usize) += w1 * v;
+            *z2.get_unchecked_mut(j as usize) += w2 * v * v;
+        }
     }
 }
 
 /// f32-storage twin of [`stats_accum_bf16`].
-#[inline]
+///
+/// Scalar twin of the vector instantiations in [`crate::simd`]; same
+/// hoisted-bounds-check shape as the bf16 variant.
+#[inline(always)]
 pub fn stats_accum_f32(idx: &[u16], val: &[f32], w1: f32, w2: f32, z1: &mut [f32], z2: &mut [f32]) {
+    let n = z1.len().min(z2.len());
+    let mut ok = true;
+    for &j in idx {
+        ok &= (j as usize) < n;
+    }
+    assert!(ok, "window index out of block range");
     for (&j, &v) in idx.iter().zip(val) {
-        z1[j as usize] += w1 * v;
-        z2[j as usize] += w2 * v * v;
+        // SAFETY: the validation pass above checked every index in `idx`
+        // against both z-slab lengths (`n = min(len z1, len z2)`).
+        unsafe {
+            *z1.get_unchecked_mut(j as usize) += w1 * v;
+            *z2.get_unchecked_mut(j as usize) += w2 * v * v;
+        }
     }
 }
 
@@ -306,6 +421,29 @@ mod tests {
         topk_abs_block(&block, 2, &mut idx, &mut vals, &mut scratch);
         assert_eq!(idx, vec![0, 1]);
         assert_eq!(vals, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn nan_ranks_above_everything_and_ties_break_by_index() {
+        // The rank total order: NaN |bits| > inf > finite, equal
+        // magnitudes keep the lowest indices. A NaN gradient must yield
+        // the same deterministic selection on every path.
+        let block = vec![1.0f32, f32::NAN, 2.0, 2.0, f32::INFINITY, 2.0];
+        let mut idx = vec![0u16; 3];
+        let mut vals = vec![0f32; 3];
+        let mut scratch = Vec::new();
+        topk_abs_block(&block, 3, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(idx, vec![1, 2, 4]); // NaN, inf, then the first 2.0
+        assert!(vals[0].is_nan());
+        assert_eq!(vals[2], f32::INFINITY);
+    }
+
+    #[test]
+    fn count_abs_ge_counts_magnitude_bits() {
+        let block = vec![0.5f32, -1.5, 2.0, -0.25, f32::NAN, 0.0];
+        assert_eq!(count_abs_ge(&block, 0), 6);
+        assert_eq!(count_abs_ge(&block, 1.0f32.to_bits()), 3); // 1.5, 2.0, NaN
+        assert_eq!(count_abs_ge(&block, 255u32 << 23), 1); // only the NaN
     }
 
     #[test]

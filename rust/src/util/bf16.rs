@@ -14,27 +14,40 @@
 /// NaNs are quieted explicitly: plain truncation of a NaN whose payload
 /// lives only in the low 16 mantissa bits would otherwise collapse to an
 /// infinity bit pattern.
-#[inline]
+///
+/// Branchless on purpose: both the rounded and the quieted-NaN results
+/// are computed from the bit pattern and selected without a data branch,
+/// which is what lets [`round_into`] lane-parallelize under the
+/// `target_feature` instantiations in [`crate::simd`]. The NaN predicate
+/// `(bits & 0x7FFF_FFFF) > 0x7F80_0000` is exactly `v.is_nan()`.
+#[inline(always)]
 pub fn f32_to_bf16(v: f32) -> u16 {
     let bits = v.to_bits();
-    if v.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040;
-    }
     // One-add RNE: 0x7FFF plus the LSB of the kept half carries into the
     // kept bits exactly when (round bit) && (sticky bits || odd). Values
     // past the largest finite bf16 midpoint carry into the exponent and
     // land on the infinity encoding, which is the IEEE behaviour.
-    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
-    (rounded >> 16) as u16
+    let rounded = (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) >> 16) as u16;
+    let quieted = ((bits >> 16) as u16) | 0x0040;
+    if (bits & 0x7FFF_FFFF) > 0x7F80_0000 {
+        quieted
+    } else {
+        rounded
+    }
 }
 
 /// bf16 bits -> f32 (exact).
-#[inline]
+#[inline(always)]
 pub fn bf16_to_f32(bits: u16) -> f32 {
     f32::from_bits((bits as u32) << 16)
 }
 
 /// Widen a bf16 slab into an f32 buffer (`dst.len() == src.len()`).
+///
+/// Scalar twin of the vector instantiations in [`crate::simd`]
+/// (`inline(always)` so the `target_feature` wrappers re-codegen this
+/// exact body with wide registers enabled).
+#[inline(always)]
 pub fn widen_into(src: &[u16], dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -43,6 +56,9 @@ pub fn widen_into(src: &[u16], dst: &mut [f32]) {
 }
 
 /// Round an f32 slab into bf16 storage (`dst.len() == src.len()`).
+///
+/// Scalar twin of the vector instantiations in [`crate::simd`].
+#[inline(always)]
 pub fn round_into(src: &[f32], dst: &mut [u16]) {
     assert_eq!(src.len(), dst.len());
     for (d, &s) in dst.iter_mut().zip(src) {

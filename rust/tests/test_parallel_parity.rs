@@ -22,10 +22,21 @@
 //! asserted below — leaving the divergence a pure accumulation of
 //! AdamStats rounding, bounded by `BF16_TRAJ_TOL` of the accumulated
 //! update mass.
+//!
+//! **Tier 3 — bit-exact across the simd axis** (`Policy::Scalar` vs
+//! `Policy::Auto`): the `simd` dispatch layer is a codegen knob, never a
+//! numerics knob — whatever level the host resolves, the fused trajectory,
+//! the EF state, and the full checkpoint snapshot must match the forced-
+//! scalar run bit for bit, at every `WinDtype` x worker count. On a host
+//! without a vector level (or built without `--features simd`) both runs
+//! resolve to scalar and the tier degenerates to a self-comparison — still
+//! a valid (if tautological) gate, and the `make ci` feature matrix runs
+//! the suite with the feature on.
 
 use microadam::exec::ExecPool;
 use microadam::optim::microadam::{EfMode, MicroAdam, MicroAdamConfig};
 use microadam::optim::Optimizer;
+use microadam::simd::{Level, Policy};
 use microadam::topk::WinDtype;
 use microadam::util::rng::Rng;
 
@@ -236,4 +247,86 @@ fn bf16_window_tracks_f32_on_a_quadratic() {
     }
     let rel = l2_diff(&xa, &xb) / l2(&xa);
     assert!(rel < 0.05, "rel diff {rel}");
+}
+
+// ---------------------------------------------------------------------------
+// Tier 3: bit-exact across the simd axis (Policy::Scalar vs Policy::Auto)
+// ---------------------------------------------------------------------------
+
+/// Paper EF mode at a block size past the Top-K prefilter's engagement
+/// threshold (128), so a resolved vector level exercises the
+/// `count_abs_ge` candidate-thinning path as well as the elementwise
+/// kernels.
+fn simd_cfg(win: WinDtype, policy: Policy) -> MicroAdamConfig {
+    MicroAdamConfig {
+        m: 4,
+        block: 256,
+        density: 0.05,
+        qbucket: 16,
+        win_dtype: win,
+        simd: policy,
+        ..Default::default()
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// `steps` fused steps under `Policy::Scalar` and `Policy::Auto` on the
+/// same gradient stream, asserting bitwise-identical params and EF norm
+/// every step and a bitwise-identical checkpoint snapshot at the end.
+fn assert_simd_parity(d: usize, win: WinDtype, workers: usize, steps: usize, seed: u64) {
+    let pool = ExecPool::new(workers);
+    let mut scalar = MicroAdam::new(d, simd_cfg(win, Policy::Scalar));
+    let mut auto = MicroAdam::new(d, simd_cfg(win, Policy::Auto));
+    assert_eq!(scalar.simd_level(), Level::Scalar, "Policy::Scalar must force the scalar kernels");
+    let level = auto.simd_level();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x_s = randvec(&mut rng, d, 1.0);
+    let mut x_a = x_s.clone();
+    for s in 0..steps {
+        let g = randvec(&mut rng, d, 1.0);
+        scalar.step_sharded(&mut x_s, &g, 3e-3, &pool);
+        auto.step_sharded(&mut x_a, &g, 3e-3, &pool);
+        assert_eq!(
+            bits(&x_s),
+            bits(&x_a),
+            "d={d} {win:?} workers={workers} level={level:?} diverged at step {s}"
+        );
+        assert_eq!(
+            scalar.error_norm().to_bits(),
+            auto.error_norm().to_bits(),
+            "d={d} {win:?} workers={workers} level={level:?} EF diverged at step {s}"
+        );
+    }
+    let (a, b) = (scalar.snapshot().unwrap(), auto.snapshot().unwrap());
+    assert_eq!(a.ef, b.ef, "packed EF state diverged ({win:?}, {workers} workers)");
+    assert_eq!(bits(&a.qlo), bits(&b.qlo), "EF bucket lo diverged");
+    assert_eq!(bits(&a.qhi), bits(&b.qhi), "EF bucket hi diverged");
+    assert_eq!(a.w_idx, b.w_idx, "window indices diverged");
+    assert_eq!(bits(&a.w_val), bits(&b.w_val), "window values diverged");
+    assert_eq!(a.w_bf16, b.w_bf16);
+    assert_eq!(a.t, b.t);
+}
+
+#[test]
+fn simd_auto_matches_forced_scalar_all_dtypes_and_workers() {
+    // past 2*m steps so the window ring wraps under both policies
+    for win in [WinDtype::Bf16, WinDtype::F32] {
+        for workers in [1usize, 2, 4, 8] {
+            assert_simd_parity(2048, win, workers, 10, 1234);
+        }
+    }
+}
+
+#[test]
+fn simd_auto_matches_forced_scalar_with_padded_tail() {
+    // d = 2000 with block 256 pads to 2048: the remainder lanes of every
+    // vector kernel run on the partial block each step.
+    for win in [WinDtype::Bf16, WinDtype::F32] {
+        for workers in [1usize, 2, 4, 8] {
+            assert_simd_parity(2000, win, workers, 9, 4321);
+        }
+    }
 }

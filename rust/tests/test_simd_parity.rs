@@ -1,0 +1,247 @@
+//! Adversarial bit-exactness suite for the `simd::` dispatch layer.
+//!
+//! Every kernel behind a [`microadam::simd`] dispatcher is run at
+//! [`Level::Scalar`] and at every level in [`active_levels`] over inputs
+//! chosen to break value-level shortcuts a vectorizer might be tempted
+//! into: signaling and payload-carrying NaNs, both infinities,
+//! subnormals, negative zero, and the extreme finite values — compared
+//! *by bits*, so `NaN == NaN` excuses nothing and `-0.0 == 0.0` hides
+//! nothing. Each elementwise kernel also sweeps the remainder lanes:
+//! lengths 0, 1, lanes-1, lanes, lanes+1 (for the widest lane count in
+//! play, 8 x f32) and a large power of two, so the vector body, the
+//! scalar tail, and the empty case are all pinned.
+//!
+//! On a host that resolves no vector level (no `--features simd`, an
+//! unsupported cpu, or `MICROADAM_SIMD=scalar`), `active_levels()` is
+//! just `[Scalar]` and the suite degenerates to self-comparison; the
+//! `make ci` feature matrix runs it with the feature enabled.
+
+use microadam::quant::{BucketStats, Quant4};
+use microadam::simd::{self, active_levels, Level};
+use microadam::topk::{self, topk_abs_block_with};
+use microadam::util::bf16::{bf16_to_f32, f32_to_bf16};
+
+/// Adversarial f32 bit patterns: signaling NaN, payload qNaNs of both
+/// signs, both infinities, the smallest subnormal, the largest negative
+/// subnormal, both zeros, the extreme finites, and a few plain values.
+const ADVERSARIAL_BITS: &[u32] = &[
+    0x7F80_0001, // sNaN
+    0x7FC1_2345, // qNaN with payload
+    0xFFC1_2345, // negative qNaN with payload
+    0x7F80_0000, // +inf
+    0xFF80_0000, // -inf
+    0x0000_0001, // smallest positive subnormal
+    0x807F_FFFF, // largest-magnitude negative subnormal
+    0x8000_0000, // -0.0
+    0x0000_0000, // +0.0
+    0x7F7F_FFFF, // max finite
+    0xFF7F_FFFF, // min finite
+    0x3F80_0000, // 1.0
+    0xBF00_0000, // -0.5
+    0x00A0_0000, // small subnormal-adjacent normal
+];
+
+/// Remainder-lane length sweep around the widest vector width in play
+/// (8 x f32 for AVX2), plus empty and a large power of two.
+const LANE_SWEEP: &[usize] = &[0, 1, 7, 8, 9, 1 << 15];
+
+/// Deterministic adversarial vector: the pattern table tiled with a
+/// varying mix of ordinary values so vector and remainder lanes both see
+/// specials at every alignment.
+fn adversarial(n: usize, salt: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if i % 3 == 0 {
+                f32::from_bits(ADVERSARIAL_BITS[(i / 3 + salt as usize) % ADVERSARIAL_BITS.len()])
+            } else {
+                // LCG-ish ordinary values, sign-alternating
+                let x = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+                ((x % 2001) as f32 - 1000.0) / 300.0
+            }
+        })
+        .collect()
+}
+
+fn bits32(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn bf16_round_and_widen_bit_exact_across_levels() {
+    for &n in LANE_SWEEP {
+        let xs = adversarial(n, 1);
+        let mut base = vec![0u16; n];
+        simd::bf16_round(Level::Scalar, &xs, &mut base);
+        // The scalar converter is the oracle for the rounded bits too:
+        // round-to-nearest-even with NaNs quieted, elementwise.
+        for (i, (&x, &b)) in xs.iter().zip(&base).enumerate() {
+            assert_eq!(b, f32_to_bf16(x), "lane {i} disagrees with the scalar converter");
+        }
+        let mut base_wide = vec![0f32; n];
+        simd::bf16_widen(Level::Scalar, &base, &mut base_wide);
+        for level in active_levels() {
+            let mut got = vec![0u16; n];
+            simd::bf16_round(level, &xs, &mut got);
+            assert_eq!(got, base, "bf16_round n={n} level={level:?}");
+            let mut wide = vec![0f32; n];
+            simd::bf16_widen(level, &got, &mut wide);
+            assert_eq!(bits32(&wide), bits32(&base_wide), "bf16_widen n={n} level={level:?}");
+        }
+        // Round-trip through storage must be the identity on the bf16
+        // representable set (inf, -0.0, subnormal-with-8-bit-mantissa).
+        for &v in &[f32::INFINITY, f32::NEG_INFINITY, -0.0f32, 1.0, bf16_to_f32(0x0001)] {
+            assert_eq!(
+                bf16_to_f32(f32_to_bf16(v)).to_bits(),
+                v.to_bits(),
+                "representable value {v:?} not preserved"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant4_pack_unpack_bit_exact_across_levels() {
+    let q = Quant4::new(16);
+    for &n in &[0usize, 16, 48, 4096, 1 << 15] {
+        let xs = adversarial(n, 2);
+        let mut base_packed = vec![0u8; n / 2];
+        let mut base_stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; n / 16];
+        simd::quant4_quantize(Level::Scalar, &q, &xs, &mut base_packed, &mut base_stats);
+        let mut base_out = adversarial(n, 3);
+        simd::quant4_dequantize_add(Level::Scalar, &q, &base_packed, &base_stats, &mut base_out);
+        for level in active_levels() {
+            let mut packed = vec![0u8; n / 2];
+            let mut stats = vec![BucketStats { lo: 0.0, hi: 0.0 }; n / 16];
+            simd::quant4_quantize(level, &q, &xs, &mut packed, &mut stats);
+            assert_eq!(packed, base_packed, "packed codes n={n} level={level:?}");
+            for (i, (s, b)) in stats.iter().zip(&base_stats).enumerate() {
+                assert_eq!(
+                    (s.lo.to_bits(), s.hi.to_bits()),
+                    (b.lo.to_bits(), b.hi.to_bits()),
+                    "bucket {i} stats n={n} level={level:?}"
+                );
+            }
+            // dequantize_add accumulates into a non-zero slab so the add
+            // itself (not just the decode) is under test.
+            let mut out = adversarial(n, 3);
+            simd::quant4_dequantize_add(level, &q, &packed, &stats, &mut out);
+            assert_eq!(bits32(&out), bits32(&base_out), "dequantize_add n={n} level={level:?}");
+        }
+    }
+}
+
+#[test]
+fn stats_accum_bit_exact_across_levels() {
+    let block = 256usize;
+    let k = 41usize;
+    // Gathered indices with deliberate duplicates: accumulation order for
+    // a repeated index is part of the contract.
+    let idx: Vec<u16> = (0..k as u16).map(|i| ((i * 37) % (block as u16)) / 2 * 2).collect();
+    let val_f: Vec<f32> = adversarial(k, 4);
+    // bf16 payloads straight from the bit table (sNaN, inf, subnormal,
+    // -0.0 all exist at 16 bits too).
+    let val_b: Vec<u16> = (0..k)
+        .map(|i| {
+            if i % 2 == 0 {
+                (ADVERSARIAL_BITS[i % ADVERSARIAL_BITS.len()] >> 16) as u16
+            } else {
+                f32_to_bf16(val_f[i])
+            }
+        })
+        .collect();
+    let (w1, w2) = (0.1875f32, 0.8125f32);
+
+    let mut base1 = adversarial(block, 5);
+    let mut base2 = adversarial(block, 6);
+    simd::stats_accum_f32(Level::Scalar, &idx, &val_f, w1, w2, &mut base1, &mut base2);
+    for level in active_levels() {
+        let mut z1 = adversarial(block, 5);
+        let mut z2 = adversarial(block, 6);
+        simd::stats_accum_f32(level, &idx, &val_f, w1, w2, &mut z1, &mut z2);
+        assert_eq!(bits32(&z1), bits32(&base1), "stats_accum_f32 z1 level={level:?}");
+        assert_eq!(bits32(&z2), bits32(&base2), "stats_accum_f32 z2 level={level:?}");
+    }
+
+    let mut base1 = adversarial(block, 7);
+    let mut base2 = adversarial(block, 8);
+    simd::stats_accum_bf16(Level::Scalar, &idx, &val_b, w1, w2, &mut base1, &mut base2);
+    for level in active_levels() {
+        let mut z1 = adversarial(block, 7);
+        let mut z2 = adversarial(block, 8);
+        simd::stats_accum_bf16(level, &idx, &val_b, w1, w2, &mut z1, &mut z2);
+        assert_eq!(bits32(&z1), bits32(&base1), "stats_accum_bf16 z1 level={level:?}");
+        assert_eq!(bits32(&z2), bits32(&base2), "stats_accum_bf16 z2 level={level:?}");
+    }
+}
+
+#[test]
+fn adam_update_bit_exact_across_levels() {
+    for &n in LANE_SWEEP {
+        // z2 includes negatives -> sqrt(NaN) lanes; params include specials.
+        let z1 = adversarial(n, 9);
+        let z2 = adversarial(n, 10);
+        let mut base = adversarial(n, 11);
+        simd::adam_update(Level::Scalar, &mut base, &z1, &z2, 1e-3, 1e-8, 0.9995);
+        for level in active_levels() {
+            let mut params = adversarial(n, 11);
+            simd::adam_update(level, &mut params, &z1, &z2, 1e-3, 1e-8, 0.9995);
+            assert_eq!(bits32(&params), bits32(&base), "adam_update n={n} level={level:?}");
+        }
+    }
+}
+
+#[test]
+fn count_abs_ge_matches_scalar_on_specials() {
+    let block = adversarial(512, 12);
+    // Thresholds bracketing the interesting exponent boundaries: zero,
+    // smallest subnormal, one, max finite, inf, and a NaN payload (the
+    // abs-bits order ranks NaNs above inf, so counts must include them).
+    for thr in [0u32, 1, 0x3F80_0000, 0x7F7F_FFFF, 0x7F80_0000, 0x7FC0_0001] {
+        let want = topk::count_abs_ge(&block, thr);
+        for level in active_levels() {
+            assert_eq!(
+                simd::count_abs_ge(level, &block, thr),
+                want,
+                "count_abs_ge thr={thr:#x} level={level:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nan_blocks_select_k_deterministic_identical_indices() {
+    // A block thick with NaNs and infinities: the selection ranks on the
+    // *total order of abs bits* (NaN payloads above inf above finites),
+    // so every level — and any candidate-prefilter path — must produce
+    // the same k indices in the same order, with no float compares to
+    // trip on. n = 256 >= the prefilter engagement threshold, so a
+    // vector level runs the count_abs_ge thinning pass here.
+    let n = 256usize;
+    let k = 13usize;
+    let block: Vec<f32> = (0..n)
+        .map(|i| match i % 5 {
+            0 => f32::from_bits(0x7FC0_0000 | ((i as u32 * 7919) & 0x003F_FFFF)), // NaN payloads
+            1 => f32::from_bits(0xFFC0_0001), // negative NaN
+            2 => f32::INFINITY,
+            3 => f32::NEG_INFINITY,
+            _ => ((i as f32) - 128.0) / 17.0,
+        })
+        .collect();
+    let mut base_idx = vec![0u16; k];
+    let mut base_vals = vec![0f32; k];
+    let mut scratch = Vec::new();
+    topk_abs_block_with(Level::Scalar, &block, k, &mut base_idx, &mut base_vals, &mut scratch);
+    // k distinct indices, deterministically ordered by (abs bits desc,
+    // index asc) — NaNs outrank inf, which outranks every finite.
+    let mut seen = base_idx.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), k, "selection must return k distinct indices");
+    for level in active_levels() {
+        let mut idx = vec![0u16; k];
+        let mut vals = vec![0f32; k];
+        topk_abs_block_with(level, &block, k, &mut idx, &mut vals, &mut scratch);
+        assert_eq!(idx, base_idx, "NaN-block selection order level={level:?}");
+        assert_eq!(bits32(&vals), bits32(&base_vals), "NaN-block values level={level:?}");
+    }
+}

@@ -1,0 +1,14 @@
+//@ path: rust/src/simd/gather.rs
+//@ expect: simd-twin
+// Seeded violation: a feature-gated vector kernel whose docs never name
+// the always-compiled scalar twin that serves as its bit-exactness
+// oracle. Never compiled — scanned as text only.
+
+#[cfg(feature = "simd")]
+pub fn gather_sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}

@@ -3,7 +3,7 @@
 //! The crate is a static-analysis pass over the repository's own Rust
 //! sources (plus the normative wire spec in `rust/src/dist/README.md`).
 //! It exists so the invariants the docs promise cannot silently drift
-//! from the code that implements them. Five rules:
+//! from the code that implements them. Six rules:
 //!
 //! * **`unsafe-safety`** — every `unsafe` occurrence must carry a
 //!   `// SAFETY:` comment on the same line or within the five lines
@@ -33,6 +33,12 @@
 //!   gated on the tracing flag and free when tracing is off. An
 //!   intentional clock read stays with
 //!   `// repolint: allow(hot-path-clock): <reason>`.
+//! * **`simd-twin`** — every file that gates code on the `simd` cargo
+//!   feature (and every file under `rust/src/simd/`) must name its
+//!   always-compiled scalar twin in a doc comment (`Scalar twin: …`),
+//!   so each vector kernel's bit-exactness oracle stays discoverable
+//!   from the kernel itself. Allowlist:
+//!   `// repolint: allow(simd-twin): <reason>`.
 //!
 //! The scanner is line-oriented but lexes comments, strings (including
 //! raw strings), and char literals so that rule patterns never match
@@ -48,7 +54,7 @@ use std::path::{Path, PathBuf};
 
 /// Names of every rule, in the order they are documented above.
 pub const RULES: &[&str] =
-    &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast", "hot-path-clock"];
+    &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast", "hot-path-clock", "simd-twin"];
 
 /// Files (matched by path suffix) subject to the `no-panic` rule: the
 /// `dist::` wire/transport/reducer decode paths the spec requires to
@@ -448,6 +454,42 @@ pub fn rule_hot_path_clock(path: &str, p: &Prepared) -> Vec<Violation> {
         }
     }
     out
+}
+
+/// Rule `simd-twin`: a file that gates code on the `simd` cargo feature
+/// (or lives under `rust/src/simd/`) must reference its always-compiled
+/// scalar twin in a doc comment (`Scalar twin: …`), so the parity oracle
+/// for each vector kernel is discoverable from the kernel itself. The
+/// feature name lives inside a string literal of the `cfg` attribute and
+/// the lexer blanks string contents, so the gate is matched on the raw
+/// source line, with the prepared code channel confirming it is code
+/// rather than prose.
+pub fn rule_simd_twin(path: &str, src: &str, p: &Prepared) -> Vec<Violation> {
+    let in_simd_dir = path.contains("rust/src/simd/");
+    let gate_line = src.lines().enumerate().find_map(|(i, l)| {
+        let is_code =
+            p.lines.get(i).map(|pl| pl.code.contains("feature =")).unwrap_or(false);
+        (l.contains("feature = \"simd\"") && is_code).then_some(i)
+    });
+    let (line, what) = match (in_simd_dir, gate_line) {
+        (true, g) => (g.unwrap_or(0), "file under rust/src/simd/"),
+        (false, Some(i)) => (i, "`cfg(feature = \"simd\")`-gated code"),
+        (false, None) => return Vec::new(),
+    };
+    let documented = p.lines.iter().any(|l| l.comment.contains("Scalar twin:"));
+    if documented || allowlisted(p, line, "simd-twin") {
+        return Vec::new();
+    }
+    vec![Violation {
+        file: path.to_string(),
+        line: line + 1,
+        rule: "simd-twin",
+        msg: format!(
+            "{what} without a `Scalar twin:` doc reference — name the \
+             always-compiled scalar kernel that is this code's bit-exactness \
+             oracle, or justify with `// repolint: allow(simd-twin): <reason>`"
+        ),
+    }]
 }
 
 const LOSSY_TARGETS: &[&str] = &[
@@ -865,6 +907,7 @@ pub fn lint_file(rel_path: &str, src: &str) -> Vec<Violation> {
     v.extend(rule_no_panic(rel_path, &p));
     v.extend(rule_lossy_cast(rel_path, &p));
     v.extend(rule_hot_path_clock(rel_path, &p));
+    v.extend(rule_simd_twin(rel_path, src, &p));
     v
 }
 
@@ -940,6 +983,10 @@ pub const FIXTURES: &[(&str, &str)] = &[
         "hot_path_clock.rs",
         include_str!("../fixtures/hot_path_clock.rs"),
     ),
+    (
+        "simd_no_twin.rs",
+        include_str!("../fixtures/simd_no_twin.rs"),
+    ),
     ("clean.rs", include_str!("../fixtures/clean.rs")),
 ];
 
@@ -998,7 +1045,7 @@ mod tests {
     #[test]
     fn every_rule_fires_on_its_fixture() {
         match self_test() {
-            Ok(n) => assert!(n >= 6, "expected at least 6 fixture checks, ran {n}"),
+            Ok(n) => assert!(n >= 7, "expected at least 7 fixture checks, ran {n}"),
             Err(e) => panic!("self-test failed: {e}"),
         }
     }
