@@ -152,6 +152,16 @@ bench-smoke:
 	MICROADAM_BENCH_SMOKE=1 cargo bench --features simd --bench bench_kernels
 	cargo run --release --features simd --bin perf_probe -- \
 		--native 262144 5 --sizes 64k,256k,1m
+	@python3 -c "\
+	import json, sys; \
+	rec = json.load(open('$(BENCH_JSON)')); \
+	rows = rec.get('frontier'); \
+	assert isinstance(rows, list) and rows, 'BENCH json: missing/empty frontier key'; \
+	names = [r['optimizer'] for r in rows]; \
+	need = {'micro-adam', 'adamw', 'adamw-8bit', 'ldadam', 'adammini'}; \
+	assert need <= set(names), 'frontier missing optimizers: %s' % (need - set(names)); \
+	[(float(r['resident_bytes_per_param']), float(r['paper_bytes_per_param']), float(r['final_loss'])) for r in rows]; \
+	print('bench-smoke: frontier OK (%d optimizers)' % len(rows))"
 	@echo "bench-smoke: record in $(BENCH_JSON)"
 
 # Observability lane: a short traced 2-rank eftopk run (loopback — no

@@ -25,6 +25,15 @@ fn main() {
     println!("== resident optimizer-state bytes/param (measured) ==");
     microadam::bench::resident_state_report(1 << 20);
 
+    // Bytes-vs-loss frontier: the same per-optimizer accounting with the
+    // loss axis attached — each optimizer trains the native MLP under an
+    // identical schedule (ranks = 1 + dense, bit-identical to
+    // single-process), longer runs than the smoke lane.
+    println!("\n== bytes-vs-loss frontier (native, artifact-free) ==");
+    if let Err(e) = microadam::bench::run_frontier(200) {
+        println!("bench_e2e: frontier sweep failed: {e:#}");
+    }
+
     // The data-parallel ranks x reducer sweep runs on the native substrate,
     // so it needs no artifacts: measured framed bytes (payload + wire-frame
     // overhead, serialized through dist::wire) vs loss per reducer.

@@ -10,8 +10,8 @@
 //! sweep to a few seconds, and `MICROADAM_BENCH_JSON=path` writes a
 //! `BENCH_*.json` record (steps/s per engine configuration, measured
 //! resident state bytes/param, bf16 window bytes/value, per-rank wire
-//! bytes, per-kernel scalar-vs-simd medians) so the perf trajectory is
-//! recorded across PRs.
+//! bytes, per-kernel scalar-vs-simd medians, and the bytes-vs-loss
+//! `"frontier"` rows) so the perf trajectory is recorded across PRs.
 
 use microadam::bench;
 
@@ -64,8 +64,25 @@ fn main() {
                     None
                 }
             };
-            let record =
-                bench::smoke_json(d_scale, &rows, &kernels, tcp.as_ref(), Some(overhead_pct));
+            // Bytes-vs-loss frontier across the memory-accounting
+            // headliners (short runs in the smoke lane; the full curve is
+            // bench_e2e's job).
+            println!("\n== bytes-vs-loss frontier ==");
+            let frontier = match bench::run_frontier(if smoke { 40 } else { 200 }) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    eprintln!("bench smoke: frontier sweep failed: {e:#}");
+                    Vec::new()
+                }
+            };
+            let record = bench::smoke_json(
+                d_scale,
+                &rows,
+                &kernels,
+                tcp.as_ref(),
+                Some(overhead_pct),
+                &frontier,
+            );
             match std::fs::write(&path, record.to_string()) {
                 Ok(()) => println!("\nbench record written to {path}"),
                 Err(e) => eprintln!("\nfailed to write {path}: {e}"),

@@ -1019,10 +1019,12 @@ pub fn bench_parallel_scaling(d: usize, iters: usize) -> Vec<BenchRow> {
     rows
 }
 
-/// Measured resident optimizer-state bytes/param for the Table-2 trio —
-/// allocated buffers, not the paper accounting. Printed by `bench_e2e` and
-/// folded into the smoke-lane JSON; returns `(name, resident bytes,
-/// paper bytes)` per optimizer.
+/// Measured resident optimizer-state bytes/param for **every** registered
+/// optimizer kind ([`OptimizerKind::all`], so a kind added to the registry
+/// shows up here without touching this function) — allocated buffers, not
+/// the paper accounting. Printed by `bench_e2e` and folded into the
+/// smoke-lane JSON; returns `(name, resident bytes, paper bytes)` per
+/// optimizer.
 pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
     use crate::coordinator::layout::TensorSpec;
     let side = (d as f64).sqrt() as usize;
@@ -1030,7 +1032,7 @@ pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
     println!("\nresident optimizer-state bytes (measured allocations), d = {d}:");
     println!("{:<22} {:>14} {:>10} {:>14} {:>10}", "optimizer", "resident B", "B/param", "paper B", "B/param");
     let mut out = Vec::new();
-    for kind in [OptimizerKind::MicroAdam, OptimizerKind::AdamW, OptimizerKind::AdamW8bit] {
+    for &kind in OptimizerKind::all() {
         let opt = optim::build(kind, d, &specs, 0.0);
         let resident = opt.state_bytes();
         let paper = opt.paper_state_bytes();
@@ -1053,13 +1055,86 @@ pub fn resident_state_report(d: usize) -> Vec<(String, usize, usize)> {
     out
 }
 
+/// One point on the bytes-vs-loss frontier ([`run_frontier`]).
+pub struct FrontierRow {
+    pub optimizer: String,
+    pub resident_bytes_per_param: f64,
+    pub paper_bytes_per_param: f64,
+    pub final_loss: f32,
+    pub seconds: f64,
+}
+
+/// The bytes-vs-loss frontier sweep: train the memory-accounting
+/// headliners (micro-adam, adamw, adamw-8bit, ldadam, adammini) on the
+/// native MLP substrate under identical schedules, and report final loss
+/// against both the *measured* resident optimizer-state bytes/param and
+/// the paper accounting. Runs through [`DistTrainer`] at `ranks = 1` +
+/// dense — pinned bit-identical to single-process training — so the same
+/// lane covers the dist wiring of every optimizer. Folded into the
+/// smoke-lane `BENCH_*.json` under the `"frontier"` key.
+pub fn run_frontier(steps: u64) -> Result<Vec<FrontierRow>> {
+    use crate::coordinator::config::{optimizer_name, TrainConfig};
+    use crate::dist::{DistTrainer, ReducerKind};
+
+    println!("\nbytes-vs-loss frontier — native mlp_tiny, {steps} steps/optimizer:");
+    println!(
+        "{:<22} {:>12} {:>14} {:>12} {:>9}",
+        "optimizer", "final loss", "resident B/p", "paper B/p", "time (s)"
+    );
+    let kinds = [
+        OptimizerKind::MicroAdam,
+        OptimizerKind::AdamW,
+        OptimizerKind::AdamW8bit,
+        OptimizerKind::LdAdam,
+        OptimizerKind::AdamMini,
+    ];
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let cfg = TrainConfig {
+            model: "mlp_tiny".into(),
+            optimizer: kind,
+            schedule: LrSchedule::Const { lr: 3e-3 },
+            steps,
+            seed: 7,
+            log_every: 10_000,
+            ranks: 1,
+            reduce: ReducerKind::Dense,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let mut trainer = DistTrainer::new(cfg)?;
+        let mut logger = MetricsLogger::new("")?;
+        trainer.train(&mut logger)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let d = trainer.dim().max(1) as f64;
+        let row = FrontierRow {
+            optimizer: optimizer_name(kind).to_string(),
+            resident_bytes_per_param: trainer.opt_resident_bytes() as f64 / d,
+            paper_bytes_per_param: trainer.opt_state_bytes() as f64 / d,
+            final_loss: logger.tail_loss(10),
+            seconds: dt,
+        };
+        println!(
+            "{:<22} {:>12.4} {:>14.3} {:>12.3} {:>9.1}",
+            row.optimizer,
+            row.final_loss,
+            row.resident_bytes_per_param,
+            row.paper_bytes_per_param,
+            dt
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
 /// Assemble the smoke-lane `BENCH_*.json` payload: steps/s from the
 /// scaling rows, measured resident bytes/param, the bf16 window bytes per
 /// value, the per-rank wire bytes of each reducer at this dimension, and
 /// (when the caller ran one) the real-socket [`TcpProbe`] with its
 /// gather/relay overlap ms and per-rank arrival latencies, plus the
 /// measured [`trace_overhead_pct`] when the caller ran that check, and
-/// the per-kernel scalar-vs-simd medians from [`bench_kernel_rows`]. Pure
+/// the per-kernel scalar-vs-simd medians from [`bench_kernel_rows`], and
+/// the bytes-vs-loss [`run_frontier`] rows under `"frontier"`. Pure
 /// assembly — the caller runs the probe and the benchmarks.
 pub fn smoke_json(
     d: usize,
@@ -1067,6 +1142,7 @@ pub fn smoke_json(
     kernels: &[KernelRow],
     tcp: Option<&TcpProbe>,
     trace_overhead_pct: Option<f64>,
+    frontier: &[FrontierRow],
 ) -> crate::util::json::Json {
     use crate::dist::{build_reducer, ReducerKind, SparseReduceConfig};
     use crate::util::json::{self, Json};
@@ -1136,6 +1212,18 @@ pub fn smoke_json(
         ("level", json::s(crate::simd::level_name(crate::simd::detected()))),
         ("kernels", Json::Arr(kernel_rows)),
     ]);
+    let frontier_rows: Vec<Json> = frontier
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("optimizer", json::s(&r.optimizer)),
+                ("resident_bytes_per_param", json::num(r.resident_bytes_per_param)),
+                ("paper_bytes_per_param", json::num(r.paper_bytes_per_param)),
+                ("final_loss", json::num(r.final_loss as f64)),
+                ("seconds", json::num(r.seconds)),
+            ])
+        })
+        .collect();
     let probe = MicroAdam::new(d, MicroAdamConfig::default());
     json::obj(vec![
         ("bench", json::s("smoke")),
@@ -1144,6 +1232,7 @@ pub fn smoke_json(
         ("steps_per_s", json::obj(steps)),
         ("resident_state", Json::Arr(state_rows)),
         ("wire", Json::Arr(wires)),
+        ("frontier", Json::Arr(frontier_rows)),
         ("simd", simd),
         ("tcp_probe", tcp),
         (

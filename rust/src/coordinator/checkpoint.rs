@@ -1,31 +1,43 @@
-//! Binary checkpoints: parameters + step counter + (for MicroAdam) the
-//! quantized EF / window state, so a resumed run continues bit-exactly.
+//! Binary checkpoints: parameters + step counter + a typed optimizer-state
+//! payload, so a resumed run continues bit-exactly.
 //!
 //! Format (little-endian):
 //! ```text
 //!   magic "MADM" | version u32 | step u64 | d u64 | params f32[d]
-//!   | has_opt u8 | [MicroAdam state: ef len u64, ef bytes, qlo/qhi f32,
-//!                   w_idx i32, w_val f32 lens + payloads, w_bf16 u8,
-//!                   t u64]
+//!   | opt tag u8 | [tagged optimizer state]
+//!       tag 0: none (params-only)
+//!       tag 1: MicroAdam  — ef len u64, ef bytes, qlo/qhi f32,
+//!                           w_idx i32, w_val f32 lens + payloads,
+//!                           w_bf16 u8, t u64
+//!       tag 2: LDAdam     — proj/m/v f32 lens + payloads, ef len u64 +
+//!                           bytes, qlo len u64 + qlo/qhi f32, t u64
+//!       tag 3: Adam-mini  — m/v f32 lens + payloads, t u64
 //! ```
 //! Version 2 added the `w_bf16` window-dtype marker (native windows store
 //! bf16 by default since PR 3; restore refuses a silent dtype switch).
+//! Version 3 turned the `has_opt` byte into the optimizer-state tag above
+//! (values 0/1 keep their v2 meaning, so v2 files still load).
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
 use super::state::MicroAdamSnapshot;
+use crate::optim::adammini::AdamMiniSnapshot;
+use crate::optim::ldadam::LdAdamSnapshot;
+use crate::optim::OptSnapshot;
 
 const MAGIC: &[u8; 4] = b"MADM";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Oldest version `load` still accepts (tag values 0/1 are unchanged).
+const MIN_VERSION: u32 = 2;
 
 /// A checkpoint payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub params: Vec<f32>,
-    pub opt: Option<MicroAdamSnapshot>,
+    pub opt: Option<OptSnapshot>,
 }
 
 impl Checkpoint {
@@ -41,7 +53,7 @@ impl Checkpoint {
         write_f32s(&mut f, &self.params)?;
         match &self.opt {
             None => f.write_all(&[0u8])?,
-            Some(s) => {
+            Some(OptSnapshot::MicroAdam(s)) => {
                 f.write_all(&[1u8])?;
                 f.write_all(&(s.ef.len() as u64).to_le_bytes())?;
                 f.write_all(&s.ef)?;
@@ -52,6 +64,27 @@ impl Checkpoint {
                 write_i32s(&mut f, &s.w_idx)?;
                 write_f32s(&mut f, &s.w_val)?;
                 f.write_all(&[u8::from(s.w_bf16)])?;
+                f.write_all(&s.t.to_le_bytes())?;
+            }
+            Some(OptSnapshot::LdAdam(s)) => {
+                f.write_all(&[2u8])?;
+                for xs in [&s.proj, &s.m, &s.v] {
+                    f.write_all(&(xs.len() as u64).to_le_bytes())?;
+                    write_f32s(&mut f, xs)?;
+                }
+                f.write_all(&(s.ef.len() as u64).to_le_bytes())?;
+                f.write_all(&s.ef)?;
+                f.write_all(&(s.qlo.len() as u64).to_le_bytes())?;
+                write_f32s(&mut f, &s.qlo)?;
+                write_f32s(&mut f, &s.qhi)?;
+                f.write_all(&s.t.to_le_bytes())?;
+            }
+            Some(OptSnapshot::AdamMini(s)) => {
+                f.write_all(&[3u8])?;
+                for xs in [&s.m, &s.v] {
+                    f.write_all(&(xs.len() as u64).to_le_bytes())?;
+                    write_f32s(&mut f, xs)?;
+                }
                 f.write_all(&s.t.to_le_bytes())?;
             }
         }
@@ -66,30 +99,64 @@ impl Checkpoint {
             bail!("{path}: not a microadam checkpoint");
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("{path}: checkpoint version {version}, expected {VERSION}");
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            bail!("{path}: checkpoint version {version}, expected {MIN_VERSION}..={VERSION}");
         }
         let step = read_u64(&mut f)?;
         let d = read_u64(&mut f)? as usize;
         let params = read_f32s(&mut f, d)?;
-        let mut has_opt = [0u8];
-        f.read_exact(&mut has_opt)?;
-        let opt = if has_opt[0] == 1 {
-            let ef_len = read_u64(&mut f)? as usize;
-            let mut ef = vec![0u8; ef_len];
-            f.read_exact(&mut ef)?;
-            let nq = read_u64(&mut f)? as usize;
-            let qlo = read_f32s(&mut f, nq)?;
-            let qhi = read_f32s(&mut f, nq)?;
-            let wlen = read_u64(&mut f)? as usize;
-            let w_idx = read_i32s(&mut f, wlen)?;
-            let w_val = read_f32s(&mut f, wlen)?;
-            let mut w_bf16 = [0u8];
-            f.read_exact(&mut w_bf16)?;
-            let t = read_u64(&mut f)?;
-            Some(MicroAdamSnapshot { ef, qlo, qhi, w_idx, w_val, w_bf16: w_bf16[0] != 0, t })
-        } else {
-            None
+        let mut tag = [0u8];
+        f.read_exact(&mut tag)?;
+        let opt = match tag[0] {
+            0 => None,
+            1 => {
+                let ef_len = read_u64(&mut f)? as usize;
+                let mut ef = vec![0u8; ef_len];
+                f.read_exact(&mut ef)?;
+                let nq = read_u64(&mut f)? as usize;
+                let qlo = read_f32s(&mut f, nq)?;
+                let qhi = read_f32s(&mut f, nq)?;
+                let wlen = read_u64(&mut f)? as usize;
+                let w_idx = read_i32s(&mut f, wlen)?;
+                let w_val = read_f32s(&mut f, wlen)?;
+                let mut w_bf16 = [0u8];
+                f.read_exact(&mut w_bf16)?;
+                let t = read_u64(&mut f)?;
+                Some(OptSnapshot::MicroAdam(MicroAdamSnapshot {
+                    ef,
+                    qlo,
+                    qhi,
+                    w_idx,
+                    w_val,
+                    w_bf16: w_bf16[0] != 0,
+                    t,
+                }))
+            }
+            2 => {
+                let plen = read_u64(&mut f)? as usize;
+                let proj = read_f32s(&mut f, plen)?;
+                let mlen = read_u64(&mut f)? as usize;
+                let m = read_f32s(&mut f, mlen)?;
+                let vlen = read_u64(&mut f)? as usize;
+                let v = read_f32s(&mut f, vlen)?;
+                let ef_len = read_u64(&mut f)? as usize;
+                let mut ef = vec![0u8; ef_len];
+                f.read_exact(&mut ef)?;
+                let nq = read_u64(&mut f)? as usize;
+                let qlo = read_f32s(&mut f, nq)?;
+                let qhi = read_f32s(&mut f, nq)?;
+                let t = read_u64(&mut f)?;
+                Some(OptSnapshot::LdAdam(LdAdamSnapshot { proj, m, v, ef, qlo, qhi, t }))
+            }
+            3 => {
+                let mlen = read_u64(&mut f)? as usize;
+                let m = read_f32s(&mut f, mlen)?;
+                let vlen = read_u64(&mut f)? as usize;
+                let v = read_f32s(&mut f, vlen)?;
+                let t = read_u64(&mut f)?;
+                Some(OptSnapshot::AdamMini(AdamMiniSnapshot { m, v, t }))
+            }
+            other => bail!("{path}: unknown optimizer-state tag {other}"),
         };
         Ok(Checkpoint { step, params, opt })
     }
@@ -158,7 +225,7 @@ mod tests {
         let ck = Checkpoint {
             step: 7,
             params: vec![0.5; 16],
-            opt: Some(MicroAdamSnapshot {
+            opt: Some(OptSnapshot::MicroAdam(MicroAdamSnapshot {
                 ef: vec![1, 2, 3, 255, 0, 7, 8, 9],
                 qlo: vec![-1.0],
                 qhi: vec![1.0],
@@ -166,9 +233,47 @@ mod tests {
                 w_val: vec![0.1, -0.2, 0.3, -0.4],
                 w_bf16: true,
                 t: 7,
-            }),
+            })),
         };
         let path = "/tmp/microadam_ck_test2.bin";
+        ck.save(path).unwrap();
+        assert_eq!(Checkpoint::load(path).unwrap(), ck);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn roundtrip_with_ldadam_state() {
+        let ck = Checkpoint {
+            step: 9,
+            params: vec![0.25; 8],
+            opt: Some(OptSnapshot::LdAdam(LdAdamSnapshot {
+                proj: vec![0.1, 0.2, 0.3, 0.4],
+                m: vec![1.0, -1.0],
+                v: vec![0.5, 0.5],
+                ef: vec![7, 8, 9, 10],
+                qlo: vec![-0.5],
+                qhi: vec![0.5],
+                t: 9,
+            })),
+        };
+        let path = "/tmp/microadam_ck_test_ld.bin";
+        ck.save(path).unwrap();
+        assert_eq!(Checkpoint::load(path).unwrap(), ck);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn roundtrip_with_adammini_state() {
+        let ck = Checkpoint {
+            step: 5,
+            params: vec![-1.0; 6],
+            opt: Some(OptSnapshot::AdamMini(AdamMiniSnapshot {
+                m: vec![0.1, 0.2, 0.3],
+                v: vec![0.9],
+                t: 5,
+            })),
+        };
+        let path = "/tmp/microadam_ck_test_mini.bin";
         ck.save(path).unwrap();
         assert_eq!(Checkpoint::load(path).unwrap(), ck);
         let _ = std::fs::remove_file(path);
@@ -179,6 +284,23 @@ mod tests {
         let path = "/tmp/microadam_ck_test3.bin";
         std::fs::write(path, b"NOPE....").unwrap();
         assert!(Checkpoint::load(path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        // A well-formed v3 header with a bogus optimizer tag must be a
+        // typed error, not a panic or a silent params-only load.
+        let path = "/tmp/microadam_ck_test4.bin";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // d = 0
+        bytes.push(9); // unknown tag
+        std::fs::write(path, &bytes).unwrap();
+        let err = Checkpoint::load(path).unwrap_err().to_string();
+        assert!(err.contains("tag"), "{err}");
         let _ = std::fs::remove_file(path);
     }
 }

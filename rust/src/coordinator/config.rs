@@ -218,6 +218,8 @@ pub fn parse_optimizer(s: &str) -> Result<OptimizerKind> {
         "came" => OptimizerKind::Came,
         "galore" => OptimizerKind::GaLore,
         "galore-ef" => OptimizerKind::GaLoreEf,
+        "ldadam" | "ld-adam" => OptimizerKind::LdAdam,
+        "adammini" | "adam-mini" => OptimizerKind::AdamMini,
         other => bail!("unknown optimizer {other}"),
     })
 }
@@ -234,6 +236,8 @@ pub fn optimizer_name(k: OptimizerKind) -> &'static str {
         OptimizerKind::Came => "came",
         OptimizerKind::GaLore => "galore",
         OptimizerKind::GaLoreEf => "galore-ef",
+        OptimizerKind::LdAdam => "ldadam",
+        OptimizerKind::AdamMini => "adammini",
     }
 }
 

@@ -232,6 +232,38 @@ impl Trainer {
         &mut self.rt
     }
 
+    /// Typed optimizer-state snapshot for the checkpoint format: AOT
+    /// MicroAdam reads its literals back to host; native optimizers
+    /// delegate to [`Optimizer::snapshot_state`]. `None` when the backend
+    /// keeps no checkpointable state (AOT AdamW/AdamW8bit).
+    pub fn opt_snapshot(&self) -> Result<Option<optim::OptSnapshot>> {
+        match &self.opt {
+            Opt::AotMicroAdam(s) => Ok(Some(optim::OptSnapshot::MicroAdam(s.snapshot()?))),
+            Opt::Native(o) => Ok(o.snapshot_state()),
+            _ => Ok(None),
+        }
+    }
+
+    /// Restore an optimizer-state snapshot (checkpoint resume). A snapshot
+    /// kind that does not match the configured optimizer is a typed error —
+    /// resuming with mismatched state would silently fork the trajectory.
+    pub fn restore_opt_snapshot(&mut self, snap: &optim::OptSnapshot) -> Result<()> {
+        match &mut self.opt {
+            Opt::AotMicroAdam(s) => match snap {
+                optim::OptSnapshot::MicroAdam(ms) => s.restore(ms),
+                other => bail!(
+                    "AOT micro-adam cannot restore a {} snapshot",
+                    other.kind_name()
+                ),
+            },
+            Opt::Native(o) => o.restore_state(snap),
+            _ => bail!(
+                "optimizer backend for {:?} keeps no checkpointable state",
+                self.cfg.optimizer
+            ),
+        }
+    }
+
     pub fn microadam_state(&self) -> Option<&AotMicroAdamState> {
         match &self.opt {
             Opt::AotMicroAdam(s) => Some(s),

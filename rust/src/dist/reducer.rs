@@ -99,6 +99,27 @@ pub fn reducer_name(k: ReducerKind) -> &'static str {
     }
 }
 
+/// Whether `reduce` is mathematically sound under `optimizer`.
+///
+/// Dense is exact and EF-Top-K is self-correcting (the communication-side
+/// residual re-injects whatever a step dropped), so both compose with any
+/// optimizer. Plain Top-K permanently discards gradient mass; MicroAdam and
+/// the Adam family tolerate that bias on this workload and stay supported
+/// for the sweep tables, but LDAdam and Adam-mini maintain their own
+/// compressed state downstream of the exchange (LDAdam's low-rank EF
+/// accumulator, Adam-mini's per-block second moment) and compounding an
+/// uncorrected communication bias into that state is exactly the
+/// silently-wrong-numbers failure the typed error exists to prevent.
+pub fn reducer_supported(optimizer: crate::optim::OptimizerKind, reduce: ReducerKind) -> bool {
+    use crate::optim::OptimizerKind;
+    match reduce {
+        ReducerKind::Dense | ReducerKind::EfTopK => true,
+        ReducerKind::TopK => {
+            !matches!(optimizer, OptimizerKind::LdAdam | OptimizerKind::AdamMini)
+        }
+    }
+}
+
 /// Combine per-rank gradients into the mean aggregated gradient.
 pub trait GradReducer: Send {
     /// Display name (bench table row label).

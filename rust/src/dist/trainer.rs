@@ -147,6 +147,16 @@ impl DistTrainer {
                  contributes one shard per step (use more ranks instead)"
             );
         }
+        if !super::reducer::reducer_supported(cfg.optimizer, cfg.reduce) {
+            bail!(
+                "dist: optimizer {} does not support the {} reducer (plain \
+                 Top-K drops gradient mass with no error feedback, which \
+                 would bias this optimizer's compressed state) — use dense \
+                 or eftopk",
+                crate::coordinator::config::optimizer_name(cfg.optimizer),
+                reducer_name(cfg.reduce),
+            );
+        }
 
         // Multi-process endpoints host a strict subset of the ranks; the
         // artifact engine is loopback-only (one PJRT client per process,
@@ -338,6 +348,12 @@ impl DistTrainer {
     /// Paper-dtype optimizer state bytes.
     pub fn opt_state_bytes(&self) -> usize {
         self.opt.paper_state_bytes()
+    }
+
+    /// Measured resident optimizer-state bytes (allocated buffers — the
+    /// dist optimizer always runs natively, so this is always available).
+    pub fn opt_resident_bytes(&self) -> usize {
+        self.opt.state_bytes()
     }
 
     /// Paper-dtype bytes of per-rank reducer residual state (all ranks).
@@ -587,20 +603,32 @@ impl DistTrainer {
         Ok(())
     }
 
-    /// Persist a params-only checkpoint through the coordinator format.
+    /// Persist a checkpoint through the coordinator format: parameters,
+    /// step counter, and the optimizer's state snapshot when the configured
+    /// optimizer supports one (micro-adam, ldadam, adammini). The state is
+    /// replicated bit-identically on every process, so any endpoint's
+    /// snapshot is *the* run state.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        Checkpoint { step: self.t, params: self.params.clone(), opt: None }.save(path)
+        Checkpoint {
+            step: self.t,
+            params: self.params.clone(),
+            opt: self.opt.snapshot_state(),
+        }
+        .save(path)
     }
 
-    /// Resume parameters + step counter from a checkpoint. Params-only
-    /// initialization: optimizer/reducer state, the LR schedule position,
-    /// and the replicas' data streams are NOT fast-forwarded (the same
-    /// limitation as the single-process resume path) — `t` resumes for
-    /// provenance, while `train()` runs its configured steps from fresh
-    /// streams.
+    /// Resume parameters, step counter, and (when the checkpoint carries
+    /// one) the optimizer-state snapshot. A snapshot whose kind does not
+    /// match the configured optimizer is a typed error. Reducer EF state,
+    /// the LR schedule position, and the replicas' data streams are NOT
+    /// fast-forwarded — `t` resumes for provenance, while `train()` runs
+    /// its configured steps from fresh streams.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let ck = Checkpoint::load(path)?;
         self.set_params(&ck.params)?;
+        if let Some(snap) = &ck.opt {
+            self.opt.restore_state(snap)?;
+        }
         self.t = ck.step;
         Ok(())
     }
@@ -685,5 +713,63 @@ mod tests {
         assert_eq!(b.t, 5);
         assert_eq!(a.params_vec(), b.params_vec());
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn checkpoint_carries_optimizer_state() {
+        // For every snapshot-capable optimizer: the dist checkpoint holds
+        // the state, and a fresh trainer restores it bit-exactly.
+        for (kind, path) in [
+            (OptimizerKind::MicroAdam, "/tmp/microadam_dist_ck_opt_ma.bin"),
+            (OptimizerKind::LdAdam, "/tmp/microadam_dist_ck_opt_ld.bin"),
+            (OptimizerKind::AdamMini, "/tmp/microadam_dist_ck_opt_mini.bin"),
+        ] {
+            let mut c = cfg(2, ReducerKind::Dense, 5);
+            c.optimizer = kind;
+            let mut a = DistTrainer::new(c.clone()).unwrap();
+            let mut logger = MetricsLogger::new("").unwrap();
+            a.train(&mut logger).unwrap();
+            a.save_checkpoint(path).unwrap();
+            let snap = a.opt.snapshot_state();
+            assert!(snap.is_some(), "{kind:?} should snapshot");
+            let mut b = DistTrainer::new(c).unwrap();
+            b.load_checkpoint(path).unwrap();
+            assert_eq!(b.opt.snapshot_state(), snap, "{kind:?} restore");
+            assert_eq!(b.t, 5);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn checkpoint_with_mismatched_optimizer_is_typed_error() {
+        let path = "/tmp/microadam_dist_ck_mismatch.bin";
+        let mut c = cfg(1, ReducerKind::Dense, 3);
+        c.optimizer = OptimizerKind::AdamMini;
+        let mut a = DistTrainer::new(c).unwrap();
+        let mut logger = MetricsLogger::new("").unwrap();
+        a.train(&mut logger).unwrap();
+        a.save_checkpoint(path).unwrap();
+        let mut c2 = cfg(1, ReducerKind::Dense, 3);
+        c2.optimizer = OptimizerKind::LdAdam;
+        let mut b = DistTrainer::new(c2).unwrap();
+        let err = b.load_checkpoint(path).unwrap_err().to_string();
+        assert!(err.contains("adammini"), "{err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn unsupported_optimizer_reducer_combo_is_typed_error() {
+        for kind in [OptimizerKind::LdAdam, OptimizerKind::AdamMini] {
+            let mut c = cfg(2, ReducerKind::TopK, 1);
+            c.optimizer = kind;
+            let err = DistTrainer::new(c).map(|_| ()).unwrap_err().to_string();
+            assert!(err.contains("topk"), "{kind:?}: {err}");
+            // dense and eftopk stay supported for the same optimizer
+            for ok in [ReducerKind::Dense, ReducerKind::EfTopK] {
+                let mut c = cfg(2, ok, 1);
+                c.optimizer = kind;
+                assert!(DistTrainer::new(c).is_ok(), "{kind:?} x {ok:?}");
+            }
+        }
     }
 }

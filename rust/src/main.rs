@@ -118,6 +118,7 @@ USAGE:
                        insists on the EF-health gauges.)
 
 Optimizers: micro-adam adam adamw adamw-8bit sgd adafactor came galore galore-ef
+            ldadam adammini   (--optim is an alias for --optimizer)
 ";
 
 fn main() {
@@ -156,7 +157,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(v) = args.get("model") {
         cfg.model = v.into();
     }
-    if let Some(v) = args.get("optimizer") {
+    if let Some(v) = args.get("optimizer").or_else(|| args.get("optim")) {
         cfg.optimizer = parse_optimizer(v)?;
     }
     if let Some(v) = args.get("backend") {
@@ -287,7 +288,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let ck = microadam::coordinator::checkpoint::Checkpoint {
             step: trainer.t,
             params: trainer.params_vec()?,
-            opt: trainer.microadam_state().map(|s| s.snapshot()).transpose()?,
+            opt: trainer.opt_snapshot()?,
         };
         ck.save(path)?;
         println!("checkpoint written to {path}");
@@ -344,8 +345,8 @@ fn dist_summary(
     if let Some(path) = args.get("checkpoint") {
         trainer.save_checkpoint(path)?;
         println!(
-            "checkpoint written to {path} (params-only: dist does not snapshot \
-             optimizer/reducer state yet)"
+            "checkpoint written to {path} (params + optimizer state when the \
+             optimizer snapshots; reducer EF state is not persisted)"
         );
     }
     Ok(())
@@ -697,6 +698,22 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {
+    // Registry <-> CLI agreement: every registered optimizer kind must
+    // round-trip through its CLI name, so a kind added to the registry
+    // cannot silently be unreachable from `--optim`.
+    use microadam::coordinator::config::optimizer_name;
+    use microadam::optim::OptimizerKind;
+    for &kind in OptimizerKind::all() {
+        let name = optimizer_name(kind);
+        if parse_optimizer(name)? != kind {
+            bail!("selftest: optimizer registry/CLI mismatch for {name}");
+        }
+    }
+    println!(
+        "selftest: optimizer registry <-> CLI names agree ({} kinds)",
+        OptimizerKind::all().len()
+    );
+
     // End-to-end smoke: one train step of each backend on the tiny model.
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     for (backend, name) in [(OptBackend::Aot, "aot"), (OptBackend::Native, "native")] {

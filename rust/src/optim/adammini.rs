@@ -1,0 +1,349 @@
+//! Adam-mini baseline (Zhang et al. 2024): dense first moment, one shared
+//! second-moment scalar per parameter block.
+//!
+//! Adam-mini's observation is that within a well-chosen parameter block the
+//! per-coordinate Adam learning rates are nearly identical, so the second
+//! moment can be a *single EMA of the block-mean squared gradient* instead
+//! of a dense vector. State drops from Adam's 8 B/param to
+//! `4·(1 + 1/B)` B/param — the memory goes almost entirely to the first
+//! moment. This implementation rides the repo's block-major layout: blocks
+//! are consecutive `block`-sized spans of the flat vector (the same
+//! partition MicroAdam's Top-K uses), with a shorter final block when `d`
+//! is not a multiple.
+//!
+//! Sharding: blocks are independent given the gradient, and the in-block
+//! mean is a fixed-order sequential fold, so the fused path carves whole
+//! blocks across workers and is bit-identical to [`AdamMini::step`] at
+//! every worker count (partitioned, never reassociated).
+
+use super::{OptSnapshot, Optimizer};
+use crate::exec::{self, ExecPool};
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamMiniConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Block size `B`: one shared second-moment scalar per `B` consecutive
+    /// parameters. The final block is shorter when `d % B != 0`.
+    pub block: usize,
+}
+
+impl Default for AdamMiniConfig {
+    fn default() -> Self {
+        Self {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            block: crate::BLOCK,
+        }
+    }
+}
+
+/// Host-side copy of the Adam-mini state (checkpoint payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamMiniSnapshot {
+    /// Dense first moment (`d` values).
+    pub m: Vec<f32>,
+    /// Per-block second-moment means (`ceil(d/B)` values).
+    pub v: Vec<f32>,
+    /// Step counter.
+    pub t: u64,
+}
+
+/// Adam-mini: dense `m`, per-block scalar `v`.
+pub struct AdamMini {
+    cfg: AdamMiniConfig,
+    m: Vec<f32>,
+    /// One EMA of `mean(g^2)` per block.
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl AdamMini {
+    pub fn new(d: usize, cfg: AdamMiniConfig) -> Self {
+        assert!(cfg.block >= 1, "block must be >= 1");
+        let nb = d.div_ceil(cfg.block);
+        Self { cfg, m: vec![0.0; d], v: vec![0.0; nb], t: 0 }
+    }
+
+    /// Number of second-moment blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Per-step scalar factors (bias corrections, decoupled decay).
+    fn factors(&self, lr: f32) -> (f32, f32, f32) {
+        let c = &self.cfg;
+        (
+            1.0 - c.beta1.powi(self.t as i32),
+            1.0 - c.beta2.powi(self.t as i32),
+            1.0 - lr * c.weight_decay,
+        )
+    }
+
+    /// Copy the state out for checkpointing.
+    pub fn snapshot(&self) -> AdamMiniSnapshot {
+        AdamMiniSnapshot { m: self.m.clone(), v: self.v.clone(), t: self.t }
+    }
+
+    /// Load a snapshot back. Fails (typed, no panic) on geometry mismatch.
+    pub fn restore(&mut self, s: &AdamMiniSnapshot) -> Result<()> {
+        if s.m.len() != self.m.len() || s.v.len() != self.v.len() {
+            bail!(
+                "adam-mini snapshot geometry mismatch: m {} vs {}, v {} vs {}",
+                s.m.len(),
+                self.m.len(),
+                s.v.len(),
+                self.v.len()
+            );
+        }
+        self.m.copy_from_slice(&s.m);
+        self.v.copy_from_slice(&s.v);
+        self.t = s.t;
+        Ok(())
+    }
+}
+
+/// The Adam-mini update over a span of whole blocks: `v` holds this span's
+/// block scalars; `params`/`grads`/`m` hold the matching elements. Shared by
+/// the sequential and sharded paths so both produce identical bits. The
+/// in-block `mean(g^2)` is a fixed-order sequential fold — never
+/// reassociated — which is what makes whole-block sharding bit-exact.
+fn update_span(
+    cfg: &AdamMiniConfig,
+    bc1: f32,
+    bc2: f32,
+    decay: f32,
+    lr: f32,
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) {
+    let mut off = 0usize;
+    for vb in v.iter_mut() {
+        let end = (off + cfg.block).min(grads.len());
+        let g = &grads[off..end];
+        let mut sum = 0f32;
+        for &gi in g {
+            sum += gi * gi;
+        }
+        let mean = sum / g.len() as f32;
+        *vb = cfg.beta2 * *vb + (1.0 - cfg.beta2) * mean;
+        let v_hat = *vb / bc2;
+        let denom = v_hat.sqrt() + cfg.eps;
+        for i in off..end {
+            m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * grads[i];
+            let m_hat = m[i] / bc1;
+            params[i] = decay * params[i] - lr * m_hat / denom;
+        }
+        off = end;
+    }
+}
+
+impl Optimizer for AdamMini {
+    fn name(&self) -> String {
+        format!("Adam-mini(B={})", self.cfg.block)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let (bc1, bc2, decay) = self.factors(lr);
+        update_span(&self.cfg, bc1, bc2, decay, lr, params, grads, &mut self.m, &mut self.v);
+    }
+
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let (bc1, bc2, decay) = self.factors(lr);
+        let nb = self.v.len();
+        let ranges = exec::chunk_ranges(nb, pool.workers());
+        if ranges.len() <= 1 {
+            update_span(&self.cfg, bc1, bc2, decay, lr, params, grads, &mut self.m, &mut self.v);
+            return;
+        }
+        // Carve whole blocks per shard: block b owns elements
+        // [b*block, min((b+1)*block, d)), so a block-range shard owns a
+        // contiguous element span and the split_at_mut chain stays linear.
+        let cfg = &self.cfg;
+        let d = self.m.len();
+        let mut shards = Vec::with_capacity(ranges.len());
+        let (mut p_rest, mut g_rest) = (params, grads);
+        let (mut m_rest, mut v_rest) = (&mut self.m[..], &mut self.v[..]);
+        let mut elem_off = 0usize;
+        for r in &ranges {
+            let elem_end = (r.end * cfg.block).min(d);
+            let n = elem_end - elem_off;
+            let (p, pr) = p_rest.split_at_mut(n);
+            p_rest = pr;
+            let (g, gr) = g_rest.split_at(n);
+            g_rest = gr;
+            let (m, mr) = m_rest.split_at_mut(n);
+            m_rest = mr;
+            let (v, vr) = v_rest.split_at_mut(r.len());
+            v_rest = vr;
+            shards.push((p, g, m, v));
+            elem_off = elem_end;
+        }
+        pool.run_shards(shards, |_, (p, g, m, v)| {
+            update_span(cfg, bc1, bc2, decay, lr, p, g, m, v);
+        });
+    }
+
+    /// Resident bytes: f32 dense `m` + one f32 per block.
+    fn state_bytes(&self) -> usize {
+        4 * (self.m.len() + self.v.len())
+    }
+
+    // paper_state_bytes: the default (== state_bytes) IS the paper formula,
+    // 4·(d + ceil(d/B)) — Adam-mini stores fp32 state natively.
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn snapshot_state(&self) -> Option<OptSnapshot> {
+        Some(OptSnapshot::AdamMini(self.snapshot()))
+    }
+
+    fn restore_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        match snap {
+            OptSnapshot::AdamMini(s) => self.restore(s),
+            other => bail!("adam-mini cannot restore a {} snapshot", other.kind_name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adamw::{AdamW, AdamWConfig};
+    use crate::optim::testutil::randvec;
+
+    fn cfg(block: usize) -> AdamMiniConfig {
+        AdamMiniConfig { block, ..Default::default() }
+    }
+
+    #[test]
+    fn block_one_degenerates_to_adam() {
+        // With B=1 the block mean is g^2 itself, so Adam-mini degenerates to
+        // bias-corrected Adam (up to one rounding in the v EMA:
+        // (1-b2)*(g*g) here vs ((1-b2)*g)*g in the dense kernel).
+        let d = 97;
+        let mut mini = AdamMini::new(d, cfg(1));
+        let mut adam = AdamW::new(d, AdamWConfig::default());
+        let mut pm = randvec(11, d, 1.0);
+        let mut pa = pm.clone();
+        for s in 0..20 {
+            let g = randvec(40 + s, d, 1.0);
+            mini.step(&mut pm, &g, 1e-2);
+            adam.step(&mut pa, &g, 1e-2);
+        }
+        for i in 0..d {
+            let tol = 1e-5 * pa[i].abs().max(1.0);
+            assert!((pm[i] - pa[i]).abs() <= tol, "coord {i}: {} vs {}", pm[i], pa[i]);
+        }
+    }
+
+    #[test]
+    fn v_is_shared_within_a_block() {
+        // Constant gradient within a block => every coordinate in the block
+        // receives the bit-identical update (one shared denominator).
+        let block = 8;
+        let d = 3 * block;
+        let mut opt = AdamMini::new(d, cfg(block));
+        let mut p = vec![0f32; d];
+        let mut g = vec![0f32; d];
+        for b in 0..3 {
+            for i in 0..block {
+                g[b * block + i] = (b as f32 + 1.0) * 0.3;
+            }
+        }
+        opt.step(&mut p, &g, 0.1);
+        for b in 0..3 {
+            for i in 1..block {
+                assert_eq!(p[b * block + i], p[b * block], "block {b} coord {i}");
+            }
+        }
+        // different block means => different updates across blocks
+        assert_ne!(p[0], p[block]);
+        assert_ne!(p[block], p[2 * block]);
+    }
+
+    #[test]
+    fn sharded_step_matches_sequential_bitwise() {
+        let d = 1003; // 15 full blocks of 64 + a 43-element tail block
+        for workers in [1usize, 2, 4, 8] {
+            let mut seq = AdamMini::new(d, cfg(64));
+            let mut par = AdamMini::new(d, cfg(64));
+            let pool = ExecPool::new(workers);
+            let mut ps = randvec(20, d, 1.0);
+            let mut pp = ps.clone();
+            for s in 0..5 {
+                let g = randvec(30 + s, d, 1.0);
+                seq.step(&mut ps, &g, 1e-2);
+                par.step_sharded(&mut pp, &g, 1e-2, &pool);
+            }
+            assert_eq!(ps, pp, "workers={workers}");
+            assert_eq!(seq.t(), par.t());
+        }
+    }
+
+    #[test]
+    fn state_bytes_is_paper_formula() {
+        // 4·(d + ceil(d/B))
+        let opt = AdamMini::new(1000, cfg(64));
+        assert_eq!(opt.n_blocks(), 16);
+        assert_eq!(opt.state_bytes(), 4 * (1000 + 16));
+        assert_eq!(opt.paper_state_bytes(), opt.state_bytes());
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = AdamMini::new(256, cfg(32));
+        let mut x = randvec(1, 256, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..400 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.02);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(n1 < 0.05 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bit_exactly() {
+        let d = 300;
+        let mut a = AdamMini::new(d, cfg(64));
+        let mut xa = randvec(2, d, 1.0);
+        for s in 0..5 {
+            let g = randvec(50 + s, d, 1.0);
+            a.step(&mut xa, &g, 1e-2);
+        }
+        let snap = a.snapshot();
+        let mut b = AdamMini::new(d, cfg(64));
+        b.restore(&snap).unwrap();
+        let mut xb = xa.clone();
+        for s in 5..10 {
+            let g = randvec(50 + s, d, 1.0);
+            a.step(&mut xa, &g, 1e-2);
+            b.step(&mut xb, &g, 1e-2);
+        }
+        assert_eq!(xa, xb);
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let a = AdamMini::new(300, cfg(64));
+        let mut b = AdamMini::new(301, cfg(64));
+        assert!(b.restore(&a.snapshot()).is_err());
+    }
+}

@@ -1,0 +1,701 @@
+//! LDAdam baseline (Robert et al. 2024): Adam with low-rank projected
+//! moments, projection-aware moment rotation, and generalized error
+//! feedback.
+//!
+//! Where GaLore projects per-tensor and discards what the subspace misses,
+//! LDAdam (a) refreshes the subspace every `update_every` steps and
+//! *rotates* the existing moments into the new subspace (`m <- m·C`,
+//! `v <- v·(C∘C)` with `C = P_oldᵀ P_new`), so optimizer memory survives the
+//! refresh, and (b) keeps a generalized error-feedback accumulator of
+//! everything the projection dropped, folded into the next gradient.
+//!
+//! This implementation instantiates LDAdam on the repo's block-major
+//! substrate: the flat vector is cut into `block`-sized blocks (padded
+//! tail, same convention as MicroAdam), each block is viewed as a
+//! `rows × cols` matrix, and a per-block projector `P (cols × r)`
+//! compresses each row to rank `r`. The EF residual `e = a − (aP)Pᵀ`
+//! reuses the paper's [`Quant4`] compressor — 4 bits per parameter, the
+//! same kernels and bucket layout as MicroAdam's EF — so the resident cost
+//! is `0.5·d` EF bytes plus `4·d·r·(1/rows + 2/cols)` bytes of
+//! projector + projected moments (≈ 1.25 B/param at the defaults).
+//!
+//! Sharding: blocks are fully independent within a step and the projector
+//! refresh draws from a per-`(block, t)` seeded RNG stream, so the fused
+//! path carves whole blocks across workers and is bit-identical to the
+//! sequential oracle at every worker count.
+
+use super::{OptSnapshot, Optimizer};
+use crate::exec::{self, ExecPool};
+use crate::linalg;
+use crate::quant::{BucketStats, Quant4};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct LdAdamConfig {
+    /// Projection rank `r` per block-row.
+    pub rank: usize,
+    /// Subspace refresh interval (the paper interleaves the subspace update
+    /// with descent every step; 1 reproduces that).
+    pub update_every: u64,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Block size (flat-vector partition; padded tail like MicroAdam).
+    pub block: usize,
+    /// Row width inside a block: each block is a `(block/cols) × cols`
+    /// matrix and the projector compresses `cols -> rank` per row.
+    pub cols: usize,
+    /// Quant4 bucket for the EF residual store.
+    pub qbucket: usize,
+    /// Base seed for the per-(block, step) refresh sketch streams.
+    pub seed: u64,
+}
+
+impl Default for LdAdamConfig {
+    fn default() -> Self {
+        Self {
+            rank: 4,
+            update_every: 1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            block: crate::BLOCK,
+            cols: 64,
+            qbucket: crate::QBUCKET,
+            seed: 0x1dada,
+        }
+    }
+}
+
+/// Host-side copy of the LDAdam state (checkpoint payload). Per-block
+/// projector/moment matrices are flattened in block order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LdAdamSnapshot {
+    /// Concatenated per-block projectors (`nb · cols · r` values).
+    pub proj: Vec<f32>,
+    /// Concatenated projected first moments (`nb · rows · r`).
+    pub m: Vec<f32>,
+    /// Concatenated projected second moments (`nb · rows · r`).
+    pub v: Vec<f32>,
+    /// Packed 4-bit EF residual codes (`d_pad / 2` bytes).
+    pub ef: Vec<u8>,
+    /// EF bucket minima (one per Quant4 bucket).
+    pub qlo: Vec<f32>,
+    /// EF bucket maxima (same length as `qlo`).
+    pub qhi: Vec<f32>,
+    /// Step counter.
+    pub t: u64,
+}
+
+/// Resolved block geometry (what the constructor clamped the config to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LdGeometry {
+    pub block: usize,
+    pub cols: usize,
+    pub rows: usize,
+    pub rank: usize,
+    pub n_blocks: usize,
+    pub qbucket: usize,
+}
+
+struct BlockState {
+    /// Projector, row-major `cols × r`, orthonormal columns (zero columns
+    /// where the sketch was rank-deficient).
+    p: Vec<f32>,
+    /// Projected Adam moments, row-major `rows × r`.
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// LDAdam over a flat vector, block-major.
+pub struct LdAdam {
+    cfg: LdAdamConfig,
+    d: usize,
+    geom: LdGeometry,
+    blocks: Vec<BlockState>,
+    quant: Quant4,
+    /// Packed EF codes, `d_pad/2` bytes, block-aligned.
+    ef_packed: Vec<u8>,
+    /// EF bucket stats (buckets never straddle a block: qbucket | block).
+    ef_stats: Vec<BucketStats>,
+    /// Padded accumulator scratch (`a = g + Q⁻¹(e)`), `d_pad` elements.
+    acc: Vec<f32>,
+    t: u64,
+}
+
+/// Per-step immutable context handed to the block kernel.
+#[derive(Clone, Copy)]
+struct StepCtx {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    bc1: f32,
+    bc2: f32,
+    decay: f32,
+    lr: f32,
+    t: u64,
+    update_every: u64,
+    seed: u64,
+    geom: LdGeometry,
+}
+
+/// Per-worker scratch; every buffer is fully overwritten per block, so
+/// reuse across blocks cannot leak state between them.
+struct Scratch {
+    /// Block accumulator transposed (`cols × rows`) for the range finder.
+    at: Vec<f32>,
+    /// Projected gradient `R = A·P` (`rows × r`).
+    rproj: Vec<f32>,
+    /// Normalized update in the subspace (`rows × r`).
+    nproj: Vec<f32>,
+    /// Back-projected update (`rows × cols`).
+    upd: Vec<f32>,
+    /// Rotation `C = P_oldᵀ·P_new` and its elementwise square (`r × r`).
+    c: Vec<f32>,
+    csq: Vec<f32>,
+    /// Rotated-moment temporary (`rows × r`).
+    tmp: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(g: &LdGeometry) -> Self {
+        Self {
+            at: vec![0.0; g.cols * g.rows],
+            rproj: vec![0.0; g.rows * g.rank],
+            nproj: vec![0.0; g.rows * g.rank],
+            upd: vec![0.0; g.rows * g.cols],
+            c: vec![0.0; g.rank * g.rank],
+            csq: vec![0.0; g.rank * g.rank],
+            tmp: vec![0.0; g.rows * g.rank],
+        }
+    }
+}
+
+/// One worker's carve: a contiguous run of whole blocks plus the matching
+/// element spans of every per-element buffer.
+struct LdShard<'a> {
+    /// Global index of this shard's first block (refresh RNG stream key).
+    gb0: usize,
+    blocks: &'a mut [BlockState],
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    acc: &'a mut [f32],
+    packed: &'a mut [u8],
+    stats: &'a mut [BucketStats],
+}
+
+impl LdAdam {
+    pub fn new(d: usize, cfg: LdAdamConfig) -> Self {
+        assert!(d > 0, "ldadam: empty parameter vector");
+        let cols_req = cfg.cols.clamp(1, cfg.block.max(1));
+        // Small problems collapse to a single block padded to a row
+        // boundary; big ones keep the configured block size.
+        let block =
+            if d >= cfg.block { cfg.block } else { crate::pad_up(d, cols_req) };
+        let mut cols = cols_req.min(block);
+        while block % cols != 0 {
+            cols -= 1;
+        }
+        let rows = block / cols;
+        let rank = cfg.rank.clamp(1, rows.min(cols));
+        assert!(block % 2 == 0, "ldadam: block must be even for 4-bit packing, got {block}");
+        let mut qbucket = cfg.qbucket.clamp(2, block);
+        if qbucket % 2 != 0 {
+            qbucket += 1;
+        }
+        while block % qbucket != 0 {
+            qbucket -= 2;
+            assert!(qbucket >= 2, "ldadam: no even qbucket divides block {block}");
+        }
+        let d_pad = crate::pad_up(d, block);
+        let nb = d_pad / block;
+        let geom = LdGeometry { block, cols, rows, rank, n_blocks: nb, qbucket };
+        let blocks = (0..nb)
+            .map(|_| BlockState {
+                p: vec![0.0; cols * rank],
+                m: vec![0.0; rows * rank],
+                v: vec![0.0; rows * rank],
+            })
+            .collect();
+        Self {
+            cfg,
+            d,
+            geom,
+            blocks,
+            quant: Quant4::new(qbucket),
+            ef_packed: vec![0; d_pad / 2],
+            ef_stats: vec![BucketStats { lo: 0.0, hi: 0.0 }; d_pad / qbucket],
+            acc: vec![0.0; d_pad],
+            t: 0,
+        }
+    }
+
+    /// The geometry the constructor resolved (after clamping).
+    pub fn geometry(&self) -> LdGeometry {
+        self.geom
+    }
+
+    /// Per-block projector, row-major `cols × r`.
+    pub fn projector(&self, b: usize) -> &[f32] {
+        &self.blocks[b].p
+    }
+
+    /// L2 norm of the dequantized EF residual (bookkeeping diagnostic).
+    pub fn ef_norm(&self) -> f32 {
+        self.quant.l2_norm(&self.ef_packed, &self.ef_stats)
+    }
+
+    /// `‖E·P‖_F / ‖E‖_F` over all blocks: how much of the stored residual
+    /// leaks back into the learning subspace. The exact residual is
+    /// orthogonal to `P` by construction, so this measures pure Quant4
+    /// noise and stays well below 1.
+    pub fn ef_projection_ratio(&self) -> f32 {
+        let g = self.geom;
+        let mut e = vec![0f32; self.acc.len()];
+        self.quant.dequantize(&self.ef_packed, &self.ef_stats, &mut e);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        let mut ep = vec![0f32; g.rows * g.rank];
+        for (b, st) in self.blocks.iter().enumerate() {
+            let eb = &e[b * g.block..(b + 1) * g.block];
+            linalg::matmul(eb, &st.p, &mut ep, g.rows, g.cols, g.rank);
+            num += ep.iter().map(|v| (v * v) as f64).sum::<f64>();
+            den += eb.iter().map(|v| (v * v) as f64).sum::<f64>();
+        }
+        (num.sqrt() / den.sqrt().max(1e-12)) as f32
+    }
+
+    /// Copy the state out for checkpointing (flattened in block order).
+    pub fn snapshot(&self) -> LdAdamSnapshot {
+        let mut proj = Vec::with_capacity(self.blocks.len() * self.geom.cols * self.geom.rank);
+        let mut m = Vec::with_capacity(self.blocks.len() * self.geom.rows * self.geom.rank);
+        let mut v = Vec::with_capacity(m.capacity());
+        for b in &self.blocks {
+            proj.extend_from_slice(&b.p);
+            m.extend_from_slice(&b.m);
+            v.extend_from_slice(&b.v);
+        }
+        LdAdamSnapshot {
+            proj,
+            m,
+            v,
+            ef: self.ef_packed.clone(),
+            qlo: self.ef_stats.iter().map(|s| s.lo).collect(),
+            qhi: self.ef_stats.iter().map(|s| s.hi).collect(),
+            t: self.t,
+        }
+    }
+
+    /// Load a snapshot back. Fails (typed, no panic) on geometry mismatch.
+    pub fn restore(&mut self, s: &LdAdamSnapshot) -> Result<()> {
+        let g = self.geom;
+        let (plen, mlen) = (g.n_blocks * g.cols * g.rank, g.n_blocks * g.rows * g.rank);
+        if s.proj.len() != plen || s.m.len() != mlen || s.v.len() != mlen {
+            bail!(
+                "ldadam snapshot geometry mismatch: proj {} vs {plen}, m {} / v {} vs {mlen}",
+                s.proj.len(),
+                s.m.len(),
+                s.v.len()
+            );
+        }
+        if s.ef.len() != self.ef_packed.len()
+            || s.qlo.len() != self.ef_stats.len()
+            || s.qhi.len() != self.ef_stats.len()
+        {
+            bail!(
+                "ldadam snapshot EF geometry mismatch: ef {} vs {}, stats {}/{} vs {}",
+                s.ef.len(),
+                self.ef_packed.len(),
+                s.qlo.len(),
+                s.qhi.len(),
+                self.ef_stats.len()
+            );
+        }
+        for (b, st) in self.blocks.iter_mut().enumerate() {
+            let (pl, ml) = (g.cols * g.rank, g.rows * g.rank);
+            st.p.copy_from_slice(&s.proj[b * pl..(b + 1) * pl]);
+            st.m.copy_from_slice(&s.m[b * ml..(b + 1) * ml]);
+            st.v.copy_from_slice(&s.v[b * ml..(b + 1) * ml]);
+        }
+        self.ef_packed.copy_from_slice(&s.ef);
+        for (st, (&lo, &hi)) in self.ef_stats.iter_mut().zip(s.qlo.iter().zip(&s.qhi)) {
+            *st = BucketStats { lo, hi };
+        }
+        self.t = s.t;
+        Ok(())
+    }
+
+    /// The one step path: sequential when `pool` is `None` or the carve is
+    /// a single range, sharded otherwise. Both run the identical per-block
+    /// kernel over the identical carve, so the bits cannot diverge.
+    fn fused(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: Option<&ExecPool>) {
+        assert_eq!(params.len(), self.d);
+        assert_eq!(grads.len(), self.d);
+        self.t += 1;
+        let cfg = self.cfg;
+        let geom = self.geom;
+        let ctx = StepCtx {
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            bc1: 1.0 - cfg.beta1.powi(self.t as i32),
+            bc2: 1.0 - cfg.beta2.powi(self.t as i32),
+            decay: 1.0 - lr * cfg.weight_decay,
+            lr,
+            t: self.t,
+            update_every: cfg.update_every.max(1),
+            seed: cfg.seed,
+            geom,
+        };
+        let workers = pool.map_or(1, |p| p.workers());
+        let ranges = exec::chunk_ranges(geom.n_blocks, workers);
+        let quant = self.quant.clone();
+        let (block, qb) = (geom.block, geom.qbucket);
+        let mut shards = Vec::with_capacity(ranges.len());
+        let (mut p_rest, mut g_rest) = (params, grads);
+        let mut b_rest = &mut self.blocks[..];
+        let mut a_rest = &mut self.acc[..];
+        let mut k_rest = &mut self.ef_packed[..];
+        let mut s_rest = &mut self.ef_stats[..];
+        let mut elem_off = 0usize;
+        for r in &ranges {
+            let elem_end = (r.end * block).min(self.d);
+            let n = elem_end - elem_off;
+            let (p, pr) = p_rest.split_at_mut(n);
+            p_rest = pr;
+            let (gs, gr) = g_rest.split_at(n);
+            g_rest = gr;
+            let (bs, br) = b_rest.split_at_mut(r.len());
+            b_rest = br;
+            let (a, ar) = a_rest.split_at_mut(r.len() * block);
+            a_rest = ar;
+            let (kk, kr) = k_rest.split_at_mut(r.len() * block / 2);
+            k_rest = kr;
+            let (ss, sr) = s_rest.split_at_mut(r.len() * block / qb);
+            s_rest = sr;
+            shards.push(LdShard {
+                gb0: r.start,
+                blocks: bs,
+                params: p,
+                grads: gs,
+                acc: a,
+                packed: kk,
+                stats: ss,
+            });
+            elem_off = elem_end;
+        }
+        match pool {
+            Some(pool) if shards.len() > 1 => {
+                pool.run_shards(shards, |_, sh| run_shard(ctx, &quant, sh));
+            }
+            _ => {
+                for sh in shards {
+                    run_shard(ctx, &quant, sh);
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic per-(block, refresh-step) sketch stream: independent of
+/// worker count and shard assignment, so refreshes cannot couple blocks.
+fn refresh_seed(seed: u64, gb: usize, t: u64) -> u64 {
+    seed ^ (gb as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ t.wrapping_mul(0xd1b5_4a32_d192_ed03)
+}
+
+fn run_shard(ctx: StepCtx, quant: &Quant4, mut sh: LdShard<'_>) {
+    let g = ctx.geom;
+    let mut scr = Scratch::new(&g);
+    let mut off = 0usize;
+    for (k, st) in sh.blocks.iter_mut().enumerate() {
+        let end = (off + g.block).min(sh.params.len());
+        step_block(
+            ctx,
+            quant,
+            sh.gb0 + k,
+            st,
+            &mut sh.params[off..end],
+            &sh.grads[off..end],
+            &mut sh.acc[k * g.block..(k + 1) * g.block],
+            &mut sh.packed[k * g.block / 2..(k + 1) * g.block / 2],
+            &mut sh.stats[k * g.block / g.qbucket..(k + 1) * g.block / g.qbucket],
+            &mut scr,
+        );
+        off = end;
+    }
+}
+
+/// One block's full LDAdam step: EF accumulate, (optional) subspace refresh
+/// with moment rotation, project, Adam in the subspace, back-project, and
+/// re-compress the new residual. Entirely sequential and self-contained —
+/// the unit of bit-exact sharding.
+#[allow(clippy::too_many_arguments)]
+fn step_block(
+    ctx: StepCtx,
+    quant: &Quant4,
+    gb: usize,
+    st: &mut BlockState,
+    params: &mut [f32],
+    grads: &[f32],
+    acc: &mut [f32],
+    packed: &mut [u8],
+    stats: &mut [BucketStats],
+    scr: &mut Scratch,
+) {
+    let g = ctx.geom;
+    let (rows, cols, r) = (g.rows, g.cols, g.rank);
+    // a = g + Q⁻¹(e); padded-tail coords carry zero gradient.
+    acc.fill(0.0);
+    acc[..grads.len()].copy_from_slice(grads);
+    quant.dequantize_add(packed, stats, acc);
+    if (ctx.t - 1) % ctx.update_every == 0 {
+        // Refresh the subspace from the accumulator: P spans the top-r row
+        // space of A (range of Aᵀ).
+        for i in 0..rows {
+            for j in 0..cols {
+                scr.at[j * rows + i] = acc[i * cols + j];
+            }
+        }
+        let mut rng = Rng::seed_from_u64(refresh_seed(ctx.seed, gb, ctx.t));
+        let pnew = linalg::randomized_range_finder(&scr.at, cols, rows, r, 1, &mut rng);
+        // Projection-aware moment rotation (the LDAdam step that GaLore
+        // lacks): carry m into the new subspace via C = P_oldᵀ P_new, and
+        // v via C∘C (the paper's nonnegative second-moment surrogate).
+        linalg::matmul_tn(&st.p, &pnew, &mut scr.c, cols, r, r);
+        for (cs, &cv) in scr.csq.iter_mut().zip(&scr.c) {
+            *cs = cv * cv;
+        }
+        linalg::matmul(&st.m, &scr.c, &mut scr.tmp, rows, r, r);
+        st.m.copy_from_slice(&scr.tmp);
+        linalg::matmul(&st.v, &scr.csq, &mut scr.tmp, rows, r, r);
+        st.v.copy_from_slice(&scr.tmp);
+        st.p.copy_from_slice(&pnew);
+    }
+    // Project: R = A·P (rows × r).
+    linalg::matmul(acc, &st.p, &mut scr.rproj, rows, cols, r);
+    // Adam in the subspace.
+    for i in 0..rows * r {
+        st.m[i] = ctx.beta1 * st.m[i] + (1.0 - ctx.beta1) * scr.rproj[i];
+        st.v[i] = ctx.beta2 * st.v[i] + (1.0 - ctx.beta2) * scr.rproj[i] * scr.rproj[i];
+        scr.nproj[i] = (st.m[i] / ctx.bc1) / ((st.v[i] / ctx.bc2).sqrt() + ctx.eps);
+    }
+    // Back-project the update U = N·Pᵀ and the reconstruction R·Pᵀ in one
+    // pass; the accumulator becomes the new residual e = a − (aP)Pᵀ.
+    for i in 0..rows {
+        for j in 0..cols {
+            let mut u = 0f32;
+            let mut rec = 0f32;
+            for k in 0..r {
+                u += scr.nproj[i * r + k] * st.p[j * r + k];
+                rec += scr.rproj[i * r + k] * st.p[j * r + k];
+            }
+            scr.upd[i * cols + j] = u;
+            acc[i * cols + j] -= rec;
+        }
+    }
+    // Apply to the real (unpadded) coordinates only.
+    for (pi, &ui) in params.iter_mut().zip(scr.upd.iter()) {
+        *pi = ctx.decay * *pi - ctx.lr * ui;
+    }
+    // Compress the residual back into the 4-bit EF store.
+    quant.quantize(acc, packed, stats);
+}
+
+impl Optimizer for LdAdam {
+    fn name(&self) -> String {
+        format!("LDAdam(r={})", self.geom.rank)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.fused(params, grads, lr, None);
+    }
+
+    fn step_sharded(&mut self, params: &mut [f32], grads: &[f32], lr: f32, pool: &ExecPool) {
+        self.fused(params, grads, lr, Some(pool));
+    }
+
+    /// Resident bytes: f32 projectors + projected moments, packed EF codes,
+    /// and the f32 EF bucket stats. The padded accumulator is step scratch
+    /// (like the gradient buffer), not persistent state.
+    fn state_bytes(&self) -> usize {
+        let dense: usize = self.blocks.iter().map(|b| b.p.len() + b.m.len() + b.v.len()).sum();
+        4 * dense + self.ef_packed.len() + self.ef_stats.len() * BucketStats::BYTES
+    }
+
+    /// Paper accounting: `0.5·d_pad` EF bytes + f32 projector/moments —
+    /// `d/2 + 4·d·r·(1/rows + 2/cols)` bytes. The f32 bucket stats are
+    /// honest implementation overhead, as in MicroAdam's accounting.
+    fn paper_state_bytes(&self) -> usize {
+        let dense: usize = self.blocks.iter().map(|b| b.p.len() + b.m.len() + b.v.len()).sum();
+        4 * dense + self.ef_packed.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn snapshot_state(&self) -> Option<OptSnapshot> {
+        Some(OptSnapshot::LdAdam(self.snapshot()))
+    }
+
+    fn restore_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        match snap {
+            OptSnapshot::LdAdam(s) => self.restore(s),
+            other => bail!("ldadam cannot restore a {} snapshot", other.kind_name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::randvec;
+
+    /// Genuinely low-rank geometry: 8×8 blocks at rank 2, so the EF
+    /// residual carries real mass.
+    fn small_cfg() -> LdAdamConfig {
+        LdAdamConfig {
+            rank: 2,
+            block: 64,
+            cols: 8,
+            qbucket: 16,
+            update_every: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn geometry_resolves_and_clamps() {
+        let opt = LdAdam::new(1000, small_cfg());
+        let g = opt.geometry();
+        assert_eq!(g, LdGeometry { block: 64, cols: 8, rows: 8, rank: 2, n_blocks: 16, qbucket: 16 });
+        // small d collapses to one padded block
+        let tiny = LdAdam::new(10, LdAdamConfig::default());
+        let tg = tiny.geometry();
+        assert_eq!(tg.n_blocks, 1);
+        assert_eq!(tg.block % tg.cols, 0);
+        assert!(tg.rank <= tg.rows.min(tg.cols));
+    }
+
+    #[test]
+    fn sharded_step_matches_sequential_bitwise() {
+        let d = 1000; // padded tail: 15 full blocks + 40 real elements in the last
+        for workers in [1usize, 2, 4, 8] {
+            let mut seq = LdAdam::new(d, small_cfg());
+            let mut par = LdAdam::new(d, small_cfg());
+            let pool = ExecPool::new(workers);
+            let mut ps = randvec(20, d, 1.0);
+            let mut pp = ps.clone();
+            for s in 0..6 {
+                let g = randvec(30 + s, d, 1.0);
+                seq.step(&mut ps, &g, 1e-2);
+                par.step_sharded(&mut pp, &g, 1e-2, &pool);
+            }
+            assert_eq!(ps, pp, "workers={workers}");
+            assert_eq!(seq.snapshot(), par.snapshot(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = LdAdam::new(256, LdAdamConfig::default());
+        let mut x = randvec(1, 256, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for _ in 0..400 {
+            let g = x.clone();
+            opt.step(&mut x, &g, 0.02);
+        }
+        let n1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(n1 < 0.2 * n0, "{n0} -> {n1}");
+    }
+
+    #[test]
+    fn projector_columns_are_orthonormal() {
+        let d = 256;
+        let mut opt = LdAdam::new(d, small_cfg());
+        let mut x = randvec(2, d, 1.0);
+        for s in 0..5 {
+            let g = randvec(40 + s, d, 1.0);
+            opt.step(&mut x, &g, 1e-2);
+        }
+        let geo = opt.geometry();
+        for b in 0..geo.n_blocks {
+            let p = opt.projector(b);
+            assert_eq!(p.len(), geo.cols * geo.rank);
+            for j in 0..geo.rank {
+                for k in 0..=j {
+                    let mut dot = 0f32;
+                    for i in 0..geo.cols {
+                        dot += p[i * geo.rank + j] * p[i * geo.rank + k];
+                    }
+                    let expect = if j == k { 1.0 } else { 0.0 };
+                    assert!((dot - expect).abs() < 1e-3, "block {b} col {j}x{k}: {dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ef_residual_is_nearly_orthogonal_to_subspace() {
+        // The exact residual is orthogonal to P by construction; what is
+        // stored is its Quant4 image, so only quantization noise can leak
+        // into the subspace. The leak ratio must stay far below 1.
+        let d = 512;
+        let mut opt = LdAdam::new(d, small_cfg());
+        let mut x = randvec(3, d, 1.0);
+        for s in 0..8 {
+            let g = randvec(60 + s, d, 1.0);
+            opt.step(&mut x, &g, 1e-2);
+        }
+        assert!(opt.ef_norm() > 0.0, "rank-2 of 8 rows must leave residual mass");
+        let ratio = opt.ef_projection_ratio();
+        assert!(ratio < 0.5, "subspace leak {ratio}");
+    }
+
+    #[test]
+    fn state_bytes_match_documented_formula() {
+        // d = 4096 at the defaults: one 64×64 block, r=4.
+        let opt = LdAdam::new(4096, LdAdamConfig::default());
+        let g = opt.geometry();
+        assert_eq!((g.rows, g.cols, g.rank), (64, 64, 4));
+        let dense_f32 = g.n_blocks * (g.cols * g.rank + 2 * g.rows * g.rank);
+        assert_eq!(opt.state_bytes(), 4 * dense_f32 + 4096 / 2 + (4096 / 64) * 8);
+        assert_eq!(opt.paper_state_bytes(), 4 * dense_f32 + 4096 / 2);
+        // ≈ 1.25 B/param at the defaults
+        assert_eq!(opt.paper_state_bytes(), 5120);
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bit_exactly() {
+        let d = 300;
+        let mut a = LdAdam::new(d, small_cfg());
+        let mut xa = randvec(4, d, 1.0);
+        for s in 0..5 {
+            let g = randvec(70 + s, d, 1.0);
+            a.step(&mut xa, &g, 1e-2);
+        }
+        let snap = a.snapshot();
+        let mut b = LdAdam::new(d, small_cfg());
+        b.restore(&snap).unwrap();
+        let mut xb = xa.clone();
+        for s in 5..10 {
+            let g = randvec(70 + s, d, 1.0);
+            a.step(&mut xa, &g, 1e-2);
+            b.step(&mut xb, &g, 1e-2);
+        }
+        assert_eq!(xa, xb);
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let a = LdAdam::new(1000, small_cfg());
+        let mut b = LdAdam::new(500, small_cfg());
+        assert!(b.restore(&a.snapshot()).is_err());
+        let mut c = LdAdam::new(1000, LdAdamConfig { rank: 3, ..small_cfg() });
+        assert!(c.restore(&a.snapshot()).is_err());
+    }
+}

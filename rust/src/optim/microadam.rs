@@ -790,6 +790,19 @@ impl Optimizer for MicroAdam {
     fn t(&self) -> u64 {
         self.t
     }
+
+    fn snapshot_state(&self) -> Option<super::OptSnapshot> {
+        // Snapshot is only defined for the paper's Quant4 EF mode; the
+        // diagnostic Off/Dense modes save params-only checkpoints.
+        self.snapshot().ok().map(super::OptSnapshot::MicroAdam)
+    }
+
+    fn restore_state(&mut self, snap: &super::OptSnapshot) -> Result<()> {
+        match snap {
+            super::OptSnapshot::MicroAdam(s) => self.restore(s),
+            other => bail!("micro-adam cannot restore a {} snapshot", other.kind_name()),
+        }
+    }
 }
 
 #[cfg(test)]

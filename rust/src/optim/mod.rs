@@ -13,22 +13,54 @@
 //! | [`adafactor`] | factorized second-moment baseline |
 //! | [`came`] | confidence-guided factorized baseline |
 //! | [`galore`] | low-rank projection baseline (+ the Appendix-F EF variant) |
+//! | [`ldadam`] | LDAdam: low-rank projected moments + EF (shares the Quant4 kernels) |
+//! | [`adammini`] | Adam-mini: per-block shared second moment (shares the block partition) |
 //!
 //! All optimizers share [`Optimizer`]: a flat-vector `step`, an accurate
 //! accounting of allocated state bytes, and the "paper bytes" the same state
 //! would occupy with the paper's storage dtypes (bf16/int16/4-bit).
+//! See `rust/src/optim/README.md` for the per-optimizer state-layout /
+//! bytes-per-param / reducer-compatibility table.
 
 pub mod adafactor;
+pub mod adammini;
 pub mod adamw;
 pub mod adamw8bit;
 pub mod came;
 pub mod galore;
+pub mod ldadam;
 pub mod microadam;
 pub mod microadam_analytical;
 pub mod sgd;
 
 use crate::coordinator::layout::TensorSpec;
+use crate::coordinator::state::MicroAdamSnapshot;
 use crate::exec::ExecPool;
+use anyhow::{bail, Result};
+
+/// Typed optimizer-state checkpoint payload: one variant per optimizer
+/// that supports bit-exact snapshot/restore through the checkpoint format.
+/// Carried by [`crate::coordinator::checkpoint::Checkpoint`] (format v3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptSnapshot {
+    /// MicroAdam window + Quant4 EF state.
+    MicroAdam(MicroAdamSnapshot),
+    /// LDAdam projectors, projected moments, and Quant4 EF state.
+    LdAdam(ldadam::LdAdamSnapshot),
+    /// Adam-mini dense first moment + per-block second-moment means.
+    AdamMini(adammini::AdamMiniSnapshot),
+}
+
+impl OptSnapshot {
+    /// Stable variant label for error messages and the checkpoint tag.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            OptSnapshot::MicroAdam(_) => "micro-adam",
+            OptSnapshot::LdAdam(_) => "ldadam",
+            OptSnapshot::AdamMini(_) => "adammini",
+        }
+    }
+}
 
 /// One tensor's (parameter, gradient) pair for the multi-tensor step entry
 /// point. Chunks are consecutive segments of the optimizer's flat vector;
@@ -107,6 +139,22 @@ pub trait Optimizer {
     }
     /// Current step count (number of `step` calls so far).
     fn t(&self) -> u64;
+    /// Copy the optimizer state out as a typed checkpoint payload.
+    /// `None` means this optimizer does not (yet) support state
+    /// checkpointing; trainers then save params-only checkpoints.
+    fn snapshot_state(&self) -> Option<OptSnapshot> {
+        None
+    }
+    /// Restore state from a typed checkpoint payload. The default is a
+    /// typed error (never a panic): unsupported optimizers and mismatched
+    /// snapshot variants both refuse loudly.
+    fn restore_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        bail!(
+            "optimizer {} cannot restore a {} state snapshot (unsupported)",
+            self.name(),
+            snap.kind_name()
+        )
+    }
 }
 
 /// Carve a flat (padded) parameter/gradient pair into consecutive
@@ -194,13 +242,17 @@ pub enum OptimizerKind {
     GaLore,
     /// GaLore with the Appendix-F error-feedback variant.
     GaLoreEf,
+    /// LDAdam: low-rank projected moments + EF ([`ldadam::LdAdam`]).
+    LdAdam,
+    /// Adam-mini: per-block shared second moment ([`adammini::AdamMini`]).
+    AdamMini,
 }
 
 impl OptimizerKind {
     /// Every instantiable kind, in the order the benches sweep them.
     pub fn all() -> &'static [OptimizerKind] {
         use OptimizerKind::*;
-        &[MicroAdam, Adam, AdamW, AdamW8bit, Sgd, AdaFactor, Came, GaLore, GaLoreEf]
+        &[MicroAdam, Adam, AdamW, AdamW8bit, Sgd, AdaFactor, Came, GaLore, GaLoreEf, LdAdam, AdamMini]
     }
 }
 
@@ -241,6 +293,14 @@ pub fn build(
         })),
         OptimizerKind::GaLoreEf => Box::new(galore::GaLore::new(d, specs.to_vec(), galore::GaLoreConfig {
             error_feedback: true,
+            ..Default::default()
+        })),
+        OptimizerKind::LdAdam => Box::new(ldadam::LdAdam::new(d, ldadam::LdAdamConfig {
+            weight_decay,
+            ..Default::default()
+        })),
+        OptimizerKind::AdamMini => Box::new(adammini::AdamMini::new(d, adammini::AdamMiniConfig {
+            weight_decay,
             ..Default::default()
         })),
     }

@@ -5,7 +5,7 @@
 
 use microadam::coordinator::checkpoint::Checkpoint;
 use microadam::optim::microadam::{MicroAdam, MicroAdamConfig};
-use microadam::optim::Optimizer;
+use microadam::optim::{OptSnapshot, Optimizer};
 use microadam::util::bf16::{bf16_to_f32, f32_to_bf16};
 use microadam::util::rng::Rng;
 
@@ -142,13 +142,15 @@ fn window_checkpoint_roundtrip_resumes_bit_exactly() {
         a.step(&mut xa, &g, 0.01);
     }
     let snap = a.snapshot().unwrap();
-    Checkpoint { step: a.t(), params: xa.clone(), opt: Some(snap) }.save(path).unwrap();
+    Checkpoint { step: a.t(), params: xa.clone(), opt: Some(OptSnapshot::MicroAdam(snap)) }
+        .save(path)
+        .unwrap();
 
     let back = Checkpoint::load(path).unwrap();
     assert_eq!(back.step, 6);
     assert_eq!(back.params, xa);
     let mut b = MicroAdam::new(d, cfg);
-    b.restore(back.opt.as_ref().unwrap()).unwrap();
+    b.restore_state(back.opt.as_ref().unwrap()).unwrap();
     assert_eq!(b.t(), 6);
     let mut xb = back.params.clone();
 

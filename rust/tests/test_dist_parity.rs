@@ -132,6 +132,42 @@ fn dense_reduce_training_decreases_loss() {
 }
 
 #[test]
+fn zoo_optimizers_train_end_to_end_at_ranks_2_dense() {
+    // The acceptance shape for the optimizer zoo: `--optim ldadam` /
+    // `--optim adammini` with `--ranks 2 --reduce dense` runs end-to-end
+    // and actually trains.
+    for kind in [OptimizerKind::LdAdam, OptimizerKind::AdamMini] {
+        let mut t = DistTrainer::new(cfg(2, ReducerKind::Dense, kind, 80)).unwrap();
+        let mut logger = MetricsLogger::new("").unwrap();
+        t.train(&mut logger).unwrap();
+        assert!(logger.history.iter().all(|m| m.loss.is_finite()), "{kind:?}");
+        assert!(
+            logger.tail_loss(10) < logger.first_loss(),
+            "{kind:?}: {} -> {}",
+            logger.first_loss(),
+            logger.tail_loss(10)
+        );
+    }
+}
+
+#[test]
+fn unsupported_optimizer_reducer_combos_are_typed_errors() {
+    // Plain Top-K drops gradient mass with no error feedback; LDAdam and
+    // Adam-mini compound that bias into their own compressed state, so the
+    // combination must be refused up front — a typed error naming the
+    // reducer, never a panic or a silently-biased run.
+    for kind in [OptimizerKind::LdAdam, OptimizerKind::AdamMini] {
+        let err = DistTrainer::new(cfg(2, ReducerKind::TopK, kind, 1))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("topk"), "{kind:?}: {err}");
+        // the self-correcting sparse exchange stays available
+        assert!(DistTrainer::new(cfg(2, ReducerKind::EfTopK, kind, 1)).is_ok(), "{kind:?}");
+    }
+}
+
+#[test]
 fn eftopk_residual_accounting_reports_paper_dtype_bytes() {
     // Paper geometry: block 4096, bucket 64 -> per rank the residual costs
     // exactly what Quant4 reports (d/2 packed nibbles + 2 f32 stats per

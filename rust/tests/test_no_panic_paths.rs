@@ -44,6 +44,31 @@ fn truncated_frames_are_typed_errors_not_panics() {
 }
 
 #[test]
+fn unsupported_optimizer_reducer_combo_is_err_not_panic() {
+    // The optimizer x reducer gate is part of the same contract: an
+    // unsupported combination must surface as a constructor `Err`, not a
+    // panic mid-run after state is already allocated.
+    use microadam::coordinator::config::TrainConfig;
+    use microadam::dist::{DistTrainer, ReducerKind};
+    use microadam::optim::OptimizerKind;
+    for kind in [OptimizerKind::LdAdam, OptimizerKind::AdamMini] {
+        let cfg = TrainConfig {
+            model: "mlp_tiny".into(),
+            optimizer: kind,
+            steps: 1,
+            ranks: 2,
+            reduce: ReducerKind::TopK,
+            ..Default::default()
+        };
+        let res = std::panic::catch_unwind(|| DistTrainer::new(cfg).map(|_| ()));
+        match res {
+            Ok(inner) => assert!(inner.is_err(), "{kind:?} x topk must be a typed error"),
+            Err(_) => panic!("{kind:?} x topk panicked instead of returning Err"),
+        }
+    }
+}
+
+#[test]
 fn tcp_worker_survives_a_dead_coordinator() {
     let pending = TcpPending::bind("127.0.0.1:0", 2).unwrap();
     let addr = pending.local_addr().unwrap().to_string();

@@ -330,3 +330,74 @@ fn simd_auto_matches_forced_scalar_with_padded_tail() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Tier 4: the sharded optimizer zoo holds the same contract
+// ---------------------------------------------------------------------------
+//
+// LDAdam and Adam-mini ride the same block-partitioned engine conventions
+// as MicroAdam: `step_sharded` at any worker count must be bit-identical
+// to the sequential `step`, and the full state snapshot must agree after
+// the trajectory — blocks are carved whole, never reassociated.
+
+use microadam::optim::adammini::{AdamMini, AdamMiniConfig};
+use microadam::optim::ldadam::{LdAdam, LdAdamConfig};
+
+/// `steps` steps of sequential `step` vs `step_sharded` at each worker
+/// count in {1, 2, 4, 8}, asserting bitwise-identical params every step
+/// and an identical state snapshot at the end.
+fn assert_zoo_parity<F: Fn() -> Box<dyn Optimizer>>(mk: F, d: usize, steps: usize, seed: u64, label: &str) {
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ExecPool::new(workers);
+        let mut reference = mk();
+        let mut sharded = mk();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut x_ref = randvec(&mut rng, d, 1.0);
+        let mut x_sh = x_ref.clone();
+        for s in 0..steps {
+            let g = randvec(&mut rng, d, 1.0);
+            reference.step(&mut x_ref, &g, 5e-3);
+            sharded.step_sharded(&mut x_sh, &g, 5e-3, &pool);
+            assert_eq!(x_ref, x_sh, "{label} d={d} workers={workers} diverged at step {s}");
+        }
+        assert_eq!(reference.t(), sharded.t(), "{label} d={d} workers={workers} t");
+        assert_eq!(
+            reference.snapshot_state(),
+            sharded.snapshot_state(),
+            "{label} d={d} workers={workers} state snapshot diverged"
+        );
+    }
+}
+
+/// Small blocks -> many blocks -> real sharding even at 8 workers; the
+/// refresh RNG is seeded per (block, t), so worker assignment must not
+/// show up in the sketches.
+fn ld_cfg() -> LdAdamConfig {
+    LdAdamConfig { rank: 2, update_every: 3, block: 64, cols: 8, qbucket: 16, ..Default::default() }
+}
+
+#[test]
+fn ldadam_sharded_matches_step_all_worker_counts() {
+    assert_zoo_parity(|| Box::new(LdAdam::new(1024, ld_cfg())), 1024, 9, 42, "ldadam");
+}
+
+#[test]
+fn ldadam_sharded_matches_step_with_padded_tail() {
+    // d = 1000 with block 64 pads to 1024: the last shard owns the partial
+    // block, where params/grads are shorter than the padded span.
+    assert_zoo_parity(|| Box::new(LdAdam::new(1000, ld_cfg())), 1000, 8, 7, "ldadam-tail");
+}
+
+#[test]
+fn adammini_sharded_matches_step_all_worker_counts() {
+    let cfg = AdamMiniConfig { block: 64, ..Default::default() };
+    assert_zoo_parity(|| Box::new(AdamMini::new(1024, cfg)), 1024, 9, 42, "adammini");
+}
+
+#[test]
+fn adammini_sharded_matches_step_with_padded_tail() {
+    // d = 1003 with block 64: the final block holds 43 real elements and
+    // its shared second moment averages over exactly that count.
+    let cfg = AdamMiniConfig { block: 64, ..Default::default() };
+    assert_zoo_parity(|| Box::new(AdamMini::new(1003, cfg)), 1003, 8, 7, "adammini-tail");
+}

@@ -127,7 +127,7 @@ fn checkpoint_resume_is_bit_exact() {
     Checkpoint {
         step: b1.t,
         params: b1.params_vec().unwrap(),
-        opt: Some(b1.microadam_state().unwrap().snapshot().unwrap()),
+        opt: b1.opt_snapshot().unwrap(),
     }
     .save(path)
     .unwrap();
@@ -136,7 +136,7 @@ fn checkpoint_resume_is_bit_exact() {
     let mut b2 =
         Trainer::new(cfg("lm_tiny", OptimizerKind::MicroAdam, OptBackend::Aot, 4)).unwrap();
     b2.set_params(&ck.params).unwrap();
-    b2.microadam_state_mut().unwrap().restore(ck.opt.as_ref().unwrap()).unwrap();
+    b2.restore_opt_snapshot(ck.opt.as_ref().unwrap()).unwrap();
     b2.t = ck.step;
     // data stream: b2's corpus is fresh, so replay the first 4 batches that
     // b1 consumed by stepping a throwaway 4 times... instead we rely on the
@@ -149,7 +149,7 @@ fn checkpoint_resume_is_bit_exact() {
     let mut b3 =
         Trainer::new(cfg("lm_tiny", OptimizerKind::MicroAdam, OptBackend::Aot, 4)).unwrap();
     b3.set_params(&ck.params).unwrap();
-    b3.microadam_state_mut().unwrap().restore(ck.opt.as_ref().unwrap()).unwrap();
+    b3.restore_opt_snapshot(ck.opt.as_ref().unwrap()).unwrap();
     b3.t = ck.step;
     let mut lg2 = MetricsLogger::new("").unwrap();
     let mut lg3 = MetricsLogger::new("").unwrap();
