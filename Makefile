@@ -28,8 +28,9 @@
 #   make bench-smoke few-second perf probe: bench_optimizer_step in smoke
 #                    mode (writes $(BENCH_JSON): steps/s, resident
 #                    bytes/param, wire bytes, per-kernel scalar-vs-simd
-#                    medians, and the real-socket tcp gather/compress
-#                    overlap ms) + bench_kernels in smoke mode + the
+#                    medians, the real-socket tcp gather/compress overlap
+#                    ms, and the star/ring/tree topology × ranks sweep
+#                    with rank-0 bytes + overlaps) + bench_kernels + the
 #                    artifact-free perf_probe --native size sweep, all
 #                    built --features simd so the vector kernels are the
 #                    ones measured; every PR records the perf trajectory
@@ -51,14 +52,17 @@ XLA_RS ?= /opt/xla-rs
 # Where the smoke lane writes its JSON record.
 BENCH_JSON ?= BENCH_SMOKE.json
 
-.PHONY: ci ci-pjrt bench-smoke trace-smoke artifacts test-tcp lint loom miri ci-sanitize
+.PHONY: ci ci-pjrt bench-smoke trace-smoke artifacts test-tcp test-topology lint loom miri ci-sanitize
 
 ci:
 	cargo build --release
 	# `cargo test -q` includes the tcp transport lane (test_tcp_parity:
 	# parity + fault injection, pinned to 127.0.0.1 ephemeral ports — no
-	# external network needed); run it alone via `make test-tcp`
+	# external network needed) and the topology lane (test_topology_parity:
+	# ring/tree vs loopback bit-parity + fold-order properties); run them
+	# alone via `make test-tcp` / `make test-topology`
 	cargo test -q
+	$(MAKE) test-topology
 	cargo test --doc -q
 	# Feature matrix: the scalar kernels must build standalone, and the
 	# simd feature (runtime-dispatched vector kernels) must pass the whole
@@ -133,6 +137,12 @@ ci-sanitize:
 test-tcp:
 	cargo test -q --test test_tcp_parity
 
+# The topology lane: ring/tree vs loopback bit-parity across reducers ×
+# ranks × carriers, plus the partial-aggregate fold-order property tests
+# (invoked by `make ci`; everything binds 127.0.0.1 ephemeral ports).
+test-topology:
+	cargo test -q --test test_topology_parity
+
 ci-pjrt:
 	@if [ ! -d "$(XLA_RS)" ]; then \
 		echo "ci-pjrt: vendored xla crate not found at $(XLA_RS) — skipping"; \
@@ -162,6 +172,17 @@ bench-smoke:
 	assert need <= set(names), 'frontier missing optimizers: %s' % (need - set(names)); \
 	[(float(r['resident_bytes_per_param']), float(r['paper_bytes_per_param']), float(r['final_loss'])) for r in rows]; \
 	print('bench-smoke: frontier OK (%d optimizers)' % len(rows))"
+	@python3 -c "\
+	import json, sys; \
+	rec = json.load(open('$(BENCH_JSON)')); \
+	rows = rec.get('topology'); \
+	assert isinstance(rows, list) and rows, 'BENCH json: missing/empty topology key'; \
+	topos = {r['topology'] for r in rows}; \
+	assert {'star', 'ring'} <= topos, 'topology sweep missing star/ring rows: %s' % topos; \
+	assert all(float(r['gather_overlap_ms']) >= 0.0 for r in rows), 'negative gather overlap'; \
+	assert all(float(r['decode_overlap_ms']) >= 0.0 for r in rows), 'negative decode overlap'; \
+	[(int(r['ranks']), int(r['rank0_bytes_sent']), int(r['rank0_bytes_received'])) for r in rows]; \
+	print('bench-smoke: topology OK (%d rows: %s)' % (len(rows), sorted(topos)))"
 	@echo "bench-smoke: record in $(BENCH_JSON)"
 
 # Observability lane: a short traced 2-rank eftopk run (loopback — no

@@ -10,8 +10,9 @@
 //! sweep to a few seconds, and `MICROADAM_BENCH_JSON=path` writes a
 //! `BENCH_*.json` record (steps/s per engine configuration, measured
 //! resident state bytes/param, bf16 window bytes/value, per-rank wire
-//! bytes, per-kernel scalar-vs-simd medians, and the bytes-vs-loss
-//! `"frontier"` rows) so the perf trajectory is recorded across PRs.
+//! bytes, per-kernel scalar-vs-simd medians, the bytes-vs-loss
+//! `"frontier"` rows, and the star/ring/tree `"topology"` sweep) so the
+//! perf trajectory is recorded across PRs.
 
 use microadam::bench;
 
@@ -75,6 +76,16 @@ fn main() {
                     Vec::new()
                 }
             };
+            // Topology × ranks sweep: what moves through rank 0 on
+            // star/ring/tree, and the overlap each endpoint hides.
+            println!("\n== topology x ranks probe ==");
+            let topology = match bench::run_topology_probe(if smoke { 12 } else { 40 }) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    eprintln!("bench smoke: topology sweep failed: {e:#}");
+                    Vec::new()
+                }
+            };
             let record = bench::smoke_json(
                 d_scale,
                 &rows,
@@ -82,6 +93,7 @@ fn main() {
                 tcp.as_ref(),
                 Some(overhead_pct),
                 &frontier,
+                &topology,
             );
             match std::fs::write(&path, record.to_string()) {
                 Ok(()) => println!("\nbench record written to {path}"),

@@ -742,6 +742,117 @@ pub fn run_tcp_probe(steps: u64) -> Result<TcpProbe> {
     })
 }
 
+/// One row of [`run_topology_probe`]'s topology × ranks sweep.
+pub struct TopologyProbeRow {
+    pub topology: &'static str,
+    pub ranks: usize,
+    /// Bytes the rank-0 endpoint physically wrote to its sockets.
+    pub rank0_bytes_sent: u64,
+    /// Bytes the rank-0 endpoint physically read off its sockets — the
+    /// star→ring crossover signal: O(ranks) on star, O(1) on ring.
+    pub rank0_bytes_received: u64,
+    /// Gather/relay overlap rank 0 recorded (ms). Structurally 0 on ring,
+    /// where rank 0 only ever sees the finished hop frame.
+    pub overlap_ms: f64,
+    /// Decode/gather overlap rank 0 recorded (ms; streaming slab decode
+    /// under the gather tail).
+    pub decode_overlap_ms: f64,
+    pub final_loss: f32,
+}
+
+/// The topology × ranks sweep behind the `BENCH_*.json` `topology` key:
+/// real-socket tcp runs over `127.0.0.1` ephemeral ports for each of
+/// star/ring/tree at 2 and 4 ranks, recording what moves through rank 0
+/// (the star bottleneck ring/tree exist to break) and the overlap the
+/// pipelined endpoints hide. eftopk on the native mlp_tiny workload, so
+/// the hop frames carry the same compressed slabs a real run would.
+pub fn run_topology_probe(steps: u64) -> Result<Vec<TopologyProbeRow>> {
+    use crate::dist::{
+        ring_tcp_coordinator, ring_tcp_worker, tree_tcp_coordinator, tree_tcp_worker,
+        DistTrainer, ReducerKind, TcpPending, TcpTransport, Topology, Transport, TransportKind,
+    };
+
+    let mut out = Vec::new();
+    println!("\ntopology x ranks sweep (tcp over 127.0.0.1, eftopk, {steps} steps):");
+    println!(
+        "{:<6} {:<6} {:>14} {:>14} {:>12} {:>12} {:>10}",
+        "topo", "ranks", "r0 sent B", "r0 recv B", "overlap ms", "decode ms", "loss"
+    );
+    for &topology in &[Topology::Star, Topology::Ring, Topology::Tree] {
+        for &ranks in &[2usize, 4] {
+            let cfg = TrainConfig {
+                model: "mlp_tiny".into(),
+                optimizer: OptimizerKind::MicroAdam,
+                schedule: LrSchedule::Const { lr: 3e-3 },
+                steps,
+                seed: 7,
+                log_every: 10_000,
+                workers: 1,
+                ranks,
+                reduce: ReducerKind::EfTopK,
+                transport: TransportKind::Tcp,
+                topology,
+                ..Default::default()
+            };
+            let pending = TcpPending::bind("127.0.0.1:0", ranks)?;
+            let addr = pending.local_addr()?.to_string();
+            let workers: Vec<_> = (1..ranks)
+                .map(|r| {
+                    let addr = addr.clone();
+                    let wcfg = cfg.clone();
+                    std::thread::spawn(move || -> Result<()> {
+                        let t: Box<dyn Transport> = match topology {
+                            Topology::Star => Box::new(TcpTransport::connect(&addr, r, ranks)?),
+                            Topology::Ring => Box::new(ring_tcp_worker(&addr, r, ranks)?),
+                            Topology::Tree => Box::new(tree_tcp_worker(&addr, r, ranks)?),
+                        };
+                        let mut tr = DistTrainer::with_transport(wcfg, t, vec![r])?;
+                        let mut logger = MetricsLogger::new("")?;
+                        tr.train(&mut logger)
+                    })
+                })
+                .collect();
+            let coord: Box<dyn Transport> = match topology {
+                Topology::Star => Box::new(pending.accept()?),
+                Topology::Ring => Box::new(ring_tcp_coordinator(pending)?),
+                Topology::Tree => Box::new(tree_tcp_coordinator(pending)?),
+            };
+            let mut tr = DistTrainer::with_transport(cfg, coord, vec![0])?;
+            let mut logger = MetricsLogger::new("")?;
+            tr.train(&mut logger)?;
+            for w in workers {
+                w.join()
+                    .map_err(|_| anyhow::anyhow!("topology probe worker panicked"))??;
+            }
+            let row = TopologyProbeRow {
+                topology: crate::dist::topology_name(topology),
+                ranks,
+                rank0_bytes_sent: tr.transport_bytes_sent(),
+                rank0_bytes_received: tr.transport_bytes_received(),
+                overlap_ms: tr.gather_overlap_ms(),
+                decode_overlap_ms: tr.decode_overlap_ms(),
+                final_loss: logger.tail_loss(10),
+            };
+            println!(
+                "{:<6} {:<6} {:>14} {:>14} {:>12.3} {:>12.3} {:>10.4}",
+                row.topology,
+                row.ranks,
+                row.rank0_bytes_sent,
+                row.rank0_bytes_received,
+                row.overlap_ms,
+                row.decode_overlap_ms,
+                row.final_loss
+            );
+            out.push(row);
+        }
+    }
+    println!(
+        "  shape to check: rank-0 recv bytes grow with ranks on star but stay \
+         one-hop-frame flat on ring"
+    );
+    Ok(out)
+}
+
 // ---------------------------------------------------------------------------
 // Micro-benchmarks (shared by the `benches/` targets)
 // ---------------------------------------------------------------------------
@@ -1134,8 +1245,9 @@ pub fn run_frontier(steps: u64) -> Result<Vec<FrontierRow>> {
 /// gather/relay overlap ms and per-rank arrival latencies, plus the
 /// measured [`trace_overhead_pct`] when the caller ran that check, and
 /// the per-kernel scalar-vs-simd medians from [`bench_kernel_rows`], and
-/// the bytes-vs-loss [`run_frontier`] rows under `"frontier"`. Pure
-/// assembly — the caller runs the probe and the benchmarks.
+/// the bytes-vs-loss [`run_frontier`] rows under `"frontier"`, and the
+/// [`run_topology_probe`] topology × ranks sweep under `"topology"`. Pure
+/// assembly — the caller runs the probes and the benchmarks.
 pub fn smoke_json(
     d: usize,
     rows: &[BenchRow],
@@ -1143,6 +1255,7 @@ pub fn smoke_json(
     tcp: Option<&TcpProbe>,
     trace_overhead_pct: Option<f64>,
     frontier: &[FrontierRow],
+    topology: &[TopologyProbeRow],
 ) -> crate::util::json::Json {
     use crate::dist::{build_reducer, ReducerKind, SparseReduceConfig};
     use crate::util::json::{self, Json};
@@ -1224,6 +1337,20 @@ pub fn smoke_json(
             ])
         })
         .collect();
+    let topo_rows: Vec<Json> = topology
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("topology", json::s(r.topology)),
+                ("ranks", json::num(r.ranks as f64)),
+                ("rank0_bytes_sent", json::num(r.rank0_bytes_sent as f64)),
+                ("rank0_bytes_received", json::num(r.rank0_bytes_received as f64)),
+                ("gather_overlap_ms", json::num(r.overlap_ms)),
+                ("decode_overlap_ms", json::num(r.decode_overlap_ms)),
+                ("final_loss", json::num(r.final_loss as f64)),
+            ])
+        })
+        .collect();
     let probe = MicroAdam::new(d, MicroAdamConfig::default());
     json::obj(vec![
         ("bench", json::s("smoke")),
@@ -1233,6 +1360,7 @@ pub fn smoke_json(
         ("resident_state", Json::Arr(state_rows)),
         ("wire", Json::Arr(wires)),
         ("frontier", Json::Arr(frontier_rows)),
+        ("topology", Json::Arr(topo_rows)),
         ("simd", simd),
         ("tcp_probe", tcp),
         (

@@ -8,7 +8,9 @@ use anyhow::{anyhow, bail, Result};
 
 use super::schedule::LrSchedule;
 use crate::dist::reducer::{parse_reducer, reducer_name, ReducerKind};
-use crate::dist::transport::{parse_transport, transport_name, TransportKind};
+use crate::dist::transport::{
+    parse_topology, parse_transport, topology_name, transport_name, Topology, TransportKind,
+};
 use crate::optim::OptimizerKind;
 use crate::util::json::{self, Json};
 
@@ -62,6 +64,11 @@ pub struct TrainConfig {
     /// additionally spans real hosts via `--rendezvous host:port` +
     /// `--external yes`).
     pub transport: TransportKind,
+    /// Aggregation topology for the multi-process transports: rank-0 `star`
+    /// (default), successor-chained `ring` (partial hop aggregation), or
+    /// binary `tree` (gather from children, relay the bundle down). Loopback
+    /// and shm are star-only.
+    pub topology: Topology,
 }
 
 impl Default for TrainConfig {
@@ -84,6 +91,7 @@ impl Default for TrainConfig {
             ranks: 1,
             reduce: ReducerKind::Dense,
             transport: TransportKind::Loopback,
+            topology: Topology::Star,
         }
     }
 }
@@ -145,6 +153,9 @@ impl TrainConfig {
         if let Some(v) = j.get("transport").and_then(Json::as_str) {
             cfg.transport = parse_transport(v)?;
         }
+        if let Some(v) = j.get("topology").and_then(Json::as_str) {
+            cfg.topology = parse_topology(v)?;
+        }
         let lr = j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3) as f32;
         cfg.schedule = match j.get("schedule").and_then(Json::as_str).unwrap_or("const") {
             "const" => LrSchedule::Const { lr },
@@ -202,6 +213,7 @@ impl TrainConfig {
             ("ranks", json::num(self.ranks as f64)),
             ("reduce", json::s(reducer_name(self.reduce))),
             ("transport", json::s(transport_name(self.transport))),
+            ("topology", json::s(topology_name(self.topology))),
         ])
     }
 }
@@ -265,6 +277,7 @@ mod tests {
             ranks: 4,
             reduce: ReducerKind::EfTopK,
             transport: TransportKind::Uds,
+            topology: Topology::Ring,
         };
         let j = cfg.to_json().to_string();
         let back = TrainConfig::from_json(&j).unwrap();
@@ -280,6 +293,7 @@ mod tests {
         assert_eq!(back.ranks, 4);
         assert_eq!(back.reduce, ReducerKind::EfTopK);
         assert_eq!(back.transport, TransportKind::Uds);
+        assert_eq!(back.topology, Topology::Ring);
     }
 
     #[test]
@@ -291,6 +305,8 @@ mod tests {
         assert_eq!(cfg.ranks, 1);
         assert_eq!(cfg.reduce, ReducerKind::Dense);
         assert!(!cfg.pin_workers);
+        // configs written before the topology field existed keep meaning star
+        assert_eq!(cfg.topology, Topology::Star);
     }
 
     #[test]
@@ -313,6 +329,11 @@ mod tests {
         assert_eq!(back.transport, TransportKind::Tcp);
         assert!(TrainConfig::from_json(r#"{"reduce": "gossip"}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"transport": "pigeon"}"#).is_err());
+        let cfg = TrainConfig::from_json(r#"{"topology": "tree", "transport": "tcp"}"#).unwrap();
+        assert_eq!(cfg.topology, Topology::Tree);
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.topology, Topology::Tree);
+        assert!(TrainConfig::from_json(r#"{"topology": "mesh"}"#).is_err());
     }
 
     #[test]

@@ -31,7 +31,12 @@
 //!   (file-backed shared-memory mailboxes, page-cache only on tmpfs).
 //!   All implement the same gather-to-all [`Transport`] collective,
 //!   split into `post_send`/`collect` phases so the rank-0 coordinator
-//!   pipelines its relay with the still-arriving worker frames.
+//!   pipelines its relay with the still-arriving worker frames. The
+//!   uds/tcp transports additionally re-wire into ring or tree
+//!   topologies (`--topology ring|tree`): [`RingDriver`] forwards
+//!   partially-aggregated hop frames to the successor rank,
+//!   [`TreeDriver`] gathers from binary-tree children and relays the
+//!   bundle down — both bit-identical to the star collective.
 //! * [`replica`] — per-rank state: rank-seeded `MarkovCorpus` /
 //!   `NliDataset` / `ImageDataset` streams (artifact engine) or a
 //!   pure-rust MLP shard (native engine, runs on the stub runtime), with
@@ -64,6 +69,8 @@
 //! [`TcpTransport`]: transport::TcpTransport
 //! [`ShmTransport`]: transport::ShmTransport
 //! [`Transport`]: transport::Transport
+//! [`RingDriver`]: transport::RingDriver
+//! [`TreeDriver`]: transport::TreeDriver
 //! [`Quant4::state_bytes`]: crate::quant::Quant4::state_bytes
 
 pub mod reducer;
@@ -81,7 +88,10 @@ pub use replica::{
 };
 pub use trainer::DistTrainer;
 pub use transport::{
-    default_rendezvous, parse_transport, transport_name, Loopback, ShmTransport, TcpPending,
-    TcpTransport, Transport, TransportKind, UdsPending, UdsTransport,
+    default_rendezvous, parse_topology, parse_transport, ring_tcp_coordinator, ring_tcp_worker,
+    ring_uds_coordinator, ring_uds_worker, topology_name, transport_name, tree_tcp_coordinator,
+    tree_tcp_worker, tree_uds_coordinator, tree_uds_worker, GatherStream, Loopback, RingDriver,
+    ShmTransport, TcpPending, TcpTransport, Topology, Transport, TransportKind, TreeDriver,
+    UdsPending, UdsTransport,
 };
-pub use wire::{Frame, FrameReader, PayloadTag, WireError, FRAME_OVERHEAD};
+pub use wire::{Frame, FrameReader, PayloadTag, WireError, FLAG_HOP, FRAME_OVERHEAD};

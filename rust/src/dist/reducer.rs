@@ -149,6 +149,32 @@ pub trait GradReducer: Send {
         out: &mut [f32],
         pool: &ExecPool,
     ) -> Result<()>;
+    /// Phase B, streaming entry point: decode one gathered rank's payload
+    /// into its resident slot. Decoding rank `r` touches only rank `r`'s
+    /// state, so frames can be decoded in *arrival* order while later
+    /// frames are still in flight; once every rank is loaded,
+    /// [`GradReducer::aggregate_loaded`] runs the identical phase-B kernel
+    /// as [`GradReducer::aggregate_payloads`], so the streaming and batch
+    /// paths are bit-identical by construction.
+    fn load_payload(&mut self, rank: usize, payload: &[u8]) -> Result<()>;
+    /// Aggregate the slots populated by [`GradReducer::load_payload`] into
+    /// `out` (the mean). Bit-identical to
+    /// [`GradReducer::aggregate_payloads`] over the same payloads.
+    fn aggregate_loaded(&mut self, out: &mut [f32], pool: &ExecPool) -> Result<()>;
+    /// The associative partial-aggregate over one wire payload — the ring
+    /// hop kernel: parse `payload`'s bytes directly (no resident slab is
+    /// touched, hence `&self`) and add its contribution into the running
+    /// per-coordinate sum `acc` (length `d`). Zero-initializing `acc`,
+    /// folding every rank's payload in **ascending rank order**, then
+    /// calling [`GradReducer::finalize_partial`] reproduces
+    /// [`GradReducer::aggregate_payloads`] bit-for-bit: both paths start
+    /// each coordinate's sum at 0.0 and apply the same additions in the
+    /// same (rank, slab-entry) order, ending on the one multiply by `1/n`.
+    fn accumulate_payload(&self, payload: &[u8], acc: &mut [f32]) -> Result<()>;
+    /// Turn the rank-ascending partial sum built by
+    /// [`GradReducer::accumulate_payload`] folds into the mean — the single
+    /// `* 1/ranks` the phase-B kernels end on.
+    fn finalize_partial(&self, acc: &mut [f32]);
     /// Paper-dtype bytes one rank puts on the wire per step.
     fn wire_bytes_per_rank(&self) -> usize;
     /// Persistent compressor/residual state across all ranks, paper dtypes
@@ -274,6 +300,15 @@ fn dense_mean(d: usize, ranks: usize, grads: &[&[f32]], out: &mut [f32], pool: &
     });
 }
 
+/// The shared `* 1/ranks` epilogue of every phase-B kernel, reused by the
+/// ring partial path so the final multiply cannot diverge between them.
+fn scale_mean(acc: &mut [f32], ranks: usize) {
+    let inv = 1.0f32 / ranks as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+}
+
 impl GradReducer for DenseAllReduce {
     fn name(&self) -> String {
         "dense-allreduce".into()
@@ -311,6 +346,45 @@ impl GradReducer for DenseAllReduce {
         let refs: Vec<&[f32]> = self.rx.chunks(self.d).collect();
         dense_mean(self.d, self.ranks, &refs, out, pool);
         Ok(())
+    }
+
+    fn load_payload(&mut self, rank: usize, payload: &[u8]) -> Result<()> {
+        if rank >= self.ranks {
+            bail!("dense load: rank {rank} out of range ({} ranks)", self.ranks);
+        }
+        self.rx.resize(self.ranks * self.d, 0.0);
+        wire::dense_from_payload(payload, &mut self.rx[rank * self.d..(rank + 1) * self.d])
+            .map_err(|e| anyhow!("rank {rank} payload: {e}"))
+    }
+
+    fn aggregate_loaded(&mut self, out: &mut [f32], pool: &ExecPool) -> Result<()> {
+        if self.rx.len() != self.ranks * self.d {
+            bail!("dense aggregate: no payloads loaded");
+        }
+        let refs: Vec<&[f32]> = self.rx.chunks(self.d).collect();
+        dense_mean(self.d, self.ranks, &refs, out, pool);
+        Ok(())
+    }
+
+    fn accumulate_payload(&self, payload: &[u8], acc: &mut [f32]) -> Result<()> {
+        if acc.len() != self.d {
+            bail!("dense accumulate: partial length {} != d {}", acc.len(), self.d);
+        }
+        if payload.len() != 4 * self.d {
+            bail!("dense accumulate: payload {} B != {} B", payload.len(), 4 * self.d);
+        }
+        // Bit-preserving f32 reads added in coordinate order — per
+        // coordinate this is exactly one term of dense_mean's
+        // rank-ascending `s += g[i]` chain.
+        for (a, b) in acc.iter_mut().zip(payload.chunks_exact(4)) {
+            // repolint: allow(no-panic): chunks_exact(4) yields 4-byte slices.
+            *a += f32::from_bits(u32::from_le_bytes(b.try_into().expect("4-byte chunk")));
+        }
+        Ok(())
+    }
+
+    fn finalize_partial(&self, acc: &mut [f32]) {
+        scale_mean(acc, self.ranks);
     }
 
     fn wire_bytes_per_rank(&self) -> usize {
@@ -563,6 +637,43 @@ impl SparseCore {
         Ok(())
     }
 
+    /// The ring hop kernel: parse one rank's `(u16 idx, bf16 val)` slab
+    /// straight out of the wire bytes and add every entry into the dense
+    /// running sum `acc`, in [`SparseCore::aggregate`]'s block/entry
+    /// order. `&self`: no resident slab is touched, so a hop endpoint can
+    /// fold payloads of ranks it never compressed or decoded.
+    fn accumulate_payload(&self, payload: &[u8], acc: &mut [f32]) -> Result<()> {
+        if acc.len() != self.d {
+            bail!("sparse accumulate: partial length {} != d {}", acc.len(), self.d);
+        }
+        let nbkb = self.nb * self.kb;
+        if payload.len() != 4 * nbkb {
+            bail!("sparse accumulate: payload {} B != {} B", payload.len(), 4 * nbkb);
+        }
+        // Wire slab layout (see wire::slab_payload): all u16 indices, then
+        // all bf16 values; entry (block b, slot k) sits at flat position
+        // `b*kb + k` in both halves.
+        let half = 2 * nbkb;
+        for b in 0..self.nb {
+            let base = b * self.block;
+            // Same bound as aggregate()'s per-shard chunk length: only real
+            // (unpadded) coordinates are writable, so padded-tail entries
+            // (value 0 by construction) and corrupt indices alike fall to
+            // the same guard star-aggregation applies. `base < d` always:
+            // the last block starts below `d` by the padding construction.
+            let chunk_len = self.block.min(self.d - base);
+            for k in 0..self.kb {
+                let e = 2 * (b * self.kb + k);
+                let i = u16::from_le_bytes([payload[e], payload[e + 1]]) as usize;
+                let v = u16::from_le_bytes([payload[half + e], payload[half + e + 1]]);
+                if i < chunk_len {
+                    acc[base + i] += bf16_to_f32(v);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Phase B (sharded by block range): densely aggregate the resident
     /// sparse slabs into `out` as the mean.
     fn aggregate(&self, out: &mut [f32], pool: &ExecPool) {
@@ -777,6 +888,26 @@ impl GradReducer for TopKReduce {
         Ok(())
     }
 
+    fn load_payload(&mut self, rank: usize, payload: &[u8]) -> Result<()> {
+        if rank >= self.core.ranks {
+            bail!("sparse load: rank {rank} out of range ({} ranks)", self.core.ranks);
+        }
+        self.core.load_payload(rank, payload)
+    }
+
+    fn aggregate_loaded(&mut self, out: &mut [f32], pool: &ExecPool) -> Result<()> {
+        self.core.aggregate(out, pool);
+        Ok(())
+    }
+
+    fn accumulate_payload(&self, payload: &[u8], acc: &mut [f32]) -> Result<()> {
+        self.core.accumulate_payload(payload, acc)
+    }
+
+    fn finalize_partial(&self, acc: &mut [f32]) {
+        scale_mean(acc, self.core.ranks);
+    }
+
     fn wire_bytes_per_rank(&self) -> usize {
         self.core.wire_bytes_per_rank()
     }
@@ -851,6 +982,26 @@ impl GradReducer for EfTopKReduce {
         self.core.load_payloads(payloads)?;
         self.core.aggregate(out, pool);
         Ok(())
+    }
+
+    fn load_payload(&mut self, rank: usize, payload: &[u8]) -> Result<()> {
+        if rank >= self.core.ranks {
+            bail!("sparse load: rank {rank} out of range ({} ranks)", self.core.ranks);
+        }
+        self.core.load_payload(rank, payload)
+    }
+
+    fn aggregate_loaded(&mut self, out: &mut [f32], pool: &ExecPool) -> Result<()> {
+        self.core.aggregate(out, pool);
+        Ok(())
+    }
+
+    fn accumulate_payload(&self, payload: &[u8], acc: &mut [f32]) -> Result<()> {
+        self.core.accumulate_payload(payload, acc)
+    }
+
+    fn finalize_partial(&self, acc: &mut [f32]) {
+        scale_mean(acc, self.core.ranks);
     }
 
     fn wire_bytes_per_rank(&self) -> usize {
@@ -1080,6 +1231,84 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn rank_ascending_partial_fold_matches_phase_b_bitwise() {
+        // The ring invariant: zero acc -> fold every rank's payload in
+        // ascending order via accumulate_payload -> finalize_partial must
+        // equal aggregate_payloads to the bit, every reducer kind, EF
+        // evolution included.
+        let d = 300; // padded tail
+        let ranks = 4;
+        let pool = ExecPool::new(2);
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut r = build_reducer(kind, d, ranks, small_cfg());
+            let mut out = vec![0f32; d];
+            for round in 0..4 {
+                let grads = rank_grads(70 + round, ranks, d);
+                let payloads: Vec<Vec<u8>> =
+                    (0..ranks).map(|k| r.compress_payload(k, &grads[k])).collect();
+                let mut acc = vec![0f32; d];
+                for p in &payloads {
+                    r.accumulate_payload(p, &mut acc).unwrap();
+                }
+                r.finalize_partial(&mut acc);
+                r.aggregate_payloads(&payloads, &mut out, &pool).unwrap();
+                let same = out.iter().zip(&acc).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{kind:?} round {round}: partial fold diverged from phase B");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_load_path_matches_batch_aggregate_bitwise() {
+        // load_payload in out-of-order arrival + aggregate_loaded ==
+        // aggregate_payloads over the same payloads (the streaming-decode
+        // contract the pipelined collect relies on).
+        let d = 300;
+        let ranks = 3;
+        let pool = ExecPool::serial();
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut batch = build_reducer(kind, d, ranks, small_cfg());
+            let mut stream = build_reducer(kind, d, ranks, small_cfg());
+            let grads = rank_grads(55, ranks, d);
+            let pb: Vec<Vec<u8>> =
+                (0..ranks).map(|r| batch.compress_payload(r, &grads[r])).collect();
+            let ps: Vec<Vec<u8>> =
+                (0..ranks).map(|r| stream.compress_payload(r, &grads[r])).collect();
+            assert_eq!(pb, ps, "{kind:?}: same grads must serialize identically");
+            let mut out_batch = vec![0f32; d];
+            batch.aggregate_payloads(&pb, &mut out_batch, &pool).unwrap();
+            let mut out_stream = vec![0f32; d];
+            for r in [2usize, 0, 1] {
+                stream.load_payload(r, &ps[r]).unwrap();
+            }
+            stream.aggregate_loaded(&mut out_stream, &pool).unwrap();
+            assert_eq!(out_batch, out_stream, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn partial_fold_paths_reject_malformed_input() {
+        let d = 128;
+        let pool = ExecPool::serial();
+        for kind in [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK] {
+            let mut r = build_reducer(kind, d, 2, small_cfg());
+            let good = r.compress_payload(0, &vec![0.5f32; d]);
+            // wrong partial length
+            let mut short = vec![0f32; d - 1];
+            assert!(r.accumulate_payload(&good, &mut short).is_err(), "{kind:?}");
+            // wrong payload length
+            let mut acc = vec![0f32; d];
+            assert!(r.accumulate_payload(&good[..good.len() - 1], &mut acc).is_err());
+            // out-of-range rank on the streaming path
+            assert!(r.load_payload(9, &good).is_err(), "{kind:?}");
+        }
+        // dense aggregate_loaded before any load is a typed error
+        let mut dense = build_reducer(ReducerKind::Dense, d, 2, small_cfg());
+        let mut out = vec![0f32; d];
+        assert!(dense.aggregate_loaded(&mut out, &pool).is_err());
     }
 
     #[test]

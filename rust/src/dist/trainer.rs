@@ -41,7 +41,9 @@
 //! `ranks`/`reduce`/`transport` fields) configures it, [`MetricsLogger`]
 //! records it (rank 0 / loopback only), and [`Checkpoint`] persists it.
 
-use anyhow::{bail, Result};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::TrainConfig;
@@ -56,7 +58,9 @@ use crate::util::json;
 
 use super::reducer::{build_reducer, reducer_name, GradReducer, SparseReduceConfig};
 use super::replica::{native_model_spec, ArtifactReplica, NativeModelSpec, NativeReplica};
-use super::transport::{transport_name, Loopback, Transport, TransportKind};
+use super::transport::{
+    topology_name, transport_name, Loopback, Topology, Transport, TransportKind,
+};
 use super::wire::{self, Frame};
 
 /// Which gradient backend drives the replicas.
@@ -94,6 +98,11 @@ pub struct DistTrainer {
     /// Total framed bytes all ranks have put on the wire so far
     /// (`ranks * (wire_bytes_per_rank + FRAME_OVERHEAD)` per step).
     wire_bytes: u64,
+    /// Cumulative microseconds of decoded-slab lead time under the
+    /// gather: for every streamed frame, the gap between its slab decode
+    /// finishing and the gather completing (see
+    /// [`DistTrainer::decode_overlap_ms`]).
+    decode_overlap_micros: u64,
 }
 
 impl DistTrainer {
@@ -107,6 +116,13 @@ impl DistTrainer {
                 "DistTrainer::new is the in-process constructor; `--transport {}` runs \
                  through the multi-process launcher (or DistTrainer::with_transport)",
                 transport_name(cfg.transport)
+            );
+        }
+        if cfg.topology != Topology::Star {
+            bail!(
+                "dist: loopback hosts every rank in-process, so `--topology {}` has no \
+                 links to re-wire — ring/tree need a stream transport (uds|tcp)",
+                topology_name(cfg.topology)
             );
         }
         let ranks = cfg.ranks.max(1);
@@ -133,6 +149,14 @@ impl DistTrainer {
             bail!(
                 "dist: transport built for {} ranks, config says {ranks}",
                 transport.ranks()
+            );
+        }
+        if transport.topology() != cfg.topology {
+            bail!(
+                "dist: transport aggregates over a {} topology, config says {} — \
+                 every endpoint must run the collective the config records",
+                topology_name(transport.topology()),
+                topology_name(cfg.topology)
             );
         }
         if local_ranks.is_empty()
@@ -203,6 +227,7 @@ impl DistTrainer {
             pool,
             t: 0,
             wire_bytes: 0,
+            decode_overlap_micros: 0,
         };
         me.config_handshake()?;
         Ok(me)
@@ -391,6 +416,21 @@ impl DistTrainer {
         self.transport.overlap_ms()
     }
 
+    /// Cumulative milliseconds of decoded-slab lead time under the
+    /// gather: for every frame handed over by the streaming collect, the
+    /// gap between its payload slab being decoded and the whole gather
+    /// completing. > 0 means slab decode genuinely ran while later
+    /// frames were still in flight (star/tree streaming decode; 0 on the
+    /// ring path, which folds in-network instead of decoding per rank).
+    pub fn decode_overlap_ms(&self) -> f64 {
+        self.decode_overlap_micros as f64 / 1000.0
+    }
+
+    /// Aggregation topology of this endpoint's collective.
+    pub fn topology(&self) -> Topology {
+        self.transport.topology()
+    }
+
     /// Ranks in the order their frames completed in the most recent
     /// gather (coordinator only; empty on workers/loopback).
     pub fn last_arrival_order(&self) -> &[u16] {
@@ -491,26 +531,103 @@ impl DistTrainer {
         //    relays its frame (and each completed rank-ascending prefix)
         //    while the remaining worker frames are still in flight.
         self.transport.post_send(local)?;
-        let frames = self.transport.collect()?;
-        if frames.len() != self.ranks {
-            bail!("dist: transport returned {} frames for {} ranks", frames.len(), self.ranks);
-        }
-        let mut loss_sum = 0f32;
-        for (r, f) in frames.iter().enumerate() {
-            if f.rank as usize != r || f.step != self.t || f.tag != tag {
+        let d = self.d;
+        let step_now = self.t;
+        let loss = if self.transport.topology() == Topology::Ring {
+            // In-ring reduction: every endpoint folds the wire payloads
+            // into the circulating partial with the same rank-ascending op
+            // order the star aggregate uses, so the single result frame —
+            // and everything downstream of it — is bit-identical to star.
+            let reducer = &mut self.reducer;
+            let mut fold = |payload: &[u8], acc: &mut Vec<f32>| -> Result<()> {
+                if acc.is_empty() {
+                    acc.resize(d, 0.0);
+                } else if acc.len() != d {
+                    bail!("dist: ring partial carries {} coordinates, model d = {d}", acc.len());
+                }
+                reducer.accumulate_payload(payload, acc)
+            };
+            let frames = self.transport.collect_reduced(&mut fold)?;
+            let [result] = frames.as_slice() else {
                 bail!(
-                    "dist: mismatched frame in slot {r} (rank {} step {} tag {:?}) at step {}",
-                    f.rank,
-                    f.step,
-                    f.tag,
-                    self.t
+                    "dist: ring reduction returned {} frames (expected the single result \
+                     frame)",
+                    frames.len()
+                );
+            };
+            if result.flags & wire::FLAG_HOP == 0 || result.step != step_now || result.tag != tag
+            {
+                bail!(
+                    "dist: malformed ring result frame (rank {} step {} tag {:?} flags \
+                     {:#04x}) at step {step_now}",
+                    result.rank,
+                    result.step,
+                    result.tag,
+                    result.flags
                 );
             }
-            loss_sum += f.loss;
-        }
-        let loss = loss_sum / self.ranks as f32;
-        let payloads: Vec<Vec<u8>> = frames.into_iter().map(|f| f.payload).collect();
-        self.reducer.aggregate_payloads(&payloads, &mut self.agg, &self.pool)?;
+            let (fan_in, sum) = wire::hop_from_payload(&result.payload)
+                .map_err(|e| anyhow!("dist: ring result payload: {e}"))?;
+            if fan_in as usize != self.ranks {
+                bail!("dist: ring result folded {fan_in} ranks, world is {}", self.ranks);
+            }
+            if sum.len() != d {
+                bail!("dist: ring result carries {} coordinates, model d = {d}", sum.len());
+            }
+            self.agg.copy_from_slice(&sum);
+            self.reducer.finalize_partial(&mut self.agg);
+            // the hop chain folded losses rank-ascending from 0.0 — the
+            // same fold the streaming path below runs over full frames
+            result.loss / self.ranks as f32
+        } else {
+            // Star / tree: the full frame set, decoded *streaming* — each
+            // rank's payload slab is loaded the moment its frame arrives,
+            // while later frames are still in flight, overlapping decode
+            // with the gather tail.
+            let reducer = &mut self.reducer;
+            let mut decoded_at: Vec<Instant> = Vec::with_capacity(self.ranks);
+            let mut on_frame = |f: &Frame| -> Result<()> {
+                if f.step != step_now || f.tag != tag {
+                    bail!(
+                        "dist: mismatched frame (rank {} step {} tag {:?}) at step {step_now}",
+                        f.rank,
+                        f.step,
+                        f.tag
+                    );
+                }
+                reducer.load_payload(f.rank as usize, &f.payload)?;
+                decoded_at.push(Instant::now());
+                Ok(())
+            };
+            let frames = self.transport.collect_streaming(&mut on_frame)?;
+            let gather_done = Instant::now();
+            for t0 in &decoded_at {
+                self.decode_overlap_micros +=
+                    gather_done.duration_since(*t0).as_micros() as u64;
+            }
+            if frames.len() != self.ranks {
+                bail!(
+                    "dist: transport returned {} frames for {} ranks",
+                    frames.len(),
+                    self.ranks
+                );
+            }
+            let mut loss_sum = 0f32;
+            for (r, f) in frames.iter().enumerate() {
+                if f.rank as usize != r || f.step != step_now || f.tag != tag {
+                    bail!(
+                        "dist: mismatched frame in slot {r} (rank {} step {} tag {:?}) at \
+                         step {step_now}",
+                        f.rank,
+                        f.step,
+                        f.tag
+                    );
+                }
+                loss_sum += f.loss;
+            }
+            self.reducer.aggregate_loaded(&mut self.agg, &self.pool)?;
+            loss_sum / self.ranks as f32
+        };
         self.wire_bytes += (self.ranks * (wire_per_rank + wire::FRAME_OVERHEAD)) as u64;
 
         // 4. replicated optimizer step over the real tensor boundaries
@@ -597,6 +714,8 @@ impl DistTrainer {
                 ("frame_bytes_per_rank", json::num(self.frame_bytes_per_rank() as f64)),
                 ("reducer_state_bytes", json::num(self.reducer_state_bytes() as f64)),
                 ("gather_overlap_ms", json::num(self.gather_overlap_ms())),
+                ("topology", json::s(topology_name(self.transport.topology()))),
+                ("decode_overlap_ms", json::num(self.decode_overlap_ms())),
             ]))?;
             logger.flush()?;
         }
@@ -699,6 +818,16 @@ mod tests {
         let mut c = cfg(2, ReducerKind::Dense, 1);
         c.transport = TransportKind::Uds;
         assert!(DistTrainer::new(c).is_err());
+    }
+
+    #[test]
+    fn loopback_rejects_ring_and_tree_topologies() {
+        for t in [Topology::Ring, Topology::Tree] {
+            let mut c = cfg(2, ReducerKind::Dense, 1);
+            c.topology = t;
+            let err = DistTrainer::new(c).map(|_| ()).unwrap_err().to_string();
+            assert!(err.contains("topology"), "{err}");
+        }
     }
 
     #[test]

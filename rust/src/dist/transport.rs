@@ -46,6 +46,14 @@
 //!   the coordinator cannot stream the relay — but its gather still polls
 //!   all uplinks concurrently and observes out-of-order arrival.
 //!
+//! The rank-0 star is only one of three **aggregation topologies** over
+//! the stream transports: `--topology ring|tree` re-wires the uds/tcp
+//! star rendezvous into point-to-point neighbor links driven by
+//! [`RingDriver`] (successor hop chain, in-network reduction via
+//! [`Transport::collect_reduced`]) or [`TreeDriver`] (binary gather/relay
+//! tree) — see `rust/src/dist/README.md` §10 for the normative hop-frame
+//! layout and fan-in rules. Loopback and shm stay star-only.
+//!
 //! A worker's uplink per step is exactly one frame, so its
 //! [`Transport::bytes_sent`] grows by `FRAME_OVERHEAD +
 //! wire_bytes_per_rank()` per step — the equality the transport parity
@@ -56,7 +64,7 @@
 
 use std::fs::{File, OpenOptions};
 use std::io::{ErrorKind, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::os::unix::fs::FileExt;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
@@ -64,7 +72,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::wire::{Frame, FrameReader, WireError, FLAG_HELLO, MAX_SECTION_BYTES};
+use super::wire::{
+    self, Frame, FrameReader, PayloadTag, WireError, FLAG_HELLO, FLAG_HOP, MAX_SECTION_BYTES,
+};
 
 /// How long a transport waits for a peer mid-run before giving up.
 /// Generous: a step on the native workloads takes milliseconds; a
@@ -115,6 +125,45 @@ pub fn transport_name(k: TransportKind) -> &'static str {
         TransportKind::Uds => "uds",
         TransportKind::Tcp => "tcp",
         TransportKind::Shm => "shm",
+    }
+}
+
+/// Which aggregation topology a run's per-step collective uses (see
+/// `rust/src/dist/README.md` §10). Star is the PR-5 rank-0 gather/relay;
+/// ring and tree are the scale-out alternatives layered over the same
+/// stream machinery by [`RingDriver`] / [`TreeDriver`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Every worker uplinks to rank 0, which relays the rank-ascending
+    /// bundle — O(ranks) bandwidth and decode on one endpoint.
+    #[default]
+    Star,
+    /// Successor-directed hop chain: each endpoint folds its payload into
+    /// a circulating partial-aggregate ([`FLAG_HOP`] frames) — O(1)
+    /// per-endpoint bandwidth, O(ranks) latency.
+    Ring,
+    /// Binary reduction tree: endpoints gather from children, forward up,
+    /// and relay the complement back down — O(log ranks) depth with at
+    /// most 3 links per endpoint.
+    Tree,
+}
+
+/// Parse a topology name (kebab-case, as in the CLI and config files).
+pub fn parse_topology(s: &str) -> Result<Topology> {
+    Ok(match s {
+        "star" => Topology::Star,
+        "ring" => Topology::Ring,
+        "tree" => Topology::Tree,
+        other => bail!("unknown topology {other} (expected star|ring|tree)"),
+    })
+}
+
+/// Canonical name of a topology.
+pub fn topology_name(t: Topology) -> &'static str {
+    match t {
+        Topology::Star => "star",
+        Topology::Ring => "ring",
+        Topology::Tree => "tree",
     }
 }
 
@@ -174,6 +223,46 @@ pub trait Transport: Send {
     /// [`Transport::collect`].
     fn exchange(&mut self, local: Vec<Frame>) -> Result<Vec<Frame>> {
         self.post_send(local)?;
+        self.collect()
+    }
+    /// Aggregation topology of this endpoint's collective ([`Topology::Star`]
+    /// unless a topology driver wraps the streams).
+    fn topology(&self) -> Topology {
+        Topology::Star
+    }
+    /// Streaming variant of [`Transport::collect`]: invoke `on_frame` once
+    /// per gathered frame **in arrival order** (locally-hosted frames
+    /// first), possibly while later frames are still in flight, then
+    /// return the same rank-ascending set `collect` would. The trainer
+    /// uses the callback to decode each rank's payload slab under the
+    /// gather tail instead of after it. The default runs the callbacks
+    /// after a plain collect — correct everywhere, overlapping nothing;
+    /// the stream transports override it with true under-the-gather
+    /// delivery. An `on_frame` error aborts the round as a collect error.
+    fn collect_streaming(
+        &mut self,
+        on_frame: &mut dyn FnMut(&Frame) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        let frames = self.collect()?;
+        for f in &frames {
+            on_frame(f)?;
+        }
+        Ok(frames)
+    }
+    /// In-network-reduced variant of [`Transport::collect`] for topologies
+    /// that aggregate *inside* the collective (ring): `fold(payload, acc)`
+    /// must add one rank's wire payload into the running per-coordinate
+    /// partial `acc` (growing it on first use). Topologies that support it
+    /// return a **single** [`FLAG_HOP`] result frame whose payload is the
+    /// finished partial over all ranks ([`wire::hop_payload`] layout) —
+    /// identical bytes on every endpoint. The default ignores `fold` and
+    /// returns the plain gathered set, so callers must branch on
+    /// [`Transport::topology`], not on the result shape alone.
+    fn collect_reduced(
+        &mut self,
+        fold: &mut dyn FnMut(&[u8], &mut Vec<f32>) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        let _ = fold;
         self.collect()
     }
     /// Framed bytes this endpoint has serialized and sent so far (for
@@ -312,10 +401,12 @@ impl Transport for Loopback {
 // Shared stream-endpoint machinery (uds + tcp)
 // ---------------------------------------------------------------------------
 
-/// What the stream hub needs from a socket beyond `Read + Write`: a
-/// settable receive timeout (reads only — `SO_RCVTIMEO` never blocks the
-/// relay writes).
-trait GatherStream: Read + Write + Send {
+/// What the stream hub and the topology drivers need from a socket beyond
+/// `Read + Write`: a settable receive timeout (reads only — `SO_RCVTIMEO`
+/// never blocks the relay writes). Public so the topology fault-injection
+/// tests can drive [`RingDriver::from_streams`] /
+/// [`TreeDriver::from_streams`] over raw sockets.
+pub trait GatherStream: Read + Write + Send {
     fn set_recv_timeout(&self, t: Option<Duration>) -> std::io::Result<()>;
 }
 
@@ -419,6 +510,14 @@ impl<S: GatherStream> StreamHub<S> {
     }
 
     fn collect(&mut self, kind: &str) -> Result<Vec<Frame>> {
+        self.collect_cb(kind, None)
+    }
+
+    fn collect_cb(
+        &mut self,
+        kind: &str,
+        mut on_frame: Option<&mut dyn FnMut(&Frame) -> Result<()>>,
+    ) -> Result<Vec<Frame>> {
         let mut p =
             self.pending.take().ok_or_else(|| anyhow!("{kind}: collect without post_send"))?;
         // Brief read timeouts during the gather: the round-robin poll must
@@ -428,7 +527,7 @@ impl<S: GatherStream> StreamHub<S> {
         }
         let sp = crate::trace::begin();
         let overlap_before = self.overlap_micros;
-        let res = self.collect_inner(&mut p, kind);
+        let res = self.collect_inner(&mut p, kind, &mut on_frame);
         for w in &self.workers {
             let _ = w.set_recv_timeout(Some(PEER_TIMEOUT));
         }
@@ -447,8 +546,20 @@ impl<S: GatherStream> StreamHub<S> {
         res
     }
 
-    fn collect_inner(&mut self, p: &mut PendingGather, kind: &str) -> Result<Vec<Frame>> {
+    fn collect_inner(
+        &mut self,
+        p: &mut PendingGather,
+        kind: &str,
+        on_frame: &mut Option<&mut dyn FnMut(&Frame) -> Result<()>>,
+    ) -> Result<Vec<Frame>> {
         let n = self.workers.len();
+        // Streaming contract: locally-hosted frames first — rank 0's own
+        // frame is decodable before any worker byte arrives.
+        if let Some(cb) = on_frame.as_deref_mut() {
+            if let Some(f0) = &p.frames[0] {
+                cb(f0)?;
+            }
+        }
         let deadline = Instant::now() + PEER_TIMEOUT;
         loop {
             let done = p.prefix == self.ranks && p.sent_upto.iter().all(|&s| s == self.ranks);
@@ -484,6 +595,11 @@ impl<S: GatherStream> StreamHub<S> {
                         self.received += raw.len() as u64;
                         p.arrival.push(f.rank);
                         p.arrival_ms.push(p.opened.elapsed().as_secs_f64() * 1e3);
+                        // streaming decode: hand the frame over in arrival
+                        // order, while other uplinks are still in flight
+                        if let Some(cb) = on_frame.as_deref_mut() {
+                            cb(&f)?;
+                        }
                         // relay the worker's exact (CRC-verified) wire
                         // bytes — no re-encode pass on the hot path
                         p.encoded[i + 1] = Some(raw);
@@ -601,11 +717,18 @@ impl<S: GatherStream> StreamEndpoint<S> {
     }
 
     fn collect(&mut self) -> Result<Vec<Frame>> {
+        self.collect_cb(None)
+    }
+
+    fn collect_cb(
+        &mut self,
+        mut on_frame: Option<&mut dyn FnMut(&Frame) -> Result<()>>,
+    ) -> Result<Vec<Frame>> {
         let name = self.name;
         let ranks = self.ranks;
         let sp = crate::trace::begin();
         let res = match &mut self.role {
-            StreamRole::Coordinator { hub } => hub.collect(name),
+            StreamRole::Coordinator { hub } => hub.collect_cb(name, on_frame),
             StreamRole::Worker { stream, pending_step, received, .. } => {
                 let step = pending_step
                     .take()
@@ -624,6 +747,12 @@ impl<S: GatherStream> StreamEndpoint<S> {
                         );
                     }
                     *received += f.encoded_len() as u64;
+                    // streaming decode: the pipelined relay delivers the
+                    // bundle prefix while the coordinator is still
+                    // gathering the tail, so per-frame decode overlaps it
+                    if let Some(cb) = on_frame.as_deref_mut() {
+                        cb(&f)?;
+                    }
                     frames.push(f);
                 }
                 Ok(frames)
@@ -794,6 +923,19 @@ impl UdsPending {
     /// worker never shows (e.g. it crashed at startup), so the launcher
     /// can reap instead of hanging.
     pub fn accept(self) -> Result<UdsTransport> {
+        let ranks = self.ranks;
+        let (workers, path) = self.accept_streams()?;
+        Ok(UdsTransport {
+            inner: StreamEndpoint::coordinator("uds", workers, ranks),
+            path: Some(path),
+        })
+    }
+
+    /// The raw rendezvous: accept and rank-slot the worker streams without
+    /// committing them to the star endpoint — the topology constructors
+    /// ([`ring_uds_coordinator`] / [`tree_uds_coordinator`]) reuse the
+    /// star hello machinery through this and then re-wire the links.
+    fn accept_streams(self) -> Result<(Vec<UnixStream>, PathBuf)> {
         // UnixListener has no accept timeout; poll a non-blocking accept
         // against a deadline instead.
         self.listener.set_nonblocking(true)?;
@@ -816,10 +958,7 @@ impl UdsPending {
             "uds",
             &rendezvous,
         )?;
-        Ok(UdsTransport {
-            inner: StreamEndpoint::coordinator("uds", workers, self.ranks),
-            path: Some(self.path),
-        })
+        Ok((workers, self.path))
     }
 }
 
@@ -835,8 +974,17 @@ impl UdsTransport {
     /// coordinator has bound it (or [`CONNECT_TIMEOUT`] passes), then send
     /// the hello frame.
     pub fn connect<P: AsRef<Path>>(path: P, rank: usize, ranks: usize) -> Result<UdsTransport> {
+        let (stream, hello_bytes) = Self::connect_stream(path.as_ref(), rank, ranks)?;
+        Ok(UdsTransport {
+            inner: StreamEndpoint::worker("uds", stream, ranks, hello_bytes),
+            path: None,
+        })
+    }
+
+    /// The raw worker rendezvous (connect + hello), shared with the
+    /// topology worker constructors.
+    fn connect_stream(path: &Path, rank: usize, ranks: usize) -> Result<(UnixStream, u64)> {
         assert!(rank > 0 && rank < ranks, "workers are ranks 1..{ranks}, got {rank}");
-        let path = path.as_ref();
         let deadline = Instant::now() + CONNECT_TIMEOUT;
         let mut stream = loop {
             match UnixStream::connect(path) {
@@ -854,10 +1002,7 @@ impl UdsTransport {
         stream.set_write_timeout(Some(PEER_TIMEOUT))?;
         let hello = Frame::hello(rank).encode();
         stream.write_all(&hello).context("uds: send hello")?;
-        Ok(UdsTransport {
-            inner: StreamEndpoint::worker("uds", stream, ranks, hello.len() as u64),
-            path: None,
-        })
+        Ok((stream, hello.len() as u64))
     }
 
     /// Ranks of the last completed gather in uplink-arrival order
@@ -890,6 +1035,13 @@ impl Transport for UdsTransport {
 
     fn collect(&mut self) -> Result<Vec<Frame>> {
         self.inner.collect()
+    }
+
+    fn collect_streaming(
+        &mut self,
+        on_frame: &mut dyn FnMut(&Frame) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        self.inner.collect_cb(Some(on_frame))
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -955,8 +1107,17 @@ impl TcpPending {
     /// stream (frames are small; Nagle would serialize the pipelined
     /// relay behind ACKs).
     pub fn accept(self) -> Result<TcpTransport> {
+        let ranks = self.ranks;
+        let workers = self.accept_streams()?;
+        Ok(TcpTransport { inner: StreamEndpoint::coordinator("tcp", workers, ranks) })
+    }
+
+    /// The raw rendezvous (accept + rank-slot), shared with the topology
+    /// coordinator constructors ([`ring_tcp_coordinator`] /
+    /// [`tree_tcp_coordinator`]).
+    fn accept_streams(self) -> Result<Vec<TcpStream>> {
         self.listener.set_nonblocking(true)?;
-        let workers = accept_workers(
+        accept_workers(
             || {
                 let (stream, _) = self.listener.accept()?;
                 stream.set_nonblocking(false)?;
@@ -971,8 +1132,7 @@ impl TcpPending {
             self.hello_wait,
             "tcp",
             &self.addr,
-        )?;
-        Ok(TcpTransport { inner: StreamEndpoint::coordinator("tcp", workers, self.ranks) })
+        )
     }
 }
 
@@ -989,6 +1149,15 @@ impl TcpTransport {
     /// [`CONNECT_TIMEOUT`] passes), then send the hello frame.
     /// `TCP_NODELAY` is set before any byte moves.
     pub fn connect(addr: &str, rank: usize, ranks: usize) -> Result<TcpTransport> {
+        let (stream, hello_bytes) = Self::connect_stream(addr, rank, ranks)?;
+        Ok(TcpTransport {
+            inner: StreamEndpoint::worker("tcp", stream, ranks, hello_bytes),
+        })
+    }
+
+    /// The raw worker rendezvous (connect + nodelay + hello), shared with
+    /// the topology worker constructors.
+    fn connect_stream(addr: &str, rank: usize, ranks: usize) -> Result<(TcpStream, u64)> {
         assert!(rank > 0 && rank < ranks, "workers are ranks 1..{ranks}, got {rank}");
         let deadline = Instant::now() + CONNECT_TIMEOUT;
         let mut stream = loop {
@@ -1007,9 +1176,7 @@ impl TcpTransport {
         stream.set_write_timeout(Some(PEER_TIMEOUT))?;
         let hello = Frame::hello(rank).encode();
         stream.write_all(&hello).context("tcp: send hello")?;
-        Ok(TcpTransport {
-            inner: StreamEndpoint::worker("tcp", stream, ranks, hello.len() as u64),
-        })
+        Ok((stream, hello.len() as u64))
     }
 
     /// Ranks of the last completed gather in uplink-arrival order
@@ -1036,6 +1203,13 @@ impl Transport for TcpTransport {
         self.inner.collect()
     }
 
+    fn collect_streaming(
+        &mut self,
+        on_frame: &mut dyn FnMut(&Frame) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        self.inner.collect_cb(Some(on_frame))
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.inner.bytes_sent()
     }
@@ -1055,6 +1229,1125 @@ impl Transport for TcpTransport {
     fn last_arrival_ms(&self) -> &[f64] {
         self.inner.last_arrival_ms()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Ring / tree topology drivers (uds + tcp)
+// ---------------------------------------------------------------------------
+//
+// Both drivers reuse the star rendezvous (bind → hello → rank slots) purely
+// as a control plane: once every rank is identified, the endpoints exchange
+// a link table (rank → per-rank listener address) over the star streams,
+// dial their topology neighbors directly, and drop the star links. The
+// per-step data plane then never funnels through rank 0's hub. Listeners
+// are bound *before* the table is broadcast, so every dial lands in an
+// already-open backlog — the connect-then-accept sequence cannot deadlock
+// across the world. Hop-frame layout and fan-in rules are normative in
+// `rust/src/dist/README.md` §10.
+
+/// How a topology driver opens its neighbor links: one listener per rank
+/// plus point-to-point dials. Implemented for tcp (ephemeral ports on the
+/// rendezvous interface) and uds (per-rank socket paths derived from the
+/// rendezvous path).
+trait LinkFabric {
+    type Stream: GatherStream + Send + 'static;
+    type Listener: Send;
+    /// Transport display name for error contexts (`tcp` / `uds`).
+    fn kind(&self) -> &'static str;
+    /// Bind this rank's link listener; returns it plus the address string
+    /// peers dial (published through the link table).
+    fn bind(&self) -> Result<(Self::Listener, String)>;
+    /// Dial a peer's published link address (retrying until
+    /// [`CONNECT_TIMEOUT`]), with the peer timeouts applied to the stream.
+    fn connect(&self, addr: &str) -> Result<Self::Stream>;
+    /// Accept one inbound link (polling against [`PEER_TIMEOUT`]), with
+    /// the peer timeouts applied to the stream.
+    fn accept(&self, listener: &Self::Listener) -> Result<Self::Stream>;
+    /// Remove any filesystem residue of the listener once wiring is done.
+    fn cleanup(&self);
+}
+
+/// TCP link fabric: each rank binds an ephemeral port on the interface the
+/// star rendezvous already proved reachable.
+struct TcpFabric {
+    ip: IpAddr,
+}
+
+impl LinkFabric for TcpFabric {
+    type Stream = TcpStream;
+    type Listener = TcpListener;
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn bind(&self) -> Result<(TcpListener, String)> {
+        let listener = TcpListener::bind((self.ip, 0))
+            .with_context(|| format!("tcp: bind link listener on {}", self.ip))?;
+        let addr = listener.local_addr().context("tcp: link local_addr")?.to_string();
+        Ok((listener, addr))
+    }
+
+    fn connect(&self, addr: &str) -> Result<TcpStream> {
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(e))
+                            .with_context(|| format!("tcp: link connect {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+        Ok(stream)
+    }
+
+    fn accept(&self, listener: &TcpListener) -> Result<TcpStream> {
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        let stream = loop {
+            match listener.accept() {
+                Ok((s, _)) => break s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("tcp: timed out waiting for a link peer");
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("tcp: link accept"),
+            }
+        };
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+        Ok(stream)
+    }
+
+    fn cleanup(&self) {}
+}
+
+/// UDS link fabric: rank `r` listens at `<rendezvous>.r<r>`.
+struct UdsFabric {
+    path: PathBuf,
+}
+
+impl LinkFabric for UdsFabric {
+    type Stream = UnixStream;
+    type Listener = UnixListener;
+
+    fn kind(&self) -> &'static str {
+        "uds"
+    }
+
+    fn bind(&self) -> Result<(UnixListener, String)> {
+        // a crashed previous run may have left the per-rank socket file
+        let _ = std::fs::remove_file(&self.path);
+        let listener = UnixListener::bind(&self.path)
+            .with_context(|| format!("uds: bind link listener {}", self.path.display()))?;
+        Ok((listener, self.path.display().to_string()))
+    }
+
+    fn connect(&self, addr: &str) -> Result<UnixStream> {
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let stream = loop {
+            match UnixStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow!(e))
+                            .with_context(|| format!("uds: link connect {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+        Ok(stream)
+    }
+
+    fn accept(&self, listener: &UnixListener) -> Result<UnixStream> {
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        let stream = loop {
+            match listener.accept() {
+                Ok((s, _)) => break s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "uds: timed out waiting for a link peer at {}",
+                            self.path.display()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("uds: link accept"),
+            }
+        };
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+        stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+        Ok(stream)
+    }
+
+    fn cleanup(&self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// A link-table frame: rendezvous control traffic, so it rides the
+/// handshake flag (step 0, payload = UTF-8 address bytes).
+fn link_frame(rank: usize, payload: Vec<u8>) -> Frame {
+    Frame {
+        rank: rank as u16,
+        step: 0,
+        tag: PayloadTag::Dense,
+        flags: FLAG_HELLO,
+        loss: 0.0,
+        payload,
+        stats: Vec::new(),
+    }
+}
+
+/// Coordinator side of the link-table exchange: read every worker's LINK
+/// frame (its bound listener address) off the star streams, then broadcast
+/// the full rank → address table back (newline-joined).
+fn gather_link_table<S: GatherStream>(
+    star: &mut [S],
+    my_addr: String,
+    ranks: usize,
+    name: &str,
+) -> Result<Vec<String>> {
+    let mut table = vec![String::new(); ranks];
+    table[0] = my_addr;
+    for (i, stream) in star.iter_mut().enumerate() {
+        let f = Frame::read_from(stream)
+            .map_err(wire_err)
+            .with_context(|| format!("{name}: link address from rank {}", i + 1))?;
+        if f.flags & FLAG_HELLO == 0 || f.rank as usize != i + 1 {
+            bail!(
+                "{name}: expected rank {}'s link frame, got rank {} flags {:#04x}",
+                i + 1,
+                f.rank,
+                f.flags
+            );
+        }
+        let addr = String::from_utf8(f.payload)
+            .map_err(|_| anyhow!("{name}: rank {}'s link address is not UTF-8", i + 1))?;
+        table[i + 1] = addr;
+    }
+    let frame = link_frame(0, table.join("\n").into_bytes()).encode();
+    for (i, stream) in star.iter_mut().enumerate() {
+        stream
+            .write_all(&frame)
+            .with_context(|| format!("{name}: link table to rank {}", i + 1))?;
+    }
+    Ok(table)
+}
+
+/// Worker side of the link-table exchange: publish this rank's listener
+/// address, receive the full table.
+fn worker_link_table<S: GatherStream>(
+    star: &mut S,
+    my_addr: &str,
+    rank: usize,
+    ranks: usize,
+    name: &str,
+) -> Result<Vec<String>> {
+    let frame = link_frame(rank, my_addr.as_bytes().to_vec()).encode();
+    star.write_all(&frame).with_context(|| format!("{name}: send link address"))?;
+    let f = Frame::read_from(star)
+        .map_err(wire_err)
+        .with_context(|| format!("{name}: link table"))?;
+    if f.flags & FLAG_HELLO == 0 || f.rank != 0 {
+        bail!(
+            "{name}: expected the link table from rank 0, got rank {} flags {:#04x}",
+            f.rank,
+            f.flags
+        );
+    }
+    let text =
+        String::from_utf8(f.payload).map_err(|_| anyhow!("{name}: link table is not UTF-8"))?;
+    let table: Vec<String> = text.split('\n').map(str::to_string).collect();
+    if table.len() != ranks {
+        bail!("{name}: link table has {} entries, world is {ranks}", table.len());
+    }
+    Ok(table)
+}
+
+/// Dial the successor, accept the predecessor. Every listener was bound
+/// before the table broadcast, so the dial lands in an open backlog.
+fn wire_ring<F: LinkFabric>(
+    fabric: &F,
+    listener: &F::Listener,
+    table: &[String],
+    rank: usize,
+    ranks: usize,
+    name: &str,
+) -> Result<(F::Stream, F::Stream)> {
+    let next_rank = (rank + 1) % ranks;
+    let prev_rank = (rank + ranks - 1) % ranks;
+    let mut next = fabric.connect(&table[next_rank])?;
+    next.write_all(&Frame::hello(rank).encode())
+        .with_context(|| format!("{name}: hello to successor rank {next_rank}"))?;
+    let mut prev = fabric.accept(listener)?;
+    let hello = read_hello(&mut prev, name, HELLO_WAIT)?;
+    if hello.rank as usize != prev_rank {
+        bail!("{name}: predecessor identified as rank {}, expected {prev_rank}", hello.rank);
+    }
+    Ok((next, prev))
+}
+
+/// Dial the parent (non-root ranks), accept this rank's children in
+/// whatever order they arrive, identified by their hello frames.
+fn wire_tree<F: LinkFabric>(
+    fabric: &F,
+    listener: &F::Listener,
+    table: &[String],
+    rank: usize,
+    ranks: usize,
+    name: &str,
+) -> Result<(Option<F::Stream>, Vec<(usize, F::Stream)>)> {
+    let parent = if rank == 0 {
+        None
+    } else {
+        let p = wire::tree_parent(rank);
+        let mut s = fabric.connect(&table[p])?;
+        s.write_all(&Frame::hello(rank).encode())
+            .with_context(|| format!("{name}: hello to parent rank {p}"))?;
+        Some(s)
+    };
+    let expected = wire::tree_children(rank, ranks);
+    let mut slots: Vec<Option<F::Stream>> = expected.iter().map(|_| None).collect();
+    for _ in 0..expected.len() {
+        let mut s = fabric.accept(listener)?;
+        let hello = read_hello(&mut s, name, HELLO_WAIT)?;
+        let r = hello.rank as usize;
+        let Some(i) = expected.iter().position(|&c| c == r) else {
+            bail!("{name}: hello from rank {r}, which is not a child of rank {rank}");
+        };
+        if slots[i].replace(s).is_some() {
+            bail!("{name}: two link peers claimed child rank {r}");
+        }
+    }
+    let children = expected
+        .into_iter()
+        .zip(slots)
+        .map(|(r, s)| {
+            s.map(|s| (r, s))
+                .ok_or_else(|| anyhow!("{name}: child rank {r}'s link was never filled"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((parent, children))
+}
+
+/// Ring collective over point-to-point successor/predecessor links.
+///
+/// Two collectives share the links:
+///
+/// * [`Transport::collect`] — a plain `(ranks − 1)`-round all-gather: each
+///   round every endpoint forwards the frame it holds to its successor and
+///   receives its predecessor's, so every frame travels the whole ring.
+///   The config handshake rides this path.
+/// * [`Transport::collect_reduced`] — the in-network reduction: rank 0
+///   seeds a [`FLAG_HOP`] frame with its own folded payload; each
+///   successor validates the hop's fan-in count, folds its payload into
+///   the circulating partial, and forwards; the last rank finishes the
+///   partial and circulates the single result frame once around. Folding
+///   is rank-ascending from a zeroed accumulator — the same op order as
+///   the star aggregate, so the result is bit-identical to star
+///   (`rust/src/dist/README.md` §10).
+pub struct RingDriver<S: GatherStream> {
+    name: &'static str,
+    rank: usize,
+    ranks: usize,
+    next: S,
+    prev: S,
+    reader: FrameReader,
+    pending: Option<Frame>,
+    sent: u64,
+    received: u64,
+}
+
+impl<S: GatherStream> RingDriver<S> {
+    /// Assemble a ring endpoint from already-wired neighbor streams
+    /// (`next` = dialed successor, `prev` = accepted predecessor). Public
+    /// for the fault-injection tests; runs use the
+    /// `ring_{tcp,uds}_{coordinator,worker}` constructors.
+    pub fn from_streams(
+        name: &'static str,
+        rank: usize,
+        ranks: usize,
+        next: S,
+        prev: S,
+    ) -> Result<Self> {
+        if ranks < 2 {
+            bail!("{name}: a ring needs at least 2 ranks, got {ranks}");
+        }
+        if rank >= ranks {
+            bail!("{name}: rank {rank} out of world 0..{ranks}");
+        }
+        Ok(Self {
+            name,
+            rank,
+            ranks,
+            next,
+            prev,
+            reader: FrameReader::new(),
+            pending: None,
+            sent: 0,
+            received: 0,
+        })
+    }
+
+    fn prev_rank(&self) -> usize {
+        (self.rank + self.ranks - 1) % self.ranks
+    }
+
+    fn take_pending(&mut self) -> Result<Frame> {
+        self.pending.take().ok_or_else(|| anyhow!("{}: collect without post_send", self.name))
+    }
+
+    fn send_next(&mut self, bytes: &[u8], what: &str) -> Result<()> {
+        self.next.write_all(bytes).with_context(|| {
+            format!("{}: {what} to successor rank {}", self.name, (self.rank + 1) % self.ranks)
+        })?;
+        self.sent += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Poll the predecessor link for one complete frame, bounded by
+    /// [`PEER_TIMEOUT`].
+    fn ring_read(&mut self, what: &str) -> Result<(Frame, Vec<u8>)> {
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        loop {
+            match self.reader.poll_read_raw(&mut self.prev) {
+                Ok(Some((f, raw))) => {
+                    self.received += raw.len() as u64;
+                    return Ok((f, raw));
+                }
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "{}: predecessor rank {} went silent mid-{what}",
+                            self.name,
+                            self.prev_rank()
+                        );
+                    }
+                }
+                Err(e) => {
+                    return Err(wire_err(e)).with_context(|| {
+                        format!(
+                            "{}: {what} from predecessor rank {}",
+                            self.name,
+                            self.prev_rank()
+                        )
+                    })
+                }
+            }
+        }
+    }
+
+    /// The `(ranks − 1)`-round all-gather: in round `k` this endpoint
+    /// holds the frame that originated `k` hops back, forwards its raw
+    /// bytes, and receives the one originating `k + 1` hops back.
+    fn collect_allgather(&mut self, mine: Frame) -> Result<Vec<Frame>> {
+        let n = self.ranks;
+        let step = mine.step;
+        let mut slots: Vec<Option<Frame>> = (0..n).map(|_| None).collect();
+        let mut cur = mine.encode();
+        slots[self.rank] = Some(mine);
+        for round in 1..n {
+            let cur_out = std::mem::take(&mut cur);
+            self.send_next(&cur_out, "all-gather frame")?;
+            let (f, raw) = self.ring_read("all-gather")?;
+            let from = (self.rank + n - round) % n;
+            if f.step != step || f.rank as usize != from {
+                bail!(
+                    "{}: all-gather round {round} expected rank {from}/step {step}, \
+                     got rank {}/step {}",
+                    self.name,
+                    f.rank,
+                    f.step
+                );
+            }
+            if slots[from].replace(f).is_some() {
+                bail!("{}: duplicate all-gather frame from rank {from}", self.name);
+            }
+            cur = raw;
+        }
+        slots
+            .iter_mut()
+            .enumerate()
+            .map(|(r, f)| {
+                f.take().ok_or_else(|| {
+                    anyhow!("{}: all-gather finished with rank {r}'s frame missing", self.name)
+                })
+            })
+            .collect()
+    }
+
+    /// The in-ring reduction: reduction leg up the rank order, then the
+    /// finished frame circulates once around.
+    fn collect_hop(
+        &mut self,
+        mine: Frame,
+        fold: &mut dyn FnMut(&[u8], &mut Vec<f32>) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        let n = self.ranks;
+        let step = mine.step;
+        let tag = mine.tag;
+        let last = n - 1;
+        let outgoing = if self.rank == 0 {
+            let mut acc = Vec::new();
+            fold(&mine.payload, &mut acc)?;
+            Frame {
+                rank: 0,
+                step,
+                tag,
+                flags: FLAG_HOP,
+                // seeded exactly like the star loss fold: 0.0, then rank
+                // 0's term
+                loss: 0.0 + mine.loss,
+                payload: wire::hop_payload(1, &acc),
+                stats: Vec::new(),
+            }
+        } else {
+            let (hop, _) = self.ring_read("reduction hop")?;
+            let from = self.rank - 1;
+            if hop.flags & FLAG_HOP == 0
+                || hop.step != step
+                || hop.tag != tag
+                || hop.rank as usize != from
+            {
+                bail!(
+                    "{}: expected a hop frame from rank {from} at step {step}, got rank {} \
+                     step {} flags {:#04x}",
+                    self.name,
+                    hop.rank,
+                    hop.step,
+                    hop.flags
+                );
+            }
+            let (fan_in, partial) = wire::hop_from_payload(&hop.payload)
+                .map_err(wire_err)
+                .with_context(|| format!("{}: hop payload from rank {from}", self.name))?;
+            if fan_in as usize != self.rank {
+                bail!(
+                    "{}: hop fan-in is {fan_in}, but ranks 0..{} should have folded by now",
+                    self.name,
+                    self.rank
+                );
+            }
+            let mut acc = partial;
+            fold(&mine.payload, &mut acc)?;
+            Frame {
+                rank: self.rank as u16,
+                step,
+                tag,
+                flags: FLAG_HOP,
+                loss: hop.loss + mine.loss,
+                payload: wire::hop_payload((self.rank + 1) as u16, &acc),
+                stats: Vec::new(),
+            }
+        };
+        let what = if self.rank == last { "reduction result" } else { "reduction hop" };
+        self.send_next(&outgoing.encode(), what)?;
+        let result = if self.rank == last {
+            outgoing
+        } else {
+            let (f, raw) = self.ring_read("reduction result")?;
+            if f.flags & FLAG_HOP == 0 || f.step != step || f.tag != tag || f.rank as usize != last
+            {
+                bail!(
+                    "{}: expected the finished reduction frame from rank {last}, got rank {} \
+                     step {} flags {:#04x}",
+                    self.name,
+                    f.rank,
+                    f.step,
+                    f.flags
+                );
+            }
+            // forward the result onward unless the successor originated it
+            if (self.rank + 1) % n != last {
+                self.send_next(&raw, "reduction result")?;
+            }
+            f
+        };
+        Ok(vec![result])
+    }
+}
+
+impl<S: GatherStream> Transport for RingDriver<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn post_send(&mut self, mut local: Vec<Frame>) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("{}: gather already in flight (post_send without collect)", self.name);
+        }
+        if local.len() != 1 {
+            bail!("{} endpoints host exactly one rank, got {} frames", self.name, local.len());
+        }
+        let Some(mine) = local.pop() else {
+            bail!("{}: post_send needs this endpoint's frame", self.name);
+        };
+        if mine.rank as usize != self.rank {
+            bail!(
+                "{}: this endpoint hosts rank {}, got a frame from rank {}",
+                self.name,
+                self.rank,
+                mine.rank
+            );
+        }
+        self.pending = Some(mine);
+        Ok(())
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        let mine = self.take_pending()?;
+        self.prev.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
+        let res = self.collect_allgather(mine);
+        let _ = self.prev.set_recv_timeout(Some(PEER_TIMEOUT));
+        res
+    }
+
+    fn collect_reduced(
+        &mut self,
+        fold: &mut dyn FnMut(&[u8], &mut Vec<f32>) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        let mine = self.take_pending()?;
+        self.prev.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
+        let res = self.collect_hop(mine, fold);
+        let _ = self.prev.set_recv_timeout(Some(PEER_TIMEOUT));
+        res
+    }
+
+    fn topology(&self) -> Topology {
+        Topology::Ring
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+/// Binary-tree gather/relay over point-to-point links: every endpoint
+/// gathers its children's subtrees (forwarding each frame toward the root
+/// the moment it arrives) and relays the complement of each child's
+/// subtree back down once that child has delivered — the star hub's
+/// ready-gating rule applied hop by hop, so a blocking downlink write can
+/// never face a peer still blocked on its own uplink. `collect` returns
+/// the full rank-ascending frame set, exactly like star.
+pub struct TreeDriver<S: GatherStream> {
+    name: &'static str,
+    rank: usize,
+    ranks: usize,
+    parent: Option<S>,
+    parent_reader: FrameReader,
+    /// `(child rank, link)` pairs, as produced by the tree wiring.
+    children: Vec<(usize, S)>,
+    child_readers: Vec<FrameReader>,
+    pending: Option<Frame>,
+    sent: u64,
+    received: u64,
+    overlap_micros: u64,
+    last_arrival: Vec<u16>,
+    last_arrival_ms: Vec<f64>,
+}
+
+impl<S: GatherStream> TreeDriver<S> {
+    /// Assemble a tree endpoint from already-wired links. Public for the
+    /// fault-injection tests; runs use the
+    /// `tree_{tcp,uds}_{coordinator,worker}` constructors.
+    pub fn from_streams(
+        name: &'static str,
+        rank: usize,
+        ranks: usize,
+        parent: Option<S>,
+        children: Vec<(usize, S)>,
+    ) -> Result<Self> {
+        if ranks < 2 {
+            bail!("{name}: a tree needs at least 2 ranks, got {ranks}");
+        }
+        if rank >= ranks {
+            bail!("{name}: rank {rank} out of world 0..{ranks}");
+        }
+        if (rank == 0) != parent.is_none() {
+            bail!(
+                "{name}: rank {rank} must {} a parent link",
+                if rank == 0 { "not have" } else { "have" }
+            );
+        }
+        let mut got: Vec<usize> = children.iter().map(|(r, _)| *r).collect();
+        got.sort_unstable();
+        let expected = wire::tree_children(rank, ranks);
+        if got != expected {
+            bail!("{name}: rank {rank}'s children are {expected:?}, got {got:?}");
+        }
+        let child_readers = children.iter().map(|_| FrameReader::new()).collect();
+        Ok(Self {
+            name,
+            rank,
+            ranks,
+            parent,
+            parent_reader: FrameReader::new(),
+            children,
+            child_readers,
+            pending: None,
+            sent: 0,
+            received: 0,
+            overlap_micros: 0,
+            last_arrival: Vec::new(),
+            last_arrival_ms: Vec::new(),
+        })
+    }
+
+    fn take_pending(&mut self) -> Result<Frame> {
+        self.pending.take().ok_or_else(|| anyhow!("{}: collect without post_send", self.name))
+    }
+
+    fn collect_cb(
+        &mut self,
+        mut on_frame: Option<&mut dyn FnMut(&Frame) -> Result<()>>,
+    ) -> Result<Vec<Frame>> {
+        let mine = self.take_pending()?;
+        // Brief read timeouts during the gather — the poll must not freeze
+        // on one silent link while another has bytes ready.
+        for (_, c) in &self.children {
+            c.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
+        }
+        if let Some(p) = &self.parent {
+            p.set_recv_timeout(Some(GATHER_POLL)).context("gather poll timeout")?;
+        }
+        let res = self.collect_inner(mine, &mut on_frame);
+        for (_, c) in &self.children {
+            let _ = c.set_recv_timeout(Some(PEER_TIMEOUT));
+        }
+        if let Some(p) = &self.parent {
+            let _ = p.set_recv_timeout(Some(PEER_TIMEOUT));
+        }
+        res
+    }
+
+    fn collect_inner(
+        &mut self,
+        mine: Frame,
+        on_frame: &mut Option<&mut dyn FnMut(&Frame) -> Result<()>>,
+    ) -> Result<Vec<Frame>> {
+        let name = self.name;
+        let n = self.ranks;
+        let step = mine.step;
+        let kids: Vec<usize> = self.children.iter().map(|(r, _)| *r).collect();
+        let kid_sub: Vec<usize> = kids.iter().map(|&r| wire::tree_subtree_size(r, n)).collect();
+        let my_sub = wire::tree_subtree_size(self.rank, n);
+        // What this endpoint is owed each way: the complement of its own
+        // subtree comes down from the parent; each child is owed the
+        // complement of *its* subtree.
+        let need_from_parent = if self.rank == 0 { 0 } else { n - my_sub };
+        let mut slots: Vec<Option<Frame>> = (0..n).map(|_| None).collect();
+        let mut raws: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+        let mut kid_got = vec![0usize; kids.len()];
+        let mut kid_sent = vec![vec![false; n]; kids.len()];
+        let mut kid_sent_cnt = vec![0usize; kids.len()];
+        let mut from_parent = 0usize;
+        let opened = Instant::now();
+        let mut arrival: Vec<u16> = Vec::new();
+        let mut arrival_ms: Vec<f64> = Vec::new();
+
+        // Own frame: up to the parent immediately, and first through the
+        // streaming callback (locally-hosted frames first).
+        let raw0 = mine.encode();
+        if let Some(p) = &mut self.parent {
+            p.write_all(&raw0).with_context(|| format!("{name}: own frame to parent"))?;
+            self.sent += raw0.len() as u64;
+        }
+        if let Some(cb) = on_frame.as_deref_mut() {
+            cb(&mine)?;
+        }
+        raws[self.rank] = Some(raw0);
+        slots[self.rank] = Some(mine);
+
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        loop {
+            let up_done = kid_got.iter().zip(&kid_sub).all(|(&g, &s)| g == s);
+            let down_done = from_parent == need_from_parent;
+            let served = kid_sent_cnt.iter().zip(&kid_sub).all(|(&c, &s)| c == n - s);
+            if up_done && down_done && served {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let have: Vec<usize> = (0..n).filter(|&r| slots[r].is_some()).collect();
+                bail!(
+                    "{name}: tree gather timed out at step {step} (have frames from ranks \
+                     {have:?} of 0..{n})"
+                );
+            }
+            // 1. drain the children: each frame is validated against its
+            //    child's subtree, forwarded toward the root, and stored.
+            for i in 0..kids.len() {
+                if kid_got[i] == kid_sub[i] {
+                    continue;
+                }
+                match self.child_readers[i].poll_read_raw(&mut self.children[i].1) {
+                    Ok(Some((f, raw))) => {
+                        let r = f.rank as usize;
+                        if f.step != step || r >= n || !wire::tree_in_subtree(r, kids[i], n) {
+                            bail!(
+                                "{name}: child rank {} delivered rank {}/step {} (expected \
+                                 its subtree at step {step})",
+                                kids[i],
+                                f.rank,
+                                f.step
+                            );
+                        }
+                        if slots[r].is_some() {
+                            bail!(
+                                "{name}: duplicate frame for rank {r} from child rank {}",
+                                kids[i]
+                            );
+                        }
+                        self.received += raw.len() as u64;
+                        arrival.push(f.rank);
+                        arrival_ms.push(opened.elapsed().as_secs_f64() * 1e3);
+                        if let Some(p) = &mut self.parent {
+                            p.write_all(&raw)
+                                .with_context(|| format!("{name}: forward rank {r} to parent"))?;
+                            self.sent += raw.len() as u64;
+                        }
+                        if let Some(cb) = on_frame.as_deref_mut() {
+                            cb(&f)?;
+                        }
+                        raws[r] = Some(raw);
+                        slots[r] = Some(f);
+                        kid_got[i] += 1;
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        return Err(wire_err(e)).with_context(|| {
+                            format!("{name}: gather from child rank {}", kids[i])
+                        })
+                    }
+                }
+            }
+            // 2. drain the parent: everything outside this endpoint's own
+            //    subtree arrives here.
+            if from_parent < need_from_parent {
+                if let Some(p) = &mut self.parent {
+                    match self.parent_reader.poll_read_raw(p) {
+                        Ok(Some((f, raw))) => {
+                            let r = f.rank as usize;
+                            if f.step != step || r >= n || wire::tree_in_subtree(r, self.rank, n)
+                            {
+                                bail!(
+                                    "{name}: parent delivered rank {}/step {} (expected the \
+                                     complement of rank {}'s subtree at step {step})",
+                                    f.rank,
+                                    f.step,
+                                    self.rank
+                                );
+                            }
+                            if slots[r].is_some() {
+                                bail!("{name}: duplicate frame for rank {r} from the parent");
+                            }
+                            self.received += raw.len() as u64;
+                            arrival.push(f.rank);
+                            arrival_ms.push(opened.elapsed().as_secs_f64() * 1e3);
+                            if let Some(cb) = on_frame.as_deref_mut() {
+                                cb(&f)?;
+                            }
+                            raws[r] = Some(raw);
+                            slots[r] = Some(f);
+                            from_parent += 1;
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            return Err(wire_err(e))
+                                .with_context(|| format!("{name}: gather from parent"))
+                        }
+                    }
+                }
+            }
+            // 3. relay down, ready-gated: only a child whose whole subtree
+            //    has been delivered is guaranteed to be draining its link
+            //    (the star hub's deadlock rule, applied per hop).
+            let missing = slots.iter().filter(|s| s.is_none()).count();
+            let t0 = Instant::now();
+            let mut relayed = false;
+            for i in 0..kids.len() {
+                if kid_got[i] != kid_sub[i] {
+                    continue;
+                }
+                for r in 0..n {
+                    if kid_sent[i][r] || wire::tree_in_subtree(r, kids[i], n) {
+                        continue;
+                    }
+                    let Some(bytes) = raws[r].as_ref() else { continue };
+                    self.children[i].1.write_all(bytes).with_context(|| {
+                        format!("{name}: relay rank {r} to child rank {}", kids[i])
+                    })?;
+                    self.sent += bytes.len() as u64;
+                    kid_sent[i][r] = true;
+                    kid_sent_cnt[i] += 1;
+                    relayed = true;
+                }
+            }
+            if relayed && missing > 0 {
+                self.overlap_micros += t0.elapsed().as_micros() as u64;
+            }
+        }
+        self.last_arrival = arrival;
+        self.last_arrival_ms = arrival_ms;
+        slots
+            .iter_mut()
+            .enumerate()
+            .map(|(r, f)| {
+                f.take().ok_or_else(|| {
+                    anyhow!("{name}: tree gather finished with rank {r}'s frame missing")
+                })
+            })
+            .collect()
+    }
+}
+
+impl<S: GatherStream> Transport for TreeDriver<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn post_send(&mut self, mut local: Vec<Frame>) -> Result<()> {
+        if self.pending.is_some() {
+            bail!("{}: gather already in flight (post_send without collect)", self.name);
+        }
+        if local.len() != 1 {
+            bail!("{} endpoints host exactly one rank, got {} frames", self.name, local.len());
+        }
+        let Some(mine) = local.pop() else {
+            bail!("{}: post_send needs this endpoint's frame", self.name);
+        };
+        if mine.rank as usize != self.rank {
+            bail!(
+                "{}: this endpoint hosts rank {}, got a frame from rank {}",
+                self.name,
+                self.rank,
+                mine.rank
+            );
+        }
+        self.pending = Some(mine);
+        Ok(())
+    }
+
+    fn collect(&mut self) -> Result<Vec<Frame>> {
+        self.collect_cb(None)
+    }
+
+    fn collect_streaming(
+        &mut self,
+        on_frame: &mut dyn FnMut(&Frame) -> Result<()>,
+    ) -> Result<Vec<Frame>> {
+        self.collect_cb(Some(on_frame))
+    }
+
+    fn topology(&self) -> Topology {
+        Topology::Tree
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+
+    fn overlap_ms(&self) -> f64 {
+        self.overlap_micros as f64 / 1000.0
+    }
+
+    fn last_arrival(&self) -> &[u16] {
+        &self.last_arrival
+    }
+
+    fn last_arrival_ms(&self) -> &[f64] {
+        &self.last_arrival_ms
+    }
+}
+
+// --- topology constructors (star rendezvous → link table → wired driver) ---
+
+fn ring_coordinator<F: LinkFabric>(
+    fabric: &F,
+    mut star: Vec<F::Stream>,
+    ranks: usize,
+    name: &'static str,
+) -> Result<RingDriver<F::Stream>> {
+    let (listener, my_addr) = fabric.bind()?;
+    let table = gather_link_table(&mut star, my_addr, ranks, fabric.kind())?;
+    let (next, prev) = wire_ring(fabric, &listener, &table, 0, ranks, name)?;
+    drop(listener);
+    fabric.cleanup();
+    RingDriver::from_streams(name, 0, ranks, next, prev)
+}
+
+fn ring_worker<F: LinkFabric>(
+    fabric: &F,
+    star: &mut F::Stream,
+    rank: usize,
+    ranks: usize,
+    name: &'static str,
+) -> Result<RingDriver<F::Stream>> {
+    let (listener, my_addr) = fabric.bind()?;
+    let table = worker_link_table(star, &my_addr, rank, ranks, fabric.kind())?;
+    let (next, prev) = wire_ring(fabric, &listener, &table, rank, ranks, name)?;
+    drop(listener);
+    fabric.cleanup();
+    RingDriver::from_streams(name, rank, ranks, next, prev)
+}
+
+fn tree_coordinator<F: LinkFabric>(
+    fabric: &F,
+    mut star: Vec<F::Stream>,
+    ranks: usize,
+    name: &'static str,
+) -> Result<TreeDriver<F::Stream>> {
+    let (listener, my_addr) = fabric.bind()?;
+    let table = gather_link_table(&mut star, my_addr, ranks, fabric.kind())?;
+    let (parent, children) = wire_tree(fabric, &listener, &table, 0, ranks, name)?;
+    drop(listener);
+    fabric.cleanup();
+    TreeDriver::from_streams(name, 0, ranks, parent, children)
+}
+
+fn tree_worker<F: LinkFabric>(
+    fabric: &F,
+    star: &mut F::Stream,
+    rank: usize,
+    ranks: usize,
+    name: &'static str,
+) -> Result<TreeDriver<F::Stream>> {
+    let (listener, my_addr) = fabric.bind()?;
+    let table = worker_link_table(star, &my_addr, rank, ranks, fabric.kind())?;
+    let (parent, children) = wire_tree(fabric, &listener, &table, rank, ranks, name)?;
+    drop(listener);
+    fabric.cleanup();
+    TreeDriver::from_streams(name, rank, ranks, parent, children)
+}
+
+/// UDS link listener path of `rank`, derived from the star rendezvous
+/// path (`<rendezvous>.r<rank>`).
+fn uds_link_path(rendezvous: &Path, rank: usize) -> PathBuf {
+    PathBuf::from(format!("{}.r{rank}", rendezvous.display()))
+}
+
+/// Ring coordinator over tcp: run the star rendezvous of `pending`, then
+/// re-wire the world into successor/predecessor links. The star streams
+/// are dropped once the ring is up.
+pub fn ring_tcp_coordinator(pending: TcpPending) -> Result<RingDriver<TcpStream>> {
+    let ranks = pending.ranks;
+    if ranks < 2 {
+        bail!("tcp-ring: a ring needs at least 2 ranks, got {ranks}");
+    }
+    let ip = pending.local_addr()?.ip();
+    let star = pending.accept_streams()?;
+    ring_coordinator(&TcpFabric { ip }, star, ranks, "tcp-ring")
+}
+
+/// Ring worker over tcp: star rendezvous at `addr`, then ring links.
+pub fn ring_tcp_worker(addr: &str, rank: usize, ranks: usize) -> Result<RingDriver<TcpStream>> {
+    let (mut star, _) = TcpTransport::connect_stream(addr, rank, ranks)?;
+    let ip = star.local_addr().context("tcp: link local_addr")?.ip();
+    ring_worker(&TcpFabric { ip }, &mut star, rank, ranks, "tcp-ring")
+}
+
+/// Tree coordinator (root) over tcp.
+pub fn tree_tcp_coordinator(pending: TcpPending) -> Result<TreeDriver<TcpStream>> {
+    let ranks = pending.ranks;
+    if ranks < 2 {
+        bail!("tcp-tree: a tree needs at least 2 ranks, got {ranks}");
+    }
+    let ip = pending.local_addr()?.ip();
+    let star = pending.accept_streams()?;
+    tree_coordinator(&TcpFabric { ip }, star, ranks, "tcp-tree")
+}
+
+/// Tree worker over tcp: star rendezvous at `addr`, then parent/child
+/// links.
+pub fn tree_tcp_worker(addr: &str, rank: usize, ranks: usize) -> Result<TreeDriver<TcpStream>> {
+    let (mut star, _) = TcpTransport::connect_stream(addr, rank, ranks)?;
+    let ip = star.local_addr().context("tcp: link local_addr")?.ip();
+    tree_worker(&TcpFabric { ip }, &mut star, rank, ranks, "tcp-tree")
+}
+
+/// Ring coordinator over uds (see [`ring_tcp_coordinator`]).
+pub fn ring_uds_coordinator(pending: UdsPending) -> Result<RingDriver<UnixStream>> {
+    let ranks = pending.ranks;
+    if ranks < 2 {
+        bail!("uds-ring: a ring needs at least 2 ranks, got {ranks}");
+    }
+    let (star, path) = pending.accept_streams()?;
+    let fabric = UdsFabric { path: uds_link_path(&path, 0) };
+    let driver = ring_coordinator(&fabric, star, ranks, "uds-ring");
+    // the star rendezvous socket is not needed once the ring is wired
+    let _ = std::fs::remove_file(&path);
+    driver
+}
+
+/// Ring worker over uds: star rendezvous at `path`, then ring links.
+pub fn ring_uds_worker<P: AsRef<Path>>(
+    path: P,
+    rank: usize,
+    ranks: usize,
+) -> Result<RingDriver<UnixStream>> {
+    let path = path.as_ref();
+    let (mut star, _) = UdsTransport::connect_stream(path, rank, ranks)?;
+    let fabric = UdsFabric { path: uds_link_path(path, rank) };
+    ring_worker(&fabric, &mut star, rank, ranks, "uds-ring")
+}
+
+/// Tree coordinator (root) over uds.
+pub fn tree_uds_coordinator(pending: UdsPending) -> Result<TreeDriver<UnixStream>> {
+    let ranks = pending.ranks;
+    if ranks < 2 {
+        bail!("uds-tree: a tree needs at least 2 ranks, got {ranks}");
+    }
+    let (star, path) = pending.accept_streams()?;
+    let fabric = UdsFabric { path: uds_link_path(&path, 0) };
+    let driver = tree_coordinator(&fabric, star, ranks, "uds-tree");
+    let _ = std::fs::remove_file(&path);
+    driver
+}
+
+/// Tree worker over uds: star rendezvous at `path`, then parent/child
+/// links.
+pub fn tree_uds_worker<P: AsRef<Path>>(
+    path: P,
+    rank: usize,
+    ranks: usize,
+) -> Result<TreeDriver<UnixStream>> {
+    let path = path.as_ref();
+    let (mut star, _) = UdsTransport::connect_stream(path, rank, ranks)?;
+    let fabric = UdsFabric { path: uds_link_path(path, rank) };
+    tree_worker(&fabric, &mut star, rank, ranks, "uds-tree")
 }
 
 // ---------------------------------------------------------------------------
@@ -1856,5 +3149,146 @@ mod tests {
             assert_eq!(parse_transport(transport_name(k)).unwrap(), k);
         }
         assert!(parse_transport("pigeon").is_err());
+    }
+
+    #[test]
+    fn topology_names_parse_back() {
+        for t in [Topology::Star, Topology::Ring, Topology::Tree] {
+            assert_eq!(parse_topology(topology_name(t)).unwrap(), t);
+        }
+        assert!(parse_topology("mesh").is_err());
+        assert_eq!(Topology::default(), Topology::Star);
+    }
+
+    #[test]
+    fn topology_from_streams_validates_shape() {
+        let (a, b) = UnixStream::pair().unwrap();
+        assert!(RingDriver::from_streams("uds-ring", 0, 1, a, b).is_err(), "1-rank ring");
+        let (a, b) = UnixStream::pair().unwrap();
+        assert!(RingDriver::from_streams("uds-ring", 5, 4, a, b).is_err(), "rank out of world");
+        let (a, _peer) = UnixStream::pair().unwrap();
+        assert!(
+            TreeDriver::from_streams("uds-tree", 0, 2, Some(a), vec![]).is_err(),
+            "root with a parent link"
+        );
+        assert!(
+            TreeDriver::<UnixStream>::from_streams("uds-tree", 0, 2, None, vec![]).is_err(),
+            "root missing its child"
+        );
+        let (a, _peer) = UnixStream::pair().unwrap();
+        assert!(TreeDriver::from_streams("uds-tree", 0, 2, None, vec![(1, a)]).is_ok());
+    }
+
+    #[test]
+    fn tcp_ring_allgathers_across_threads() {
+        let ranks = 3;
+        let pending = TcpPending::bind("127.0.0.1:0", ranks).unwrap();
+        let addr = pending.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = ring_tcp_worker(&addr, r, ranks).unwrap();
+                let mut got = Vec::new();
+                for step in 1..=3u64 {
+                    got.push(
+                        t.exchange(vec![frame(r, step, vec![r as u8, step as u8])]).unwrap(),
+                    );
+                }
+                got
+            }));
+        }
+        let mut coord = ring_tcp_coordinator(pending).unwrap();
+        assert_eq!(coord.topology(), Topology::Ring);
+        let mut views = Vec::new();
+        for step in 1..=3u64 {
+            views.push(coord.exchange(vec![frame(0, step, vec![0, step as u8])]).unwrap());
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), views, "every rank sees the same gathered set");
+        }
+        for (s, view) in views.iter().enumerate() {
+            assert_eq!(view.len(), ranks);
+            for (r, f) in view.iter().enumerate() {
+                assert_eq!((f.rank as usize, f.step), (r, s as u64 + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_ring_reduces_in_network() {
+        use crate::dist::wire::{dense_payload, hop_from_payload, FLAG_HOP};
+
+        let ranks = 3;
+        fn fold(payload: &[u8], acc: &mut Vec<f32>) -> Result<()> {
+            if acc.is_empty() {
+                acc.resize(payload.len() / 4, 0.0);
+            }
+            for (a, b) in acc.iter_mut().zip(payload.chunks_exact(4)) {
+                *a += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            Ok(())
+        }
+        let grad = |r: usize| vec![(r + 1) as f32, 10.0 * (r + 1) as f32];
+        let pending = TcpPending::bind("127.0.0.1:0", ranks).unwrap();
+        let addr = pending.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = ring_tcp_worker(&addr, r, ranks).unwrap();
+                t.post_send(vec![frame(r, 1, dense_payload(&grad(r)))]).unwrap();
+                t.collect_reduced(&mut fold).unwrap()
+            }));
+        }
+        let mut coord = ring_tcp_coordinator(pending).unwrap();
+        coord.post_send(vec![frame(0, 1, dense_payload(&grad(0)))]).unwrap();
+        let out = coord.collect_reduced(&mut fold).unwrap();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), out, "every rank holds the identical result frame");
+        }
+        assert_eq!(out.len(), 1, "in-network reduction yields a single frame");
+        assert_ne!(out[0].flags & FLAG_HOP, 0);
+        let (fan_in, sum) = hop_from_payload(&out[0].payload).unwrap();
+        assert_eq!(fan_in as usize, ranks);
+        assert_eq!(sum, vec![1.0 + 2.0 + 3.0, 10.0 + 20.0 + 30.0]);
+        // losses fold rank-ascending too (frame() sets loss = rank + step)
+        assert_eq!(out[0].loss, (0.0 + 1.0) + (1.0 + 1.0) + (2.0 + 1.0));
+    }
+
+    #[test]
+    fn uds_tree_gathers_across_threads() {
+        let path = unique_dir("tree").with_extension("sock");
+        let ranks = 4;
+        let pending = UdsPending::bind(&path, ranks).unwrap();
+        let mut handles = Vec::new();
+        for r in 1..ranks {
+            let path = path.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut t = tree_uds_worker(&path, r, ranks).unwrap();
+                let mut got = Vec::new();
+                for step in 1..=3u64 {
+                    got.push(
+                        t.exchange(vec![frame(r, step, vec![r as u8, step as u8])]).unwrap(),
+                    );
+                }
+                got
+            }));
+        }
+        let mut coord = tree_uds_coordinator(pending).unwrap();
+        assert_eq!(coord.topology(), Topology::Tree);
+        let mut views = Vec::new();
+        for step in 1..=3u64 {
+            views.push(coord.exchange(vec![frame(0, step, vec![0, step as u8])]).unwrap());
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), views, "every rank sees the same gathered set");
+        }
+        for (s, view) in views.iter().enumerate() {
+            assert_eq!(view.len(), ranks);
+            for (r, f) in view.iter().enumerate() {
+                assert_eq!((f.rank as usize, f.step), (r, s as u64 + 1));
+            }
+        }
     }
 }

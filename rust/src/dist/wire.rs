@@ -17,7 +17,7 @@
 //!   6   2 rank           u16 sender rank
 //!   8   8 step           u64 training step the payload belongs to
 //!  16   1 tag            payload kind: 0 dense / 1 topk / 2 eftopk
-//!  17   1 flags          bit 0 = handshake (empty payload); rest 0
+//!  17   1 flags          bit 0 = handshake, bit 1 = topology hop; rest 0
 //!  18   4 loss           f32 bits, sender's local batch loss
 //!  22   4 payload_len    u32 byte length of the payload section
 //!  26   4 stats_count    u32 count of Quant4 bucket-stats records
@@ -70,6 +70,111 @@ pub const FLAG_HELLO: u8 = 1;
 /// Payload length of a config-digest handshake frame: one little-endian
 /// [`fnv1a64`] of the canonical run-config JSON.
 pub const HELLO_DIGEST_BYTES: usize = 8;
+
+/// `flags` bit 1: in-network partial-aggregate (hop) frame — the ring
+/// topology's circulating partial sums and its final result frame. The
+/// payload starts with a [`HOP_PREFIX_BYTES`] fan-in prefix followed by
+/// the raw f32 bit patterns of the running per-coordinate sum (see
+/// `rust/src/dist/README.md` §10). Frames without this bit carry plain
+/// reducer payloads; receivers that see it on a non-topology link reject
+/// the frame.
+pub const FLAG_HOP: u8 = 2;
+
+/// Byte length of the hop-payload prefix: `fan-in u16 | reserved u16`.
+/// The fan-in counts how many ranks' contributions the partial already
+/// folds in (1 after the originating rank, `ranks` on the result frame),
+/// so a receiver can detect a skipped or replayed hop before touching the
+/// partial itself.
+pub const HOP_PREFIX_BYTES: usize = 4;
+
+/// Encode a hop payload: the fan-in prefix (`fan_in` little-endian plus
+/// two reserved zero bytes) followed by the partial sum's raw f32 bit
+/// patterns — bit-preserving, exactly like [`dense_payload`].
+pub fn hop_payload(fan_in: u16, partial: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HOP_PREFIX_BYTES + 4 * partial.len());
+    out.extend_from_slice(&fan_in.to_le_bytes());
+    out.extend_from_slice(&[0u8, 0u8]);
+    for &v in partial {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Decode a hop payload produced by [`hop_payload`]: the fan-in count and
+/// the bit-preserved f32 partial. A payload shorter than the prefix, or
+/// whose value section is not a whole number of f32s, is a typed
+/// [`WireError::Truncated`] — never a panic (this is a `dist::` decode
+/// path under the no-panic rule).
+pub fn hop_from_payload(payload: &[u8]) -> Result<(u16, Vec<f32>), WireError> {
+    if payload.len() < HOP_PREFIX_BYTES {
+        return Err(WireError::Truncated { need: HOP_PREFIX_BYTES, have: payload.len() });
+    }
+    let fan_in = le_u16(payload, 0);
+    let body = &payload[HOP_PREFIX_BYTES..];
+    if body.len() % 4 != 0 {
+        return Err(WireError::Truncated {
+            need: HOP_PREFIX_BYTES + (body.len() / 4 + 1) * 4,
+            have: payload.len(),
+        });
+    }
+    let mut out = vec![0f32; body.len() / 4];
+    dense_from_payload(body, &mut out)?;
+    Ok((fan_in, out))
+}
+
+// ---------------------------------------------------------------------------
+// Tree fan-in accounting (binary reduction tree, heap-indexed)
+// ---------------------------------------------------------------------------
+
+/// Parent of `rank` in the binary reduction tree. Rank 0 is the root and
+/// is returned as its own parent.
+pub fn tree_parent(rank: usize) -> usize {
+    if rank == 0 {
+        0
+    } else {
+        (rank - 1) / 2
+    }
+}
+
+/// Children of `rank` in a `ranks`-wide binary reduction tree (0, 1 or 2
+/// entries, ascending).
+pub fn tree_children(rank: usize, ranks: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(2);
+    for c in [2 * rank + 1, 2 * rank + 2] {
+        if c < ranks {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Number of ranks in the subtree rooted at `rank`, itself included —
+/// the fan-in a tree gather expects over the link from that subtree.
+pub fn tree_subtree_size(rank: usize, ranks: usize) -> usize {
+    if rank >= ranks {
+        return 0;
+    }
+    let mut n = 1;
+    for c in tree_children(rank, ranks) {
+        n += tree_subtree_size(c, ranks);
+    }
+    n
+}
+
+/// Whether `rank` lies in the subtree rooted at `root` (a rank is in its
+/// own subtree). Drives the tree relay rule: a parent forwards a frame
+/// down a child link only when the frame's rank is *outside* that child's
+/// subtree.
+pub fn tree_in_subtree(rank: usize, root: usize, ranks: usize) -> bool {
+    if rank >= ranks || root >= ranks {
+        return false;
+    }
+    let mut r = rank;
+    while r > root {
+        r = (r - 1) / 2;
+    }
+    r == root
+}
 
 /// FNV-1a 64-bit hash (offset basis 0xcbf29ce484222325, prime
 /// 0x100000001b3) — the config-digest function of the handshake round.
@@ -641,5 +746,72 @@ mod tests {
         assert!(h.payload.is_empty());
         let (back, _) = Frame::decode(&h.encode()).unwrap();
         assert_eq!(back, h);
+    }
+
+    #[test]
+    fn hop_payload_roundtrips_bit_exactly() {
+        // NaN payloads and -0.0 must survive: the hop partial is a raw
+        // bit-pattern transfer, not a numeric re-encode.
+        let partial = [1.5f32, -0.0, f32::from_bits(0x7fc0_dead), f32::MIN_POSITIVE, -3.25e7];
+        let p = hop_payload(3, &partial);
+        assert_eq!(p.len(), HOP_PREFIX_BYTES + 4 * partial.len());
+        assert_eq!(&p[2..4], &[0u8, 0u8], "reserved prefix bytes must be zero");
+        let (fan_in, back) = hop_from_payload(&p).unwrap();
+        assert_eq!(fan_in, 3);
+        assert_eq!(back.len(), partial.len());
+        for (a, b) in partial.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // empty partial is legal (a zero-d model is degenerate but decodable)
+        let (fan_in, back) = hop_from_payload(&hop_payload(1, &[])).unwrap();
+        assert_eq!((fan_in, back.len()), (1, 0));
+    }
+
+    #[test]
+    fn malformed_hop_payloads_are_typed_errors() {
+        // shorter than the fan-in prefix
+        for cut in 0..HOP_PREFIX_BYTES {
+            assert!(matches!(
+                hop_from_payload(&vec![0u8; cut]),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // value section not a whole number of f32s
+        let mut p = hop_payload(2, &[1.0, 2.0]);
+        p.pop();
+        assert!(matches!(hop_from_payload(&p), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn tree_helpers_are_consistent() {
+        for ranks in 1..=9usize {
+            // parent/child inverse, and every rank is in exactly one
+            // child subtree of its parent
+            for r in 0..ranks {
+                for c in tree_children(r, ranks) {
+                    assert_eq!(tree_parent(c), r);
+                    assert!(tree_in_subtree(c, r, ranks));
+                }
+                assert!(tree_in_subtree(r, r, ranks));
+                assert!(tree_in_subtree(r, 0, ranks), "root subtree spans all ranks");
+            }
+            // subtree sizes partition: root's subtree is everything, and
+            // each node is 1 + sum of child subtrees
+            assert_eq!(tree_subtree_size(0, ranks), ranks);
+            for r in 0..ranks {
+                let kids: usize =
+                    tree_children(r, ranks).iter().map(|&c| tree_subtree_size(c, ranks)).sum();
+                assert_eq!(tree_subtree_size(r, ranks), 1 + kids);
+            }
+        }
+        assert_eq!(tree_parent(0), 0);
+        assert!(!tree_in_subtree(5, 1, 4), "out-of-range rank is in no subtree");
+        assert_eq!(tree_subtree_size(7, 4), 0);
+        // the 4-rank tree used throughout the tests: 0 -> {1, 2}, 1 -> {3}
+        assert_eq!(tree_children(0, 4), vec![1, 2]);
+        assert_eq!(tree_children(1, 4), vec![3]);
+        assert!(tree_children(2, 4).is_empty());
+        assert!(tree_in_subtree(3, 1, 4));
+        assert!(!tree_in_subtree(3, 2, 4));
     }
 }

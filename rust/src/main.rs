@@ -19,8 +19,10 @@ use microadam::coordinator::metrics::MetricsLogger;
 use microadam::coordinator::schedule::LrSchedule;
 use microadam::coordinator::trainer::Trainer;
 use microadam::dist::{
-    default_rendezvous, parse_reducer, parse_transport, transport_name, DistTrainer,
-    ShmTransport, TcpPending, TcpTransport, Transport, TransportKind, UdsPending, UdsTransport,
+    default_rendezvous, parse_reducer, parse_topology, parse_transport, ring_tcp_coordinator,
+    ring_tcp_worker, ring_uds_coordinator, ring_uds_worker, transport_name, tree_tcp_coordinator,
+    tree_tcp_worker, tree_uds_coordinator, tree_uds_worker, DistTrainer, ShmTransport,
+    TcpPending, TcpTransport, Topology, Transport, TransportKind, UdsPending, UdsTransport,
 };
 use microadam::runtime::Runtime;
 use microadam::trace;
@@ -92,8 +94,14 @@ USAGE:
                        Chrome trace-event file is written to the given
                        path — open it in Perfetto or chrome://tracing.)
                     [--ranks N] [--reduce dense|topk|eftopk]
-                    [--transport loopback|uds|tcp|shm] [--rendezvous PATH|host:port]
-                    [--external yes]
+                    [--transport loopback|uds|tcp|shm] [--topology star|ring|tree]
+                    [--rendezvous PATH|host:port] [--external yes]
+                      (--topology picks the aggregation shape for the
+                       uds/tcp transports: rank-0 star (default), a
+                       successor ring that forwards partially-aggregated
+                       hop frames, or a binary tree that gathers from
+                       children and relays the bundle down. loopback/shm
+                       are star-only.)
                       (--ranks > 1, or any --reduce/--transport, routes
                        through the data-parallel engine; artifact-free
                        models use the native mlp_tiny/mlp_small workloads.
@@ -182,6 +190,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(v) = args.get("transport") {
         cfg.transport = parse_transport(v)?;
     }
+    if let Some(v) = args.get("topology") {
+        cfg.topology = parse_topology(v)?;
+    }
     if let Some(v) = args.get("out") {
         cfg.out = v.into();
     }
@@ -257,7 +268,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         || args.get("ranks").is_some()
         || args.get("reduce").is_some()
         || args.get("transport").is_some()
+        || args.get("topology").is_some()
         || cfg.transport != TransportKind::Loopback
+        || cfg.topology != Topology::Star
     {
         if cfg.transport != TransportKind::Loopback {
             return cmd_train_dist_launch(args, cfg);
@@ -358,6 +371,15 @@ fn dist_summary(
 fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
     let ranks = cfg.ranks;
     let kind = cfg.transport;
+    if cfg.topology != Topology::Star
+        && !matches!(kind, TransportKind::Uds | TransportKind::Tcp)
+    {
+        bail!(
+            "--topology ring|tree re-wires the per-rank links, which only the uds/tcp \
+             transports expose — {} is star-only",
+            transport_name(kind)
+        );
+    }
     // --rendezvous only picks the path/address; --external yes switches to
     // join-by-hand mode (the operator starts the workers themselves with
     // `train --dist-rank R --rendezvous ADDR`).
@@ -439,11 +461,27 @@ fn cmd_train_dist_launch(args: &Args, cfg: TrainConfig) -> Result<()> {
     }
 
     let mut result = (|| -> Result<()> {
-        let transport: Box<dyn Transport> = match kind {
-            TransportKind::Uds => Box::new(pending.expect("bound above").accept()?),
-            TransportKind::Tcp => Box::new(tcp_pending.expect("bound above").accept()?),
-            TransportKind::Shm => Box::new(shm.expect("created above")),
-            TransportKind::Loopback => unreachable!(),
+        let transport: Box<dyn Transport> = match (kind, cfg.topology) {
+            (TransportKind::Uds, Topology::Star) => {
+                Box::new(pending.expect("bound above").accept()?)
+            }
+            (TransportKind::Uds, Topology::Ring) => {
+                Box::new(ring_uds_coordinator(pending.expect("bound above"))?)
+            }
+            (TransportKind::Uds, Topology::Tree) => {
+                Box::new(tree_uds_coordinator(pending.expect("bound above"))?)
+            }
+            (TransportKind::Tcp, Topology::Star) => {
+                Box::new(tcp_pending.expect("bound above").accept()?)
+            }
+            (TransportKind::Tcp, Topology::Ring) => {
+                Box::new(ring_tcp_coordinator(tcp_pending.expect("bound above"))?)
+            }
+            (TransportKind::Tcp, Topology::Tree) => {
+                Box::new(tree_tcp_coordinator(tcp_pending.expect("bound above"))?)
+            }
+            (TransportKind::Shm, _) => Box::new(shm.expect("created above")),
+            (TransportKind::Loopback, _) => unreachable!(),
         };
         let mut trainer = DistTrainer::with_transport(cfg, transport, vec![0])?;
         let session =
@@ -497,11 +535,24 @@ fn cmd_train_dist_worker(args: &Args, mut cfg: TrainConfig) -> Result<()> {
     // Only the coordinator writes metrics/checkpoints/traces.
     cfg.out = String::new();
     cfg.trace = String::new();
-    let transport: Box<dyn Transport> = match cfg.transport {
-        TransportKind::Uds => Box::new(UdsTransport::connect(&rdv, rank, ranks)?),
-        TransportKind::Tcp => Box::new(TcpTransport::connect(&rdv, rank, ranks)?),
-        TransportKind::Shm => Box::new(ShmTransport::worker(&rdv, rank, ranks)?),
-        TransportKind::Loopback => {
+    let transport: Box<dyn Transport> = match (cfg.transport, cfg.topology) {
+        (TransportKind::Uds, Topology::Star) => {
+            Box::new(UdsTransport::connect(&rdv, rank, ranks)?)
+        }
+        (TransportKind::Uds, Topology::Ring) => Box::new(ring_uds_worker(&rdv, rank, ranks)?),
+        (TransportKind::Uds, Topology::Tree) => Box::new(tree_uds_worker(&rdv, rank, ranks)?),
+        (TransportKind::Tcp, Topology::Star) => {
+            Box::new(TcpTransport::connect(&rdv, rank, ranks)?)
+        }
+        (TransportKind::Tcp, Topology::Ring) => Box::new(ring_tcp_worker(&rdv, rank, ranks)?),
+        (TransportKind::Tcp, Topology::Tree) => Box::new(tree_tcp_worker(&rdv, rank, ranks)?),
+        (TransportKind::Shm, Topology::Star) => {
+            Box::new(ShmTransport::worker(&rdv, rank, ranks)?)
+        }
+        (TransportKind::Shm, _) => {
+            bail!("--topology ring|tree needs the uds or tcp transport")
+        }
+        (TransportKind::Loopback, _) => {
             bail!("--dist-rank only applies to the uds/tcp/shm transports")
         }
     };

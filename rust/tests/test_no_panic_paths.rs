@@ -4,14 +4,17 @@
 //! `unwrap`/`expect`/`panic!` in the dist wire/transport/reducer decode
 //! paths; these tests pin the behavioural side of that contract: feed
 //! the paths the failure modes that used to be "can't happen" expects —
-//! truncated frames, a peer that dies mid-round — and assert they come
+//! truncated frames, a peer that dies mid-round, malformed ring hop
+//! payloads, a tree child that vanishes — and assert they come
 //! back as typed errors on `Result`, never as panics or hangs. (The
 //! poisoned-lock leg lives with the `ExecPool` unit tests:
 //! `pool_survives_a_caught_shard_panic` and
 //! `every_shard_panicking_cannot_deadlock_the_barrier`.)
 
-use microadam::dist::transport::{TcpPending, TcpTransport, Transport, UdsPending, UdsTransport};
-use microadam::dist::wire::{Frame, FrameReader, PayloadTag, WireError};
+use microadam::dist::transport::{
+    RingDriver, TcpPending, TcpTransport, Transport, TreeDriver, UdsPending, UdsTransport,
+};
+use microadam::dist::wire::{self, Frame, FrameReader, PayloadTag, WireError, FLAG_HOP};
 
 fn gframe(rank: usize, step: u64) -> Frame {
     Frame {
@@ -111,4 +114,108 @@ fn uds_worker_survives_a_dead_coordinator() {
     let res = h.join().expect("worker thread must not panic");
     assert!(res.is_err(), "a dead coordinator must surface as a typed error");
     let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Topology decode paths: hop payloads and ring/tree endpoints
+// ---------------------------------------------------------------------------
+
+fn tcp_link_pair() -> (std::net::TcpStream, std::net::TcpStream) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let a = std::net::TcpStream::connect(addr).unwrap();
+    let (b, _) = listener.accept().unwrap();
+    (a, b)
+}
+
+#[test]
+fn malformed_hop_payloads_are_typed_errors_not_panics() {
+    let good = wire::hop_payload(3, &[1.0, -2.5, 0.0]);
+    assert!(wire::hop_from_payload(&good).is_ok());
+    // every truncation — inside the fan-in prefix, at its boundary minus
+    // one, mid-f32 — decodes to a typed error, never an index panic
+    for cut in [0usize, 1, wire::HOP_PREFIX_BYTES - 1, good.len() - 1, good.len() - 3] {
+        assert!(
+            wire::hop_from_payload(&good[..cut]).is_err(),
+            "cut at {cut} must be a typed error"
+        );
+    }
+}
+
+#[test]
+fn ring_endpoint_survives_a_dead_neighbor() {
+    // Both the all-gather and the in-ring reduction wait on the
+    // predecessor link; a vanished neighbor must end the round in a typed
+    // error on Result — no panic, no 120 s hang.
+    for reduced in [false, true] {
+        let (next, _next_peer) = tcp_link_pair();
+        let (prev, prev_peer) = tcp_link_pair();
+        let mut ring = RingDriver::from_streams("tcp-ring", 1, 2, next, prev).unwrap();
+        drop(prev_peer);
+        ring.post_send(vec![gframe(1, 1)]).unwrap();
+        let t0 = std::time::Instant::now();
+        let res = if reduced {
+            ring.collect_reduced(&mut |payload, acc| {
+                if acc.is_empty() {
+                    acc.resize(payload.len() / 4, 0.0);
+                }
+                for (i, c) in payload.chunks_exact(4).enumerate() {
+                    acc[i] += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Ok(())
+            })
+        } else {
+            ring.collect()
+        };
+        assert!(res.is_err(), "reduced={reduced}: dead neighbor must be a typed error");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "reduced={reduced}: ring round hung: {:?}",
+            t0.elapsed()
+        );
+    }
+}
+
+#[test]
+fn ring_endpoint_rejects_a_garbage_hop_frame_typed() {
+    // A predecessor that sends a FLAG_HOP frame whose payload is shorter
+    // than the fan-in prefix exercises the hop decode path end to end: it
+    // must surface the typed wire error, not slice-index panic.
+    let (next, _next_peer) = tcp_link_pair();
+    let (prev, mut prev_peer) = tcp_link_pair();
+    let mut ring = RingDriver::from_streams("tcp-ring", 1, 2, next, prev).unwrap();
+    let garbage = Frame {
+        rank: 0,
+        step: 1,
+        tag: PayloadTag::Dense,
+        flags: FLAG_HOP,
+        loss: 0.0,
+        payload: vec![9u8; wire::HOP_PREFIX_BYTES - 1],
+        stats: Vec::new(),
+    };
+    use std::io::Write;
+    prev_peer.write_all(&garbage.encode()).unwrap();
+    ring.post_send(vec![gframe(1, 1)]).unwrap();
+    let err = ring
+        .collect_reduced(&mut |_, _| Ok(()))
+        .err()
+        .expect("a short hop payload must be a typed error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("hop"), "{msg}");
+}
+
+#[test]
+fn tree_root_survives_a_dead_child() {
+    let (child_link, child_peer) = tcp_link_pair();
+    let mut tree = TreeDriver::from_streams("tcp-tree", 0, 2, None, vec![(1, child_link)]).unwrap();
+    drop(child_peer);
+    tree.post_send(vec![gframe(0, 1)]).unwrap();
+    let t0 = std::time::Instant::now();
+    let res = tree.collect();
+    assert!(res.is_err(), "a dead tree child must surface as a typed error");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "tree gather hung: {:?}",
+        t0.elapsed()
+    );
 }

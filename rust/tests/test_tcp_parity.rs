@@ -15,7 +15,10 @@
 //!   acceptance criterion of the multi-host engine;
 //! * fault injection: silent connections, stale-version peers, mid-frame
 //!   disconnects, 1-byte-at-a-time slow writers, and mismatched-config
-//!   peers;
+//!   peers — plus the topology links: a mid-ring neighbor disconnect, a
+//!   slow hop writer, and a stale-version hello on a tree child link;
+//! * streaming: `collect_streaming` yields already-arrived frames (local
+//!   first, then arrival order) while a lagging rank is still in flight;
 //! * pipelining: the coordinator's `collect` observes out-of-order worker
 //!   arrival (a later rank before rank 1) and still returns the
 //!   rank-ascending set whose aggregate is bit-identical to sorted-order
@@ -29,10 +32,11 @@ use std::time::{Duration, Instant};
 use microadam::coordinator::config::TrainConfig;
 use microadam::coordinator::metrics::MetricsLogger;
 use microadam::coordinator::schedule::LrSchedule;
-use microadam::dist::wire::{Frame, PayloadTag, HELLO_DIGEST_BYTES};
+use microadam::dist::wire::{self, Frame, PayloadTag, FLAG_HELLO, HELLO_DIGEST_BYTES};
 use microadam::dist::{
-    build_reducer, DistTrainer, ReducerKind, SparseReduceConfig, TcpPending, TcpTransport,
-    Transport, TransportKind, FRAME_OVERHEAD,
+    build_reducer, tree_tcp_coordinator, DistTrainer, ReducerKind, RingDriver,
+    SparseReduceConfig, TcpPending, TcpTransport, Transport, TransportKind, FLAG_HOP,
+    FRAME_OVERHEAD,
 };
 use microadam::exec::ExecPool;
 use microadam::optim::OptimizerKind;
@@ -381,6 +385,241 @@ fn mismatched_worker_config_is_rejected_at_handshake() {
     assert!(coord_err.contains("digest"), "{coord_err}");
     let worker_err = worker.join().unwrap().expect("worker must reject the mismatch");
     assert!(worker_err.contains("digest"), "{worker_err}");
+}
+
+// ---------------------------------------------------------------------------
+// Topology faults: ring hops and tree links fail typed too
+// ---------------------------------------------------------------------------
+
+/// One ephemeral-port localhost TCP link: `(connect side, accept side)`.
+fn tcp_pair() -> (TcpStream, TcpStream) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let a = TcpStream::connect(addr).unwrap();
+    a.set_nodelay(true).unwrap();
+    let (b, _) = listener.accept().unwrap();
+    b.set_nodelay(true).unwrap();
+    (a, b)
+}
+
+/// The dense partial-aggregate the ring fold closure runs: f32 LE payload
+/// added coordinate-wise into the growing accumulator.
+fn dense_fold(payload: &[u8], acc: &mut Vec<f32>) -> anyhow::Result<()> {
+    if acc.is_empty() {
+        acc.resize(payload.len() / 4, 0.0);
+    }
+    for (i, c) in payload.chunks_exact(4).enumerate() {
+        acc[i] += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+#[test]
+fn mid_ring_neighbor_disconnect_is_a_typed_error() {
+    // Rank 1 of 3 waits on its predecessor's reduction hop; the
+    // predecessor vanishes instead. The hop read must fail typed (the
+    // truncated-frame error, naming the predecessor) inside the budget —
+    // never hang the ring.
+    let (next, _next_peer) = tcp_pair();
+    let (prev, prev_peer) = tcp_pair();
+    let mut ring = RingDriver::from_streams("tcp-ring", 1, 3, next, prev).unwrap();
+    drop(prev_peer); // mid-ring neighbor disconnect
+    let mine = Frame {
+        rank: 1,
+        step: 3,
+        tag: PayloadTag::Dense,
+        flags: 0,
+        loss: 0.5,
+        payload: 1.0f32.to_le_bytes().to_vec(),
+        stats: vec![],
+    };
+    ring.post_send(vec![mine]).unwrap();
+    let t0 = Instant::now();
+    let err = ring
+        .collect_reduced(&mut dense_fold)
+        .err()
+        .expect("a vanished predecessor must fail the hop");
+    assert!(t0.elapsed() < FAULT_BUDGET, "ring hop hung: {:?}", t0.elapsed());
+    let msg = format!("{err:#}");
+    assert!(msg.contains("predecessor rank 0"), "{msg}");
+    assert!(msg.contains("truncated"), "typed truncation, got: {msg}");
+}
+
+#[test]
+fn slow_hop_writer_reassembles_the_hop_bitwise() {
+    // The last rank of a 3-ring receives its predecessor's hop frame one
+    // byte at a time (worst-case TCP segmentation of the HOP prefix and
+    // partial payload); the fold must reassemble it bit-exactly, fold the
+    // local term in, and emit the finished FLAG_HOP result around the ring.
+    let (next, mut next_peer) = tcp_pair();
+    let (prev, mut prev_peer) = tcp_pair();
+    let mut ring = RingDriver::from_streams("tcp-ring", 2, 3, next, prev).unwrap();
+    let hop = Frame {
+        rank: 1,
+        step: 5,
+        tag: PayloadTag::Dense,
+        flags: FLAG_HOP,
+        loss: 1.5,
+        payload: wire::hop_payload(2, &[10.0, 20.0]),
+        stats: vec![],
+    };
+    let writer = std::thread::spawn(move || {
+        for (i, b) in hop.encode().iter().enumerate() {
+            prev_peer.write_all(&[*b]).unwrap();
+            if i % 16 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // hold the link open until the ring endpoint is done reading
+        std::thread::sleep(Duration::from_millis(500));
+    });
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&1.0f32.to_le_bytes());
+    payload.extend_from_slice(&2.0f32.to_le_bytes());
+    let mine = Frame {
+        rank: 2,
+        step: 5,
+        tag: PayloadTag::Dense,
+        flags: 0,
+        loss: 0.25,
+        payload,
+        stats: vec![],
+    };
+    ring.post_send(vec![mine]).unwrap();
+    let result = ring.collect_reduced(&mut dense_fold).unwrap();
+    writer.join().unwrap();
+    assert_eq!(result.len(), 1, "the in-ring reduction returns one finished frame");
+    let out = &result[0];
+    assert_eq!(out.rank, 2);
+    assert_ne!(out.flags & FLAG_HOP, 0, "finished frame carries the hop flag");
+    assert_eq!(out.loss, 1.5 + 0.25, "loss folds along the hop chain");
+    let (fan_in, partial) = wire::hop_from_payload(&out.payload).unwrap();
+    assert_eq!(fan_in, 3, "all three ranks folded");
+    assert_eq!(partial, vec![11.0, 22.0], "trickled partial folded bit-exactly");
+    // ... and the successor received the identical finished frame
+    let forwarded = Frame::read_from(&mut next_peer).unwrap();
+    assert_eq!(&forwarded, out);
+}
+
+#[test]
+fn stale_version_hello_from_tree_child_is_rejected() {
+    // A worker speaks wire v1 at the star rendezvous, then dials its tree
+    // parent with a v2 hello (CRC re-sealed, so the *version* check is
+    // what fires). The tree wiring must reject it typed, inside the
+    // budget.
+    let (pending, addr) = bind_local(2);
+    let child = std::thread::spawn(move || {
+        // legitimate star rendezvous: hello, then the link-table exchange
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&Frame::hello(1).encode()).unwrap();
+        let link = Frame {
+            rank: 1,
+            step: 0,
+            tag: PayloadTag::Dense,
+            flags: FLAG_HELLO,
+            loss: 0.0,
+            payload: b"127.0.0.1:1".to_vec(), // leaf: never dialed
+            stats: vec![],
+        };
+        s.write_all(&link.encode()).unwrap();
+        let table = Frame::read_from(&mut s).unwrap();
+        let addrs = String::from_utf8(table.payload).unwrap();
+        let parent = addrs.lines().next().unwrap().to_string();
+        // dial the parent link with a version-2 hello, CRC intact
+        let mut bytes = Frame::hello(1).encode();
+        bytes[4] = 2;
+        let n = bytes.len();
+        let crc = wire::crc32(&bytes[..n - 4]).to_le_bytes();
+        bytes[n - 4..].copy_from_slice(&crc);
+        let mut p = TcpStream::connect(&parent).unwrap();
+        p.write_all(&bytes).unwrap();
+        // hold both sockets open so the failure is the version check, not
+        // a disconnect
+        std::thread::sleep(Duration::from_millis(2000));
+    });
+    let t0 = Instant::now();
+    let err = tree_tcp_coordinator(pending)
+        .err()
+        .expect("a stale-version tree child must be rejected");
+    assert!(t0.elapsed() < FAULT_BUDGET, "tree wiring hung: {:?}", t0.elapsed());
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version"), "{msg}");
+    child.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Streaming decode: frames surface in arrival order, under the gather
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streaming_collect_yields_frames_before_the_round_completes() {
+    // One rank lags far behind the others. `collect_streaming` must hand
+    // the coordinator every already-arrived frame (local first, then
+    // arrival order) while the laggard is still in flight — that early
+    // delivery is exactly the decode/gather overlap the trainer banks.
+    let ranks = 3usize;
+    let (pending, addr) = bind_local(ranks);
+    let handles: Vec<_> = (1..ranks)
+        .map(|r| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, r, ranks).unwrap();
+                if r == 1 {
+                    // generous lag so scheduler noise cannot flip the order
+                    std::thread::sleep(Duration::from_millis(1200));
+                }
+                let f = Frame {
+                    rank: r as u16,
+                    step: 1,
+                    tag: PayloadTag::Dense,
+                    flags: 0,
+                    loss: 0.0,
+                    payload: vec![r as u8; 40],
+                    stats: vec![],
+                };
+                t.exchange(vec![f]).unwrap().len()
+            })
+        })
+        .collect();
+    let mut coord = pending.accept().unwrap();
+    let f0 = Frame {
+        rank: 0,
+        step: 1,
+        tag: PayloadTag::Dense,
+        flags: 0,
+        loss: 0.0,
+        payload: vec![0u8; 40],
+        stats: vec![],
+    };
+    coord.post_send(vec![f0]).unwrap();
+    let mut events: Vec<(u16, Instant)> = Vec::new();
+    let frames = coord
+        .collect_streaming(&mut |f: &Frame| {
+            events.push((f.rank, Instant::now()));
+            Ok(())
+        })
+        .unwrap();
+    let gather_done = Instant::now();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), ranks);
+    }
+    // the returned set is still the rank-ascending gather, payloads intact
+    assert_eq!(frames.len(), ranks);
+    for (r, f) in frames.iter().enumerate() {
+        assert_eq!(f.rank as usize, r);
+        assert_eq!(f.payload, vec![r as u8; 40]);
+    }
+    // callbacks ran in arrival order: the locally-hosted frame first, the
+    // fast rank 2 next, the lagging rank 1 last
+    let order: Vec<u16> = events.iter().map(|(r, _)| *r).collect();
+    assert_eq!(order, vec![0, 2, 1], "arrival order, local first: {order:?}");
+    // ... and the fast frames surfaced long before the round completed —
+    // the decode window under the gather tail is real, not zero
+    let lead = gather_done.duration_since(events[1].1);
+    assert!(
+        lead > Duration::from_millis(300),
+        "rank 2's frame should stream out well before the lagging gather ends, lead {lead:?}"
+    );
 }
 
 // ---------------------------------------------------------------------------

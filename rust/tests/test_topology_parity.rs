@@ -1,0 +1,398 @@
+//! Topology parity: ring and tree aggregation must be bit-identical to
+//! the loopback/star collective, and the partial-aggregate they are built
+//! on must not care how payloads are ordered or associated.
+//!
+//! Two tiers:
+//!
+//! * property tests on [`GradReducer::accumulate_payload`] /
+//!   [`GradReducer::finalize_partial`] — the invariant ring aggregation
+//!   silently depends on: folding payloads rank-ascending from a zeroed
+//!   accumulator is **bit-exact** against the batch `aggregate_payloads`
+//!   kernel (same op order by construction), while *permuting* or
+//!   *re-associating* the fold only moves results within a documented
+//!   ULP budget (f32 addition is commutative but not associative, so
+//!   reassociation is inherently a rounding change, never a value change);
+//! * end-to-end runs: ring/tree × dense/topk/eftopk × ranks {2, 4, 8} ×
+//!   uds/tcp endpoints reproduce the loopback loss series and final
+//!   parameters bit-for-bit.
+//!
+//! Everything binds `127.0.0.1:0` ephemeral ports or per-test temp socket
+//! paths: parallel `cargo test` shards cannot collide.
+//!
+//! [`GradReducer::accumulate_payload`]: microadam::dist::reducer::GradReducer::accumulate_payload
+//! [`GradReducer::finalize_partial`]: microadam::dist::reducer::GradReducer::finalize_partial
+
+use std::path::PathBuf;
+
+use microadam::coordinator::config::TrainConfig;
+use microadam::coordinator::metrics::MetricsLogger;
+use microadam::coordinator::schedule::LrSchedule;
+use microadam::dist::wire::{self, HOP_PREFIX_BYTES};
+use microadam::dist::{
+    build_reducer, ring_tcp_coordinator, ring_tcp_worker, ring_uds_coordinator, ring_uds_worker,
+    tree_tcp_coordinator, tree_tcp_worker, tree_uds_coordinator, tree_uds_worker, DistTrainer,
+    ReducerKind, SparseReduceConfig, TcpPending, Topology, Transport, TransportKind, UdsPending,
+};
+use microadam::exec::ExecPool;
+use microadam::optim::OptimizerKind;
+
+const STEPS: u64 = 6;
+const KINDS: [ReducerKind; 3] = [ReducerKind::Dense, ReducerKind::TopK, ReducerKind::EfTopK];
+
+/// Permuting or re-associating an n ≤ 8 way f32 sum perturbs each
+/// coordinate by at most a few rounding steps; this budget is the
+/// documented bound (see `rust/src/dist/README.md` §10). The *fixed*
+/// rank-ascending order the ring actually uses is held to 0 ULP.
+const REASSOC_ULP_BUDGET: i64 = 8;
+
+// ---------------------------------------------------------------------------
+// Property tier: the partial aggregate itself
+// ---------------------------------------------------------------------------
+
+/// Monotone integer image of an f32 (both zeros map to 0): ULP distance
+/// is the difference of these keys.
+fn monotone(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 { -((b & 0x7fff_ffff) as i64) } else { b as i64 }
+}
+
+fn ulp_diff(a: f32, b: f32) -> i64 {
+    (monotone(a) - monotone(b)).abs()
+}
+
+/// Deterministic per-rank gradients over a mix of scales and signs.
+fn gen_grads(d: usize, ranks: usize) -> Vec<Vec<f32>> {
+    (0..ranks)
+        .map(|r| {
+            (0..d)
+                .map(|i| {
+                    let base = ((i * 37 + r * 101) % 29) as f32 - 14.0;
+                    base * 0.07 * if (i + r) % 3 == 0 { 8.0 } else { 1.0 }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Zero-init + rank-order fold + finalize, over `order`.
+fn fold_in_order(
+    kind: ReducerKind,
+    d: usize,
+    ranks: usize,
+    payloads: &[Vec<u8>],
+    order: &[usize],
+) -> Vec<f32> {
+    let r = build_reducer(kind, d, ranks, SparseReduceConfig::default());
+    let mut acc = vec![0f32; d];
+    for &i in order {
+        r.accumulate_payload(&payloads[i], &mut acc).unwrap();
+    }
+    r.finalize_partial(&mut acc);
+    acc
+}
+
+/// The slab geometries the sweep exercises: aligned, ragged-last-block,
+/// prime-sized, and larger-than-one-block dims at each world size.
+const GEOMETRIES: [(usize, usize); 4] = [(96, 2), (300, 4), (257, 3), (1024, 8)];
+
+#[test]
+fn rank_ascending_fold_matches_batch_aggregate_bitwise() {
+    // The exact claim the ring hop chain rests on: zero accumulator +
+    // accumulate_payload in rank order + finalize_partial runs the same
+    // additions in the same order as the phase-B batch kernel, so the
+    // results are bit-identical — for every reducer and geometry.
+    let pool = ExecPool::serial();
+    for kind in KINDS {
+        for &(d, ranks) in &GEOMETRIES {
+            let mut reducer = build_reducer(kind, d, ranks, SparseReduceConfig::default());
+            let grads = gen_grads(d, ranks);
+            let payloads: Vec<Vec<u8>> =
+                (0..ranks).map(|r| reducer.compress_payload(r, &grads[r])).collect();
+
+            let mut batch = vec![0f32; d];
+            reducer.aggregate_payloads(&payloads, &mut batch, &pool).unwrap();
+
+            let mut loaded = vec![0f32; d];
+            for (r, p) in payloads.iter().enumerate() {
+                reducer.load_payload(r, p).unwrap();
+            }
+            reducer.aggregate_loaded(&mut loaded, &pool).unwrap();
+
+            let order: Vec<usize> = (0..ranks).collect();
+            let fold = fold_in_order(kind, d, ranks, &payloads, &order);
+
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&fold), bits(&batch), "{kind:?} d={d} x{ranks}: fold vs batch");
+            assert_eq!(bits(&loaded), bits(&batch), "{kind:?} d={d} x{ranks}: loaded vs batch");
+        }
+    }
+}
+
+#[test]
+fn fold_is_permutation_invariant_within_ulp_budget() {
+    for kind in KINDS {
+        for &(d, ranks) in &GEOMETRIES {
+            let mut reducer = build_reducer(kind, d, ranks, SparseReduceConfig::default());
+            let grads = gen_grads(d, ranks);
+            let payloads: Vec<Vec<u8>> =
+                (0..ranks).map(|r| reducer.compress_payload(r, &grads[r])).collect();
+            let ascending: Vec<usize> = (0..ranks).collect();
+            let reference = fold_in_order(kind, d, ranks, &payloads, &ascending);
+
+            let reversed: Vec<usize> = (0..ranks).rev().collect();
+            // stride-5 walk: a true permutation for every world size here
+            // (5 is coprime with 2, 3, 4 and 8)
+            let strided: Vec<usize> = (0..ranks).map(|i| (i * 5 + 1) % ranks).collect();
+            for order in [reversed, strided] {
+                let permuted = fold_in_order(kind, d, ranks, &payloads, &order);
+                for (i, (&a, &b)) in reference.iter().zip(&permuted).enumerate() {
+                    let ulps = ulp_diff(a, b);
+                    assert!(
+                        ulps <= REASSOC_ULP_BUDGET,
+                        "{kind:?} d={d} x{ranks} order {order:?}: coord {i} moved \
+                         {ulps} ULPs ({a:e} vs {b:e}), budget {REASSOC_ULP_BUDGET}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fold_is_association_invariant_within_ulp_budget() {
+    // Re-associating the sum — folding two halves separately and adding
+    // the partials — must also stay inside the budget: this is what a
+    // deeper reduction tree (or a future segmented ring) would do.
+    for kind in KINDS {
+        for &(d, ranks) in &GEOMETRIES {
+            if ranks < 4 {
+                continue; // halves of a 2-rank fold are single payloads
+            }
+            let mut reducer = build_reducer(kind, d, ranks, SparseReduceConfig::default());
+            let grads = gen_grads(d, ranks);
+            let payloads: Vec<Vec<u8>> =
+                (0..ranks).map(|r| reducer.compress_payload(r, &grads[r])).collect();
+            let ascending: Vec<usize> = (0..ranks).collect();
+            let reference = fold_in_order(kind, d, ranks, &payloads, &ascending);
+
+            let r = build_reducer(kind, d, ranks, SparseReduceConfig::default());
+            let (mut lo, mut hi) = (vec![0f32; d], vec![0f32; d]);
+            for i in 0..ranks / 2 {
+                r.accumulate_payload(&payloads[i], &mut lo).unwrap();
+            }
+            for i in ranks / 2..ranks {
+                r.accumulate_payload(&payloads[i], &mut hi).unwrap();
+            }
+            let mut merged: Vec<f32> = lo.iter().zip(&hi).map(|(a, b)| a + b).collect();
+            r.finalize_partial(&mut merged);
+            for (i, (&a, &b)) in reference.iter().zip(&merged).enumerate() {
+                let ulps = ulp_diff(a, b);
+                assert!(
+                    ulps <= REASSOC_ULP_BUDGET,
+                    "{kind:?} d={d} x{ranks}: half-split reassociation moved coord {i} \
+                     by {ulps} ULPs ({a:e} vs {b:e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hop_payload_roundtrip_is_bit_preserving() {
+    // The hop codec carries raw f32 bit patterns: NaN payloads, signed
+    // zeros and subnormals must survive the wire unchanged — the fold is
+    // arithmetic on *bits the reducers produced*, not on sanitized values.
+    let partial = [
+        0.0f32,
+        -0.0,
+        1.5,
+        -3.25e-7,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+    ];
+    let payload = wire::hop_payload(5, &partial);
+    assert_eq!(payload.len(), HOP_PREFIX_BYTES + 4 * partial.len());
+    let (fan_in, back) = wire::hop_from_payload(&payload).unwrap();
+    assert_eq!(fan_in, 5);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&back), bits(&partial), "hop roundtrip must not touch bit patterns");
+
+    // truncation anywhere is a typed error, never a short vector
+    for cut in [0, HOP_PREFIX_BYTES - 1, payload.len() - 1, payload.len() - 3] {
+        assert!(
+            wire::hop_from_payload(&payload[..cut]).is_err(),
+            "hop payload cut to {cut} bytes must be rejected"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end tier: ring/tree endpoints vs loopback, bit for bit
+// ---------------------------------------------------------------------------
+
+fn cfg(
+    ranks: usize,
+    reduce: ReducerKind,
+    transport: TransportKind,
+    topology: Topology,
+) -> TrainConfig {
+    TrainConfig {
+        model: "mlp_tiny".into(),
+        optimizer: OptimizerKind::MicroAdam,
+        schedule: LrSchedule::Const { lr: 3e-3 },
+        steps: STEPS,
+        seed: 7,
+        log_every: 10_000,
+        workers: 1,
+        ranks,
+        reduce,
+        transport,
+        topology,
+        ..Default::default()
+    }
+}
+
+/// Loss series (bit patterns) + final params of the loopback reference.
+fn run_loopback(ranks: usize, reduce: ReducerKind) -> (Vec<u32>, Vec<f32>) {
+    let mut t = DistTrainer::new(cfg(ranks, reduce, TransportKind::Loopback, Topology::Star))
+        .unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    (logger.history.iter().map(|m| m.loss.to_bits()).collect(), t.params_vec())
+}
+
+fn run_endpoint(
+    ranks: usize,
+    reduce: ReducerKind,
+    kind: TransportKind,
+    topo: Topology,
+    transport: Box<dyn Transport>,
+    rank: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    let mut t = DistTrainer::with_transport(cfg(ranks, reduce, kind, topo), transport, vec![rank])
+        .unwrap();
+    let mut logger = MetricsLogger::new("").unwrap();
+    t.train(&mut logger).unwrap();
+    assert_eq!(t.topology(), topo);
+    assert!(t.decode_overlap_ms() >= 0.0, "decode overlap is a duration, never negative");
+    (logger.history.iter().map(|m| m.loss.to_bits()).collect(), t.params_vec())
+}
+
+fn unique_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "microadam-topo-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::SeqCst)
+    ))
+}
+
+/// One ring/tree run: thread-per-rank endpoints over a real socket pair
+/// set, returning the coordinator's report plus every worker's params.
+fn run_topo(
+    kind: TransportKind,
+    topo: Topology,
+    ranks: usize,
+    reduce: ReducerKind,
+) -> ((Vec<u32>, Vec<f32>), Vec<Vec<f32>>) {
+    match kind {
+        TransportKind::Tcp => {
+            let pending = TcpPending::bind("127.0.0.1:0", ranks).unwrap();
+            let addr = pending.local_addr().unwrap().to_string();
+            let workers: Vec<_> = (1..ranks)
+                .map(|r| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        let t: Box<dyn Transport> = match topo {
+                            Topology::Ring => Box::new(ring_tcp_worker(&addr, r, ranks).unwrap()),
+                            Topology::Tree => Box::new(tree_tcp_worker(&addr, r, ranks).unwrap()),
+                            Topology::Star => unreachable!("star is covered by test_tcp_parity"),
+                        };
+                        run_endpoint(ranks, reduce, kind, topo, t, r)
+                    })
+                })
+                .collect();
+            let coord_t: Box<dyn Transport> = match topo {
+                Topology::Ring => Box::new(ring_tcp_coordinator(pending).unwrap()),
+                Topology::Tree => Box::new(tree_tcp_coordinator(pending).unwrap()),
+                Topology::Star => unreachable!(),
+            };
+            let coord = run_endpoint(ranks, reduce, kind, topo, coord_t, 0);
+            let wparams =
+                workers.into_iter().map(|w| w.join().unwrap().1).collect();
+            (coord, wparams)
+        }
+        TransportKind::Uds => {
+            let path = unique_path("rdv");
+            let pending = UdsPending::bind(&path, ranks).unwrap();
+            let workers: Vec<_> = (1..ranks)
+                .map(|r| {
+                    let path = path.clone();
+                    std::thread::spawn(move || {
+                        let t: Box<dyn Transport> = match topo {
+                            Topology::Ring => Box::new(ring_uds_worker(&path, r, ranks).unwrap()),
+                            Topology::Tree => Box::new(tree_uds_worker(&path, r, ranks).unwrap()),
+                            Topology::Star => unreachable!("star is covered by test_tcp_parity"),
+                        };
+                        run_endpoint(ranks, reduce, kind, topo, t, r)
+                    })
+                })
+                .collect();
+            let coord_t: Box<dyn Transport> = match topo {
+                Topology::Ring => Box::new(ring_uds_coordinator(pending).unwrap()),
+                Topology::Tree => Box::new(tree_uds_coordinator(pending).unwrap()),
+                Topology::Star => unreachable!(),
+            };
+            let coord = run_endpoint(ranks, reduce, kind, topo, coord_t, 0);
+            let wparams =
+                workers.into_iter().map(|w| w.join().unwrap().1).collect();
+            (coord, wparams)
+        }
+        other => unreachable!("no topology drivers for {other:?}"),
+    }
+}
+
+/// The acceptance sweep for one (transport, topology) pair: every reducer
+/// at ranks 2, 4 and 8 reproduces loopback bit-for-bit on every endpoint.
+fn assert_parity(kind: TransportKind, topo: Topology) {
+    for ranks in [2usize, 4, 8] {
+        for reduce in KINDS {
+            let (loop_losses, loop_params) = run_loopback(ranks, reduce);
+            assert_eq!(loop_losses.len(), STEPS as usize);
+            let ((losses, params), wparams) = run_topo(kind, topo, ranks, reduce);
+            assert_eq!(losses, loop_losses, "{kind:?}/{topo:?} {reduce:?} x{ranks} losses");
+            assert_eq!(params, loop_params, "{kind:?}/{topo:?} {reduce:?} x{ranks} params");
+            for (i, wp) in wparams.iter().enumerate() {
+                assert_eq!(
+                    *wp,
+                    loop_params,
+                    "{kind:?}/{topo:?} {reduce:?} x{ranks} worker rank {}",
+                    i + 1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_ring_matches_loopback_bitwise() {
+    assert_parity(TransportKind::Tcp, Topology::Ring);
+}
+
+#[test]
+fn tcp_tree_matches_loopback_bitwise() {
+    assert_parity(TransportKind::Tcp, Topology::Tree);
+}
+
+#[test]
+fn uds_ring_matches_loopback_bitwise() {
+    assert_parity(TransportKind::Uds, Topology::Ring);
+}
+
+#[test]
+fn uds_tree_matches_loopback_bitwise() {
+    assert_parity(TransportKind::Uds, Topology::Tree);
+}

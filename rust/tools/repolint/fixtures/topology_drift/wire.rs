@@ -1,0 +1,8 @@
+//! Drifted-topology fixture: a miniature wire.rs whose hop constants
+//! disagree with the README sitting next to it (the code kept the flag
+//! at bit 1 / value 2 and a 4-byte prefix; the document claims bit 2 /
+//! value 4 and an 8-byte prefix). Never compiled — scanned as text only.
+
+pub const FLAG_HELLO: u8 = 1;
+pub const FLAG_HOP: u8 = 2;
+pub const HOP_PREFIX_BYTES: usize = 4;

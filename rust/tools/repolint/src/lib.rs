@@ -3,7 +3,7 @@
 //! The crate is a static-analysis pass over the repository's own Rust
 //! sources (plus the normative wire spec in `rust/src/dist/README.md`).
 //! It exists so the invariants the docs promise cannot silently drift
-//! from the code that implements them. Six rules:
+//! from the code that implements them. Seven rules:
 //!
 //! * **`unsafe-safety`** — every `unsafe` occurrence must carry a
 //!   `// SAFETY:` comment on the same line or within the five lines
@@ -20,6 +20,10 @@
 //!   `rust/src/dist/wire.rs` (magic, version, 30-byte header, 4-byte
 //!   CRC, 34-byte frame overhead, header field order) must match the
 //!   numbers written in `rust/src/dist/README.md` §2, row for row.
+//! * **`topology-spec`** — the hop-frame numbers in
+//!   `rust/src/dist/README.md` §10 (the hop flag's bit position and
+//!   value, the fan-in prefix layout and its byte count) must match the
+//!   `FLAG_HOP` / `HOP_PREFIX_BYTES` constants in `wire.rs`.
 //! * **`lossy-cast`** — the bytes-accounting functions
 //!   ([`ACCOUNTING_FNS`]: `wire_bytes_per_rank`, `state_bytes`, …) must
 //!   not contain lossy `as` casts (`as u32`, `as i64`, `as f64`, …);
@@ -53,8 +57,15 @@ use std::io;
 use std::path::{Path, PathBuf};
 
 /// Names of every rule, in the order they are documented above.
-pub const RULES: &[&str] =
-    &["unsafe-safety", "no-panic", "wire-spec", "lossy-cast", "hot-path-clock", "simd-twin"];
+pub const RULES: &[&str] = &[
+    "unsafe-safety",
+    "no-panic",
+    "wire-spec",
+    "topology-spec",
+    "lossy-cast",
+    "hot-path-clock",
+    "simd-twin",
+];
 
 /// Files (matched by path suffix) subject to the `no-panic` rule: the
 /// `dist::` wire/transport/reducer decode paths the spec requires to
@@ -613,21 +624,27 @@ fn parse_rows<'a>(lines: impl Iterator<Item = &'a str>) -> Vec<Row> {
     out
 }
 
-/// Offset of the variable-length `payload` row (`30   .  payload`).
-fn payload_offset<'a>(lines: impl Iterator<Item = &'a str>) -> Option<usize> {
+/// Offset of a named variable-length row (`30   .  payload`): the len
+/// column is non-numeric, so [`parse_rows`] skips it.
+fn named_offset<'a>(lines: impl Iterator<Item = &'a str>, name: &str) -> Option<usize> {
     for l in lines {
         let l = l.trim_start().trim_start_matches("//!").trim();
         let mut it = l.split_whitespace();
         let (Some(a), Some(_), Some(c)) = (it.next(), it.next(), it.next()) else {
             continue;
         };
-        if c == "payload" {
+        if c == name {
             if let Ok(off) = a.parse::<usize>() {
                 return Some(off);
             }
         }
     }
     None
+}
+
+/// Offset of the variable-length `payload` row (`30   .  payload`).
+fn payload_offset<'a>(lines: impl Iterator<Item = &'a str>) -> Option<usize> {
+    named_offset(lines, "payload")
 }
 
 fn parse_const(src: &str, name: &str) -> Option<(usize, u64)> {
@@ -897,6 +914,134 @@ pub fn rule_wire_spec(wire_src: &str, readme_src: &str) -> Vec<Violation> {
 }
 
 // ---------------------------------------------------------------------
+// topology-spec: pin the §10 hop-frame numbers against wire.rs
+// ---------------------------------------------------------------------
+
+/// Rule `topology-spec` over in-memory sources: the hop-flag value and
+/// the hop-payload layout written in `rust/src/dist/README.md` §10 must
+/// match the `FLAG_HOP` / `HOP_PREFIX_BYTES` constants in `wire.rs` —
+/// the same two-sided drift check `wire-spec` runs for §2.
+pub fn rule_topology_spec(wire_src: &str, readme_src: &str) -> Vec<Violation> {
+    const WIRE: &str = "rust/src/dist/wire.rs";
+    const README: &str = "rust/src/dist/README.md";
+    let mut out = Vec::new();
+    let mut fail = |file: &str, line: usize, msg: String| {
+        out.push(Violation {
+            file: file.to_string(),
+            line,
+            rule: "topology-spec",
+            msg,
+        });
+    };
+
+    let flag_hop = parse_const(wire_src, "FLAG_HOP");
+    let prefix = parse_const(wire_src, "HOP_PREFIX_BYTES");
+    let (Some((_, flag_hop)), Some((_, prefix))) = (flag_hop, prefix) else {
+        fail(
+            WIRE,
+            1,
+            "couldn't locate FLAG_HOP / HOP_PREFIX_BYTES constants".into(),
+        );
+        return out;
+    };
+
+    let lines: Vec<&str> = readme_src.lines().collect();
+    let Some(sec_start) = lines.iter().position(|l| l.starts_with("## 10.")) else {
+        fail(README, 1, "couldn't locate section `## 10.` (topologies)".into());
+        return out;
+    };
+    let sec_end = lines[sec_start + 1..]
+        .iter()
+        .position(|l| l.starts_with("## "))
+        .map(|p| sec_start + 1 + p)
+        .unwrap_or(lines.len());
+    let sec = &lines[sec_start..sec_end];
+
+    // Hop-flag sentence: `The hop flag is \`flags\` bit B (value V, …)`.
+    match sec.iter().enumerate().find(|(_, l)| l.contains("hop flag")) {
+        Some((i, l)) => {
+            let ints = all_integers(l);
+            let expect = [u64::from(flag_hop.trailing_zeros()), flag_hop];
+            if ints.len() < 2 || ints[..2] != expect {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!(
+                        "hop-flag sentence carries {ints:?}, wire.rs FLAG_HOP = {flag_hop} \
+                         (flags bit {})",
+                        flag_hop.trailing_zeros()
+                    ),
+                );
+            }
+        }
+        None => fail(README, sec_start + 1, "couldn't locate the hop-flag sentence".into()),
+    }
+
+    // Hop-payload table: the fixed prefix rows tile [0, HOP_PREFIX_BYTES)
+    // and the variable `partial` row starts exactly there.
+    let rows = parse_rows(sec.iter().copied());
+    if rows.is_empty() {
+        fail(README, sec_start + 1, "§10 has no parseable hop-payload table".into());
+    }
+    let mut expect = 0usize;
+    for r in &rows {
+        if r.off != expect {
+            fail(
+                README,
+                sec_start + 1,
+                format!("hop field `{}` at offset {} — expected {}", r.name, r.off, expect),
+            );
+        }
+        expect = r.off + r.len;
+    }
+    if !rows.is_empty() && expect as u64 != prefix {
+        fail(
+            README,
+            sec_start + 1,
+            format!("hop prefix fields end at {expect}, HOP_PREFIX_BYTES is {prefix}"),
+        );
+    }
+    match named_offset(sec.iter().copied(), "partial") {
+        Some(o) if o as u64 == prefix => {}
+        Some(o) => fail(
+            README,
+            sec_start + 1,
+            format!("`partial` row at offset {o}, HOP_PREFIX_BYTES is {prefix}"),
+        ),
+        None => fail(README, sec_start + 1, "couldn't locate the `partial` table row".into()),
+    }
+
+    // The prefix byte count also appears in prose:
+    // `\`wire::HOP_PREFIX_BYTES\` = **4 bytes**`.
+    match sec
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.contains("HOP_PREFIX_BYTES` ="))
+    {
+        Some((i, l)) => {
+            let n = l
+                .split("HOP_PREFIX_BYTES` =")
+                .nth(1)
+                .map(all_integers)
+                .and_then(|v| v.first().copied());
+            if n != Some(prefix) {
+                fail(
+                    README,
+                    sec_start + i + 1,
+                    format!("prefix sentence says {n:?}, HOP_PREFIX_BYTES is {prefix}"),
+                );
+            }
+        }
+        None => fail(
+            README,
+            sec_start + 1,
+            "couldn't locate the `HOP_PREFIX_BYTES` prose sentence".into(),
+        ),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
 // Drivers
 // ---------------------------------------------------------------------
 
@@ -952,7 +1097,10 @@ pub fn lint_repo(root: &Path) -> io::Result<Vec<Violation>> {
     let wire = root.join("rust/src/dist/wire.rs");
     let readme = root.join("rust/src/dist/README.md");
     match (fs::read_to_string(&wire), fs::read_to_string(&readme)) {
-        (Ok(w), Ok(r)) => out.extend(rule_wire_spec(&w, &r)),
+        (Ok(w), Ok(r)) => {
+            out.extend(rule_wire_spec(&w, &r));
+            out.extend(rule_topology_spec(&w, &r));
+        }
         _ => out.push(Violation {
             file: "rust/src/dist".to_string(),
             line: 0,
@@ -996,6 +1144,13 @@ pub const WIRE_DRIFT: (&str, &str) = (
     include_str!("../fixtures/wire_drift/README.md"),
 );
 
+/// Drifted topology-spec pair (README §10 claims a different hop flag
+/// and a wider fan-in prefix than wire.rs defines).
+pub const TOPOLOGY_DRIFT: (&str, &str) = (
+    include_str!("../fixtures/topology_drift/wire.rs"),
+    include_str!("../fixtures/topology_drift/README.md"),
+);
+
 fn directive<'a>(src: &'a str, key: &str) -> Option<&'a str> {
     let tag = format!("//@ {key}:");
     src.lines()
@@ -1035,6 +1190,11 @@ pub fn self_test() -> Result<usize, String> {
         return Err("wire_drift: rule `wire-spec` did not fire on the drifted pair".into());
     }
     checks += 1;
+    let topo_drift = rule_topology_spec(TOPOLOGY_DRIFT.0, TOPOLOGY_DRIFT.1);
+    if topo_drift.is_empty() {
+        return Err("topology_drift: rule `topology-spec` did not fire on the drifted pair".into());
+    }
+    checks += 1;
     Ok(checks)
 }
 
@@ -1045,7 +1205,7 @@ mod tests {
     #[test]
     fn every_rule_fires_on_its_fixture() {
         match self_test() {
-            Ok(n) => assert!(n >= 7, "expected at least 7 fixture checks, ran {n}"),
+            Ok(n) => assert!(n >= 8, "expected at least 8 fixture checks, ran {n}"),
             Err(e) => panic!("self-test failed: {e}"),
         }
     }
